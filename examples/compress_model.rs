@@ -1,0 +1,133 @@
+//! END-TO-END DRIVER (DESIGN.md §4 `e2e`): the full three-layer system on a
+//! real small workload.
+//!
+//! 1. **Train** a ~0.9M-param Llama-style model (`tl-7s`) from scratch by
+//!    driving the AOT `train_tl-7s` HLO artifact (Layer-2 AdamW step) from
+//!    Rust, logging the loss curve.
+//! 2. **Inject outliers** (function-preserving; simulates the 7B-scale
+//!    activation-outlier phenomenon).
+//! 3. **Calibrate** per-matrix Hessians through the `capture_tl-7s`
+//!    artifact.
+//! 4. **Compress** with CALDERA (zero-init) vs CALDERA+ODLRI.
+//! 5. **Evaluate** perplexity + 5 zero-shot proxies for FP32 / both methods.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_model
+//! ```
+//! Results land in results/e2e.md; the run is recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use odlri::calib::{calibrate, CalibConfig};
+use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::eval::evaluate;
+use odlri::model::inject_outliers;
+use odlri::report::Table;
+use odlri::runtime::XlaRuntime;
+use odlri::train::{train, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(250);
+    let rt = XlaRuntime::open(&odlri::runtime::default_artifact_dir())?;
+
+    // ---- 1. train --------------------------------------------------------
+    eprintln!("[e2e] training tl-7s for {steps} steps via AOT train_step…");
+    let t0 = std::time::Instant::now();
+    let tr = train(
+        &rt,
+        &TrainConfig {
+            family: "tl-7s".into(),
+            steps,
+            seed: 0,
+            log_every: 25,
+            ..Default::default()
+        },
+    )?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    let mut params = tr.params;
+    println!(
+        "loss curve: {} → {:.3} (final), {:.2} s/step",
+        tr.losses
+            .iter()
+            .step_by((steps / 8).max(1))
+            .map(|(s, l)| format!("{s}:{l:.2}"))
+            .collect::<Vec<_>>()
+            .join(" "),
+        tr.losses.last().unwrap().1,
+        train_secs / steps as f64
+    );
+
+    // ---- 2. outlier injection -------------------------------------------
+    let planted = inject_outliers(&mut params, 4, 16.0, 0)?;
+    eprintln!(
+        "[e2e] planted outliers, e.g. {} → channels {:?}",
+        planted[0].0, planted[0].1
+    );
+
+    // ---- 3. calibrate ----------------------------------------------------
+    eprintln!("[e2e] calibrating Hessians…");
+    let hessians = calibrate(&rt, &params, &CalibConfig { batches: 8, seed: 0 })?;
+
+    // ---- 4+5. compress & evaluate ---------------------------------------
+    let mut table = Table::new(
+        "End-to-end: tl-7s, Q 2-bit E8 + LR 4-bit, rank 16",
+        &[
+            "Method", "AvgBits", "Wiki-sim", "C4-sim", "Wino", "RTE", "PiQA",
+            "ArcE", "ArcC", "Compress s",
+        ],
+    );
+    eprintln!("[e2e] evaluating FP32 baseline…");
+    let base = evaluate(&rt, &params, 30, 64, 1000)?;
+    let taskfmt = |r: &odlri::eval::EvalReport| -> Vec<String> {
+        r.tasks.iter().map(|t| format!("{:.1}", t.accuracy * 100.0)).collect()
+    };
+    let mut row = vec![
+        "FP32".to_string(),
+        "32".into(),
+        format!("{:.3}", base.ppl_wiki),
+        format!("{:.3}", base.ppl_c4),
+    ];
+    row.extend(taskfmt(&base));
+    row.push("-".into());
+    table.row(row);
+
+    for init in [InitKind::Caldera, InitKind::Odlri] {
+        eprintln!("[e2e] compressing with {}…", init.name());
+        let cfg = PipelineConfig {
+            init: init.clone(),
+            rank: 16,
+            lr_bits: 4,
+            outer_iters: 15,
+            lplr_iters: 10,
+            verbose: true,
+            ..Default::default()
+        };
+        let out = CompressionPipeline::new(cfg).run(&params, &hessians)?;
+        let applied = out.model.apply_to(&params)?;
+        let rep = evaluate(&rt, &applied, 30, 64, 1000)?;
+        let label = match init {
+            InitKind::Caldera => "CALDERA",
+            _ => "+ODLRI",
+        };
+        let mut row = vec![
+            label.to_string(),
+            format!("{:.2}", out.model.avg_bits()),
+            format!("{:.3}", rep.ppl_wiki),
+            format!("{:.3}", rep.ppl_c4),
+        ];
+        row.extend(taskfmt(&rep));
+        row.push(format!("{:.1}", out.wall_secs));
+        table.row(row);
+    }
+
+    table.print();
+    table.save(Path::new("results"), "e2e")?;
+    // Persist the loss curve too.
+    let curve: String = tr.losses.iter().map(|(s, l)| format!("{s},{l}\n")).collect();
+    std::fs::write("results/e2e_losscurve.csv", format!("step,loss\n{curve}"))?;
+    println!("saved results/e2e.md and results/e2e_losscurve.csv");
+    Ok(())
+}

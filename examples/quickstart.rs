@@ -1,0 +1,71 @@
+//! Quickstart: decompose one weight matrix three ways and watch the roles.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure-Rust algorithm layer on a
+//! synthetic problem with planted activation outliers (the phenomenon
+//! ODLRI exploits). It prints the per-iteration quantization scale and
+//! activation-aware error for Zero / LRApprox(W) / ODLRI initializations.
+
+use odlri::calib::{synthetic_calib, synthetic_weight};
+use odlri::decompose::{Initializer, JointConfig, JointOptimizer};
+use odlri::lowrank::LowRankConfig;
+use odlri::quant::E8Lattice;
+
+fn main() {
+    // A 128×128 "key projection" with 4 outlier channels boosted ~20×.
+    let calib = synthetic_calib(128, 512, 4, 20.0, 42);
+    let w = synthetic_weight(128, 128, &calib.outlier_channels, 42);
+    println!(
+        "problem: 128x128 weight, outlier channels {:?}",
+        calib.outlier_channels
+    );
+
+    let quant = E8Lattice::new(2);
+    let rank = 8;
+    let k = Initializer::odlri_k(rank, 128).max(4);
+    let inits = [
+        Initializer::Zero,
+        Initializer::LrApproxW,
+        Initializer::Odlri { k },
+    ];
+
+    println!("\n{:<12} {:>5} {:>12} {:>12} {:>8} {:>8}",
+             "init", "iter", "quant-scale", "act-err", "|QX|", "|LRX|");
+    for init in &inits {
+        let cfg = JointConfig {
+            outer_iters: 8,
+            lowrank: LowRankConfig {
+                rank,
+                lr_bits: 4,
+                lplr_iters: 5,
+                reg: 1e-4,
+            },
+            ..Default::default()
+        };
+        let opt = JointOptimizer::new(&quant, cfg);
+        let d = opt.run(&w, &calib.hessian, init);
+        for it in d.metrics.iterations().skip(1) {
+            println!(
+                "{:<12} {:>5} {:>12.5} {:>12.4e} {:>8.3} {:>8.3}",
+                init.name(),
+                it.iter,
+                it.quant_scale,
+                it.act_err,
+                it.q_norm,
+                it.lr_norm
+            );
+        }
+        let last = d.metrics.last().unwrap();
+        println!(
+            "{:<12} final: act-err {:.4e}, reconstruction rel-err {:.4}\n",
+            init.name(),
+            last.act_err,
+            d.reconstruct().rel_err(&w)
+        );
+    }
+    println!("Expected shape: ODLRI shows the lowest quant-scale and act-err");
+    println!("at every iteration (the paper's Figures 2–3).");
+}

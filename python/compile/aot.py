@@ -1,0 +1,200 @@
+"""AOT compiler: lowers every Layer-2 entry point to HLO **text** artifacts
+plus a JSON manifest the Rust runtime consumes.
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model family F:
+  fwd_F       (params…, tokens[B,S])            → logits[B,S,V]
+  train_F     (params…, m…, v…, step, tokens)   → (params…, m…, v…, loss)
+  capture_F   (params…, tokens[B,S])            → 4·n_layers activation mats
+
+Plus the Layer-1 kernel demos (standalone, fixed shapes) and the fused
+deploy forward for tl-7s (every projection as Q+LR through the Pallas
+fused kernel).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.fused_qlr import fused_qlr_matmul
+from .kernels.fwht import fwht_rows
+from .kernels.quantize import quantize_block
+
+FUSED_RANK = 32  # rank baked into the fused deploy artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "families": {}, "batch": model.BATCH,
+                         "seq": model.SEQ, "fused_rank": FUSED_RANK}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, in_names):
+        """Lower fn(*in_specs) and write the artifact + manifest entry.
+
+        ``keep_unused=True`` is load-bearing: the capture/fused entry points
+        don't read every parameter (e.g. `unembed` in capture), and without
+        it JAX prunes those arguments from the HLO — the Rust side would
+        then supply more buffers than the compiled program expects.
+        """
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        leaves = jax.tree_util.tree_leaves(outs)
+        self.manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_entry(n, s) for n, s in zip(in_names, in_specs)],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                        for o in leaves],
+        }
+        print(f"  {name}: {len(in_specs)} inputs, {len(leaves)} outputs, "
+              f"{len(text) // 1024} KiB")
+
+    def family(self, fname: str):
+        cfg = model.config(fname)
+        spec = model.param_spec(cfg)
+        n = len(spec)
+        b, s = model.BATCH, model.SEQ
+        p_specs = [f32(*shape) for _, shape in spec]
+        p_names = [name for name, _ in spec]
+        self.manifest["families"][fname] = {
+            "params": [{"name": nm, "shape": list(sh)} for nm, sh in spec],
+            "projections": model.projection_names(cfg),
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "d_ff": cfg.d_ff, "mlp": cfg.mlp,
+        }
+
+        # fwd: logits for PPL / zero-shot eval.
+        def fwd(*args):
+            return (model.forward(cfg, list(args[:n]), args[n]),)
+
+        self.emit(f"fwd_{fname}", fwd, p_specs + [i32(b, s)],
+                  p_names + ["tokens"])
+
+        # train: one AdamW step.
+        def train(*args):
+            params = list(args[:n])
+            m_st = list(args[n:2 * n])
+            v_st = list(args[2 * n:3 * n])
+            step = args[3 * n]
+            tokens = args[3 * n + 1]
+            new_p, new_m, new_v, loss = model.train_step(
+                cfg, params, m_st, v_st, step, tokens)
+            return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+        train_specs = p_specs + p_specs + p_specs + [f32(), i32(b, s + 1)]
+        train_names = (p_names + [f"m.{x}" for x in p_names]
+                       + [f"v.{x}" for x in p_names] + ["step", "tokens"])
+        self.emit(f"train_{fname}", train, train_specs, train_names)
+
+        # capture: calibration activations.
+        def capture(*args):
+            return tuple(model.capture_acts(cfg, list(args[:n]), args[n]))
+
+        self.emit(f"capture_{fname}", capture, p_specs + [i32(b, s)],
+                  p_names + ["tokens"])
+
+    def fused_forward(self, fname: str):
+        """Deploy-path forward with every projection as (Q, L, R) through
+        the Pallas fused kernel — proves L1∘L2∘L3 composition."""
+        cfg = model.config(fname)
+        spec = model.param_spec(cfg)
+        n = len(spec)
+        b, s = model.BATCH, model.SEQ
+        r = FUSED_RANK
+        dense_specs = [f32(*shape) for _, shape in spec]
+        dense_names = [name for name, _ in spec]
+        qlr_specs, qlr_names = [], []
+        for pname in model.projection_names(cfg):
+            shape = dict(spec)[pname]
+            out_d, in_d = shape
+            qlr_specs += [f32(out_d, in_d), f32(out_d, r), f32(r, in_d)]
+            qlr_names += [f"{pname}.Q", f"{pname}.L", f"{pname}.R"]
+
+        def fwd_fused(*args):
+            dense = list(args[:n])
+            qlr = list(args[n:n + len(qlr_specs)])
+            tokens = args[n + len(qlr_specs)]
+            return (model.forward_compressed(cfg, dense, qlr, tokens, r),)
+
+        self.emit(f"fwd_fused_{fname}", fwd_fused,
+                  dense_specs + qlr_specs + [i32(b, s)],
+                  dense_names + qlr_names + ["tokens"])
+
+    def kernels(self):
+        """Standalone Layer-1 kernel artifacts (runtime integration tests +
+        the serve/kernel benches)."""
+        self.emit("kernel_quantize",
+                  lambda w: (quantize_block(w, bits=4, group=32, block_m=32),),
+                  [f32(128, 128)], ["w"])
+        self.emit("kernel_fused_qlr",
+                  lambda q, l, r, x: (fused_qlr_matmul(q, l, r, x, block_m=64),),
+                  [f32(128, 128), f32(128, 32), f32(32, 128), f32(128, 16)],
+                  ["q", "l", "r", "x"])
+        self.emit("kernel_fwht",
+                  lambda w: (fwht_rows(w, block_m=64),),
+                  [f32(128, 128)], ["w"])
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--families", nargs="*", default=list(model.FAMILIES))
+    args = ap.parse_args()
+    b = Builder(args.out)
+    print("lowering kernels…")
+    b.kernels()
+    for fname in args.families:
+        print(f"lowering {fname}…")
+        b.family(fname)
+    print("lowering fused deploy forward (tl-7s)…")
+    b.fused_forward("tl-7s")
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: fused compressed-weight product y = (Q + L R) x.
+
+This is the deployment hot-spot of the paper's decomposition: the compressed
+layer multiplies activations by ``Q + L R`` WITHOUT materializing the m×n
+product ``L R``. The GPU story (QuIP#/CALDERA CUDA kernels) stages Q tiles in
+shared memory and threads the low-rank path through registers; the TPU
+rethinking tiles ``Q`` into (block_m × n) VMEM blocks targeted at the MXU,
+with the rank-r path computed as two skinny MXU matmuls per tile:
+
+    t = R @ x            (r × b)   — computed once, broadcast to all tiles
+    y_tile = Q_tile @ x + L_tile @ t
+
+``t`` is computed by a first Pallas kernel (it is shared across the grid —
+the HBM↔VMEM analogue of CUDA's "one block computes, all blocks reuse"), and
+the tiled kernel fuses the two products per output block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rx_kernel(r_ref, x_ref, t_ref):
+    t_ref[...] = r_ref[...] @ x_ref[...]
+
+
+def _tile_kernel(q_ref, l_ref, x_ref, t_ref, o_ref):
+    # One (block_m)-row slab of the output: MXU matmul on the Q tile plus
+    # the rank-r correction.
+    o_ref[...] = q_ref[...] @ x_ref[...] + l_ref[...] @ t_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def fused_qlr_matmul(
+    q: jnp.ndarray,
+    l: jnp.ndarray,
+    r: jnp.ndarray,
+    x: jnp.ndarray,
+    block_m: int = 64,
+) -> jnp.ndarray:
+    """y = (Q + L @ R) @ x with Q (m,n), L (m,r), R (r,n), x (n,b)."""
+    m, n = q.shape
+    mr, rank = l.shape
+    rr, nr = r.shape
+    nx, b = x.shape
+    assert (mr, rr, nr, nx) == (m, rank, n, n), "shape mismatch"
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    qp = jnp.pad(q, ((0, pad), (0, 0))) if pad else q
+    lp = jnp.pad(l, ((0, pad), (0, 0))) if pad else l
+    mp = m + pad
+
+    # Stage 1: t = R @ x (single grid step; r and b are small).
+    t = pl.pallas_call(
+        _rx_kernel,
+        out_shape=jax.ShapeDtypeStruct((rank, b), x.dtype),
+        interpret=True,
+    )(r, x)
+
+    # Stage 2: row-tiled fused product.
+    y = pl.pallas_call(
+        _tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, b), x.dtype),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),       # Q tile
+            pl.BlockSpec((bm, rank), lambda i: (i, 0)),    # L tile
+            pl.BlockSpec((n, b), lambda i: (0, 0)),        # x (broadcast)
+            pl.BlockSpec((rank, b), lambda i: (0, 0)),     # t (broadcast)
+        ],
+        out_specs=pl.BlockSpec((bm, b), lambda i: (i, 0)),
+        interpret=True,
+    )(qp, lp, x, t)
+    return y[:m] if pad else y
+
+
+def vmem_bytes(block_m: int, n: int, rank: int, b: int, dtype_bytes: int = 4) -> int:
+    """Per-step VMEM residency: Q tile + L tile + x + t + output tile."""
+    return dtype_bytes * (block_m * n + block_m * rank + n * b + rank * b + block_m * b)
+
+
+def mxu_flops(m: int, n: int, rank: int, b: int) -> int:
+    """MXU MAC count for one call (fused path)."""
+    return 2 * (m * n * b + rank * n * b + m * rank * b)
+
+
+def dense_flops(m: int, n: int, b: int, rank: int) -> int:
+    """MACs if LR were materialized first (the naive path)."""
+    return 2 * (m * n * rank + m * n * b)

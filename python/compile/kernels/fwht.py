@@ -1,0 +1,46 @@
+"""Layer-1 Pallas kernel: blocked fast Walsh–Hadamard transform.
+
+Used by the QuIP#-style incoherence pre-processing. Rows are tiled into
+VMEM blocks; the log2(n) butterfly stages run entirely in-VMEM per tile
+(the CUDA version's shared-memory butterflies map 1:1 onto this)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwht_kernel(w_ref, o_ref):
+    x = w_ref[...]
+    bm, n = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(bm, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    o_ref[...] = x.reshape(bm, n) * (1.0 / jnp.sqrt(float(n)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def fwht_rows(w: jnp.ndarray, block_m: int = 64) -> jnp.ndarray:
+    """Orthonormal FWHT along the last axis (must be a power of two)."""
+    m, n = w.shape
+    assert n & (n - 1) == 0 and n > 0, f"n={n} must be a power of two"
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    mp = m + pad
+    out = pl.pallas_call(
+        _fwht_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, n), w.dtype),
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=True,
+    )(wp)
+    return out[:m] if pad else out

@@ -1,0 +1,62 @@
+"""Layer-1 Pallas kernel: per-group symmetric fake-quantization.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows into
+VMEM-resident blocks; the per-group absmax reduction happens entirely
+in-register per tile (the GPU version's warp-reduce). ``interpret=True`` is
+mandatory on this image — real TPU lowering emits a Mosaic custom-call the
+CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(w_ref, o_ref, *, bits: int, group: int):
+    """One grid step: quantize a (block_m, n) tile."""
+    w = w_ref[...]
+    bm, n = w.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    g = w.reshape(bm, n // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    o_ref[...] = (q * scale).reshape(bm, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "block_m"))
+def quantize_block(
+    w: jnp.ndarray, bits: int = 4, group: int = 32, block_m: int = 32
+) -> jnp.ndarray:
+    """Fake-quantize ``w`` (m, n) with per-group absmax scales.
+
+    ``n`` must be divisible by ``group``; rows are processed in
+    ``block_m``-row VMEM tiles.
+    """
+    m, n = w.shape
+    assert n % group == 0, f"n={n} % group={group} != 0"
+    bm = min(block_m, m)
+    # Pad rows to a multiple of the block.
+    pad = (-m) % bm
+    wp = jnp.pad(w, ((0, pad), (0, 0))) if pad else w
+    mp = m + pad
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits, group=group),
+        out_shape=jax.ShapeDtypeStruct((mp, n), w.dtype),
+        grid=(mp // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(wp)
+    return out[:m] if pad else out
+
+
+# VMEM/MXU accounting used by DESIGN.md §Perf (analytic, since interpret
+# mode gives CPU-numpy timings that say nothing about TPU).
+def vmem_bytes(block_m: int, n: int, dtype_bytes: int = 4) -> int:
+    """Per-step VMEM: input tile + output tile."""
+    return 2 * block_m * n * dtype_bytes

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every kernel in this package is
+pytest-checked against the matching function here (exact shapes, then
+hypothesis sweeps over shapes/dtypes in ``python/tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_block_ref(w: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Symmetric per-group absmax fake-quantization (matches the Rust
+    ``UniformQuantizer`` and the Pallas ``quantize_block`` kernel).
+
+    Groups are contiguous runs of ``group`` entries along the last axis;
+    the last axis must be divisible by ``group``.
+    """
+    m, n = w.shape
+    assert n % group == 0, f"n={n} not divisible by group={group}"
+    qmax = float(2 ** (bits - 1) - 1)
+    g = w.reshape(m, n // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax)
+    return (q * scale).reshape(m, n)
+
+
+def fused_qlr_ref(
+    q: jnp.ndarray, l: jnp.ndarray, r: jnp.ndarray, x: jnp.ndarray
+) -> jnp.ndarray:
+    """y = (Q + L R) x without materializing L R (two skinny matmuls)."""
+    return q @ x + l @ (r @ x)
+
+
+def fwht_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal Walsh–Hadamard transform along the last axis (power of
+    two), matching the Rust ``fwht_rows``/``fwht_normalized``."""
+    m, n = w.shape
+    assert n & (n - 1) == 0, f"n={n} must be a power of two"
+    x = w
+    h = 1
+    while h < n:
+        x = x.reshape(m, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    return x.reshape(m, n) / jnp.sqrt(float(n))

@@ -1,0 +1,316 @@
+"""Layer-2: tiny Llama-style transformer families in JAX (build-time only).
+
+Five scaled-down model families stand in for the paper's evaluation models
+(DESIGN.md §2 documents the substitution):
+
+=========  ============================  =========================
+family     stands in for                 distinguishing knobs
+=========  ============================  =========================
+tl-7s      Llama2-7B                     MHA, SwiGLU
+tl-13s     Llama2-13B                    wider + deeper MHA
+tl3-8s     Llama3-8B                     GQA, larger vocab
+tm-7s      Mistral-7B                    GQA, wider FFN
+tg-2s      Gemma2-2B                     GeGLU, post-norm scaling
+=========  ============================  =========================
+
+Everything here is lowered once by ``aot.py`` to HLO text; the Rust runtime
+executes the artifacts. Parameters travel as a FLAT LIST in ``param_spec``
+order — the manifest records names/shapes so the Rust side can assemble and
+consume the same order.
+
+Weight convention matches the paper: ``W`` is (out, in) and layers compute
+``y = x @ W.T`` — so the calibration activations for a matrix are its INPUT
+vectors and ``H = X Xᵀ`` with X (in_dim, samples).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    rope_theta: float = 10000.0
+    # 'swiglu' (silu(gate)*up) or 'geglu' (gelu(gate)*up, Gemma-style)
+    mlp: str = "swiglu"
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+FAMILIES = {
+    "tl-7s": ModelConfig("tl-7s", vocab=256, d_model=128, n_layers=4,
+                         n_heads=4, n_kv_heads=4, d_ff=352),
+    "tl-13s": ModelConfig("tl-13s", vocab=256, d_model=192, n_layers=5,
+                          n_heads=6, n_kv_heads=6, d_ff=512),
+    "tl3-8s": ModelConfig("tl3-8s", vocab=384, d_model=128, n_layers=4,
+                          n_heads=4, n_kv_heads=2, d_ff=384),
+    "tm-7s": ModelConfig("tm-7s", vocab=256, d_model=128, n_layers=4,
+                         n_heads=4, n_kv_heads=2, d_ff=448),
+    "tg-2s": ModelConfig("tg-2s", vocab=256, d_model=96, n_layers=3,
+                         n_heads=4, n_kv_heads=4, d_ff=320, mlp="geglu"),
+}
+
+# Batch/sequence shape every artifact is lowered with. Small enough for
+# snappy CPU execution, large enough for meaningful Hessians.
+BATCH = 8
+SEQ = 96  # long enough for the longest zero-shot prompt + choice + padding
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat parameter layout: (name, shape) in artifact order."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.kv_dim, cfg.d_model)),
+            (p + "wv", (cfg.kv_dim, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "wgate", (cfg.d_ff, cfg.d_model)),
+            (p + "wup", (cfg.d_ff, cfg.d_model)),
+            (p + "wdown", (cfg.d_model, cfg.d_ff)),
+        ]
+    spec += [("ln_f", (cfg.d_model,)), ("unembed", (cfg.vocab, cfg.d_model))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Scaled-normal initialization in spec order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-1]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / math.sqrt(fan_in)
+            )
+    return params
+
+
+def _rms_norm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _rope(x: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding over (B, S, H, Dh)."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack(cfg: ModelConfig, params: List[jnp.ndarray]):
+    names = [n for n, _ in param_spec(cfg)]
+    return dict(zip(names, params))
+
+
+def _layer(cfg: ModelConfig, p, i: int, x: jnp.ndarray, mask, capture=None):
+    """One transformer block. Returns the new residual stream; if `capture`
+    is a list, appends the four calibration activation matrices
+    (attn_in, attn_ctx, mlp_in, mlp_mid), each (in_dim, B·S)."""
+    b, s, d = x.shape
+    pre = f"layer{i}."
+    h = _rms_norm(x, p[pre + "ln1"])
+    if capture is not None:
+        capture.append(h.reshape(-1, d).T)  # attn_in
+    q = h @ p[pre + "wq"].T
+    k = h @ p[pre + "wk"].T
+    v = h @ p[pre + "wv"].T
+    hd = cfg.head_dim
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+    if cfg.n_kv_heads != cfg.n_heads:
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    att = att + mask
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    if capture is not None:
+        capture.append(ctx.reshape(-1, d).T)  # attn_ctx
+    x = x + ctx @ p[pre + "wo"].T
+
+    h2 = _rms_norm(x, p[pre + "ln2"])
+    if capture is not None:
+        capture.append(h2.reshape(-1, d).T)  # mlp_in
+    gate = h2 @ p[pre + "wgate"].T
+    up = h2 @ p[pre + "wup"].T
+    act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate)
+    mid = act * up
+    if capture is not None:
+        capture.append(mid.reshape(-1, cfg.d_ff).T)  # mlp_mid
+    x = x + mid @ p[pre + "wdown"].T
+    return x
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray,
+            capture=None) -> jnp.ndarray:
+    """Dense forward: tokens (B, S) int32 → logits (B, S, V)."""
+    p = _unpack(cfg, params)
+    b, s = tokens.shape
+    x = p["embed"][tokens]
+    mask = jnp.where(
+        jnp.tril(jnp.ones((s, s), bool)), 0.0, -1e9
+    )[None, None, :, :]
+    for i in range(cfg.n_layers):
+        x = _layer(cfg, p, i, x, mask, capture)
+    x = _rms_norm(x, p["ln_f"])
+    return x @ p["unembed"].T
+
+
+def loss_fn(cfg: ModelConfig, params: List[jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy. tokens: (B, S+1) int32."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params, m_state, v_state, step, tokens,
+               lr: float = 3e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    """One AdamW step, fully functional. Returns
+    (new_params, new_m, new_v, loss) — all flat lists + scalar."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens)
+    )(params)
+    t = step + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for (name, _shape), p_i, g, m, v in zip(
+        param_spec(cfg), params, grads, m_state, v_state
+    ):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        decay = 0.0 if name.endswith(("ln1", "ln2", "ln_f")) else wd
+        new_p.append(p_i - lr * (upd + decay * p_i))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v, loss
+
+
+def capture_acts(cfg: ModelConfig, params, tokens) -> List[jnp.ndarray]:
+    """Calibration activations: for each layer, four matrices
+    (attn_in, attn_ctx, mlp_in, mlp_mid), each (in_dim, B·S)."""
+    caps: List[jnp.ndarray] = []
+    forward(cfg, params, tokens, capture=caps)
+    return caps
+
+
+# ---------------------------------------------------------------------------
+# Compressed deploy forward: the L1 fused kernel inside the L2 model.
+# ---------------------------------------------------------------------------
+
+def fused_linear(q, l, r, x2d):
+    """Compressed linear on (tokens, in_dim) activations via the Pallas
+    fused kernel: returns (tokens, out_dim)."""
+    from .kernels.fused_qlr import fused_qlr_matmul
+
+    # Kernel computes (Q + LR) @ X with X (in_dim, tokens).
+    return fused_qlr_matmul(q, l, r, x2d.T, block_m=64).T
+
+
+def forward_compressed(cfg: ModelConfig, dense: List[jnp.ndarray],
+                       qlr: List[jnp.ndarray], tokens: jnp.ndarray,
+                       rank: int) -> jnp.ndarray:
+    """Deploy-path forward where every projection matrix is (Q, L, R).
+
+    ``dense`` carries the uncompressed params (embed/norms/unembed; the
+    projection slots in `dense` are ignored). ``qlr`` is a flat list with
+    3 entries (Q, L, R) per projection matrix, in ``param_spec`` order of
+    the 7 projections per layer.
+    """
+    p = _unpack(cfg, dense)
+    b, s = tokens.shape
+    x = p["embed"][tokens]
+    mask = jnp.where(jnp.tril(jnp.ones((s, s), bool)), 0.0, -1e9)[None, None]
+    it = iter(range(0, len(qlr), 3))
+
+    def nxt():
+        j = next(it)
+        return qlr[j], qlr[j + 1], qlr[j + 2]
+
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        d = cfg.d_model
+        h = _rms_norm(x, p[pre + "ln1"])
+        h2d = h.reshape(-1, d)
+        q_w = nxt()
+        k_w = nxt()
+        v_w = nxt()
+        q = fused_linear(*q_w, h2d).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = fused_linear(*k_w, h2d).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = fused_linear(*v_w, h2d).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        if cfg.n_kv_heads != cfg.n_heads:
+            rep = cfg.n_heads // cfg.n_kv_heads
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        att = jax.nn.softmax(att + mask, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        o_w = nxt()
+        x = x + fused_linear(*o_w, ctx.reshape(-1, d)).reshape(b, s, d)
+        h2 = _rms_norm(x, p[pre + "ln2"])
+        h2_2d = h2.reshape(-1, d)
+        gate_w = nxt()
+        up_w = nxt()
+        gate = fused_linear(*gate_w, h2_2d)
+        up = fused_linear(*up_w, h2_2d)
+        act = jax.nn.silu(gate) if cfg.mlp == "swiglu" else jax.nn.gelu(gate)
+        mid = act * up
+        down_w = nxt()
+        x = x + fused_linear(*down_w, mid).reshape(b, s, d)
+    x = _rms_norm(x, p["ln_f"])
+    return x @ p["unembed"].T
+
+
+def projection_names(cfg: ModelConfig) -> List[str]:
+    """Names of the 7·n_layers compressible projection matrices, in order."""
+    out = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        out += [p + w for w in ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")]
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def config(name: str) -> ModelConfig:
+    return FAMILIES[name]

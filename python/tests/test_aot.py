@@ -1,0 +1,87 @@
+"""AOT pipeline tests: HLO text artifacts exist, parse structurally, and the
+manifest agrees with the model's parameter spec. (Numeric round-trip through
+PJRT is covered on the Rust side in ``rust/tests/``.)"""
+
+import json
+import os
+
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_families(manifest):
+    for fam in model.FAMILIES:
+        assert fam in manifest["families"], fam
+        for kind in ("fwd", "train", "capture"):
+            assert f"{kind}_{fam}" in manifest["artifacts"]
+
+
+def test_artifact_files_exist_and_are_hlo(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ART, art["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), f"{name}: not HLO text"
+
+
+def test_manifest_param_shapes_match_spec(manifest):
+    for fam, cfg in model.FAMILIES.items():
+        spec = model.param_spec(cfg)
+        man = manifest["families"][fam]["params"]
+        assert len(man) == len(spec)
+        for (name, shape), entry in zip(spec, man):
+            assert entry["name"] == name
+            assert tuple(entry["shape"]) == tuple(shape)
+
+
+def test_train_artifact_io_arity(manifest):
+    for fam, cfg in model.FAMILIES.items():
+        n = len(model.param_spec(cfg))
+        art = manifest["artifacts"][f"train_{fam}"]
+        assert len(art["inputs"]) == 3 * n + 2
+        assert len(art["outputs"]) == 3 * n + 1
+
+
+def test_capture_artifact_output_count(manifest):
+    for fam, cfg in model.FAMILIES.items():
+        art = manifest["artifacts"][f"capture_{fam}"]
+        assert len(art["outputs"]) == 4 * cfg.n_layers
+
+
+def test_fwd_logits_shape(manifest):
+    b, s = manifest["batch"], manifest["seq"]
+    for fam, cfg in model.FAMILIES.items():
+        art = manifest["artifacts"][f"fwd_{fam}"]
+        assert art["outputs"][0]["shape"] == [b, s, cfg.vocab]
+
+
+def test_fused_artifact_has_qlr_inputs(manifest):
+    art = manifest["artifacts"]["fwd_fused_tl-7s"]
+    cfg = model.config("tl-7s")
+    names = [i["name"] for i in art["inputs"]]
+    for pname in model.projection_names(cfg):
+        for suffix in (".Q", ".L", ".R"):
+            assert pname + suffix in names
+    r = manifest["fused_rank"]
+    # L shapes carry the baked rank.
+    l0 = next(i for i in art["inputs"] if i["name"] == "layer0.wq.L")
+    assert l0["shape"] == [cfg.d_model, r]
+
+
+def test_no_serialized_protos_in_artifacts(manifest):
+    # Guard the image gotcha: interchange must be HLO *text*.
+    for art in manifest["artifacts"].values():
+        assert art["file"].endswith(".hlo.txt")

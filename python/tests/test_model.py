@@ -1,0 +1,147 @@
+"""Layer-2 model tests: shapes, invariances, training signal, capture
+consistency, compressed-forward equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module", params=["tl-7s", "tl3-8s", "tg-2s"])
+def family(request):
+    cfg = model.config(request.param)
+    params = model.init_params(cfg, seed=1)
+    return cfg, params
+
+
+def toks(cfg, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.array(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+
+def test_param_spec_counts():
+    cfg = model.config("tl-7s")
+    spec = model.param_spec(cfg)
+    assert len(spec) == 1 + 9 * cfg.n_layers + 2
+    names = [n for n, _ in spec]
+    assert len(set(names)) == len(names), "duplicate param names"
+    # Projections subset of params.
+    assert set(model.projection_names(cfg)) <= set(names)
+
+
+def test_forward_shapes(family):
+    cfg, params = family
+    logits = model.forward(cfg, params, toks(cfg, 2, 16))
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_is_causal(family):
+    # Changing a future token must not affect earlier logits.
+    cfg, params = family
+    t1 = toks(cfg, 1, 12, seed=3)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab)
+    l1 = model.forward(cfg, params, t1)
+    l2 = model.forward(cfg, params, t2)
+    np.testing.assert_allclose(
+        np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), atol=1e-4
+    )
+
+
+def test_initial_loss_near_uniform(family):
+    cfg, params = family
+    l = model.loss_fn(cfg, params, toks(cfg, 4, 33))
+    assert abs(float(l) - np.log(cfg.vocab)) < 0.6
+
+
+def test_train_step_decreases_loss():
+    cfg = model.config("tl-7s")
+    params = model.init_params(cfg, seed=2)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    batch = toks(cfg, 8, 65, seed=5)  # overfit one batch
+    losses = []
+    for step in range(20):
+        params, m, v, loss = model.train_step(cfg, params, m, v,
+                                              float(step), batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_capture_shapes_and_values(family):
+    cfg, params = family
+    t = toks(cfg, 2, 8)
+    caps = model.capture_acts(cfg, params, t)
+    assert len(caps) == 4 * cfg.n_layers
+    samples = 2 * 8
+    for i in range(cfg.n_layers):
+        attn_in, attn_ctx, mlp_in, mlp_mid = caps[4 * i:4 * i + 4]
+        assert attn_in.shape == (cfg.d_model, samples)
+        assert attn_ctx.shape == (cfg.d_model, samples)
+        assert mlp_in.shape == (cfg.d_model, samples)
+        assert mlp_mid.shape == (cfg.d_ff, samples)
+    # attn_in is RMSNorm output: per-sample RMS ≈ ln gain (init 1).
+    rms = jnp.sqrt(jnp.mean(caps[0] ** 2, axis=0))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=0.2)
+
+
+def test_capture_does_not_change_forward(family):
+    cfg, params = family
+    t = toks(cfg, 1, 8)
+    l1 = model.forward(cfg, params, t)
+    sink = []
+    l2 = model.forward(cfg, params, t, capture=sink)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_compressed_forward_exact_with_lossless_qlr():
+    """If Q = W and L,R = 0, the fused deploy forward must reproduce the
+    dense forward exactly — the end-to-end composition check for the
+    Pallas fused kernel inside the model."""
+    cfg = model.config("tl-7s")
+    params = model.init_params(cfg, seed=3)
+    spec = dict(model.param_spec(cfg))
+    r = 8
+    qlr = []
+    for pname in model.projection_names(cfg):
+        out_d, in_d = spec[pname]
+        w = params[[n for n, _ in model.param_spec(cfg)].index(pname)]
+        qlr += [w, jnp.zeros((out_d, r)), jnp.zeros((r, in_d))]
+    t = toks(cfg, 1, 8)
+    dense = model.forward(cfg, params, t)
+    fused = model.forward_compressed(cfg, params, qlr, t, r)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_compressed_forward_splits_q_and_lr():
+    """Q + LR decomposition of each W must also be exact when Q = W − LR."""
+    cfg = model.config("tl-7s")
+    params = model.init_params(cfg, seed=4)
+    names = [n for n, _ in model.param_spec(cfg)]
+    r = 4
+    key = jax.random.PRNGKey(0)
+    qlr = []
+    for pname in model.projection_names(cfg):
+        w = params[names.index(pname)]
+        out_d, in_d = w.shape
+        key, k1, k2 = jax.random.split(key, 3)
+        l = jax.random.normal(k1, (out_d, r)) * 0.05
+        rr = jax.random.normal(k2, (r, in_d)) * 0.05
+        qlr += [w - l @ rr, l, rr]
+    t = toks(cfg, 1, 8)
+    dense = model.forward(cfg, params, t)
+    fused = model.forward_compressed(cfg, params, qlr, t, r)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gqa_heads_divide():
+    for name, cfg in model.FAMILIES.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.n_heads % cfg.n_kv_heads == 0, name
+        assert cfg.head_dim % 2 == 0, f"{name}: RoPE needs even head dim"

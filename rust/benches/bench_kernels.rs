@@ -1,0 +1,98 @@
+//! Micro-benchmarks of the Rust compute substrate (the L3 hot paths the
+//! profiler pointed at: matmul, SVD, LDLQ, E8 rounding, FWHT, LPLR).
+//! Output format feeds EXPERIMENTS.md §Perf.
+
+use odlri::benchkit::{group, Bencher};
+use odlri::hessian::Hessian;
+use odlri::linalg::{svd_jacobi, truncated_svd};
+use odlri::lowrank::{lplr, whitened_svd_lr, LowRankConfig};
+use odlri::quant::{E8Lattice, Quantizer, UniformQuantizer};
+use odlri::tensor::{matmul, set_matmul_threads, Matrix};
+use odlri::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(1, 1);
+
+    group("matmul");
+    for &(m, k, n) in &[(128usize, 128usize, 128usize), (352, 128, 512), (512, 512, 512)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        set_matmul_threads(1);
+        let s = Bencher::new(&format!("matmul_{m}x{k}x{n}_1t")).fast().run(|| matmul(&a, &b));
+        println!("{}", s.line_throughput(2.0 * (m * k * n) as f64, "flop"));
+        set_matmul_threads(0);
+        let s = Bencher::new(&format!("matmul_{m}x{k}x{n}_mt")).fast().run(|| matmul(&a, &b));
+        println!("{}", s.line_throughput(2.0 * (m * k * n) as f64, "flop"));
+    }
+
+    group("svd");
+    for &(m, n, r) in &[(128usize, 128usize, 16usize), (352, 128, 16), (512, 512, 32)] {
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        if m.min(n) <= 128 {
+            let s = Bencher::new(&format!("svd_jacobi_{m}x{n}")).fast().run(|| svd_jacobi(&a));
+            println!("{}", s.line());
+        }
+        let mut r1 = Pcg64::new(2, 2);
+        let s = Bencher::new(&format!("truncated_svd_{m}x{n}_r{r}"))
+            .fast()
+            .run(|| truncated_svd(&a, r, &mut r1));
+        println!("{}", s.line());
+    }
+
+    group("quantizers");
+    let w = Matrix::randn(352, 128, 1.0, &mut rng);
+    let e8 = E8Lattice::new(2);
+    let s = Bencher::new("e8_quantize_352x128").fast().run(|| e8.quantize(&w));
+    println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
+    let uq = UniformQuantizer::new(2, usize::MAX);
+    let s = Bencher::new("uniform2_quantize_352x128").fast().run(|| uq.quantize(&w));
+    println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
+
+    group("ldlq");
+    let x = Matrix::randn(128, 512, 1.0, &mut rng);
+    let h = Hessian::from_acts(&x).regularized(1e-4);
+    let s = Bencher::new("ldlq_e8_352x128").fast().run(|| e8.quantize_with_hessian(&w, &h));
+    println!("{}", s.line());
+    let s = Bencher::new("ldlq_uniform_352x128").fast().run(|| uq.quantize_with_hessian(&w, &h));
+    println!("{}", s.line());
+
+    group("fwht");
+    let mut wt = Matrix::randn(352, 128, 1.0, &mut rng);
+    let s = Bencher::new("fwht_rows_352x128").fast().run(|| {
+        odlri::hadamard::fwht_rows(&mut wt);
+    });
+    println!("{}", s.line_throughput((352 * 128) as f64, "elem"));
+
+    group("lowrank");
+    let mut r2 = Pcg64::new(3, 3);
+    let s = Bencher::new("whitened_svd_352x128_r16")
+        .fast()
+        .run(|| whitened_svd_lr(&w, &h, 16, &mut r2));
+    println!("{}", s.line());
+    let cfg = LowRankConfig {
+        rank: 16,
+        lr_bits: 4,
+        lplr_iters: 10,
+        reg: 1e-4,
+    };
+    let mut r3 = Pcg64::new(4, 4);
+    let init = whitened_svd_lr(&w, &h, 16, &mut r3);
+    let s = Bencher::new("lplr10_352x128_r16")
+        .fast()
+        .run(|| lplr(&w, &h, init.clone(), &cfg));
+    println!("{}", s.line());
+
+    group("joint-iteration (1 outer iter, 352x128)");
+    let hess = Hessian::from_acts(&x);
+    let quant = E8Lattice::new(2);
+    let jc = odlri::decompose::JointConfig {
+        outer_iters: 1,
+        lowrank: cfg,
+        ..Default::default()
+    };
+    let opt = odlri::decompose::JointOptimizer::new(&quant, jc);
+    let s = Bencher::new("joint_1iter_odlri").fast().run(|| {
+        opt.run(&w, &hess, &odlri::decompose::Initializer::Odlri { k: 4 })
+    });
+    println!("{}", s.line());
+}

@@ -1,0 +1,101 @@
+//! Runtime benches: HLO artifact dispatch latency, dense vs fused-kernel
+//! forward, train-step throughput. Needs `artifacts/` (skips politely
+//! otherwise).
+
+use odlri::benchkit::{group, Bencher};
+use odlri::corpus;
+use odlri::model::ModelParams;
+use odlri::runtime::{Value, XlaRuntime};
+use odlri::tensor::Matrix;
+use odlri::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let dir = odlri::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let rt = XlaRuntime::open(&dir)?;
+    let fam = rt.manifest.family("tl-7s")?.clone();
+    let (b, s) = (rt.manifest.batch, rt.manifest.seq);
+    let mut rng = Pcg64::new(1, 1);
+
+    group("kernel dispatch (Pallas artifacts through PJRT)");
+    rt.warm("kernel_fused_qlr")?;
+    let q = Matrix::randn(128, 128, 1.0, &mut rng);
+    let l = Matrix::randn(128, 32, 1.0, &mut rng);
+    let r = Matrix::randn(32, 128, 1.0, &mut rng);
+    let x = Matrix::randn(128, 16, 1.0, &mut rng);
+    let stats = Bencher::new("kernel_fused_qlr_128").fast().run(|| {
+        rt.exec(
+            "kernel_fused_qlr",
+            &[
+                Value::from_matrix(&q),
+                Value::from_matrix(&l),
+                Value::from_matrix(&r),
+                Value::from_matrix(&x),
+            ],
+        )
+        .unwrap()
+    });
+    println!("{}", stats.line());
+    // Rust-native fused equivalent for comparison (dispatch overhead view).
+    let stats = Bencher::new("rust_fused_equivalent").fast().run(|| {
+        q.dot(&x).add(&l.dot(&r.dot(&x)))
+    });
+    println!("{}", stats.line());
+
+    group("model forward (B=8, S=96)");
+    let params = ModelParams::init(&fam, 2);
+    let data = corpus::generate(corpus::Split::WikiSim, 100_000, 1);
+    rt.warm("fwd_tl-7s")?;
+    let toks = corpus::sample_batch(&data, b, s, &mut rng);
+    let stats = Bencher::new("fwd_tl-7s").iters(3, 20).run(|| {
+        let mut inputs = params.values.clone();
+        inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+        rt.exec("fwd_tl-7s", &inputs).unwrap()
+    });
+    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+
+    group("fused deploy forward (every projection via the Pallas kernel)");
+    rt.warm("fwd_fused_tl-7s")?;
+    let rank = rt.manifest.fused_rank;
+    let mut fused_inputs = params.values.clone();
+    for name in &fam.projections {
+        let w = params.get_matrix(name)?;
+        fused_inputs.push(Value::from_matrix(&w));
+        fused_inputs.push(Value::from_matrix(&Matrix::zeros(w.rows(), rank)));
+        fused_inputs.push(Value::from_matrix(&Matrix::zeros(rank, w.cols())));
+    }
+    fused_inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+    let stats = Bencher::new("fwd_fused_tl-7s").iters(3, 20).run(|| {
+        rt.exec("fwd_fused_tl-7s", &fused_inputs).unwrap()
+    });
+    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+
+    group("train step (B=8, S=97)");
+    rt.warm("train_tl-7s")?;
+    let n = params.values.len();
+    let zeros: Vec<Value> = params
+        .values
+        .iter()
+        .map(|v| {
+            Value::from_vec_f32(
+                v.shape().to_vec(),
+                vec![0.0; v.shape().iter().product()],
+            )
+        })
+        .collect();
+    let ttoks = corpus::sample_batch(&data, b, s + 1, &mut rng);
+    let stats = Bencher::new("train_step_tl-7s").iters(3, 10).run(|| {
+        let mut inputs = Vec::with_capacity(3 * n + 2);
+        inputs.extend(params.values.iter().cloned());
+        inputs.extend(zeros.iter().cloned());
+        inputs.extend(zeros.iter().cloned());
+        inputs.push(Value::scalar_f32(0.0));
+        inputs.push(Value::from_vec_i32(vec![b, s + 1], ttoks.clone()));
+        rt.exec("train_tl-7s", &inputs).unwrap()
+    });
+    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+    Ok(())
+}

@@ -1,0 +1,202 @@
+//! One bench per paper table/figure: times the *workload that regenerates
+//! it* (reduced sweeps — the full regeneration is `odlri exp <id>`).
+//!
+//! table1/fig2/fig3/fig4/fig5/table8 → matrix-level joint optimization;
+//! table2/3/4/5/9/10/11 → one pipeline cell (compress 7 matrices) each.
+
+use std::collections::BTreeMap;
+
+use odlri::benchkit::{group, Bencher};
+use odlri::calib::{synthetic_calib, synthetic_weight};
+use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::decompose::{Initializer, JointConfig, JointOptimizer};
+use odlri::hessian::Hessian;
+use odlri::lowrank::LowRankConfig;
+use odlri::model::ModelParams;
+use odlri::quant::E8Lattice;
+use odlri::runtime::FamilySpec;
+use odlri::tensor::Matrix;
+use odlri::util::fnv1a;
+
+fn matrix_problem(proj: &str, seed: u64) -> (Matrix, Hessian) {
+    let (m, n) = match proj {
+        "wgate" | "wup" => (352, 128),
+        "wdown" => (128, 352),
+        _ => (128, 128),
+    };
+    let c = synthetic_calib(n, 4 * n, 4, 20.0, seed);
+    let w = synthetic_weight(m, n, &c.outlier_channels, seed);
+    (w, c.hessian)
+}
+
+fn run_joint(w: &Matrix, h: &Hessian, init: &Initializer, iters: usize, lr_bits: u32) {
+    let quant = E8Lattice::new(2);
+    let cfg = JointConfig {
+        outer_iters: iters,
+        lowrank: LowRankConfig {
+            rank: 8,
+            lr_bits,
+            lplr_iters: 3,
+            reg: 1e-4,
+        },
+        ..Default::default()
+    };
+    JointOptimizer::new(&quant, cfg).run(w, h, init);
+}
+
+/// A one-layer toy model for pipeline cells (artifact-free).
+fn toy_pipeline_inputs() -> (ModelParams, BTreeMap<String, Hessian>) {
+    let fam = FamilySpec {
+        name: "bench".into(),
+        params: vec![
+            ("embed".into(), vec![32, 128]),
+            ("layer0.ln1".into(), vec![128]),
+            ("layer0.wq".into(), vec![128, 128]),
+            ("layer0.wk".into(), vec![128, 128]),
+            ("layer0.wv".into(), vec![128, 128]),
+            ("layer0.wo".into(), vec![128, 128]),
+            ("layer0.ln2".into(), vec![128]),
+            ("layer0.wgate".into(), vec![352, 128]),
+            ("layer0.wup".into(), vec![352, 128]),
+            ("layer0.wdown".into(), vec![128, 352]),
+            ("ln_f".into(), vec![128]),
+            ("unembed".into(), vec![32, 128]),
+        ],
+        projections: vec![
+            "layer0.wq".into(),
+            "layer0.wk".into(),
+            "layer0.wv".into(),
+            "layer0.wo".into(),
+            "layer0.wgate".into(),
+            "layer0.wup".into(),
+            "layer0.wdown".into(),
+        ],
+        vocab: 32,
+        d_model: 128,
+        n_layers: 1,
+        d_ff: 352,
+    };
+    let mut params = ModelParams::init(&fam, 1);
+    let mut hessians = BTreeMap::new();
+    for name in fam.projections.clone() {
+        let shape = fam.param_shape(&name).unwrap().to_vec();
+        let c = synthetic_calib(shape[1], 3 * shape[1], 3, 20.0, fnv1a(name.as_bytes()));
+        params
+            .set_matrix(
+                &name,
+                &synthetic_weight(shape[0], shape[1], &c.outlier_channels, 2),
+            )
+            .unwrap();
+        hessians.insert(name, c.hessian);
+    }
+    (params, hessians)
+}
+
+fn pipeline_cell(init: InitKind, rank: usize, lr_bits: u32, scheme: &str, bits: u32) {
+    let (params, hessians) = toy_pipeline_inputs();
+    let cfg = PipelineConfig {
+        init,
+        rank,
+        lr_bits,
+        q_scheme: scheme.into(),
+        q_bits: bits,
+        q_group: 32,
+        outer_iters: 3,
+        lplr_iters: 3,
+        workers: 4,
+        ..Default::default()
+    };
+    CompressionPipeline::new(cfg).run(&params, &hessians).unwrap();
+}
+
+fn main() {
+    group("table1 / tables12-13 — init-role traces (key proj, 5 iters)");
+    let (w, h) = matrix_problem("wk", 11);
+    for (name, init) in [
+        ("table1_zero", Initializer::Zero),
+        ("table1_lrapprox", Initializer::LrApproxW),
+    ] {
+        let s = Bencher::new(name).iters(3, 10).run(|| run_joint(&w, &h, &init, 5, 16));
+        println!("{}", s.line());
+    }
+
+    group("fig2/fig3 — per-iteration scale+error trace (3 inits, 4-bit LR)");
+    for (name, init) in [
+        ("fig23_zero", Initializer::Zero),
+        ("fig23_lrapprox", Initializer::LrApproxW),
+        ("fig23_odlri", Initializer::Odlri { k: 4 }),
+    ] {
+        let s = Bencher::new(name).iters(3, 10).run(|| run_joint(&w, &h, &init, 5, 4));
+        println!("{}", s.line());
+    }
+
+    group("fig4/fig5 — wider projection sweep (down proj)");
+    let (wd, hd) = matrix_problem("wdown", 12);
+    let s = Bencher::new("fig45_down_odlri")
+        .iters(3, 10)
+        .run(|| run_joint(&wd, &hd, &Initializer::Odlri { k: 4 }, 5, 4));
+    println!("{}", s.line());
+
+    group("table8 — ODLRI init with H vs H_o");
+    let mut rng = odlri::util::rng::Pcg64::new(5, 5);
+    let s = Bencher::new("table8_odlri_init").fast().run(|| {
+        odlri::decompose::odlri_init(&w, &h, 8, 4, &mut rng)
+    });
+    println!("{}", s.line());
+    let mut rng2 = odlri::util::rng::Pcg64::new(6, 6);
+    let hr = h.regularized(1e-4);
+    let s = Bencher::new("table8_full_h_init").fast().run(|| {
+        odlri::lowrank::whitened_svd_lr(&w, &hr, 8, &mut rng2)
+    });
+    println!("{}", s.line());
+
+    group("table2 — pipeline cell (2-bit E8 + 4-bit LR)");
+    let s = Bencher::new("table2_cell_caldera").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Caldera, 8, 4, "e8", 2)
+    });
+    println!("{}", s.line());
+    let s = Bencher::new("table2_cell_odlri").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Odlri, 8, 4, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table3 — pipeline cell (16-bit LR)");
+    let s = Bencher::new("table3_cell_odlri").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Odlri, 8, 16, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table4 — generalization cell (GQA-like shapes are identical here)");
+    let s = Bencher::new("table4_cell_odlri").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Odlri, 16, 4, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table5 — k = r vs k < r");
+    let s = Bencher::new("table5_k_eq_r").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::OdlriK(8), 8, 16, "e8", 2)
+    });
+    println!("{}", s.line());
+    let s = Bencher::new("table5_k_lt_r").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::OdlriK(2), 8, 16, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table9 — QuIP#-only (rank 0) vs +ODLRI");
+    let s = Bencher::new("table9_rank0").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Caldera, 0, 16, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table10 — extreme rank 2");
+    let s = Bencher::new("table10_rank2").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Odlri, 2, 4, "e8", 2)
+    });
+    println!("{}", s.line());
+
+    group("table11 — MXINT 3-bit cell");
+    let s = Bencher::new("table11_mxint").iters(2, 5).run(|| {
+        pipeline_cell(InitKind::Odlri, 4, 16, "mxint", 3)
+    });
+    println!("{}", s.line());
+}

@@ -1,0 +1,137 @@
+//! Timing harness for `harness = false` bench targets (criterion is not in
+//! the offline vendor set, so we provide the subset we need: warmup,
+//! repeated timed runs, median/mean/p95, throughput, and a stable one-line
+//! report format consumed by EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} min={:>10} median={:>10} mean={:>10} p95={:>10}",
+            self.name,
+            self.iters,
+            crate::util::human_secs(self.min_s),
+            crate::util::human_secs(self.median_s),
+            crate::util::human_secs(self.mean_s),
+            crate::util::human_secs(self.p95_s),
+        )
+    }
+
+    /// Throughput line given an item count per iteration.
+    pub fn line_throughput(&self, items: f64, unit: &str) -> String {
+        format!(
+            "{}  [{:.3e} {unit}/s]",
+            self.line(),
+            items / self.median_s
+        )
+    }
+}
+
+/// A tiny bencher: `Bencher::new("name").run(|| work())`.
+pub struct Bencher {
+    name: String,
+    min_iters: usize,
+    max_iters: usize,
+    target_secs: f64,
+    warmup_iters: usize,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        Bencher {
+            name: name.to_string(),
+            min_iters: 5,
+            max_iters: 200,
+            target_secs: 1.0,
+            warmup_iters: 2,
+        }
+    }
+
+    pub fn fast(mut self) -> Bencher {
+        self.target_secs = 0.3;
+        self.max_iters = 50;
+        self
+    }
+
+    pub fn iters(mut self, min: usize, max: usize) -> Bencher {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Run the closure repeatedly; uses the closure's return value as a
+    /// black-box sink so the optimizer cannot elide the work.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start_all = Instant::now();
+        while times.len() < self.min_iters
+            || (start_all.elapsed().as_secs_f64() < self.target_secs
+                && times.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        BenchStats {
+            name: self.name.clone(),
+            iters: n,
+            mean_s: mean,
+            median_s: times[n / 2],
+            p95_s: times[(n as f64 * 0.95) as usize % n.max(1)],
+            min_s: times[0],
+        }
+    }
+}
+
+/// Prevent the optimizer from removing a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Group header for bench output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let stats = Bencher::new("spin")
+            .iters(3, 10)
+            .run(|| {
+                let mut s = 0u64;
+                for i in 0..10_000 {
+                    s = s.wrapping_add(i);
+                }
+                s
+            });
+        assert!(stats.iters >= 3);
+        assert!(stats.min_s <= stats.median_s);
+        assert!(stats.median_s <= stats.p95_s + 1e-9);
+        assert!(stats.mean_s > 0.0);
+        assert!(stats.line().contains("spin"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Hand-rolled argument parsing (clap is not in the offline vendor set).
+//!
+//! Grammar: `odlri <command> [positional] [--flag value]... [--switch]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        out.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing command; try `odlri help`"))?;
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--k=v`, `--k v`, or switch `--k`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.flags
+                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        if argv.is_empty() {
+            return Ok(Args {
+                command: "help".into(),
+                ..Default::default()
+            });
+        }
+        Args::parse(&argv)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} wants a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn positional_at(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing {what}; try `odlri help`"))
+    }
+
+    pub fn reject_unknown(&self, known_flags: &[&str], known_switches: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known_flags.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for `{}`", self.command);
+            }
+        }
+        for s in &self.switches {
+            if !known_switches.contains(&s.as_str()) {
+                bail!("unknown switch --{s} for `{}`", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const HELP: &str = "\
+odlri — Outlier-Driven Low-Rank Initialization for joint Q+LR decomposition
+(reproduction of Cho et al., ACL 2025 Findings)
+
+USAGE: odlri <command> [options]
+
+COMMANDS
+  train        Train a tiny model family via the AOT train-step artifact
+                 --family tl-7s --steps 300 --seed 0 --out runs/
+  calibrate    Capture activations and accumulate per-matrix Hessians
+                 --family tl-7s --weights runs/tl-7s.odw --batches 8
+  compress     Compress a trained model (CALDERA / +ODLRI)
+                 --family tl-7s --init odlri|caldera|lr-first --rank 64
+                 --lr-bits 4 --scheme e8|uniform|mxint --bits 2 --iters 15
+  eval         Perplexity + zero-shot proxy accuracy of a weight file
+                 --family tl-7s --weights runs/tl-7s.odw
+  pipeline     train → calibrate → compress → eval, end to end
+                 --family tl-7s --steps 300 --rank 64
+  exp <id>     Regenerate a paper table/figure into results/
+                 ids: table1 fig2 fig3 fig4 fig5 table2 table3 table4
+                      table5 table8 table9 table10 table11 t1norms all
+  serve-bench  Batched generation latency/throughput on a compressed model
+  artifacts    List available AOT artifacts
+  help         This message
+
+Global flags: --artifacts DIR (default ./artifacts, or $ODLRI_ARTIFACTS)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        // Note: switches go last (or use --k=v); `--switch positional`
+        // would bind the positional as the switch's value.
+        let a = parse("compress pos1 --family tl-7s --rank=128 --verbose");
+        assert_eq!(a.command, "compress");
+        assert_eq!(a.str("family", ""), "tl-7s");
+        assert_eq!(a.usize("rank", 0).unwrap(), 128);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("eval");
+        assert_eq!(a.usize("rank", 64).unwrap(), 64);
+        let b = parse("eval --rank abc");
+        assert!(b.usize("rank", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("train --bogus 3");
+        assert!(a.reject_unknown(&["steps"], &[]).is_err());
+        let b = parse("train --steps 3");
+        assert!(b.reject_unknown(&["steps"], &[]).is_ok());
+    }
+
+    #[test]
+    fn exp_positional() {
+        let a = parse("exp table2 --quick");
+        assert_eq!(a.positional_at(0, "experiment id").unwrap(), "table2");
+        assert!(a.switch("quick"));
+    }
+}

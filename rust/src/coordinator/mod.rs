@@ -1,0 +1,358 @@
+//! The Layer-3 coordinator: whole-model compression pipeline.
+//!
+//! Builds one `DecompositionJob` per projection matrix, schedules them over
+//! a deterministic worker pool ([`crate::exec`]), and assembles the
+//! [`CompressedModel`]. Per-job RNG streams are derived from the matrix
+//! name, so the result is bit-identical regardless of worker count
+//! (property-tested below).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::decompose::{DecompMetrics, Initializer, JointConfig, JointOptimizer};
+use crate::exec;
+use crate::hessian::Hessian;
+use crate::lowrank::LowRankConfig;
+use crate::model::{CompressedMatrix, CompressedModel, ModelParams};
+use crate::quant::{make_quantizer, Quantizer};
+use crate::tensor;
+use crate::util::fnv1a;
+
+/// Which LR initializer the pipeline uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitKind {
+    /// CALDERA default (zero init).
+    Caldera,
+    /// LRApprox(W) init.
+    LrFirst,
+    /// CALDERA + ODLRI with the paper's k-schedule (App. B.2).
+    Odlri,
+    /// ODLRI with an explicit k (ablations, Table 5).
+    OdlriK(usize),
+}
+
+impl InitKind {
+    pub fn name(&self) -> String {
+        match self {
+            InitKind::Caldera => "caldera".into(),
+            InitKind::LrFirst => "lr-first".into(),
+            InitKind::Odlri => "odlri".into(),
+            InitKind::OdlriK(k) => format!("odlri-k{k}"),
+        }
+    }
+
+    fn initializer(&self, rank: usize, n: usize) -> Initializer {
+        match self {
+            InitKind::Caldera => Initializer::Zero,
+            InitKind::LrFirst => Initializer::LrApproxW,
+            InitKind::Odlri => Initializer::Odlri {
+                k: Initializer::odlri_k(rank, n),
+            },
+            InitKind::OdlriK(k) => Initializer::Odlri { k: *k },
+        }
+    }
+}
+
+/// Pipeline configuration (one compression run over a model).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub init: InitKind,
+    pub rank: usize,
+    pub lr_bits: u32,
+    pub q_scheme: String,
+    pub q_bits: u32,
+    pub q_group: usize,
+    pub outer_iters: usize,
+    pub lplr_iters: usize,
+    pub hadamard: bool,
+    pub workers: usize,
+    pub seed: u64,
+    /// Print per-matrix progress lines.
+    pub verbose: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            init: InitKind::Odlri,
+            rank: 64,
+            lr_bits: 4,
+            q_scheme: "e8".into(),
+            q_bits: 2,
+            q_group: 64,
+            outer_iters: 15,
+            lplr_iters: 10,
+            hadamard: true,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Pipeline output: the compressed model plus per-matrix metric traces.
+pub struct PipelineResult {
+    pub model: CompressedModel,
+    pub traces: BTreeMap<String, DecompMetrics>,
+    pub wall_secs: f64,
+}
+
+/// The compression pipeline coordinator.
+pub struct CompressionPipeline {
+    pub config: PipelineConfig,
+}
+
+impl CompressionPipeline {
+    pub fn new(config: PipelineConfig) -> CompressionPipeline {
+        CompressionPipeline { config }
+    }
+
+    fn joint_config(&self, seed: u64) -> JointConfig {
+        JointConfig {
+            outer_iters: self.config.outer_iters,
+            lowrank: LowRankConfig {
+                rank: self.config.rank,
+                lr_bits: self.config.lr_bits,
+                lplr_iters: self.config.lplr_iters,
+                reg: 1e-4,
+            },
+            hadamard: self.config.hadamard,
+            reg: 1e-4,
+            seed,
+        }
+    }
+
+    /// Compress every projection of `params` given per-projection Hessians.
+    pub fn run(
+        &self,
+        params: &ModelParams,
+        hessians: &BTreeMap<String, Hessian>,
+    ) -> Result<PipelineResult> {
+        let t0 = Instant::now();
+        let cfg = &self.config;
+        let fam = params.family.clone();
+        let names: Vec<String> = fam.projections.clone();
+        for name in &names {
+            if !hessians.contains_key(name) {
+                return Err(anyhow!("missing Hessian for projection '{name}'"));
+            }
+        }
+        let quantizer: Box<dyn Quantizer> =
+            make_quantizer(&cfg.q_scheme, cfg.q_bits, cfg.q_group)?;
+
+        // When the pool is wide, keep per-job matmuls single-threaded to
+        // avoid oversubscription; restore afterwards.
+        if cfg.workers > 1 {
+            tensor::set_matmul_threads(1);
+        }
+        let jobs: Vec<(String, crate::tensor::Matrix, &Hessian)> = names
+            .iter()
+            .map(|name| {
+                Ok((
+                    name.clone(),
+                    params.get_matrix(name)?,
+                    hessians.get(name).unwrap(),
+                ))
+            })
+            .collect::<Result<_>>()?;
+
+        let results = exec::parallel_map(jobs.len(), cfg.workers, |i| {
+            let (name, w, hess) = &jobs[i];
+            // Deterministic per-job stream: depends on the matrix name and
+            // the run seed only — NOT on scheduling.
+            let job_seed = cfg.seed ^ fnv1a(name.as_bytes());
+            let jc = self.joint_config(job_seed);
+            let init = cfg.init.initializer(cfg.rank, w.cols());
+            let opt = JointOptimizer::new(quantizer.as_ref(), jc);
+            let d = opt.run(w, hess, &init);
+            if cfg.verbose {
+                let last = d.metrics.last().unwrap();
+                eprintln!(
+                    "  [compress] {name:<16} err={:.4e} scale={:.4}",
+                    last.act_err, last.quant_scale
+                );
+            }
+            (name.clone(), d)
+        });
+        tensor::set_matmul_threads(0);
+
+        let mut matrices = BTreeMap::new();
+        let mut traces = BTreeMap::new();
+        let mut q_bits_overhead = 0.0;
+        for (name, d) in results {
+            let shape = fam.param_shape(&name)?;
+            q_bits_overhead = quantizer.bits_with_overhead(shape[0], shape[1]);
+            let last = d.metrics.last().unwrap();
+            matrices.insert(
+                name.clone(),
+                CompressedMatrix {
+                    q: d.q,
+                    lr: d.lr,
+                    quant_scale: last.quant_scale,
+                    final_act_err: last.act_err,
+                },
+            );
+            traces.insert(name, d.metrics);
+        }
+
+        Ok(PipelineResult {
+            model: CompressedModel {
+                family: fam,
+                matrices,
+                rank: cfg.rank,
+                q_bits_overhead,
+                lr_bits: cfg.lr_bits,
+            },
+            traces,
+            wall_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::{synthetic_calib, synthetic_weight};
+    use crate::runtime::FamilySpec;
+    use crate::runtime::Value;
+
+    fn toy_setup() -> (ModelParams, BTreeMap<String, Hessian>) {
+        // A small single-layer family with planted outliers.
+        let fam = FamilySpec {
+            name: "toy".into(),
+            params: vec![
+                ("embed".into(), vec![32, 24]),
+                ("layer0.ln1".into(), vec![24]),
+                ("layer0.wq".into(), vec![24, 24]),
+                ("layer0.wk".into(), vec![24, 24]),
+                ("layer0.wv".into(), vec![24, 24]),
+                ("layer0.wo".into(), vec![24, 24]),
+                ("layer0.ln2".into(), vec![24]),
+                ("layer0.wgate".into(), vec![40, 24]),
+                ("layer0.wup".into(), vec![40, 24]),
+                ("layer0.wdown".into(), vec![24, 40]),
+                ("ln_f".into(), vec![24]),
+                ("unembed".into(), vec![32, 24]),
+            ],
+            projections: vec![
+                "layer0.wq".into(),
+                "layer0.wk".into(),
+                "layer0.wv".into(),
+                "layer0.wo".into(),
+                "layer0.wgate".into(),
+                "layer0.wup".into(),
+                "layer0.wdown".into(),
+            ],
+            vocab: 32,
+            d_model: 24,
+            n_layers: 1,
+            d_ff: 40,
+        };
+        let mut params = ModelParams::init(&fam, 7);
+        let mut hessians = BTreeMap::new();
+        for name in fam.projections.clone() {
+            let shape = fam.param_shape(&name).unwrap().to_vec();
+            let calib = synthetic_calib(shape[1], 3 * shape[1], 2, 20.0, fnv1a(name.as_bytes()));
+            let w = synthetic_weight(shape[0], shape[1], &calib.outlier_channels, 3);
+            params
+                .set_matrix(&name, &w)
+                .unwrap();
+            hessians.insert(name, calib.hessian);
+        }
+        // keep embed/norms as initialized
+        let _ = &params.values[0] as &Value;
+        (params, hessians)
+    }
+
+    fn quick_cfg(init: InitKind, workers: usize) -> PipelineConfig {
+        PipelineConfig {
+            init,
+            rank: 6,
+            lr_bits: 16,
+            outer_iters: 3,
+            lplr_iters: 2,
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_compresses_all_projections() {
+        let (params, hessians) = toy_setup();
+        let pipe = CompressionPipeline::new(quick_cfg(InitKind::Odlri, 2));
+        let out = pipe.run(&params, &hessians).unwrap();
+        assert_eq!(out.model.matrices.len(), 7);
+        assert_eq!(out.traces.len(), 7);
+        for (name, cm) in &out.model.matrices {
+            assert!(cm.final_act_err < 1.0, "{name}: err={}", cm.final_act_err);
+            assert!(cm.reconstruct().is_finite());
+        }
+        // Reconstructions approximate the originals.
+        let w = params.get_matrix("layer0.wq").unwrap();
+        let rec = out.model.matrices["layer0.wq"].reconstruct();
+        assert!(rec.rel_err(&w) < 0.8);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (params, hessians) = toy_setup();
+        let a = CompressionPipeline::new(quick_cfg(InitKind::Odlri, 1))
+            .run(&params, &hessians)
+            .unwrap();
+        let b = CompressionPipeline::new(quick_cfg(InitKind::Odlri, 4))
+            .run(&params, &hessians)
+            .unwrap();
+        for name in a.model.matrices.keys() {
+            let qa = &a.model.matrices[name].q;
+            let qb = &b.model.matrices[name].q;
+            assert_eq!(qa, qb, "{name} Q differs across worker counts");
+            assert_eq!(
+                a.model.matrices[name].lr.l, b.model.matrices[name].lr.l,
+                "{name} L differs"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_hessian_is_an_error() {
+        let (params, mut hessians) = toy_setup();
+        hessians.remove("layer0.wv");
+        let pipe = CompressionPipeline::new(quick_cfg(InitKind::Caldera, 1));
+        assert!(pipe.run(&params, &hessians).is_err());
+    }
+
+    #[test]
+    fn odlri_beats_caldera_on_planted_outliers() {
+        // The pipeline-level analogue of the Figure 3 claim.
+        let (params, hessians) = toy_setup();
+        let run = |init| {
+            CompressionPipeline::new(quick_cfg(init, 2))
+                .run(&params, &hessians)
+                .unwrap()
+                .model
+                .mean_act_err()
+        };
+        // With only 3 quick outer iterations the gap is modest and can be
+        // noisy at this scale; the strong per-iteration claims are asserted
+        // in decompose::tests and reproduced at paper scale by `exp fig3`.
+        let e_caldera = run(InitKind::Caldera);
+        let e_odlri = run(InitKind::OdlriK(2));
+        assert!(
+            e_odlri < e_caldera * 1.10,
+            "odlri={e_odlri:.4e} caldera={e_caldera:.4e}"
+        );
+    }
+
+    #[test]
+    fn init_kind_k_schedule() {
+        let i = InitKind::Odlri.initializer(256, 4096);
+        assert_eq!(i, Initializer::Odlri { k: 16 });
+        let i = InitKind::OdlriK(3).initializer(256, 4096);
+        assert_eq!(i, Initializer::Odlri { k: 3 });
+        assert_eq!(InitKind::Caldera.initializer(8, 8), Initializer::Zero);
+    }
+}

@@ -1,0 +1,420 @@
+//! Synthetic grammar corpus + proxy evaluation tasks.
+//!
+//! Stands in for the paper's WikiText-2 / C4 / lm-eval-harness suite
+//! (DESIGN.md §2): a deterministic templated language whose rules are
+//! learnable by the tiny model families, two held-out splits with different
+//! template mixes (`wiki-sim`, `c4-sim`) for perplexity, and five two-choice
+//! tasks (`wino-sim`, `rte-sim`, `piqa-sim`, `arce-sim`, `arcc-sim`) scored
+//! by sequence log-probability exactly like lm-eval's multiple-choice path.
+//!
+//! Tokenization is byte-level (every model family has vocab ≥ 256).
+
+use crate::util::rng::Pcg64;
+
+pub const ANIMALS: &[&str] = &["cat", "dog", "fox", "owl", "bee", "elk"];
+pub const OBJECTS: &[&str] = &["box", "cup", "key", "map", "pot", "rug"];
+pub const NAMES: &[&str] = &["ana", "ben", "kim", "lee", "mia", "sam"];
+pub const VERBS: &[&str] = &["sees", "takes", "likes", "finds", "holds"];
+/// Adjective pairs (synonym-ish, antonym): rule substrate for rte-sim.
+pub const ADJ_PAIRS: &[(&str, &str, &str)] = &[
+    ("big", "large", "small"),
+    ("old", "aged", "new"),
+    ("fast", "quick", "slow"),
+    ("warm", "hot", "cold"),
+];
+/// Tool → action map: rule substrate for piqa-sim.
+pub const TOOL_ACTIONS: &[(&str, &str, &str)] = &[
+    ("pen", "write", "pour"),
+    ("cup", "drink", "dig"),
+    ("key", "open", "eat"),
+    ("map", "travel", "bake"),
+    ("broom", "sweep", "sing"),
+];
+pub const NUMBERS: &[&str] = &[
+    "zero", "one", "two", "three", "four", "five", "six", "seven", "eight",
+    "nine",
+];
+
+/// Corpus splits. Train is a balanced mix; the eval splits use different
+/// template proportions so they behave like two distributions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    WikiSim,
+    C4Sim,
+}
+
+impl Split {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::WikiSim => "wiki-sim",
+            Split::C4Sim => "c4-sim",
+        }
+    }
+
+    /// Template mix weights: (simple, wino, rte, piqa, arith).
+    fn mix(&self) -> [u32; 5] {
+        match self {
+            Split::Train => [30, 20, 20, 15, 15],
+            Split::WikiSim => [45, 20, 15, 10, 10],
+            Split::C4Sim => [20, 25, 20, 20, 15],
+        }
+    }
+
+    fn stream(&self) -> u64 {
+        match self {
+            Split::Train => 11,
+            Split::WikiSim => 22,
+            Split::C4Sim => 33,
+        }
+    }
+}
+
+fn sentence(rng: &mut Pcg64, mix: &[u32; 5]) -> String {
+    let total: u32 = mix.iter().sum();
+    let mut pick = rng.below(total as usize) as u32;
+    let mut kind = 0;
+    for (i, &w) in mix.iter().enumerate() {
+        if pick < w {
+            kind = i;
+            break;
+        }
+        pick -= w;
+    }
+    match kind {
+        0 => {
+            // Simple SVO with an adjective.
+            let (a, _, _) = *rng.choose(ADJ_PAIRS);
+            format!(
+                "the {a} {} {} the {} . ",
+                rng.choose(ANIMALS),
+                rng.choose(VERBS),
+                rng.choose(OBJECTS)
+            )
+        }
+        1 => {
+            // Coreference rule: "because it was fast" ⇒ the chaser;
+            // "because it was slow" ⇒ the chased. Statement form names the
+            // referent explicitly so the rule is learnable.
+            let a1 = *rng.choose(ANIMALS);
+            let mut a2 = *rng.choose(ANIMALS);
+            while a2 == a1 {
+                a2 = *rng.choose(ANIMALS);
+            }
+            let fast = rng.chance(0.5);
+            let (adj, who) = if fast { ("fast", a1) } else { ("slow", a2) };
+            format!("the {a1} chased the {a2} because it was {adj} . the {adj} one was the {who} . ")
+        }
+        2 => {
+            // Entailment rule: "X is <base>" entails "X is <synonym>".
+            let (base, syn, _ant) = *rng.choose(ADJ_PAIRS);
+            let o = *rng.choose(OBJECTS);
+            format!("the {o} is {base} . that means the {o} is {syn} . ")
+        }
+        3 => {
+            // Affordance rule.
+            let (tool, act, _bad) = *rng.choose(TOOL_ACTIONS);
+            format!("you use a {tool} to {act} . ")
+        }
+        _ => {
+            // Arithmetic (sums ≤ 9 so the answer is a single word).
+            let x = rng.below(5);
+            let y = rng.below(5);
+            format!(
+                "{} plus {} is {} . ",
+                NUMBERS[x], NUMBERS[y], NUMBERS[x + y]
+            )
+        }
+    }
+}
+
+/// Generate `n_tokens` bytes of the given split, deterministically.
+pub fn generate(split: Split, n_tokens: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed, split.stream());
+    let mix = split.mix();
+    let mut out = Vec::with_capacity(n_tokens + 80);
+    while out.len() < n_tokens {
+        out.extend_from_slice(sentence(&mut rng, &mix).as_bytes());
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Pack a token stream into (batch, seq+1) next-token-prediction batches
+/// with random window starts. Returns row-major i32 suitable for the
+/// `train_*` artifacts.
+pub fn sample_batch(
+    tokens: &[u8],
+    batch: usize,
+    seq_plus1: usize,
+    rng: &mut Pcg64,
+) -> Vec<i32> {
+    assert!(tokens.len() > seq_plus1, "corpus shorter than a window");
+    let mut out = Vec::with_capacity(batch * seq_plus1);
+    for _ in 0..batch {
+        let start = rng.below(tokens.len() - seq_plus1);
+        out.extend(
+            tokens[start..start + seq_plus1]
+                .iter()
+                .map(|&b| b as i32),
+        );
+    }
+    out
+}
+
+/// Sequential non-overlapping windows for perplexity (row-major i32,
+/// `count` rows of `seq` tokens each, plus targets = next byte).
+pub fn eval_windows(tokens: &[u8], seq: usize, count: usize) -> Vec<Vec<i32>> {
+    let mut wins = Vec::new();
+    let mut pos = 0;
+    while wins.len() < count && pos + seq + 1 <= tokens.len() {
+        wins.push(tokens[pos..pos + seq + 1].iter().map(|&b| b as i32).collect());
+        pos += seq;
+    }
+    wins
+}
+
+// ---------------------------------------------------------------------------
+// Zero-shot proxy tasks
+// ---------------------------------------------------------------------------
+
+/// The five proxy tasks mirroring the paper's benchmark columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    WinoSim,
+    RteSim,
+    PiqaSim,
+    ArcESim,
+    ArcCSim,
+}
+
+pub const ALL_TASKS: [Task; 5] = [
+    Task::WinoSim,
+    Task::RteSim,
+    Task::PiqaSim,
+    Task::ArcESim,
+    Task::ArcCSim,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::WinoSim => "wino-sim",
+            Task::RteSim => "rte-sim",
+            Task::PiqaSim => "piqa-sim",
+            Task::ArcESim => "arce-sim",
+            Task::ArcCSim => "arcc-sim",
+        }
+    }
+}
+
+/// One two-choice item: score `prompt ++ choices[i]` by log-prob; the model
+/// is correct iff argmax_i logp == correct.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prompt: String,
+    pub choices: [String; 2],
+    pub correct: usize,
+}
+
+/// Generate `n` deterministic items of a task.
+pub fn task_items(task: Task, n: usize, seed: u64) -> Vec<TaskItem> {
+    let mut rng = Pcg64::new(seed, 100 + task as u64);
+    (0..n)
+        .map(|_| match task {
+            Task::WinoSim => {
+                let a1 = *rng.choose(ANIMALS);
+                let mut a2 = *rng.choose(ANIMALS);
+                while a2 == a1 {
+                    a2 = *rng.choose(ANIMALS);
+                }
+                let fast = rng.chance(0.5);
+                let adj = if fast { "fast" } else { "slow" };
+                let correct = if fast { 0 } else { 1 };
+                TaskItem {
+                    prompt: format!(
+                        "the {a1} chased the {a2} because it was {adj} . the {adj} one was the "
+                    ),
+                    choices: [format!("{a1} ."), format!("{a2} .")],
+                    correct,
+                }
+            }
+            Task::RteSim => {
+                let (base, syn, ant) = *rng.choose(ADJ_PAIRS);
+                let o = *rng.choose(OBJECTS);
+                let swap = rng.chance(0.5);
+                TaskItem {
+                    prompt: format!("the {o} is {base} . that means the {o} is "),
+                    choices: if swap {
+                        [format!("{ant} ."), format!("{syn} .")]
+                    } else {
+                        [format!("{syn} ."), format!("{ant} .")]
+                    },
+                    correct: usize::from(swap),
+                }
+            }
+            Task::PiqaSim => {
+                let (tool, act, bad) = *rng.choose(TOOL_ACTIONS);
+                let swap = rng.chance(0.5);
+                TaskItem {
+                    prompt: format!("you use a {tool} to "),
+                    choices: if swap {
+                        [format!("{bad} ."), format!("{act} .")]
+                    } else {
+                        [format!("{act} ."), format!("{bad} .")]
+                    },
+                    correct: usize::from(swap),
+                }
+            }
+            Task::ArcESim => {
+                let x = rng.below(5);
+                let y = rng.below(5);
+                let wrong = (x + y + 1 + rng.below(3)) % 10;
+                let swap = rng.chance(0.5);
+                TaskItem {
+                    prompt: format!("{} plus {} is ", NUMBERS[x], NUMBERS[y]),
+                    choices: if swap {
+                        [format!("{} .", NUMBERS[wrong]), format!("{} .", NUMBERS[x + y])]
+                    } else {
+                        [format!("{} .", NUMBERS[x + y]), format!("{} .", NUMBERS[wrong])]
+                    },
+                    correct: usize::from(swap),
+                }
+            }
+            Task::ArcCSim => {
+                // Harder: unseen-at-train compositional form (two steps).
+                let x = 1 + rng.below(4);
+                let y = 1 + rng.below(4);
+                let sum = x + y;
+                let wrong = if rng.chance(0.5) && sum >= 2 { sum - 1 } else { sum + 1 };
+                let swap = rng.chance(0.5);
+                TaskItem {
+                    prompt: format!(
+                        "{} plus {} plus zero is ",
+                        NUMBERS[x], NUMBERS[y]
+                    ),
+                    choices: if swap {
+                        [format!("{} .", NUMBERS[wrong]), format!("{} .", NUMBERS[sum])]
+                    } else {
+                        [format!("{} .", NUMBERS[sum]), format!("{} .", NUMBERS[wrong])]
+                    },
+                    correct: usize::from(swap),
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(Split::WikiSim, 4096, 42);
+        let b = generate(Split::WikiSim, 4096, 42);
+        assert_eq!(a, b);
+        let c = generate(Split::WikiSim, 4096, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = generate(Split::WikiSim, 2048, 1);
+        let b = generate(Split::C4Sim, 2048, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn corpus_is_ascii_lowercase() {
+        let data = generate(Split::Train, 8192, 7);
+        assert!(data
+            .iter()
+            .all(|&b| b == b' ' || b == b'.' || b.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn coreference_rule_holds_in_corpus() {
+        // Every "the fast one was the X" mention agrees with the chaser.
+        let text = String::from_utf8(generate(Split::Train, 200_000, 3)).unwrap();
+        let mut checked = 0;
+        for seg in text.split(" . ") {
+            if let Some(rest) = seg.strip_prefix("the ") {
+                if rest.contains(" chased the ") && seg.len() < 200 {
+                    // parse "X chased the Y because it was ADJ . the ADJ one was the W"
+                    continue;
+                }
+            }
+            if let Some(idx) = seg.find(" one was the ") {
+                let who = &seg[idx + " one was the ".len()..];
+                assert!(ANIMALS.contains(&who.trim()), "bad referent {who}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 50, "rule sentences too rare: {checked}");
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let data = generate(Split::Train, 10_000, 5);
+        let mut rng = Pcg64::new(9, 9);
+        let b = sample_batch(&data, 8, 65, &mut rng);
+        assert_eq!(b.len(), 8 * 65);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn eval_windows_non_overlapping() {
+        let data = generate(Split::WikiSim, 10_000, 5);
+        let wins = eval_windows(&data, 64, 20);
+        assert_eq!(wins.len(), 20);
+        for w in &wins {
+            assert_eq!(w.len(), 65);
+        }
+        // Window i's tokens continue window i-1 (stride = seq).
+        assert_eq!(wins[0][64], wins[1][0]);
+    }
+
+    #[test]
+    fn task_items_have_valid_rules() {
+        for task in ALL_TASKS {
+            let items = task_items(task, 64, 11);
+            assert_eq!(items.len(), 64);
+            for it in &items {
+                assert!(it.correct < 2);
+                assert_ne!(it.choices[0], it.choices[1]);
+                assert!(!it.prompt.is_empty());
+            }
+            // Both answer positions occur (no positional shortcut).
+            let firsts = items.iter().filter(|i| i.correct == 0).count();
+            assert!(firsts > 8 && firsts < 56, "{task:?} positional bias");
+        }
+    }
+
+    #[test]
+    fn wino_items_agree_with_rule() {
+        for it in task_items(Task::WinoSim, 32, 3) {
+            let fast = it.prompt.contains("was fast");
+            // fast ⇒ chaser (first animal in prompt) is the answer.
+            let chaser = it.prompt[4..].split(' ').next().unwrap().to_string();
+            let answer = it.choices[it.correct].split(' ').next().unwrap();
+            if fast {
+                assert_eq!(answer, chaser);
+            } else {
+                assert_ne!(answer, chaser);
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_items_sum_correctly() {
+        for it in task_items(Task::ArcESim, 32, 4) {
+            let words: Vec<&str> = it.prompt.split(' ').collect();
+            let x = NUMBERS.iter().position(|&n| n == words[0]).unwrap();
+            let y = NUMBERS.iter().position(|&n| n == words[2]).unwrap();
+            let ans = it.choices[it.correct].split(' ').next().unwrap();
+            assert_eq!(ans, NUMBERS[x + y]);
+        }
+    }
+}

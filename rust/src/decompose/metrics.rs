@@ -1,0 +1,136 @@
+//! Per-iteration metrics of the joint optimization — exactly the quantities
+//! the paper's figures/tables track:
+//!
+//! * `quant_scale`   — the quantizer's chosen scale (Figure 2/4),
+//! * `act_err`       — ‖(W − Q − LR)X‖²_F / ‖WX‖²_F (Figure 3/5),
+//! * `q_norm`        — ‖QX‖/‖WX‖ (Table 1/12/13),
+//! * `lr_norm`       — ‖LRX‖/‖WX‖ (Table 1/12/13).
+//!
+//! All norms are computed through the Hessian (‖AX‖² = tr(A H Aᵀ)), so the
+//! trace is exact w.r.t. the calibration set without storing X.
+
+use crate::lowrank::LrPair;
+use crate::quant::QuantOut;
+use crate::tensor::Matrix;
+
+/// ‖A X‖_F via the Hessian: sqrt(tr(A H Aᵀ)).
+pub fn h_norm(a: &Matrix, h: &Matrix) -> f64 {
+    let ah = a.dot(h);
+    let v: f64 = ah
+        .as_slice()
+        .iter()
+        .zip(a.as_slice())
+        .map(|(&p, &q)| p as f64 * q as f64)
+        .sum();
+    v.max(0.0).sqrt()
+}
+
+/// Metric traces over the optimization. Index 0 is the *initialization*
+/// state (Q = 0, LR = L₀R₀); index t ≥ 1 is after outer iteration t.
+#[derive(Clone, Debug, Default)]
+pub struct DecompMetrics {
+    pub quant_scale: Vec<f32>,
+    pub act_err: Vec<f64>,
+    pub q_norm: Vec<f64>,
+    pub lr_norm: Vec<f64>,
+}
+
+/// One row of the trace (for reporting).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationMetrics {
+    pub iter: usize,
+    pub quant_scale: f32,
+    pub act_err: f64,
+    pub q_norm: f64,
+    pub lr_norm: f64,
+}
+
+impl DecompMetrics {
+    pub fn new() -> DecompMetrics {
+        DecompMetrics::default()
+    }
+
+    pub fn record_init(&mut self, w: &Matrix, lr: &LrPair, h: &Matrix, wx_norm: f64) {
+        let lr_prod = lr.product();
+        let resid = w.sub(&lr_prod);
+        let e = h_norm(&resid, h);
+        self.quant_scale.push(0.0);
+        self.act_err.push((e / wx_norm.max(1e-30)).powi(2));
+        self.q_norm.push(0.0);
+        self.lr_norm.push(h_norm(&lr_prod, h) / wx_norm.max(1e-30));
+    }
+
+    pub fn record_iter(
+        &mut self,
+        w: &Matrix,
+        q: &QuantOut,
+        lr: &LrPair,
+        h: &Matrix,
+        wx_norm: f64,
+    ) {
+        let lr_prod = lr.product();
+        let resid = w.sub(&q.deq).sub(&lr_prod);
+        let e = h_norm(&resid, h);
+        self.quant_scale.push(q.scale);
+        self.act_err.push((e / wx_norm.max(1e-30)).powi(2));
+        self.q_norm.push(h_norm(&q.deq, h) / wx_norm.max(1e-30));
+        self.lr_norm.push(h_norm(&lr_prod, h) / wx_norm.max(1e-30));
+    }
+
+    pub fn iterations(&self) -> impl Iterator<Item = IterationMetrics> + '_ {
+        (0..self.act_err.len()).map(move |i| IterationMetrics {
+            iter: i,
+            quant_scale: self.quant_scale[i],
+            act_err: self.act_err[i],
+            q_norm: self.q_norm[i],
+            lr_norm: self.lr_norm[i],
+        })
+    }
+
+    pub fn last(&self) -> Option<IterationMetrics> {
+        self.iterations().last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn h_norm_matches_direct_product() {
+        let mut rng = Pcg64::new(160, 1);
+        let a = Matrix::randn(8, 12, 1.0, &mut rng);
+        let x = Matrix::randn(12, 40, 1.0, &mut rng);
+        let h = x.dot_t(&x);
+        let direct = a.dot(&x).frob_norm() as f64;
+        let via_h = h_norm(&a, &h);
+        assert!((direct - via_h).abs() < 1e-2 * direct);
+    }
+
+    #[test]
+    fn record_traces_align() {
+        let mut rng = Pcg64::new(161, 1);
+        let w = Matrix::randn(6, 8, 1.0, &mut rng);
+        let x = Matrix::randn(8, 20, 1.0, &mut rng);
+        let h = x.dot_t(&x);
+        let wx = h_norm(&w, &h);
+        let mut m = DecompMetrics::new();
+        let lr = LrPair::zeros(6, 8, 2);
+        m.record_init(&w, &lr, &h, wx);
+        // Zero init: act_err = 1 (nothing explained), lr_norm = 0.
+        assert!((m.act_err[0] - 1.0).abs() < 1e-6);
+        assert_eq!(m.lr_norm[0], 0.0);
+        let q = QuantOut {
+            deq: w.clone(),
+            scale: 0.5,
+        };
+        m.record_iter(&w, &q, &lr, &h, wx);
+        // Perfect Q: error 0, q_norm 1.
+        assert!(m.act_err[1] < 1e-9);
+        assert!((m.q_norm[1] - 1.0).abs() < 1e-5);
+        assert_eq!(m.quant_scale[1], 0.5);
+        assert_eq!(m.iterations().count(), 2);
+        assert_eq!(m.last().unwrap().iter, 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Evaluation: perplexity over the synthetic splits and the five zero-shot
+//! proxy tasks, both driven through the `fwd_<family>` HLO artifact.
+//!
+//! Scoring mirrors lm-eval-harness: PPL = exp(mean NLL of next-token
+//! targets); multiple-choice accuracy scores each choice continuation by
+//! summed log-prob and takes the argmax.
+
+use anyhow::{bail, Result};
+
+use crate::corpus::{self, Split, Task};
+use crate::model::ModelParams;
+use crate::runtime::{Value, XlaRuntime};
+
+/// Log-softmax NLL of `target` under a logits row (f64 for stability).
+fn nll_of(logits_row: &[f32], target: usize) -> f64 {
+    let mx = logits_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse: f64 = logits_row
+        .iter()
+        .map(|&v| ((v as f64) - mx).exp())
+        .sum::<f64>()
+        .ln()
+        + mx;
+    lse - logits_row[target] as f64
+}
+
+/// Run the forward artifact on a full (batch, seq) token block; returns the
+/// logits as (batch*seq, vocab).
+fn forward(
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    tokens: Vec<i32>,
+) -> Result<crate::tensor::Matrix> {
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    if tokens.len() != batch * seq {
+        bail!("forward expects {}x{} tokens", batch, seq);
+    }
+    let artifact = format!("fwd_{}", params.family.name);
+    let mut inputs = params.values.clone();
+    inputs.push(Value::from_vec_i32(vec![batch, seq], tokens));
+    let outs = rt.exec(&artifact, &inputs)?;
+    outs[0].to_matrix_2d()
+}
+
+/// Perplexity of a model on a split, over `windows` sequential windows of
+/// the artifact's sequence length.
+pub fn perplexity(
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    split: Split,
+    windows: usize,
+    seed: u64,
+) -> Result<f64> {
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let data = corpus::generate(split, (windows + 2) * (seq + 1) + 1024, seed);
+    let wins = corpus::eval_windows(&data, seq, windows);
+    if wins.is_empty() {
+        bail!("not enough data for eval windows");
+    }
+    let mut total_nll = 0f64;
+    let mut total_tok = 0usize;
+    for group in wins.chunks(batch) {
+        // Pack up to `batch` windows; pad the group by repeating the first.
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let w = group.get(b).unwrap_or(&group[0]);
+            tokens.extend(&w[..seq]);
+        }
+        let logits = forward(rt, params, tokens)?;
+        let vocab = logits.cols();
+        for (b, w) in group.iter().enumerate() {
+            for t in 0..seq - 1 {
+                let row = logits.row(b * seq + t);
+                debug_assert_eq!(row.len(), vocab);
+                total_nll += nll_of(row, w[t + 1] as usize);
+                total_tok += 1;
+            }
+        }
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+/// Result of one task evaluation.
+#[derive(Clone, Debug)]
+pub struct TaskScore {
+    pub task: Task,
+    pub accuracy: f64,
+    pub items: usize,
+}
+
+/// Score a two-choice task: each (prompt ++ choice) is packed into one row
+/// of the forward batch, NLL summed over the choice's token positions only.
+pub fn task_accuracy(
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    task: Task,
+    n_items: usize,
+    seed: u64,
+) -> Result<TaskScore> {
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let items = corpus::task_items(task, n_items, seed);
+    // Two rows per item (choice 0 / choice 1).
+    let mut rows: Vec<(usize, usize, Vec<i32>, usize, usize)> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        for (c, choice) in it.choices.iter().enumerate() {
+            let full = format!("{}{}", it.prompt, choice);
+            let bytes = full.as_bytes();
+            if bytes.len() + 1 > seq {
+                bail!(
+                    "task item too long ({} bytes) for seq {}",
+                    bytes.len(),
+                    seq
+                );
+            }
+            let mut toks: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
+            let choice_start = it.prompt.len(); // first choice byte index
+            let choice_end = toks.len();
+            toks.resize(seq, b' ' as i32);
+            rows.push((i, c, toks, choice_start, choice_end));
+        }
+    }
+    let mut scores = vec![[0f64; 2]; items.len()];
+    for group in rows.chunks(batch) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let r = group.get(b).unwrap_or(&group[0]);
+            tokens.extend(&r.2);
+        }
+        let logits = forward(rt, params, tokens)?;
+        for (b, (item, choice, toks, start, end)) in group.iter().enumerate() {
+            let mut lp = 0f64;
+            // P(choice | prompt): positions start..end predicted from
+            // position-1 logits.
+            for t in *start..*end {
+                let row = logits.row(b * seq + t - 1);
+                lp -= nll_of(row, toks[t] as usize);
+            }
+            // Length-normalize (lm-eval `acc_norm`): choices differ in byte
+            // length, and raw summed log-prob systematically favors the
+            // shorter one.
+            scores[*item][*choice] = lp / (*end - *start).max(1) as f64;
+        }
+    }
+    let correct = items
+        .iter()
+        .enumerate()
+        .filter(|(i, it)| {
+            let pick = if scores[*i][0] >= scores[*i][1] { 0 } else { 1 };
+            pick == it.correct
+        })
+        .count();
+    Ok(TaskScore {
+        task,
+        accuracy: correct as f64 / items.len() as f64,
+        items: items.len(),
+    })
+}
+
+/// Full evaluation bundle (the paper's metric columns for one model).
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub ppl_wiki: f64,
+    pub ppl_c4: f64,
+    pub tasks: Vec<TaskScore>,
+}
+
+pub fn evaluate(
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    ppl_windows: usize,
+    task_items: usize,
+    seed: u64,
+) -> Result<EvalReport> {
+    let ppl_wiki = perplexity(rt, params, Split::WikiSim, ppl_windows, seed)?;
+    let ppl_c4 = perplexity(rt, params, Split::C4Sim, ppl_windows, seed)?;
+    let tasks = corpus::ALL_TASKS
+        .iter()
+        .map(|&t| task_accuracy(rt, params, t, task_items, seed))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(EvalReport {
+        ppl_wiki,
+        ppl_c4,
+        tasks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_matches_hand_computation() {
+        // logits [0, ln(3)] → p = [1/4, 3/4].
+        let row = [0.0f32, (3f32).ln()];
+        let nll0 = nll_of(&row, 0);
+        let nll1 = nll_of(&row, 1);
+        assert!((nll0 - (4f64).ln()).abs() < 1e-6);
+        assert!((nll1 - (4f64 / 3.0).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_is_stable_for_large_logits() {
+        let row = [1000.0f32, 998.0];
+        let nll = nll_of(&row, 0);
+        assert!(nll > 0.0 && nll < 1.0 && nll.is_finite());
+    }
+}

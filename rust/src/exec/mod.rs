@@ -1,0 +1,156 @@
+//! Minimal work-stealing-free thread pool (std-only).
+//!
+//! The coordinator fans per-matrix decomposition jobs out over this pool.
+//! Jobs are indexed; results are returned in job order regardless of
+//! completion order, so pipeline output is deterministic and independent of
+//! the worker count (proptested in `coordinator`).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `f(i)` for every i in 0..n across `workers` threads and collect the
+/// results in index order. Panics in a job propagate to the caller.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= n {
+                        return;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| v.unwrap_or_else(|| panic!("job {i} produced no result (worker panic)")))
+            .collect()
+    })
+}
+
+/// Fire-and-collect variant with a progress callback invoked on the caller
+/// thread as results arrive (used for pipeline progress lines).
+pub fn parallel_map_progress<T, F, P>(n: usize, workers: usize, f: F, mut progress: P) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+    P: FnMut(usize, &T),
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= n {
+                        return;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            progress(i, &v);
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| v.unwrap_or_else(|| panic!("job {i} produced no result (worker panic)")))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(250, 7, |i| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 250);
+        assert_eq!(out.len(), 250);
+    }
+
+    #[test]
+    fn independent_of_worker_count() {
+        let a = parallel_map(37, 1, |i| i as f64 * 1.5);
+        let b = parallel_map(37, 4, |i| i as f64 * 1.5);
+        let c = parallel_map(37, 16, |i| i as f64 * 1.5);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn zero_jobs() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn progress_sees_every_job() {
+        let mut seen = vec![false; 64];
+        parallel_map_progress(64, 5, |i| i, |i, &v| {
+            assert_eq!(i, v);
+            seen[i] = true;
+        });
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,100 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! `odlri exp <id>` regenerates the artifact into `results/<id>.{md,csv}`.
+//! Matrix-level experiments (table1, figs, table8) run on synthetic
+//! outlier-planted problems by default (`--trained` switches to the trained
+//! tiny model); model-level tables train/calibrate each family once and
+//! cache the result under `runs/`.
+
+mod matrix_level;
+mod model_level;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::runtime::XlaRuntime;
+
+pub struct ExpContext<'a> {
+    pub args: &'a Args,
+    pub results: PathBuf,
+    pub runs: PathBuf,
+    /// Reduced iteration/sweep counts for smoke runs.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl<'a> ExpContext<'a> {
+    pub fn new(args: &'a Args) -> Result<ExpContext<'a>> {
+        let ctx = ExpContext {
+            args,
+            results: PathBuf::from(args.str("results", "results")),
+            runs: PathBuf::from(args.str("runs", "runs")),
+            quick: args.switch("quick"),
+            seed: args.u64("seed", 0)?,
+        };
+        std::fs::create_dir_all(&ctx.results)?;
+        std::fs::create_dir_all(&ctx.runs)?;
+        Ok(ctx)
+    }
+
+    pub fn outer_iters(&self) -> usize {
+        if self.quick {
+            5
+        } else {
+            15
+        }
+    }
+
+    pub fn open_runtime(&self) -> Result<XlaRuntime> {
+        let dir = {
+            let d = self.args.str("artifacts", "");
+            if d.is_empty() {
+                crate::runtime::default_artifact_dir()
+            } else {
+                PathBuf::from(d)
+            }
+        };
+        XlaRuntime::open(&dir).context(
+            "experiments need the AOT artifacts; run `make artifacts` first",
+        )
+    }
+}
+
+/// Run one experiment (or `all`).
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    let ctx = ExpContext::new(args)?;
+    match id {
+        "table1" => matrix_level::table1(&ctx),
+        "t1norms" => matrix_level::t1norms(&ctx),
+        "fig2" => matrix_level::fig23(&ctx, true),
+        "fig3" => matrix_level::fig23(&ctx, false),
+        "fig4" => matrix_level::fig45(&ctx, true),
+        "fig5" => matrix_level::fig45(&ctx, false),
+        "table8" => matrix_level::table8(&ctx),
+        "table2" => model_level::table2(&ctx),
+        "table3" => model_level::table3(&ctx),
+        "table4" => model_level::table4(&ctx),
+        "table5" => model_level::table5(&ctx),
+        "table9" => model_level::table9(&ctx),
+        "table10" => model_level::table10(&ctx),
+        "table11" => model_level::table11(&ctx),
+        "all" => {
+            for id in [
+                "table1", "t1norms", "fig2", "fig3", "fig4", "fig5", "table8",
+                "table2", "table3", "table4", "table5", "table9", "table10",
+                "table11",
+            ] {
+                eprintln!("\n===== exp {id} =====");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment '{other}'; known: table1 t1norms fig2 fig3 \
+             fig4 fig5 table2 table3 table4 table5 table8 table9 table10 \
+             table11 all"
+        ),
+    }
+}

@@ -1,0 +1,426 @@
+//! Model-level experiments: Tables 2, 3, 4, 5, 9, 10, 11.
+//!
+//! Each table cell = compress a trained model with one configuration and
+//! evaluate (perplexity on wiki-sim/c4-sim, five zero-shot proxies).
+//! Trained weights + Hessians are produced once per family and cached in
+//! `runs/` — delete the files to retrain.
+//!
+//! Rank mapping: the paper's ranks {64, 128, 256} on 4096-dim matrices
+//! correspond to r/n ∈ {1/64, 1/32, 1/16}; our d=128 families use
+//! {8, 16, 32} (rows are labelled "ours (paper)").
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::calib::{calibrate, CalibConfig};
+use crate::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use crate::eval::{evaluate, EvalReport};
+use crate::hessian::Hessian;
+use crate::model::{inject_outliers, ModelParams};
+use crate::report::Table;
+use crate::runtime::XlaRuntime;
+use crate::train::{train, TrainConfig};
+
+/// Paper rank → our rank for d=128-scale families.
+pub const RANK_MAP: [(usize, usize); 3] = [(64, 8), (128, 16), (256, 32)];
+
+/// Train + outlier-inject + calibrate a family once; cache under runs/.
+pub fn ensure_model(
+    ctx: &ExpContext,
+    rt: &XlaRuntime,
+    family: &str,
+) -> Result<(ModelParams, BTreeMap<String, Hessian>)> {
+    let fam = rt.manifest.family(family)?.clone();
+    let wpath = ctx.runs.join(format!("{family}.odw"));
+    let hpath = ctx.runs.join(format!("{family}.hess"));
+    if wpath.exists() && hpath.exists() {
+        let params = ModelParams::load(&fam, &wpath)?;
+        let hessians = load_hessians_file(&hpath)?;
+        return Ok((params, hessians));
+    }
+    let steps = if ctx.quick { 80 } else { 150 };
+    eprintln!("[ensure_model] training {family} ({steps} steps)…");
+    let tr = train(
+        rt,
+        &TrainConfig {
+            family: family.to_string(),
+            steps,
+            seed: ctx.seed,
+            log_every: 50,
+            ..Default::default()
+        },
+    )?;
+    let mut params = tr.params;
+    inject_outliers(&mut params, 4, 16.0, ctx.seed)?;
+    eprintln!("[ensure_model] calibrating {family}…");
+    let hessians = calibrate(
+        rt,
+        &params,
+        &CalibConfig {
+            batches: if ctx.quick { 3 } else { 8 },
+            seed: ctx.seed,
+        },
+    )?;
+    params.save(&wpath)?;
+    save_hessians_file(&hessians, &hpath)?;
+    // Record the loss curve for EXPERIMENTS.md.
+    let curve: String = tr
+        .losses
+        .iter()
+        .map(|(s, l)| format!("{s},{l}\n"))
+        .collect();
+    std::fs::write(ctx.runs.join(format!("{family}.losses.csv")), curve)?;
+    Ok((params, hessians))
+}
+
+fn save_hessians_file(
+    hessians: &BTreeMap<String, Hessian>,
+    path: &std::path::Path,
+) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&(hessians.len() as u32).to_le_bytes())?;
+    for (name, h) in hessians {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        h.write_to(&mut f)?;
+    }
+    Ok(())
+}
+
+fn load_hessians_file(path: &std::path::Path) -> Result<BTreeMap<String, Hessian>> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path)?;
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let nlen = u32::from_le_bytes(b4) as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        out.insert(String::from_utf8(nb)?, Hessian::read_from(&mut f)?);
+    }
+    Ok(out)
+}
+
+/// One table cell: compress + eval. Returns (avg_bits, report).
+pub fn run_cell(
+    ctx: &ExpContext,
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    hessians: &BTreeMap<String, Hessian>,
+    cfg: PipelineConfig,
+) -> Result<(f64, EvalReport)> {
+    let out = CompressionPipeline::new(cfg).run(params, hessians)?;
+    let applied = out.model.apply_to(params)?;
+    let (wins, items) = if ctx.quick { (12, 32) } else { (30, 64) };
+    let rep = evaluate(rt, &applied, wins, items, 1000)?;
+    Ok((out.model.avg_bits(), rep))
+}
+
+fn base_cfg(ctx: &ExpContext) -> PipelineConfig {
+    PipelineConfig {
+        outer_iters: ctx.outer_iters(),
+        lplr_iters: if ctx.quick { 3 } else { 10 },
+        seed: ctx.seed,
+        ..Default::default()
+    }
+}
+
+fn fmt_tasks(rep: &EvalReport) -> Vec<String> {
+    rep.tasks
+        .iter()
+        .map(|t| format!("{:.1}", t.accuracy * 100.0))
+        .collect()
+}
+
+/// Shared engine for the PPL+accuracy tables.
+#[allow(clippy::too_many_arguments)]
+fn ppl_table(
+    ctx: &ExpContext,
+    stem: &str,
+    title: &str,
+    families: &[&str],
+    ranks: &[(usize, usize)],
+    lr_bits: u32,
+    with_tasks: bool,
+    extra_rows: &[InitKind],
+) -> Result<()> {
+    let rt = ctx.open_runtime()?;
+    let mut headers = vec!["Model", "Method", "Rank", "AvgBits", "Wiki-sim", "C4-sim"];
+    if with_tasks {
+        headers.extend(["Wino", "RTE", "PiQA", "ArcE", "ArcC"]);
+    }
+    let mut t = Table::new(title, &headers.iter().map(|s| &**s).collect::<Vec<_>>());
+    for family in families {
+        let (params, hessians) = ensure_model(ctx, &rt, family)?;
+        // FP32 reference row.
+        let (wins, items) = if ctx.quick { (12, 32) } else { (30, 64) };
+        let base = evaluate(&rt, &params, wins, items, 1000)?;
+        let mut row = vec![
+            family.to_string(),
+            "uncompressed".into(),
+            "-".into(),
+            "32".into(),
+            format!("{:.3}", base.ppl_wiki),
+            format!("{:.3}", base.ppl_c4),
+        ];
+        if with_tasks {
+            row.extend(fmt_tasks(&base));
+        }
+        t.row(row);
+        for &(paper_rank, our_rank) in ranks {
+            let mut methods: Vec<InitKind> = vec![InitKind::Caldera, InitKind::Odlri];
+            methods.extend_from_slice(extra_rows);
+            for init in methods {
+                let mut cfg = base_cfg(ctx);
+                cfg.init = init.clone();
+                cfg.rank = our_rank;
+                cfg.lr_bits = lr_bits;
+                let (bits, rep) = run_cell(ctx, &rt, &params, &hessians, cfg)?;
+                let method = match &init {
+                    InitKind::Caldera => "CALDERA".to_string(),
+                    InitKind::Odlri => "+ODLRI".to_string(),
+                    other => other.name(),
+                };
+                let mut row = vec![
+                    family.to_string(),
+                    method,
+                    format!("{our_rank} ({paper_rank})"),
+                    format!("{bits:.2}"),
+                    format!("{:.3}", rep.ppl_wiki),
+                    format!("{:.3}", rep.ppl_c4),
+                ];
+                if with_tasks {
+                    row.extend(fmt_tasks(&rep));
+                }
+                t.row(row);
+                eprintln!("  [cell] {family} {} r{our_rank} done", init.name());
+            }
+        }
+    }
+    t.print();
+    t.save(&ctx.results, stem)?;
+    Ok(())
+}
+
+/// Table 2: Llama2-sim families, 2-bit Q + 4-bit LR, PPL + zero-shot.
+pub fn table2(ctx: &ExpContext) -> Result<()> {
+    let ranks: Vec<(usize, usize)> = if ctx.quick {
+        vec![(256, 32)]
+    } else {
+        RANK_MAP.to_vec()
+    };
+    ppl_table(
+        ctx,
+        "table2",
+        "Table 2 — CALDERA vs +ODLRI on Llama2-sim (Q 2-bit E8, LR 4-bit)",
+        &["tl-7s", "tl-13s"],
+        &ranks,
+        4,
+        true,
+        &[],
+    )
+}
+
+/// Table 3: 16-bit LR perplexities.
+pub fn table3(ctx: &ExpContext) -> Result<()> {
+    let ranks: Vec<(usize, usize)> = if ctx.quick {
+        vec![(256, 32)]
+    } else {
+        RANK_MAP.to_vec()
+    };
+    ppl_table(
+        ctx,
+        "table3",
+        "Table 3 — CALDERA vs +ODLRI, LR unquantized (Q 2-bit E8, LR 16-bit)",
+        &["tl-7s", "tl-13s"],
+        &ranks,
+        16,
+        false,
+        &[],
+    )
+}
+
+/// Table 4: Llama3-sim and Mistral-sim generalization (4-bit LR).
+pub fn table4(ctx: &ExpContext) -> Result<()> {
+    let ranks: Vec<(usize, usize)> = if ctx.quick {
+        vec![(256, 32)]
+    } else {
+        RANK_MAP.to_vec()
+    };
+    ppl_table(
+        ctx,
+        "table4",
+        "Table 4 — Generalization: tl3-8s (Llama3-sim) and tm-7s (Mistral-sim)",
+        &["tl3-8s", "tm-7s"],
+        &ranks,
+        4,
+        false,
+        &[],
+    )
+}
+
+/// Table 5: k = r vs k < r at rank 32 (paper 256), LR 16-bit and 4-bit.
+pub fn table5(ctx: &ExpContext) -> Result<()> {
+    let rt = ctx.open_runtime()?;
+    let (params, hessians) = ensure_model(ctx, &rt, "tl-7s")?;
+    let rank = 32;
+    let mut t = Table::new(
+        "Table 5 — ODLRI outlier count: k = r vs k < r (rank 32, tl-7s)",
+        &["ODLRI", "LR bits", "Wiki-sim", "C4-sim"],
+    );
+    for lr_bits in [16u32, 4] {
+        for (label, k) in [
+            ("H_o (k = r)", rank),
+            ("H_o (k < r)", crate::decompose::Initializer::odlri_k(rank, 128)),
+        ] {
+            let mut cfg = base_cfg(ctx);
+            cfg.init = InitKind::OdlriK(k);
+            cfg.rank = rank;
+            cfg.lr_bits = lr_bits;
+            let (_bits, rep) = run_cell(ctx, &rt, &params, &hessians, cfg)?;
+            t.row(vec![
+                format!("{label} [k={k}]"),
+                lr_bits.to_string(),
+                format!("{:.3}", rep.ppl_wiki),
+                format!("{:.3}", rep.ppl_c4),
+            ]);
+        }
+    }
+    t.print();
+    t.save(&ctx.results, "table5")?;
+    Ok(())
+}
+
+/// Table 9: zero-shot accuracies, LR 16-bit, plus the QuIP#-only (rank 0)
+/// baseline row.
+pub fn table9(ctx: &ExpContext) -> Result<()> {
+    let rt = ctx.open_runtime()?;
+    let ranks: Vec<(usize, usize)> = if ctx.quick {
+        vec![(256, 32)]
+    } else {
+        RANK_MAP.to_vec()
+    };
+    let mut t = Table::new(
+        "Table 9 — Zero-shot accuracy, LR 16-bit (plus QuIP#-only rank-0 row)",
+        &["Model", "Method", "Rank", "Wino", "RTE", "PiQA", "ArcE", "ArcC"],
+    );
+    for family in ["tl-7s", "tl-13s"] {
+        let (params, hessians) = ensure_model(ctx, &rt, family)?;
+        for &(paper_rank, our_rank) in &ranks {
+            for init in [InitKind::Caldera, InitKind::Odlri] {
+                let mut cfg = base_cfg(ctx);
+                cfg.init = init.clone();
+                cfg.rank = our_rank;
+                cfg.lr_bits = 16;
+                let (_b, rep) = run_cell(ctx, &rt, &params, &hessians, cfg)?;
+                let mut row = vec![
+                    family.to_string(),
+                    match init {
+                        InitKind::Caldera => "CALDERA".into(),
+                        _ => "+ODLRI".into(),
+                    },
+                    format!("{our_rank} ({paper_rank})"),
+                ];
+                row.extend(fmt_tasks(&rep));
+                t.row(row);
+            }
+        }
+        // QuIP# row: pure 2-bit LDLQ quantization, no low-rank component.
+        let mut cfg = base_cfg(ctx);
+        cfg.init = InitKind::Caldera;
+        cfg.rank = 0;
+        cfg.lr_bits = 16;
+        cfg.outer_iters = 1;
+        let (_b, rep) = run_cell(ctx, &rt, &params, &hessians, cfg)?;
+        let mut row = vec![family.to_string(), "QuIP#".into(), "0".into()];
+        row.extend(fmt_tasks(&rep));
+        t.row(row);
+    }
+    t.print();
+    t.save(&ctx.results, "table9")?;
+    Ok(())
+}
+
+/// Table 10: extreme low ranks (paper 16/32 → ours 2/4), 4-bit LR.
+pub fn table10(ctx: &ExpContext) -> Result<()> {
+    ppl_table(
+        ctx,
+        "table10",
+        "Table 10 — Extreme compression: ranks 2 (16) and 4 (32), LR 4-bit",
+        &["tl-7s"],
+        &[(16, 2), (32, 4)],
+        4,
+        true,
+        &[],
+    )
+}
+
+/// Table 11: MXINT 3-bit quantizer ablation on tl-7s and tg-2s (Gemma-sim),
+/// LR 16-bit, ranks 4 (32) and 8 (64).
+pub fn table11(ctx: &ExpContext) -> Result<()> {
+    let rt = ctx.open_runtime()?;
+    let mut t = Table::new(
+        "Table 11 — MXINT-base vs +ODLRI (Q 3-bit MXINT b32, LR 16-bit)",
+        &["Model", "Method", "Rank", "Wiki-sim PPL"],
+    );
+    for family in ["tl-7s", "tg-2s"] {
+        let (params, hessians) = ensure_model(ctx, &rt, family)?;
+        let (wins, items) = if ctx.quick { (12, 16) } else { (30, 32) };
+        let base = evaluate(&rt, &params, wins, items, 1000)?;
+        t.row(vec![
+            family.into(),
+            "FP32".into(),
+            "-".into(),
+            format!("{:.3}", base.ppl_wiki),
+        ]);
+        for &(paper_rank, our_rank) in &[(32usize, 4usize), (64, 8)] {
+            for (label, init) in [
+                ("MXINT-base", InitKind::Caldera),
+                ("+ODLRI", InitKind::Odlri),
+            ] {
+                let mut cfg = base_cfg(ctx);
+                cfg.init = init;
+                cfg.rank = our_rank;
+                cfg.lr_bits = 16;
+                cfg.q_scheme = "mxint".into();
+                cfg.q_bits = 3;
+                cfg.q_group = 32;
+                cfg.hadamard = false; // MXINT-base applies no incoherence
+                let (_b, rep) = run_cell(ctx, &rt, &params, &hessians, cfg)?;
+                t.row(vec![
+                    family.into(),
+                    label.into(),
+                    format!("{our_rank} ({paper_rank})"),
+                    format!("{:.3}", rep.ppl_wiki),
+                ]);
+            }
+        }
+    }
+    t.print();
+    t.save(&ctx.results, "table11")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_map_ratios() {
+        // r/n ratio scaled consistently (4× relatively larger: tiny models
+        // have far less weight redundancy than 7B ones, so the same
+        // absolute ratio would starve the LR term entirely).
+        for (paper, ours) in RANK_MAP {
+            let paper_ratio = paper as f64 / 4096.0;
+            let our_ratio = ours as f64 / 128.0;
+            assert!((our_ratio / paper_ratio - 4.0).abs() < 0.01);
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! Fast Walsh–Hadamard transform and QuIP#-style randomized incoherence
+//! processing.
+//!
+//! CALDERA (and QuIP/QuIP#) pre-multiplies `W ← H_m D_m W D_n H_n` with
+//! random sign diagonals `D` and (scaled) Hadamard matrices `H` so that the
+//! transformed weights are *incoherent* — no single entry dominates — which
+//! makes lattice/scalar quantization dramatically better behaved. The
+//! Hessian transforms covariantly: `H' = H_n D_n H D_n H_n` (right-side
+//! transform only, since X enters as WX).
+//!
+//! Non-power-of-two dimensions use the largest power-of-two block strategy:
+//! the dimension is split into pow2 segments, each transformed independently
+//! (standard practice in QuIP# for e.g. 11008-dim MLP axes).
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// In-place FWHT of a length-2^k slice, normalized by 1/√n so the transform
+/// is orthonormal (involutive).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fwht needs power-of-two length");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Largest power of two ≤ n.
+fn pow2_floor(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        1 << (usize::BITS - 1 - n.leading_zeros())
+    }
+}
+
+/// Split a dimension into power-of-two segments (greedy largest-first).
+pub fn pow2_segments(n: usize) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    let mut start = 0;
+    let mut rem = n;
+    while rem > 0 {
+        let p = pow2_floor(rem);
+        segs.push((start, p));
+        start += p;
+        rem -= p;
+    }
+    segs
+}
+
+/// Blocked orthonormal Hadamard applied along each row of M (i.e. M ← M H_n^T
+/// where H_n is the blocked transform; H is symmetric so transposition is
+/// moot per block).
+pub fn fwht_rows(m: &mut Matrix) {
+    let segs = pow2_segments(m.cols());
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        for &(s, len) in &segs {
+            fwht_normalized(&mut row[s..s + len]);
+        }
+    }
+}
+
+/// Blocked orthonormal Hadamard applied along each column of M (M ← H_m M).
+pub fn fwht_cols(m: &mut Matrix) {
+    let segs = pow2_segments(m.rows());
+    let mut buf = vec![0f32; m.rows()];
+    for j in 0..m.cols() {
+        for i in 0..m.rows() {
+            buf[i] = m.at(i, j);
+        }
+        for &(s, len) in &segs {
+            fwht_normalized(&mut buf[s..s + len]);
+        }
+        for i in 0..m.rows() {
+            *m.at_mut(i, j) = buf[i];
+        }
+    }
+}
+
+/// A two-sided randomized Hadamard incoherence transform: remembers the sign
+/// diagonals so it can be inverted exactly.
+#[derive(Clone, Debug)]
+pub struct Incoherence {
+    pub left_signs: Vec<f32>,  // D_m, length = rows of W
+    pub right_signs: Vec<f32>, // D_n, length = cols of W
+}
+
+impl Incoherence {
+    pub fn new(rows: usize, cols: usize, rng: &mut Pcg64) -> Incoherence {
+        Incoherence {
+            left_signs: (0..rows).map(|_| rng.sign()).collect(),
+            right_signs: (0..cols).map(|_| rng.sign()).collect(),
+        }
+    }
+
+    /// W̃ = H_m D_m W D_n H_n
+    pub fn apply(&self, w: &Matrix) -> Matrix {
+        let mut t = w.mul_diag_left(&self.left_signs);
+        t = t.mul_diag_right(&self.right_signs);
+        fwht_cols(&mut t);
+        fwht_rows(&mut t);
+        t
+    }
+
+    /// W = D_m H_m W̃ H_n D_n (exact inverse: H orthonormal+symmetric per
+    /// block, D² = I).
+    pub fn unapply(&self, wt: &Matrix) -> Matrix {
+        let mut t = wt.clone();
+        fwht_cols(&mut t);
+        fwht_rows(&mut t);
+        t = t.mul_diag_left(&self.left_signs);
+        t.mul_diag_right(&self.right_signs)
+    }
+
+    /// Transform the Hessian covariantly: if W̃ = … W D_n H_n then the
+    /// activation side transforms as X̃ = H_n D_n X, so
+    /// H̃ = X̃ X̃^T = H_n D_n H D_n H_n.
+    pub fn apply_hessian(&self, h: &Matrix) -> Matrix {
+        let mut t = h.mul_diag_left(&self.right_signs);
+        t = t.mul_diag_right(&self.right_signs);
+        fwht_cols(&mut t);
+        fwht_rows(&mut t);
+        t
+    }
+
+    /// Transform activations: X̃ = H_n D_n X (X is n x d with n = W's cols).
+    pub fn apply_acts(&self, x: &Matrix) -> Matrix {
+        let mut t = x.mul_diag_left(&self.right_signs);
+        fwht_cols(&mut t);
+        t
+    }
+
+    /// Forward-transform low-rank factors from the original basis into the
+    /// incoherent basis: L̃ = H_m D_m L ; R̃ = R D_n H_n (so that
+    /// L̃ R̃ = apply(L R)).
+    pub fn apply_left(&self, l: &Matrix) -> Matrix {
+        let mut t = l.mul_diag_left(&self.left_signs);
+        fwht_cols(&mut t);
+        t
+    }
+
+    pub fn apply_right(&self, r: &Matrix) -> Matrix {
+        let mut t = r.mul_diag_right(&self.right_signs);
+        fwht_rows(&mut t);
+        t
+    }
+
+    /// Inverse-transform the low-rank factors found in the incoherent basis
+    /// back to the original basis:
+    /// L = D_m H_m L̃ ;  R = R̃ H_n D_n.
+    pub fn unapply_left(&self, lt: &Matrix) -> Matrix {
+        let mut t = lt.clone();
+        fwht_cols(&mut t);
+        t.mul_diag_left(&self.left_signs)
+    }
+
+    pub fn unapply_right(&self, rt: &Matrix) -> Matrix {
+        let mut t = rt.clone();
+        fwht_rows(&mut t);
+        t.mul_diag_right(&self.right_signs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_matches_explicit_h2() {
+        let mut x = vec![1.0f32, 2.0];
+        fwht_normalized(&mut x);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((x[0] - 3.0 * s).abs() < 1e-6);
+        assert!((x[1] - (-1.0) * s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fwht_is_involutive() {
+        let mut rng = Pcg64::new(60, 1);
+        let mut x: Vec<f32> = (0..64).map(|_| rng.normal_f32()).collect();
+        let orig = x.clone();
+        fwht_normalized(&mut x);
+        fwht_normalized(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fwht_preserves_norm() {
+        let mut rng = Pcg64::new(61, 1);
+        let mut x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        fwht_normalized(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+    }
+
+    #[test]
+    fn pow2_segments_cover() {
+        for n in [1usize, 2, 3, 7, 8, 12, 100, 344] {
+            let segs = pow2_segments(n);
+            let total: usize = segs.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n);
+            assert!(segs.iter().all(|&(_, l)| l.is_power_of_two()));
+            // Contiguous.
+            let mut pos = 0;
+            for &(s, l) in &segs {
+                assert_eq!(s, pos);
+                pos += l;
+            }
+        }
+    }
+
+    #[test]
+    fn incoherence_roundtrips() {
+        let mut rng = Pcg64::new(62, 1);
+        for &(m, n) in &[(16usize, 32usize), (24, 40), (13, 13)] {
+            let w = Matrix::randn(m, n, 1.0, &mut rng);
+            let inc = Incoherence::new(m, n, &mut rng);
+            let wt = inc.apply(&w);
+            let back = inc.unapply(&wt);
+            assert!(back.rel_err(&w) < 1e-4, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn incoherence_preserves_product_wx() {
+        // (W̃)(X̃) = H_m D_m (W X): the transformed product is an orthogonal
+        // transform of WX, so ‖W̃ X̃‖ = ‖W X‖.
+        let mut rng = Pcg64::new(63, 1);
+        let w = Matrix::randn(16, 32, 1.0, &mut rng);
+        let x = Matrix::randn(32, 20, 1.0, &mut rng);
+        let inc = Incoherence::new(16, 32, &mut rng);
+        let wt = inc.apply(&w);
+        let xt = inc.apply_acts(&x);
+        let p1 = wt.dot(&xt).frob_norm();
+        let p2 = w.dot(&x).frob_norm();
+        assert!((p1 - p2).abs() < 1e-2 * p2, "{p1} vs {p2}");
+    }
+
+    #[test]
+    fn hessian_transform_consistent_with_acts() {
+        let mut rng = Pcg64::new(64, 1);
+        let x = Matrix::randn(32, 50, 1.0, &mut rng);
+        let h = x.dot_t(&x);
+        let inc = Incoherence::new(8, 32, &mut rng);
+        let ht_direct = inc.apply_hessian(&h);
+        let xt = inc.apply_acts(&x);
+        let ht_from_x = xt.dot_t(&xt);
+        assert!(ht_direct.rel_err(&ht_from_x) < 1e-3);
+    }
+
+    #[test]
+    fn incoherence_reduces_peak_to_frob_ratio() {
+        // A spiky matrix becomes incoherent: max|w| / ‖W‖_F shrinks.
+        let mut w = Matrix::zeros(64, 64);
+        *w.at_mut(3, 5) = 100.0;
+        *w.at_mut(10, 60) = -80.0;
+        for i in 0..64 {
+            *w.at_mut(i, i) += 0.1;
+        }
+        let mut rng = Pcg64::new(65, 1);
+        let inc = Incoherence::new(64, 64, &mut rng);
+        let wt = inc.apply(&w);
+        let ratio_before = w.abs_max() / w.frob_norm();
+        let ratio_after = wt.abs_max() / wt.frob_norm();
+        assert!(
+            ratio_after < ratio_before * 0.25,
+            "before={ratio_before} after={ratio_after}"
+        );
+    }
+
+    #[test]
+    fn lr_apply_matches_matrix_transform() {
+        // apply(L R) == apply_left(L) @ apply_right(R).
+        let mut rng = Pcg64::new(67, 1);
+        let l = Matrix::randn(16, 4, 1.0, &mut rng);
+        let r = Matrix::randn(4, 32, 1.0, &mut rng);
+        let inc = Incoherence::new(16, 32, &mut rng);
+        let direct = inc.apply(&l.dot(&r));
+        let via_factors = inc.apply_left(&l).dot(&inc.apply_right(&r));
+        assert!(via_factors.rel_err(&direct) < 1e-4);
+        // unapply_left ∘ apply_left = id.
+        assert!(inc.unapply_left(&inc.apply_left(&l)).rel_err(&l) < 1e-5);
+        assert!(inc.unapply_right(&inc.apply_right(&r)).rel_err(&r) < 1e-5);
+    }
+
+    #[test]
+    fn lr_unapply_consistent() {
+        // If W̃ ≈ L̃ R̃ then W ≈ (D H L̃)(R̃ H D).
+        let mut rng = Pcg64::new(66, 1);
+        let l = Matrix::randn(16, 4, 1.0, &mut rng);
+        let r = Matrix::randn(4, 32, 1.0, &mut rng);
+        let wt = l.dot(&r);
+        let inc = Incoherence::new(16, 32, &mut rng);
+        let w = inc.unapply(&wt);
+        let lb = inc.unapply_left(&l);
+        let rb = inc.unapply_right(&r);
+        assert!(lb.dot(&rb).rel_err(&w) < 1e-4);
+    }
+}

@@ -1,0 +1,238 @@
+//! Calibration Hessians `H = X Xᵀ` and the paper's outlier-restricted
+//! submatrix `H_o` (Eq. 1).
+//!
+//! For a linear layer `y = W x` with inputs `x ∈ ℝⁿ`, the activation-aware
+//! error `‖(W−Ŵ)X‖²_F = tr((W−Ŵ) H (W−Ŵ)ᵀ)` depends on X only through
+//! `H = X Xᵀ`. The calibration driver accumulates H streaming over batches;
+//! ODLRI then selects the top-k diagonal entries (the outlier channels 𝓘)
+//! and zeroes everything outside 𝓘×𝓘 to form `H_o`.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// A symmetric PSD calibration Hessian with sample bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Hessian {
+    h: Matrix,
+    /// Number of activation samples accumulated.
+    pub samples: usize,
+}
+
+impl Hessian {
+    pub fn zeros(n: usize) -> Hessian {
+        Hessian {
+            h: Matrix::zeros(n, n),
+            samples: 0,
+        }
+    }
+
+    /// Build directly from an activation matrix X (n × d; columns are
+    /// samples).
+    pub fn from_acts(x: &Matrix) -> Hessian {
+        Hessian {
+            h: x.dot_t(&x),
+            samples: x.cols(),
+        }
+    }
+
+    /// Wrap an existing symmetric matrix.
+    pub fn from_matrix(h: Matrix, samples: usize) -> Result<Hessian> {
+        if h.rows() != h.cols() {
+            bail!("Hessian must be square, got {}x{}", h.rows(), h.cols());
+        }
+        Ok(Hessian { h, samples })
+    }
+
+    /// Streaming accumulation: H += X Xᵀ for a batch X (n × d).
+    pub fn accumulate(&mut self, x: &Matrix) {
+        assert_eq!(x.rows(), self.h.rows(), "activation dim mismatch");
+        let xxt = x.dot_t(&x);
+        self.h.add_assign(&xxt);
+        self.samples += x.cols();
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.rows()
+    }
+
+    pub fn matrix(&self) -> &Matrix {
+        &self.h
+    }
+
+    /// Mean-normalized Hessian (divide by sample count) — scale-stable
+    /// across calibration sizes.
+    pub fn normalized(&self) -> Matrix {
+        if self.samples == 0 {
+            return self.h.clone();
+        }
+        self.h.scale(1.0 / self.samples as f32)
+    }
+
+    /// H + λ·mean(diag)·I (CALDERA's regularization convention).
+    pub fn regularized(&self, lambda: f32) -> Matrix {
+        let n = self.dim();
+        let mean_diag = {
+            let s: f64 = (0..n).map(|i| self.h.at(i, i) as f64).sum();
+            (s / n.max(1) as f64) as f32
+        };
+        let mut out = self.h.clone();
+        let jit = lambda * mean_diag.max(1e-12);
+        for i in 0..n {
+            *out.at_mut(i, i) += jit;
+        }
+        out
+    }
+
+    /// Indices 𝓘 of the top-k diagonal entries — the outlier-sensitive
+    /// channels (paper App. B.2 selects k = p·n of them). Returned sorted
+    /// ascending for deterministic masking.
+    pub fn topk_diag(&self, k: usize) -> Vec<usize> {
+        let n = self.dim();
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            self.h
+                .at(b, b)
+                .partial_cmp(&self.h.at(a, a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut top: Vec<usize> = idx[..k].to_vec();
+        top.sort_unstable();
+        top
+    }
+
+    /// The restricted Hessian H_o of Eq. 1: (H_o)_ij = H_ij for i,j ∈ 𝓘,
+    /// 0 otherwise. Full n×n shape.
+    pub fn restricted(&self, idx: &[usize]) -> Matrix {
+        let n = self.dim();
+        let mut mask = vec![false; n];
+        for &i in idx {
+            mask[i] = true;
+        }
+        Matrix::from_fn(n, n, |i, j| {
+            if mask[i] && mask[j] {
+                self.h.at(i, j)
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// The dense k×k submatrix H[𝓘, 𝓘] (what the whitening actually
+    /// factorizes — the zero-padded version has rank ≤ k by construction).
+    pub fn submatrix(&self, idx: &[usize]) -> Matrix {
+        let k = idx.len();
+        Matrix::from_fn(k, k, |a, b| self.h.at(idx[a], idx[b]))
+    }
+
+    // ---- serialization ----
+
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> Result<()> {
+        w.write_all(b"ODH1")?;
+        w.write_all(&(self.samples as u64).to_le_bytes())?;
+        self.h.write_to(w)
+    }
+
+    pub fn read_from(r: &mut impl std::io::Read) -> Result<Hessian> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"ODH1" {
+            bail!("bad hessian magic");
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let samples = u64::from_le_bytes(b8) as usize;
+        let h = Matrix::read_from(r)?;
+        Hessian::from_matrix(h, samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn accumulate_matches_batch() {
+        let mut rng = Pcg64::new(140, 1);
+        let x = Matrix::randn(16, 40, 1.0, &mut rng);
+        let whole = Hessian::from_acts(&x);
+        let mut streamed = Hessian::zeros(16);
+        streamed.accumulate(&x.slice(0, 16, 0, 15));
+        streamed.accumulate(&x.slice(0, 16, 15, 40));
+        assert_eq!(streamed.samples, 40);
+        assert!(streamed.matrix().rel_err(whole.matrix()) < 1e-4);
+    }
+
+    #[test]
+    fn topk_finds_planted_outliers() {
+        testing::quick("topk-outliers", |rng| {
+            let n = testing::gen_dim(rng, 16, 48);
+            let k = testing::gen_dim(rng, 1, 4);
+            let (x, planted) = testing::gen_outlier_acts(rng, n, 3 * n, k);
+            let h = Hessian::from_acts(&x);
+            assert_eq!(h.topk_diag(k), planted);
+        });
+    }
+
+    #[test]
+    fn restricted_matches_eq1() {
+        let mut rng = Pcg64::new(141, 1);
+        let x = Matrix::randn(10, 30, 1.0, &mut rng);
+        let h = Hessian::from_acts(&x);
+        let idx = vec![2usize, 5, 7];
+        let ho = h.restricted(&idx);
+        for i in 0..10 {
+            for j in 0..10 {
+                let expect = if idx.contains(&i) && idx.contains(&j) {
+                    h.matrix().at(i, j)
+                } else {
+                    0.0
+                };
+                assert_eq!(ho.at(i, j), expect);
+            }
+        }
+        // H_o must equal X_o X_oᵀ where X_o keeps only rows 𝓘 (App. B.1).
+        let xo = x.mask_rows(&idx);
+        assert!(ho.rel_err(&xo.dot_t(&xo)) < 1e-4);
+    }
+
+    #[test]
+    fn submatrix_is_dense_block() {
+        let mut rng = Pcg64::new(142, 1);
+        let x = Matrix::randn(8, 24, 1.0, &mut rng);
+        let h = Hessian::from_acts(&x);
+        let idx = vec![1usize, 3, 6];
+        let sub = h.submatrix(&idx);
+        assert_eq!(sub.shape(), (3, 3));
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(sub.at(a, b), h.matrix().at(idx[a], idx[b]));
+            }
+        }
+    }
+
+    #[test]
+    fn regularization_makes_pd() {
+        // Rank-deficient H (fewer samples than dims).
+        let mut rng = Pcg64::new(143, 1);
+        let x = Matrix::randn(20, 5, 1.0, &mut rng);
+        let h = Hessian::from_acts(&x);
+        assert!(crate::linalg::cholesky(h.matrix()).is_err());
+        let reg = h.regularized(1e-4);
+        assert!(crate::linalg::cholesky(&reg).is_ok());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Pcg64::new(144, 1);
+        let x = Matrix::randn(12, 20, 1.0, &mut rng);
+        let h = Hessian::from_acts(&x);
+        let mut buf = Vec::new();
+        h.write_to(&mut buf).unwrap();
+        let back = Hessian::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.samples, 20);
+        assert!(back.matrix().rel_err(h.matrix()) == 0.0);
+    }
+}

@@ -1,0 +1,48 @@
+//! # odlri — Outlier-Driven Low-Rank Initialization for joint Q+LR weight decomposition
+//!
+//! A from-scratch reproduction of *"Assigning Distinct Roles to Quantized and
+//! Low-Rank Matrices Toward Optimal Weight Decomposition"* (ACL 2025 Findings)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the compression pipeline: calibration,
+//!   per-matrix joint `W ≈ Q + L·R` optimization (CALDERA loop with
+//!   pluggable low-rank initializers including ODLRI), a threaded job
+//!   coordinator, model evaluation (perplexity + zero-shot proxies), and a
+//!   full experiment harness regenerating every table/figure of the paper.
+//! * **Layer 2** — a tiny Llama-style transformer authored in JAX and
+//!   AOT-lowered to HLO text artifacts, executed here through PJRT
+//!   ([`runtime`]).
+//! * **Layer 1** — Pallas kernels (fused `(Q+LR)·x`, per-group quantize,
+//!   Walsh–Hadamard) lowered inside the same artifacts.
+//!
+//! Python never runs at pipeline/eval time: after `make artifacts`, the
+//! `odlri` binary is self-contained.
+//!
+//! Entry points: [`decompose::JointOptimizer`] (the algorithm),
+//! [`coordinator::CompressionPipeline`] (whole-model compression),
+//! [`eval`] (metrics), `odlri exp <id>` (paper reproductions).
+
+pub mod benchkit;
+pub mod calib;
+pub mod cli;
+pub mod coordinator;
+pub mod corpus;
+pub mod decompose;
+pub mod eval;
+pub mod exec;
+pub mod exp;
+pub mod hadamard;
+pub mod hessian;
+pub mod linalg;
+pub mod lowrank;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,203 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! Used for (1) SVD-LLM-style whitening of the (outlier-restricted) Hessian
+//! in ODLRI — `H_o = S_o S_o^T` with `S_o` lower-triangular (paper App. B.1),
+//! (2) the LDLQ error-feedback quantizer, and (3) activation-aware least
+//! squares in LPLR.
+
+use crate::tensor::Matrix;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+/// Fails if A is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // f64 accumulation: Hessians can be ill-conditioned.
+            let mut sum = a.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (d={sum:.3e})");
+                }
+                *l.at_mut(i, j) = (sum.sqrt()) as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Cholesky with automatic diagonal jitter: A + λ·mean(diag)·I, escalating λ
+/// by 10× until the factorization succeeds (CALDERA's Hessian regularization
+/// convention). Returns (L, λ_used).
+pub fn cholesky_jittered(a: &Matrix, lambda0: f64) -> Result<(Matrix, f64)> {
+    let n = a.rows();
+    let mean_diag = {
+        let d: f64 = (0..n).map(|i| a.at(i, i) as f64).sum();
+        (d / n.max(1) as f64).max(1e-12)
+    };
+    let mut lambda = lambda0;
+    for _ in 0..12 {
+        let mut aj = a.clone();
+        let jit = (lambda * mean_diag) as f32;
+        for i in 0..n {
+            *aj.at_mut(i, i) += jit;
+        }
+        if let Ok(l) = cholesky(&aj) {
+            return Ok((l, lambda));
+        }
+        lambda = if lambda == 0.0 { 1e-8 } else { lambda * 10.0 };
+    }
+    bail!("cholesky failed even with jitter λ={lambda}");
+}
+
+/// Solve L X = B for X with L lower-triangular. B: (n x k).
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut x = b.clone();
+    for col in 0..k {
+        for i in 0..n {
+            let mut sum = x.at(i, col) as f64;
+            for j in 0..i {
+                sum -= l.at(i, j) as f64 * x.at(j, col) as f64;
+            }
+            *x.at_mut(i, col) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Solve L^T X = B for X with L lower-triangular (i.e. upper-tri solve with
+/// L's transpose, without materializing it).
+pub fn solve_lower_transpose(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut x = b.clone();
+    for col in 0..k {
+        for i in (0..n).rev() {
+            let mut sum = x.at(i, col) as f64;
+            for j in i + 1..n {
+                // (L^T)[i, j] = L[j, i]
+                sum -= l.at(j, i) as f64 * x.at(j, col) as f64;
+            }
+            *x.at_mut(i, col) = (sum / l.at(i, i) as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Solve U X = B for X with U upper-triangular. B: (n x k).
+pub fn solve_upper(u: &Matrix, b: &Matrix) -> Matrix {
+    let n = u.rows();
+    assert_eq!(b.rows(), n);
+    let k = b.cols();
+    let mut x = b.clone();
+    for col in 0..k {
+        for i in (0..n).rev() {
+            let mut sum = x.at(i, col) as f64;
+            for j in i + 1..n {
+                sum -= u.at(i, j) as f64 * x.at(j, col) as f64;
+            }
+            *x.at_mut(i, col) = (sum / u.at(i, i) as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Explicit inverse of a lower-triangular matrix (used for S_o^{-1} in the
+/// ODLRI back-transform R_0 = sqrt(Σ) V^T S_o^{-1}).
+pub fn tri_inverse_lower(l: &Matrix) -> Matrix {
+    let n = l.rows();
+    solve_lower(l, &Matrix::eye(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, rng: &mut Pcg64) -> Matrix {
+        let a = Matrix::randn(n, n + 4, 1.0, rng);
+        let mut h = a.dot_t(&a); // A A^T is PSD, nearly PD for n+4 samples
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.1;
+        }
+        h
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Pcg64::new(20, 1);
+        for n in [1usize, 2, 5, 16, 40] {
+            let h = random_spd(n, &mut rng);
+            let l = cholesky(&h).unwrap();
+            let rec = l.dot_t(&l);
+            assert!(rec.rel_err(&h) < 1e-4, "n={n} err={}", rec.rel_err(&h));
+            // L is lower triangular.
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig -1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_rescues_singular() {
+        // Rank-1 PSD matrix — plain cholesky fails at pivot 1 for n>1.
+        let v = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let h = v.dot_t(&v);
+        assert!(cholesky(&h).is_err());
+        let (l, lam) = cholesky_jittered(&h, 1e-4).unwrap();
+        assert!(lam >= 1e-4);
+        assert!(l.dot_t(&l).rel_err(&h) < 0.05);
+    }
+
+    #[test]
+    fn solves_match_inverse() {
+        let mut rng = Pcg64::new(21, 1);
+        let h = random_spd(12, &mut rng);
+        let l = cholesky(&h).unwrap();
+        let b = Matrix::randn(12, 3, 1.0, &mut rng);
+        // L (L^T x) = b  ⇒  x = H^{-1} b
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y);
+        let hx = h.dot(&x);
+        assert!(hx.rel_err(&b) < 1e-3, "err={}", hx.rel_err(&b));
+    }
+
+    #[test]
+    fn solve_upper_works() {
+        let u = Matrix::from_vec(3, 3, vec![2.0, 1.0, 0.5, 0.0, 3.0, -1.0, 0.0, 0.0, 4.0]);
+        let x_true = Matrix::from_vec(3, 2, vec![1.0, -2.0, 0.5, 3.0, 2.0, 0.0]);
+        let b = u.dot(&x_true);
+        let x = solve_upper(&u, &b);
+        assert!(x.max_abs_diff(&x_true) < 1e-5);
+    }
+
+    #[test]
+    fn tri_inverse_is_inverse() {
+        let mut rng = Pcg64::new(22, 1);
+        let h = random_spd(10, &mut rng);
+        let l = cholesky(&h).unwrap();
+        let linv = tri_inverse_lower(&l);
+        let prod = l.dot(&linv);
+        assert!(prod.rel_err(&Matrix::eye(10)) < 1e-4);
+    }
+}

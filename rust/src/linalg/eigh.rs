@@ -1,0 +1,162 @@
+//! Symmetric eigendecomposition (classical two-sided Jacobi).
+//!
+//! Fallback whitening path: when the outlier Hessian submatrix `H_o` is so
+//! rank-deficient that even jittered Cholesky is distasteful, ODLRI can
+//! whiten through `H_o = V diag(λ) V^T` with the PSD square root
+//! `S_o = V diag(√λ₊)`. Also used by tests to cross-check the SVD.
+
+use crate::tensor::Matrix;
+
+/// Eigendecomposition of a symmetric matrix: A = V diag(vals) V^T,
+/// eigenvalues sorted descending. Only the lower triangle of `a` is read.
+pub fn eigh(a: &Matrix) -> (Vec<f32>, Matrix) {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "eigh needs a square matrix");
+    // f64 working copy for stability.
+    let mut w = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            // Symmetrize from the lower triangle.
+            let v = if i >= j { a.at(i, j) } else { a.at(j, i) };
+            w[i * n + j] = v as f64;
+        }
+    }
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 100;
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += w[i * n + j] * w[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = w[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = w[p * n + p];
+                let aqq = w[q * n + q];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // Update rows/cols p and q of W (symmetric rotation).
+                for k in 0..n {
+                    let wkp = w[k * n + p];
+                    let wkq = w[k * n + q];
+                    w[k * n + p] = c * wkp - s * wkq;
+                    w[k * n + q] = s * wkp + c * wkq;
+                }
+                for k in 0..n {
+                    let wpk = w[p * n + k];
+                    let wqk = w[q * n + k];
+                    w[p * n + k] = c * wpk - s * wqk;
+                    w[q * n + k] = s * wpk + c * wqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Sort by eigenvalue descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a_, &b_| {
+        w[b_ * n + b_]
+            .partial_cmp(&w[a_ * n + a_])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let vals: Vec<f32> = idx.iter().map(|&i| w[i * n + i] as f32).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (k, &j) in idx.iter().enumerate() {
+        for i in 0..n {
+            *vecs.at_mut(i, k) = v[i * n + j] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+/// PSD square-root factor S with A ≈ S S^T, clamping negative eigenvalues
+/// to zero. For full-rank PD matrices this matches Cholesky up to an
+/// orthogonal factor, which is all whitening needs.
+pub fn psd_sqrt(a: &Matrix) -> Matrix {
+    let (vals, vecs) = eigh(a);
+    let sq: Vec<f32> = vals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    vecs.mul_diag_right(&sq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_symmetric() {
+        let mut rng = Pcg64::new(50, 1);
+        for n in [1usize, 3, 10, 32] {
+            let b = Matrix::randn(n, n, 1.0, &mut rng);
+            let a = b.add(&b.transpose()).scale(0.5);
+            let (vals, vecs) = eigh(&a);
+            let rec = vecs.mul_diag_right(&vals).dot_t(&vecs);
+            assert!(rec.rel_err(&a) < 1e-3, "n={n} err={}", rec.rel_err(&a));
+            // Orthogonal eigenvectors.
+            assert!(vecs.tdot(&vecs).rel_err(&Matrix::eye(n)) < 1e-3);
+            // Descending eigenvalues.
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 3, 1.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, _) = eigh(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-5);
+        assert!((vals[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn psd_sqrt_squares_back() {
+        let mut rng = Pcg64::new(51, 1);
+        let b = Matrix::randn(12, 20, 1.0, &mut rng);
+        let a = b.dot_t(&b);
+        let s = psd_sqrt(&a);
+        assert!(s.dot_t(&s).rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn psd_sqrt_handles_rank_deficiency() {
+        // Rank-2 PSD in 5 dims.
+        let mut rng = Pcg64::new(52, 1);
+        let b = Matrix::randn(5, 2, 1.0, &mut rng);
+        let a = b.dot_t(&b);
+        let s = psd_sqrt(&a);
+        assert!(s.dot_t(&s).rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn eigvals_match_svd_singular_values_for_psd() {
+        let mut rng = Pcg64::new(53, 1);
+        let b = Matrix::randn(10, 14, 1.0, &mut rng);
+        let a = b.dot_t(&b);
+        let (vals, _) = eigh(&a);
+        let svd = crate::linalg::svd_jacobi(&a);
+        for (l, s) in vals.iter().zip(svd.s.iter()) {
+            assert!((l - s).abs() < 1e-2 * s.max(1.0), "λ={l} σ={s}");
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Dense linear algebra substrate (std-only, f32 with f64 accumulation
+//! where it matters).
+//!
+//! Everything the paper's algorithms need: Cholesky (for Hessian whitening
+//! and LDLQ), Householder QR (for randomized SVD and LPLR least squares),
+//! one-sided Jacobi SVD (exact, used for the truncated factorization in
+//! ODLRI and LRApprox), randomized subspace SVD (fast path for large
+//! matrices), and a symmetric eigendecomposition (whitening fallback when
+//! the outlier Hessian submatrix is rank-deficient).
+
+mod cholesky;
+mod eigh;
+mod qr;
+mod svd;
+
+pub use cholesky::{cholesky, cholesky_jittered, solve_lower, solve_lower_transpose, solve_upper, tri_inverse_lower};
+pub use eigh::{eigh, psd_sqrt};
+pub use qr::{householder_qr, thin_qr};
+pub use svd::{randomized_svd, svd_jacobi, truncated_svd, Svd};
+
+use crate::tensor::Matrix;
+
+/// Solve the least-squares problem min ‖A X - B‖_F via QR (A tall, full rank).
+/// A: (m x n) with m >= n, B: (m x k) → X: (n x k).
+pub fn lstsq(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, n) = a.shape();
+    assert!(m >= n, "lstsq requires a tall matrix");
+    let (q, r) = thin_qr(a);
+    // X = R^{-1} Q^T B
+    let qtb = q.tdot(b);
+    solve_upper(&r, &qtb)
+}
+
+/// Relative reconstruction check helper used across tests.
+pub fn recon_err(a: &Matrix, b: &Matrix) -> f32 {
+    a.rel_err(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut rng = Pcg64::new(10, 1);
+        let a = Matrix::randn(40, 12, 1.0, &mut rng);
+        let x_true = Matrix::randn(12, 3, 1.0, &mut rng);
+        let b = a.dot(&x_true);
+        let x = lstsq(&a, &b);
+        assert!(x.max_abs_diff(&x_true) < 1e-3, "err={}", x.max_abs_diff(&x_true));
+    }
+
+    #[test]
+    fn lstsq_minimizes_residual() {
+        // For noisy b, the residual must be orthogonal to the column space.
+        let mut rng = Pcg64::new(11, 1);
+        let a = Matrix::randn(30, 8, 1.0, &mut rng);
+        let b = Matrix::randn(30, 2, 1.0, &mut rng);
+        let x = lstsq(&a, &b);
+        let resid = b.sub(&a.dot(&x));
+        let at_r = a.tdot(&resid);
+        assert!(at_r.abs_max() < 1e-3, "A^T r = {}", at_r.abs_max());
+    }
+}

@@ -1,0 +1,138 @@
+//! Householder QR factorization.
+//!
+//! Used by the randomized SVD (orthonormalizing sketches) and by the
+//! least-squares solves inside LPLR. Numerically robust (Householder, not
+//! Gram–Schmidt) with f64 accumulation in the reflector applications.
+
+use crate::tensor::Matrix;
+
+/// Full Householder QR. Returns (Q, R) with Q: (m x m) orthogonal and
+/// R: (m x n) upper-triangular (trapezoidal when m > n).
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    let mut r = a.clone();
+    let mut q = Matrix::eye(m);
+    let steps = n.min(m.saturating_sub(1));
+    let mut v = vec![0f32; m];
+    for k in 0..steps {
+        // Build the Householder vector for column k below the diagonal.
+        let mut norm2 = 0f64;
+        for i in k..m {
+            let x = r.at(i, k) as f64;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-30 {
+            continue;
+        }
+        let akk = r.at(k, k) as f64;
+        let alpha = if akk >= 0.0 { -norm } else { norm };
+        let mut vnorm2 = 0f64;
+        for i in k..m {
+            let vi = if i == k {
+                r.at(i, k) as f64 - alpha
+            } else {
+                r.at(i, k) as f64
+            };
+            v[i] = vi as f32;
+            vnorm2 += vi * vi;
+        }
+        if vnorm2 < 1e-30 {
+            continue;
+        }
+        let beta = 2.0 / vnorm2;
+        // R ← (I - beta v v^T) R
+        for j in k..n {
+            let mut dot = 0f64;
+            for i in k..m {
+                dot += v[i] as f64 * r.at(i, j) as f64;
+            }
+            let s = (beta * dot) as f32;
+            for i in k..m {
+                *r.at_mut(i, j) -= s * v[i];
+            }
+        }
+        // Q ← Q (I - beta v v^T)
+        for i in 0..m {
+            let mut dot = 0f64;
+            for j in k..m {
+                dot += q.at(i, j) as f64 * v[j] as f64;
+            }
+            let s = (beta * dot) as f32;
+            for j in k..m {
+                *q.at_mut(i, j) -= s * v[j];
+            }
+        }
+    }
+    // Zero out the strictly-lower part of R (numerical dust).
+    for i in 1..m {
+        for j in 0..i.min(n) {
+            *r.at_mut(i, j) = 0.0;
+        }
+    }
+    (q, r)
+}
+
+/// Thin QR for a tall matrix: Q (m x n) with orthonormal columns, R (n x n).
+pub fn thin_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = a.shape();
+    assert!(m >= n, "thin_qr requires m >= n, got {m}x{n}");
+    let (q, r) = householder_qr(a);
+    (q.slice(0, m, 0, n), r.slice(0, n, 0, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Pcg64::new(30, 1);
+        for &(m, n) in &[(5usize, 5usize), (10, 4), (4, 7), (1, 1), (30, 30)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (q, r) = householder_qr(&a);
+            assert!(q.dot(&r).rel_err(&a) < 1e-4, "{m}x{n}");
+            // Q orthogonal.
+            let qtq = q.tdot(&q);
+            assert!(qtq.rel_err(&Matrix::eye(m)) < 1e-4, "{m}x{n} Q not orth");
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::new(31, 1);
+        let a = Matrix::randn(8, 6, 1.0, &mut rng);
+        let (_, r) = householder_qr(&a);
+        for i in 0..8 {
+            for j in 0..6.min(i) {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn thin_qr_columns_orthonormal() {
+        let mut rng = Pcg64::new(32, 1);
+        let a = Matrix::randn(50, 12, 1.0, &mut rng);
+        let (q, r) = thin_qr(&a);
+        assert_eq!(q.shape(), (50, 12));
+        assert_eq!(r.shape(), (12, 12));
+        assert!(q.tdot(&q).rel_err(&Matrix::eye(12)) < 1e-4);
+        assert!(q.dot(&r).rel_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // Two identical columns.
+        let mut rng = Pcg64::new(33, 1);
+        let c = Matrix::randn(10, 1, 1.0, &mut rng);
+        let mut a = Matrix::zeros(10, 2);
+        for i in 0..10 {
+            *a.at_mut(i, 0) = c.at(i, 0);
+            *a.at_mut(i, 1) = c.at(i, 0);
+        }
+        let (q, r) = householder_qr(&a);
+        assert!(q.dot(&r).rel_err(&a) < 1e-4);
+    }
+}

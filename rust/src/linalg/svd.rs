@@ -1,0 +1,305 @@
+//! Singular value decomposition.
+//!
+//! Two engines:
+//! * [`svd_jacobi`] — one-sided Jacobi rotation SVD. Exact (to f32 round-off),
+//!   O(m n² · sweeps); the workhorse for the ≤512-dim matrices of the tiny
+//!   model families and for the r×r cores of the randomized path.
+//! * [`randomized_svd`] — Halko-style sketch + power iterations + small exact
+//!   SVD; used when only a rank-r truncation is needed and min(m,n) is large.
+//!
+//! [`truncated_svd`] picks the engine by problem size; decomposition code
+//! (ODLRI init, LRApprox, LPLR) always calls it.
+
+use super::qr::thin_qr;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// SVD result: A = U diag(s) V^T with U (m x k), s (k), V (n x k),
+/// singular values sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub v: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct U diag(s) V^T.
+    pub fn reconstruct(&self) -> Matrix {
+        let us = self.u.mul_diag_right(&self.s);
+        us.dot_t(&self.v)
+    }
+
+    /// Truncate to the top-r singular triplets.
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        Svd {
+            u: self.u.slice(0, self.u.rows(), 0, r),
+            s: self.s[..r].to_vec(),
+            v: self.v.slice(0, self.v.rows(), 0, r),
+        }
+    }
+
+    /// Split into (L, R) with the paper's symmetric-sqrt convention:
+    /// L = U √Σ, R = √Σ V^T  (App. B.1).
+    pub fn split_lr(&self) -> (Matrix, Matrix) {
+        let sq: Vec<f32> = self.s.iter().map(|&x| x.max(0.0).sqrt()).collect();
+        let l = self.u.mul_diag_right(&sq);
+        let r = self.v.mul_diag_right(&sq).transpose();
+        (l, r)
+    }
+}
+
+/// One-sided Jacobi SVD of A (any shape). Returns the full economy SVD with
+/// k = min(m, n) triplets.
+pub fn svd_jacobi(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // Factor the transpose and swap U/V.
+        let t = svd_jacobi(&a.transpose());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    let _ = (m, n);
+    jacobi_with_v(a)
+}
+
+/// Internal: one-sided Jacobi tracking V explicitly — rotate the columns of
+/// a working copy G until pairwise orthogonal while accumulating the same
+/// rotations into V; then σ_j = ‖g_j‖ and u_j = g_j/σ_j.
+fn jacobi_with_v(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    debug_assert!(m >= n);
+    let mut g = a.clone();
+    let mut v = Matrix::eye(n);
+    let max_sweeps = 60;
+    loop_sweeps(&mut g, &mut v, m, n, max_sweeps);
+    // Extract singular values and U.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| {
+            let mut s = 0f64;
+            for i in 0..m {
+                let x = g.at(i, j) as f64;
+                s += x * x;
+            }
+            s.sqrt()
+        })
+        .collect();
+    idx.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vv = Matrix::zeros(n, n);
+    let mut s = vec![0f32; n];
+    for (k, &j) in idx.iter().enumerate() {
+        let nj = norms[j];
+        s[k] = nj as f32;
+        if nj > 1e-20 {
+            for i in 0..m {
+                *u.at_mut(i, k) = (g.at(i, j) as f64 / nj) as f32;
+            }
+        } else {
+            // Null direction: leave a zero column (consumers treat s=0).
+            *u.at_mut(k.min(m - 1), k) = 1.0;
+        }
+        for i in 0..n {
+            *vv.at_mut(i, k) = v.at(i, j);
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+fn loop_sweeps(g: &mut Matrix, v: &mut Matrix, m: usize, n: usize, max_sweeps: usize) {
+    let eps = 1e-12f64;
+    for _ in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n {
+            for q in p + 1..n {
+                let (mut app, mut aqq, mut apq) = (0f64, 0f64, 0f64);
+                for i in 0..m {
+                    let gp = g.at(i, p) as f64;
+                    let gq = g.at(i, q) as f64;
+                    app += gp * gp;
+                    aqq += gq * gq;
+                    apq += gp * gq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                rotated = true;
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let gp = g.at(i, p) as f64;
+                    let gq = g.at(i, q) as f64;
+                    *g.at_mut(i, p) = (c * gp - s * gq) as f32;
+                    *g.at_mut(i, q) = (s * gp + c * gq) as f32;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p) as f64;
+                    let vq = v.at(i, q) as f64;
+                    *v.at_mut(i, p) = (c * vp - s * vq) as f32;
+                    *v.at_mut(i, q) = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+}
+
+/// Randomized truncated SVD (Halko–Martinsson–Tropp): rank-r approximation
+/// with `oversample` extra sketch columns and `power_iters` subspace
+/// iterations. Deterministic given `rng`.
+pub fn randomized_svd(
+    a: &Matrix,
+    rank: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Pcg64,
+) -> Svd {
+    let (m, n) = a.shape();
+    let k = (rank + oversample).min(n).min(m);
+    // Sketch: Y = A Ω, Ω ~ N(0,1)^{n x k}
+    let omega = Matrix::randn(n, k, 1.0, rng);
+    let mut y = a.dot(&omega);
+    // Power iterations with QR re-orthonormalization for spectral accuracy.
+    for _ in 0..power_iters {
+        let (q, _) = thin_qr(&y);
+        let z = a.tdot(&q); // (n x k)
+        let (qz, _) = thin_qr(&z);
+        y = a.dot(&qz);
+    }
+    let (q, _) = thin_qr(&y); // (m x k)
+    // B = Q^T A  (k x n), exact SVD of the small B.
+    let b = q.tdot(a);
+    let sb = svd_jacobi(&b);
+    let u = q.dot(&sb.u);
+    Svd {
+        u,
+        s: sb.s,
+        v: sb.v,
+    }
+    .truncate(rank)
+}
+
+/// Rank-r truncated SVD with automatic engine choice.
+pub fn truncated_svd(a: &Matrix, rank: usize, rng: &mut Pcg64) -> Svd {
+    let (m, n) = a.shape();
+    let k = m.min(n);
+    let rank = rank.min(k);
+    // Jacobi is O(k² · max(m,n) · sweeps); the randomized path costs a few
+    // rank-k matmuls. Heuristic crossover: use exact for small problems or
+    // when nearly full rank is requested.
+    if k <= 96 || rank * 3 >= k {
+        svd_jacobi(a).truncate(rank)
+    } else {
+        randomized_svd(a, rank, 8.min(k - rank), 2, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn planted_lowrank(m: usize, n: usize, r: usize, rng: &mut Pcg64) -> Matrix {
+        let l = Matrix::randn(m, r, 1.0, rng);
+        let rr = Matrix::randn(r, n, 1.0, rng);
+        l.dot(&rr)
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Pcg64::new(40, 1);
+        for &(m, n) in &[(6usize, 6usize), (20, 8), (8, 20), (1, 5), (33, 17)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let svd = svd_jacobi(&a);
+            assert!(
+                svd.reconstruct().rel_err(&a) < 1e-4,
+                "{m}x{n} err={}",
+                svd.reconstruct().rel_err(&a)
+            );
+            // Orthonormal factors.
+            let k = m.min(n);
+            assert!(svd.u.tdot(&svd.u).rel_err(&Matrix::eye(k)) < 1e-3);
+            assert!(svd.v.tdot(&svd.v).rel_err(&Matrix::eye(k)) < 1e-3);
+            // Descending singular values.
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_matches_known_values() {
+        // diag(3, 2, 1) embedded in a rotation-free matrix.
+        let a = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let svd = svd_jacobi(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncation_recovers_planted_rank() {
+        let mut rng = Pcg64::new(41, 1);
+        let a = planted_lowrank(40, 30, 5, &mut rng);
+        let svd = svd_jacobi(&a);
+        // Singular values beyond rank 5 are ~0.
+        assert!(svd.s[5] < 1e-3 * svd.s[0]);
+        let t = svd.truncate(5);
+        assert!(t.reconstruct().rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn randomized_matches_exact_on_lowrank() {
+        let mut rng = Pcg64::new(42, 1);
+        let a = planted_lowrank(120, 100, 10, &mut rng);
+        let mut rng2 = Pcg64::new(43, 1);
+        let rsvd = randomized_svd(&a, 10, 6, 2, &mut rng2);
+        assert!(rsvd.reconstruct().rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn randomized_close_on_decaying_spectrum() {
+        // Spectrum with geometric decay: randomized rank-8 ≈ exact rank-8.
+        let mut rng = Pcg64::new(44, 1);
+        let u = thin_qr(&Matrix::randn(80, 30, 1.0, &mut rng)).0;
+        let v = thin_qr(&Matrix::randn(60, 30, 1.0, &mut rng)).0;
+        let s: Vec<f32> = (0..30).map(|i| 0.7f32.powi(i as i32)).collect();
+        let a = u.mul_diag_right(&s).dot_t(&v);
+        let exact = svd_jacobi(&a).truncate(8).reconstruct();
+        let mut rng2 = Pcg64::new(45, 1);
+        let approx = randomized_svd(&a, 8, 8, 3, &mut rng2).reconstruct();
+        let e_exact = exact.rel_err(&a);
+        let e_approx = approx.rel_err(&a);
+        assert!(
+            e_approx < e_exact * 1.2 + 1e-4,
+            "exact={e_exact} approx={e_approx}"
+        );
+    }
+
+    #[test]
+    fn split_lr_multiplies_back() {
+        let mut rng = Pcg64::new(46, 1);
+        let a = planted_lowrank(25, 35, 6, &mut rng);
+        let svd = truncated_svd(&a, 6, &mut rng);
+        let (l, r) = svd.split_lr();
+        assert_eq!(l.shape(), (25, 6));
+        assert_eq!(r.shape(), (6, 35));
+        assert!(l.dot(&r).rel_err(&a) < 1e-3);
+    }
+
+    #[test]
+    fn zero_matrix_svd() {
+        let a = Matrix::zeros(5, 4);
+        let svd = svd_jacobi(&a);
+        assert!(svd.s.iter().all(|&s| s == 0.0));
+        assert!(svd.reconstruct().frob_norm() == 0.0);
+    }
+}

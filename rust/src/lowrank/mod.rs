@@ -1,0 +1,297 @@
+//! Low-rank approximation: plain truncated SVD, activation-aware whitened
+//! SVD (the `LRApprox` step of Algorithm 1), and the LPLR low-precision
+//! factorization (Saha et al. 2023) used when `L`, `R` are quantized to
+//! 4-bit (paper §4.1: 10 inner iterations).
+
+use crate::linalg::{cholesky_jittered, solve_lower_transpose, truncated_svd};
+use crate::quant::{Quantizer, UniformQuantizer};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// A rank-r factor pair `A ≈ L R` with L (m×r), R (r×n).
+#[derive(Clone, Debug)]
+pub struct LrPair {
+    pub l: Matrix,
+    pub r: Matrix,
+}
+
+impl LrPair {
+    pub fn zeros(m: usize, n: usize, rank: usize) -> LrPair {
+        LrPair {
+            l: Matrix::zeros(m, rank),
+            r: Matrix::zeros(rank, n),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+
+    pub fn product(&self) -> Matrix {
+        self.l.dot(&self.r)
+    }
+
+    /// ‖L R X‖_F without materializing LR (two skinny products).
+    pub fn act_norm(&self, x: &Matrix) -> f32 {
+        self.l.dot(&self.r.dot(x)).frob_norm()
+    }
+}
+
+/// Configuration for the LRApprox step.
+#[derive(Clone, Debug)]
+pub struct LowRankConfig {
+    pub rank: usize,
+    /// 16 = keep factors in full precision; < 16 quantizes both factors
+    /// (uniform, per-row groups) via LPLR alternation.
+    pub lr_bits: u32,
+    /// LPLR inner iterations (paper default 10 when lr_bits = 4).
+    pub lplr_iters: usize,
+    /// Hessian regularization λ.
+    pub reg: f32,
+}
+
+impl Default for LowRankConfig {
+    fn default() -> Self {
+        LowRankConfig {
+            rank: 64,
+            lr_bits: 16,
+            lplr_iters: 10,
+            reg: 1e-4,
+        }
+    }
+}
+
+/// Plain (activation-agnostic) truncated-SVD factorization.
+pub fn svd_lr(a: &Matrix, rank: usize, rng: &mut Pcg64) -> LrPair {
+    let svd = truncated_svd(a, rank, rng);
+    let (l, r) = svd.split_lr();
+    LrPair { l, r }
+}
+
+/// Activation-aware whitened SVD (SVD-LLM-style):
+/// minimize ‖(A − LR) S‖_F with H = S Sᵀ ⇒ SVD(A S) truncated to r, then
+/// `L = U√Σ`, `R = √Σ Vᵀ S⁻¹`.
+///
+/// `h` must be the (already regularized) n×n Hessian.
+pub fn whitened_svd_lr(a: &Matrix, h: &Matrix, rank: usize, rng: &mut Pcg64) -> LrPair {
+    let (s, _lam) = cholesky_jittered(h, 1e-6).expect("whitening cholesky failed");
+    let b = a.dot(&s);
+    let svd = truncated_svd(&b, rank, rng);
+    let (l, rt) = svd.split_lr(); // rt = √Σ Vᵀ, shape (r × n)
+    // R = rt S⁻¹ ⇔ R Sᵀ... careful: solve R S = rt for R: Sᵀ Rᵀ = rtᵀ.
+    let r_t = solve_lower_transpose(&s, &rt.transpose()); // (n × r)
+    LrPair {
+        l,
+        r: r_t.transpose(),
+    }
+}
+
+/// The `LRApprox` step of Algorithm 1: whitened SVD, then (optionally) LPLR
+/// alternation with quantized factors.
+pub fn lr_approx(a: &Matrix, h: &Matrix, cfg: &LowRankConfig, rng: &mut Pcg64) -> LrPair {
+    let init = whitened_svd_lr(a, h, cfg.rank, rng);
+    if cfg.lr_bits >= 16 {
+        return init;
+    }
+    lplr(a, h, init, cfg)
+}
+
+/// LPLR: alternate between quantizing one factor and re-solving the other
+/// against the activation-aware objective, keeping the best iterate.
+///
+/// Fix L (quantized): minimize ‖(A − L R) S‖ over R ⇒ with B = A S and
+/// R̃ = R S, R̃* = argmin ‖B − L R̃‖ = lstsq(L, B), R = R̃ S⁻¹.
+/// Fix R (quantized): L* = A H Rᵀ (R H Rᵀ)⁻¹.
+pub fn lplr(a: &Matrix, h: &Matrix, init: LrPair, cfg: &LowRankConfig) -> LrPair {
+    // Group-32 scales: the paper's 4-bit factors go through QuIP#-grade
+    // quantizers; coarser scales (per-row or per-direction) measurably
+    // flip the Q-vs-LR error balance at this matrix scale (see
+    // EXPERIMENTS.md §Deviations for the ablation).
+    let quant = UniformQuantizer::new(cfg.lr_bits, 32);
+    let quant_l = |l: &Matrix| quant.quantize(l).deq;
+    let quant_r = |r: &Matrix| quant.quantize(r).deq;
+    let (s, _lam) = cholesky_jittered(h, 1e-6).expect("lplr cholesky failed");
+    let objective = |p: &LrPair| -> f64 {
+        let resid = a.sub(&p.product());
+        let e = resid.dot(&s).frob_norm() as f64;
+        e * e
+    };
+
+    let mut l = quant_l(&init.l);
+    let mut r = init.r.clone();
+    let mut best = LrPair {
+        l: l.clone(),
+        r: quant_r(&r),
+    };
+    let mut best_err = objective(&best);
+
+    for _ in 0..cfg.lplr_iters.max(1) {
+        // R-step: R = lstsq(L, A S) S⁻¹, then quantize.
+        let b = a.dot(&s);
+        let rt = if l.frob_norm() > 0.0 {
+            crate::linalg::lstsq(&l, &b) // (r × n) in whitened coords
+        } else {
+            Matrix::zeros(l.cols(), b.cols())
+        };
+        let r_unwhite = solve_lower_transpose(&s, &rt.transpose()).transpose();
+        r = quant_r(&r_unwhite);
+
+        // L-step: L = A H Rᵀ (R H Rᵀ)⁻¹, then quantize.
+        let rh = r.dot(h); // (r × n)
+        let rhr = rh.dot_t(&r); // (r × r), SPD-ish
+        let ahr = a.dot_t(&rh); // (m × r)
+        let l_new = match cholesky_jittered(&rhr, 1e-6) {
+            Ok((c, _)) => {
+                // Solve (R H Rᵀ) Xᵀ = (A H Rᵀ)ᵀ  ⇒ L = Xᵀ... we need
+                // L (RHRᵀ) = AHRᵀ ⇒ (RHRᵀ) Lᵀ = (AHRᵀ)ᵀ.
+                let y = crate::linalg::solve_lower(&c, &ahr.transpose());
+                solve_lower_transpose(&c, &y).transpose()
+            }
+            Err(_) => l.clone(),
+        };
+        l = quant_l(&l_new);
+
+        let cand = LrPair {
+            l: l.clone(),
+            r: r.clone(),
+        };
+        let err = objective(&cand);
+        if err < best_err {
+            best_err = err;
+            best = cand;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    fn act_err(a: &Matrix, p: &LrPair, x: &Matrix) -> f32 {
+        a.sub(&p.product()).dot(x).frob_norm()
+    }
+
+    #[test]
+    fn svd_lr_recovers_planted() {
+        testing::quick("svd-lr-planted", |rng| {
+            let m = testing::gen_dim(rng, 8, 32);
+            let n = testing::gen_dim(rng, 8, 32);
+            let r = testing::gen_dim(rng, 1, 4);
+            let a = testing::gen_lowrank_plus_noise(rng, m, n, r, 0.0);
+            let p = svd_lr(&a, r, rng);
+            assert!(p.product().rel_err(&a) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn whitened_beats_plain_on_skewed_activations() {
+        // When activations have dominant channels, the activation-aware
+        // factorization must achieve lower ‖(A−LR)X‖ than plain SVD.
+        let mut wins = 0;
+        let trials = 20;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(150, t + 1);
+            let m = 24;
+            let n = 32;
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let (x, _) = testing::gen_outlier_acts(&mut rng, n, 64, 3);
+            let h = x.dot_t(&x);
+            let plain = svd_lr(&a, 4, &mut rng);
+            let aware = whitened_svd_lr(&a, &h, 4, &mut rng);
+            if act_err(&a, &aware, &x) < act_err(&a, &plain, &x) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 18, "aware won only {wins}/{trials}");
+    }
+
+    #[test]
+    fn whitened_svd_optimal_vs_random_perturbation() {
+        // Local optimality: perturbing the solution increases the objective.
+        let mut rng = Pcg64::new(151, 1);
+        let a = Matrix::randn(16, 20, 1.0, &mut rng);
+        let x = Matrix::randn(20, 50, 1.0, &mut rng);
+        let h = x.dot_t(&x);
+        let p = whitened_svd_lr(&a, &h, 5, &mut rng);
+        let base = act_err(&a, &p, &x);
+        for _ in 0..5 {
+            let dl = Matrix::randn(16, 5, 0.05, &mut rng);
+            let perturbed = LrPair {
+                l: p.l.add(&dl),
+                r: p.r.clone(),
+            };
+            assert!(act_err(&a, &perturbed, &x) >= base - 1e-3);
+        }
+    }
+
+    #[test]
+    fn lplr_improves_over_naive_factor_quantization() {
+        let mut wins = 0;
+        let trials = 15;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(152, t + 1);
+            let a = testing::gen_lowrank_plus_noise(&mut rng, 24, 32, 8, 0.3);
+            let x = Matrix::randn(32, 64, 1.0, &mut rng);
+            let h = x.dot_t(&x);
+            let cfg = LowRankConfig {
+                rank: 8,
+                lr_bits: 4,
+                lplr_iters: 10,
+                reg: 1e-4,
+            };
+            // Naive: whitened SVD then quantize both factors once.
+            let init = whitened_svd_lr(&a, &h, 8, &mut rng);
+            let qz = UniformQuantizer::new(4, usize::MAX);
+            let naive = LrPair {
+                l: qz.quantize(&init.l).deq,
+                r: qz.quantize(&init.r).deq,
+            };
+            let tuned = lplr(&a, &h, init, &cfg);
+            if act_err(&a, &tuned, &x) <= act_err(&a, &naive, &x) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 13, "LPLR won only {wins}/{trials}");
+    }
+
+    #[test]
+    fn lr_approx_16bit_matches_whitened_svd() {
+        let mut rng = Pcg64::new(153, 1);
+        let a = Matrix::randn(12, 16, 1.0, &mut rng);
+        let h = testing::gen_spd(&mut rng, 16);
+        let cfg = LowRankConfig {
+            rank: 4,
+            lr_bits: 16,
+            ..Default::default()
+        };
+        let mut rng2 = Pcg64::new(153, 1);
+        let p = lr_approx(&a, &h, &cfg, &mut rng);
+        let q = whitened_svd_lr(&a, &h, 4, &mut rng2);
+        assert!(p.product().max_abs_diff(&q.product()) < 1e-5);
+    }
+
+    #[test]
+    fn rank_zero_factors_are_empty() {
+        let p = LrPair::zeros(8, 10, 0);
+        assert_eq!(p.rank(), 0);
+        assert_eq!(p.product(), Matrix::zeros(8, 10));
+    }
+
+    #[test]
+    fn higher_rank_lower_error() {
+        let mut rng = Pcg64::new(154, 1);
+        let a = Matrix::randn(32, 40, 1.0, &mut rng);
+        let h = testing::gen_spd(&mut rng, 40);
+        let x_eval = Matrix::randn(40, 60, 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for rank in [2usize, 8, 24] {
+            let p = whitened_svd_lr(&a, &h, rank, &mut rng);
+            let e = act_err(&a, &p, &x_eval);
+            assert!(e < last, "rank={rank}: {e} !< {last}");
+            last = e;
+        }
+    }
+}

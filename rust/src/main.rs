@@ -1,0 +1,358 @@
+//! `odlri` — leader binary: train / calibrate / compress / eval / exp.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use odlri::cli::{Args, HELP};
+use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::corpus;
+use odlri::eval;
+use odlri::exp;
+use odlri::model::{inject_outliers, ModelParams};
+use odlri::runtime::XlaRuntime;
+use odlri::train::{train, TrainConfig};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    let dir = args.str("artifacts", "");
+    if dir.is_empty() {
+        odlri::runtime::default_artifact_dir()
+    } else {
+        PathBuf::from(dir)
+    }
+}
+
+fn open_runtime(args: &Args) -> Result<XlaRuntime> {
+    XlaRuntime::open(&artifacts_dir(args))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "artifacts" => {
+            let rt = open_runtime(args)?;
+            for name in rt.artifact_names() {
+                let spec = rt.manifest.artifact(&name).unwrap();
+                println!(
+                    "{name:<24} {:>3} inputs {:>3} outputs  ({})",
+                    spec.inputs.len(),
+                    spec.outputs.len(),
+                    spec.file
+                );
+            }
+            Ok(())
+        }
+        "train" => cmd_train(args),
+        "calibrate" => cmd_calibrate(args),
+        "compress" => cmd_compress(args),
+        "eval" => cmd_eval(args),
+        "pipeline" => cmd_pipeline(args),
+        "exp" => {
+            let id = args.positional_at(0, "experiment id")?.to_string();
+            exp::run(&id, args)
+        }
+        "serve-bench" => cmd_serve_bench(args),
+        other => bail!("unknown command '{other}'; try `odlri help`"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let cfg = TrainConfig {
+        family: family.clone(),
+        steps: args.usize("steps", 300)?,
+        corpus_tokens: args.usize("corpus-tokens", 400_000)?,
+        seed: args.u64("seed", 0)?,
+        log_every: args.usize("log-every", 25)?,
+    };
+    let out_dir = PathBuf::from(args.str("out", "runs"));
+    std::fs::create_dir_all(&out_dir)?;
+    let result = train(&rt, &cfg)?;
+    let mut params = result.params;
+    let boosts = args.usize("outliers", 4)?;
+    if boosts > 0 {
+        let planted = inject_outliers(&mut params, boosts, 16.0, cfg.seed)?;
+        eprintln!(
+            "  injected {} outlier channels per norm (function-preserving)",
+            planted.first().map(|(_, c)| c.len()).unwrap_or(0)
+        );
+    }
+    let path = out_dir.join(format!("{family}.odw"));
+    params.save(&path)?;
+    println!(
+        "trained {family}: {} params, final loss {:.4} → {}",
+        params.param_count(),
+        result.losses.last().map(|&(_, l)| l).unwrap_or(f32::NAN),
+        path.display()
+    );
+    Ok(())
+}
+
+fn load_model(rt: &XlaRuntime, args: &Args, family: &str) -> Result<ModelParams> {
+    let fam = rt.manifest.family(family)?;
+    let weights = args.str("weights", &format!("runs/{family}.odw"));
+    ModelParams::load(fam, &PathBuf::from(weights))
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let params = load_model(&rt, args, &family)?;
+    let cfg = odlri::calib::CalibConfig {
+        batches: args.usize("batches", 8)?,
+        seed: args.u64("seed", 0)?,
+    };
+    let hessians = odlri::calib::calibrate(&rt, &params, &cfg)?;
+    let out = PathBuf::from(args.str("out", &format!("runs/{family}.hess")));
+    save_hessians(&hessians, &out)?;
+    println!("calibrated {} matrices → {}", hessians.len(), out.display());
+    Ok(())
+}
+
+pub fn save_hessians(
+    hessians: &std::collections::BTreeMap<String, odlri::hessian::Hessian>,
+    path: &std::path::Path,
+) -> Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&(hessians.len() as u32).to_le_bytes())?;
+    for (name, h) in hessians {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        h.write_to(&mut f)?;
+    }
+    Ok(())
+}
+
+fn load_hessians(
+    path: &std::path::Path,
+) -> Result<std::collections::BTreeMap<String, odlri::hessian::Hessian>> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path)?;
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let count = u32::from_le_bytes(b4) as usize;
+    let mut out = std::collections::BTreeMap::new();
+    for _ in 0..count {
+        f.read_exact(&mut b4)?;
+        let nlen = u32::from_le_bytes(b4) as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        out.insert(name, odlri::hessian::Hessian::read_from(&mut f)?);
+    }
+    Ok(out)
+}
+
+fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
+    let init = match args.str("init", "odlri").as_str() {
+        "odlri" => InitKind::Odlri,
+        "caldera" | "zero" => InitKind::Caldera,
+        "lr-first" | "lrapprox" => InitKind::LrFirst,
+        other => {
+            if let Some(k) = other.strip_prefix("odlri-k") {
+                InitKind::OdlriK(k.parse()?)
+            } else {
+                bail!("unknown --init '{other}'")
+            }
+        }
+    };
+    let workers = {
+        let w = args.usize("workers", 0)?;
+        if w == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            w
+        }
+    };
+    Ok(PipelineConfig {
+        init,
+        rank: args.usize("rank", 64)?,
+        lr_bits: args.usize("lr-bits", 4)? as u32,
+        q_scheme: args.str("scheme", "e8"),
+        q_bits: args.usize("bits", 2)? as u32,
+        q_group: args.usize("group", 64)?,
+        outer_iters: args.usize("iters", 15)?,
+        lplr_iters: args.usize("lplr-iters", 10)?,
+        hadamard: !args.switch("no-hadamard"),
+        workers,
+        seed: args.u64("seed", 0)?,
+        verbose: args.switch("verbose"),
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let params = load_model(&rt, args, &family)?;
+    let hessians = load_hessians(&PathBuf::from(
+        args.str("hessians", &format!("runs/{family}.hess")),
+    ))?;
+    let cfg = pipeline_config(args)?;
+    let pipe = CompressionPipeline::new(cfg.clone());
+    let out = pipe.run(&params, &hessians)?;
+    println!(
+        "compressed {family} [{}] rank={} lr_bits={}: avg_bits={:.3} mean_err={:.4e} in {:.1}s",
+        cfg.init.name(),
+        cfg.rank,
+        cfg.lr_bits,
+        out.model.avg_bits(),
+        out.model.mean_act_err(),
+        out.wall_secs
+    );
+    // Save the reconstructed weights for `eval`.
+    let applied = out.model.apply_to(&params)?;
+    let path = PathBuf::from(args.str(
+        "out",
+        &format!("runs/{family}.{}.r{}.odw", cfg.init.name(), cfg.rank),
+    ));
+    applied.save(&path)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let params = load_model(&rt, args, &family)?;
+    let report = eval::evaluate(
+        &rt,
+        &params,
+        args.usize("windows", 40)?,
+        args.usize("task-items", 64)?,
+        args.u64("seed", 1000)?,
+    )?;
+    println!("ppl wiki-sim = {:.4}", report.ppl_wiki);
+    println!("ppl c4-sim   = {:.4}", report.ppl_c4);
+    for t in &report.tasks {
+        println!("{:<10} acc = {:.2}%", t.task.name(), t.accuracy * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    // train → inject outliers → calibrate → compress (CALDERA vs +ODLRI) →
+    // eval, printing a mini Table-2 row pair.
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let steps = args.usize("steps", 300)?;
+    let seed = args.u64("seed", 0)?;
+
+    eprintln!("[1/5] training {family} for {steps} steps…");
+    let tr = train(
+        &rt,
+        &TrainConfig {
+            family: family.clone(),
+            steps,
+            seed,
+            ..Default::default()
+        },
+    )?;
+    let mut params = tr.params;
+    inject_outliers(&mut params, 4, 16.0, seed)?;
+
+    eprintln!("[2/5] calibrating…");
+    let hessians = odlri::calib::calibrate(
+        &rt,
+        &params,
+        &odlri::calib::CalibConfig { batches: 6, seed },
+    )?;
+
+    eprintln!("[3/5] evaluating FP32 baseline…");
+    let base = eval::evaluate(&rt, &params, 30, 48, 1000)?;
+
+    let mut cfg = pipeline_config(args)?;
+    let mut rows = Vec::new();
+    for init in [InitKind::Caldera, InitKind::Odlri] {
+        eprintln!("[4/5] compressing with {}…", init.name());
+        cfg.init = init.clone();
+        let out = CompressionPipeline::new(cfg.clone()).run(&params, &hessians)?;
+        let applied = out.model.apply_to(&params)?;
+        let rep = eval::evaluate(&rt, &applied, 30, 48, 1000)?;
+        rows.push((init.name(), out.model.avg_bits(), rep));
+    }
+
+    eprintln!("[5/5] report");
+    println!(
+        "\n== {family} (rank {}, {} iters) ==",
+        cfg.rank, cfg.outer_iters
+    );
+    let fmt_tasks = |rep: &eval::EvalReport| {
+        rep.tasks
+            .iter()
+            .map(|t| format!("{:.1}", t.accuracy * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    println!(
+        "{:<10} {:>8} {:>9} {:>9}  {}",
+        "method", "avg-bits", "ppl-wiki", "ppl-c4", "task acc (wino rte piqa arce arcc)"
+    );
+    println!(
+        "{:<10} {:>8} {:>9.3} {:>9.3}  {}",
+        "fp32", "32", base.ppl_wiki, base.ppl_c4, fmt_tasks(&base)
+    );
+    for (name, bits, rep) in &rows {
+        println!(
+            "{:<10} {:>8.2} {:>9.3} {:>9.3}  {}",
+            name,
+            bits,
+            rep.ppl_wiki,
+            rep.ppl_c4,
+            fmt_tasks(rep)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let params = load_model(&rt, args, &family)?;
+    let requests = args.usize("requests", 32)?;
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let data = corpus::generate(corpus::Split::C4Sim, 100_000, 3);
+    let mut rng = odlri::util::rng::Pcg64::new(9, 9);
+    rt.warm(&format!("fwd_{family}"))?;
+    let t0 = std::time::Instant::now();
+    let mut lat = Vec::new();
+    for _ in 0..requests {
+        let toks = corpus::sample_batch(&data, batch, seq, &mut rng);
+        let t = std::time::Instant::now();
+        let mut inputs = params.values.clone();
+        inputs.push(odlri::runtime::Value::from_vec_i32(vec![batch, seq], toks));
+        rt.exec(&format!("fwd_{family}"), &inputs)?;
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let toks_per_req = (batch * seq) as f64;
+    println!(
+        "{requests} batched fwd requests: p50={:.1} ms  p95={:.1} ms  throughput={:.0} tok/s",
+        lat[lat.len() / 2] * 1e3,
+        lat[(lat.len() as f64 * 0.95) as usize % lat.len()] * 1e3,
+        requests as f64 * toks_per_req / total
+    );
+    Ok(())
+}

@@ -1,0 +1,398 @@
+//! Model parameter containers: flat parameter lists matching the AOT
+//! manifest layout, the function-preserving **outlier injection** transform
+//! (DESIGN.md §2), and the compressed-model container.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::decompose::avg_bits;
+use crate::lowrank::LrPair;
+use crate::runtime::{FamilySpec, Value};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Flat model parameters in manifest order (the exact layout every
+/// `fwd_*`/`train_*`/`capture_*` artifact expects).
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub family: FamilySpec,
+    pub values: Vec<Value>,
+}
+
+impl ModelParams {
+    /// Scaled-normal initialization (norm gains = 1), mirroring
+    /// `model.init_params` on the Python side.
+    pub fn init(family: &FamilySpec, seed: u64) -> ModelParams {
+        let mut rng = Pcg64::new(seed, 0x0D11);
+        let values = family
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if FamilySpec::is_norm(name) {
+                    Value::from_vec_f32(shape.clone(), vec![1.0; n])
+                } else {
+                    let fan_in = *shape.last().unwrap() as f32;
+                    let sigma = 1.0 / fan_in.sqrt();
+                    let mut data = vec![0f32; n];
+                    rng.fill_normal(&mut data, sigma);
+                    Value::from_vec_f32(shape.clone(), data)
+                }
+            })
+            .collect();
+        ModelParams {
+            family: family.clone(),
+            values,
+        }
+    }
+
+    pub fn get_matrix(&self, name: &str) -> Result<Matrix> {
+        let idx = self.family.param_index(name)?;
+        self.values[idx].to_matrix()
+    }
+
+    pub fn set_matrix(&mut self, name: &str, m: &Matrix) -> Result<()> {
+        let idx = self.family.param_index(name)?;
+        let shape = self.family.param_shape(name)?.to_vec();
+        let expect: usize = shape.iter().product();
+        if m.rows() * m.cols() != expect {
+            bail!("set_matrix('{name}'): size mismatch");
+        }
+        self.values[idx] = Value::from_vec_f32(shape, m.as_slice().to_vec());
+        Ok(())
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.values
+            .iter()
+            .map(|v| v.shape().iter().product::<usize>())
+            .sum()
+    }
+
+    /// Write to the `.odw` weight-store format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(b"ODW1")?;
+        f.write_all(&(self.values.len() as u32).to_le_bytes())?;
+        for ((name, shape), v) in self.family.params.iter().zip(&self.values) {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &x in v.f32_data()? {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from `.odw`, validating against the family layout.
+    pub fn load(family: &FamilySpec, path: &Path) -> Result<ModelParams> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ODW1" {
+            bail!("bad weight-store magic");
+        }
+        let mut b4 = [0u8; 4];
+        f.read_exact(&mut b4)?;
+        let count = u32::from_le_bytes(b4) as usize;
+        if count != family.params.len() {
+            bail!(
+                "weight store has {count} params, family {} wants {}",
+                family.name,
+                family.params.len()
+            );
+        }
+        let mut values = Vec::with_capacity(count);
+        for (name, shape) in &family.params {
+            f.read_exact(&mut b4)?;
+            let nlen = u32::from_le_bytes(b4) as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let got = String::from_utf8(nb)?;
+            if &got != name {
+                bail!("weight store order mismatch: got '{got}', want '{name}'");
+            }
+            f.read_exact(&mut b4)?;
+            let ndim = u32::from_le_bytes(b4) as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                f.read_exact(&mut b4)?;
+                dims.push(u32::from_le_bytes(b4) as usize);
+            }
+            if &dims != shape {
+                bail!("weight store shape mismatch for '{name}'");
+            }
+            let n: usize = dims.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            values.push(Value::from_vec_f32(dims, data));
+        }
+        Ok(ModelParams {
+            family: family.clone(),
+            values,
+        })
+    }
+}
+
+/// Function-preserving outlier injection (DESIGN.md §2).
+///
+/// LLMs at 7B+ develop a few activation channels with norms 10–100× the
+/// rest (SpQR, AWQ); our tiny trained models do not. This transform plants
+/// the same structure WITHOUT changing the network function: for each
+/// chosen channel `c` of a norm's gain vector, multiply `γ_c` by `boost`
+/// and divide column `c` of every weight matrix consuming that normed
+/// activation by `boost`. The products `W·x` are unchanged, but the
+/// consuming weights now have small-magnitude *salient* columns whose
+/// quantization error is amplified by outlier activations — exactly the
+/// phenomenon ODLRI targets.
+pub fn inject_outliers(
+    params: &mut ModelParams,
+    per_layer: usize,
+    boost: f32,
+    seed: u64,
+) -> Result<Vec<(String, Vec<usize>)>> {
+    let mut rng = Pcg64::new(seed, 0x0A11);
+    let n_layers = params.family.n_layers;
+    let d = params.family.d_model;
+    let mut planted = Vec::new();
+    for layer in 0..n_layers {
+        for (norm, consumers) in [
+            (format!("layer{layer}.ln1"), vec![
+                format!("layer{layer}.wq"),
+                format!("layer{layer}.wk"),
+                format!("layer{layer}.wv"),
+            ]),
+            (format!("layer{layer}.ln2"), vec![
+                format!("layer{layer}.wgate"),
+                format!("layer{layer}.wup"),
+            ]),
+        ] {
+            let channels = rng.sample_indices(d, per_layer.min(d));
+            // Scale the gain up…
+            let mut g = params.get_matrix(&norm)?;
+            for &c in &channels {
+                *g.at_mut(0, c) *= boost;
+            }
+            params.set_matrix(&norm, &g)?;
+            // …and the consuming columns down.
+            for w_name in &consumers {
+                let mut w = params.get_matrix(w_name)?;
+                for &c in &channels {
+                    w.scale_col(c, 1.0 / boost);
+                }
+                params.set_matrix(w_name, &w)?;
+            }
+            let mut sorted = channels.clone();
+            sorted.sort_unstable();
+            planted.push((norm, sorted));
+        }
+    }
+    Ok(planted)
+}
+
+/// A compressed projection: Ŵ = Q + L·R plus bookkeeping.
+#[derive(Clone, Debug)]
+pub struct CompressedMatrix {
+    pub q: Matrix,
+    pub lr: LrPair,
+    pub quant_scale: f32,
+    pub final_act_err: f64,
+}
+
+impl CompressedMatrix {
+    pub fn reconstruct(&self) -> Matrix {
+        self.q.add(&self.lr.product())
+    }
+}
+
+/// Whole-model compression result.
+#[derive(Clone, Debug)]
+pub struct CompressedModel {
+    pub family: FamilySpec,
+    pub matrices: BTreeMap<String, CompressedMatrix>,
+    pub rank: usize,
+    pub q_bits_overhead: f64,
+    pub lr_bits: u32,
+}
+
+impl CompressedModel {
+    /// Model parameters with every projection replaced by its
+    /// reconstruction (weight-only compression ⇒ numerically identical to
+    /// running the decomposed form).
+    pub fn apply_to(&self, base: &ModelParams) -> Result<ModelParams> {
+        let mut out = base.clone();
+        for (name, cm) in &self.matrices {
+            out.set_matrix(name, &cm.reconstruct())?;
+        }
+        Ok(out)
+    }
+
+    /// Paper-style average bits/weight over the compressed projections.
+    pub fn avg_bits(&self) -> f64 {
+        let mut weighted = 0.0;
+        let mut total = 0.0;
+        for (name, _) in &self.matrices {
+            let shape = self.family.param_shape(name).expect("projection shape");
+            let (m, n) = (shape[0], shape[1]);
+            let b = avg_bits(m, n, self.rank, self.q_bits_overhead, self.lr_bits);
+            weighted += b * (m * n) as f64;
+            total += (m * n) as f64;
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            weighted / total
+        }
+    }
+
+    /// Mean final activation-aware error across matrices.
+    pub fn mean_act_err(&self) -> f64 {
+        if self.matrices.is_empty() {
+            return 0.0;
+        }
+        self.matrices.values().map(|m| m.final_act_err).sum::<f64>()
+            / self.matrices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn toy_family() -> FamilySpec {
+        FamilySpec {
+            name: "toy".into(),
+            params: vec![
+                ("embed".into(), vec![32, 16]),
+                ("layer0.ln1".into(), vec![16]),
+                ("layer0.wq".into(), vec![16, 16]),
+                ("layer0.wk".into(), vec![16, 16]),
+                ("layer0.wv".into(), vec![16, 16]),
+                ("layer0.wo".into(), vec![16, 16]),
+                ("layer0.ln2".into(), vec![16]),
+                ("layer0.wgate".into(), vec![24, 16]),
+                ("layer0.wup".into(), vec![24, 16]),
+                ("layer0.wdown".into(), vec![16, 24]),
+                ("ln_f".into(), vec![16]),
+                ("unembed".into(), vec![32, 16]),
+            ],
+            projections: vec![
+                "layer0.wq".into(),
+                "layer0.wk".into(),
+                "layer0.wv".into(),
+                "layer0.wo".into(),
+                "layer0.wgate".into(),
+                "layer0.wup".into(),
+                "layer0.wdown".into(),
+            ],
+            vocab: 32,
+            d_model: 16,
+            n_layers: 1,
+            d_ff: 24,
+        }
+    }
+
+    #[test]
+    fn init_norms_are_ones() {
+        let fam = toy_family();
+        let p = ModelParams::init(&fam, 1);
+        let g = p.get_matrix("layer0.ln1").unwrap();
+        assert!(g.as_slice().iter().all(|&v| v == 1.0));
+        let w = p.get_matrix("layer0.wq").unwrap();
+        assert!(w.frob_norm() > 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let fam = toy_family();
+        let p = ModelParams::init(&fam, 2);
+        let dir = std::env::temp_dir().join("odlri_test_odw");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.odw");
+        p.save(&path).unwrap();
+        let q = ModelParams::load(&fam, &path).unwrap();
+        for (a, b) in p.values.iter().zip(&q.values) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn outlier_injection_preserves_product() {
+        // γ ⊙ x through W must be invariant: (boosted γ, shrunk W) gives
+        // the same W @ diag(γ) action.
+        let fam = toy_family();
+        let mut p = ModelParams::init(&fam, 3);
+        let g0 = p.get_matrix("layer0.ln1").unwrap();
+        let w0 = p.get_matrix("layer0.wq").unwrap();
+        let planted = inject_outliers(&mut p, 2, 16.0, 7).unwrap();
+        let g1 = p.get_matrix("layer0.ln1").unwrap();
+        let w1 = p.get_matrix("layer0.wq").unwrap();
+        // Function-preservation: W1 @ diag(g1) == W0 @ diag(g0).
+        let before = w0.mul_diag_right(g0.as_slice());
+        let after = w1.mul_diag_right(g1.as_slice());
+        assert!(after.rel_err(&before) < 1e-5);
+        // And outliers really exist now.
+        let (_, channels) = &planted[0];
+        assert_eq!(channels.len(), 2);
+        for &c in channels {
+            assert!(g1.at(0, c) > 8.0);
+        }
+    }
+
+    #[test]
+    fn compressed_model_applies_and_counts_bits() {
+        let fam = toy_family();
+        let base = ModelParams::init(&fam, 4);
+        let mut rng = Pcg64::new(5, 5);
+        let mut matrices = BTreeMap::new();
+        for name in &fam.projections {
+            let shape = fam.param_shape(name).unwrap();
+            let q = Matrix::randn(shape[0], shape[1], 0.1, &mut rng);
+            let lr = LrPair::zeros(shape[0], shape[1], 4);
+            matrices.insert(
+                name.clone(),
+                CompressedMatrix {
+                    q,
+                    lr,
+                    quant_scale: 0.1,
+                    final_act_err: 0.05,
+                },
+            );
+        }
+        let cm = CompressedModel {
+            family: fam.clone(),
+            matrices,
+            rank: 4,
+            q_bits_overhead: 2.0,
+            lr_bits: 4,
+        };
+        let applied = cm.apply_to(&base).unwrap();
+        // Projections changed, embed untouched.
+        assert_ne!(
+            applied.get_matrix("layer0.wq").unwrap(),
+            base.get_matrix("layer0.wq").unwrap()
+        );
+        assert_eq!(
+            applied.get_matrix("embed").unwrap(),
+            base.get_matrix("embed").unwrap()
+        );
+        let bits = cm.avg_bits();
+        assert!(bits > 2.0 && bits < 4.0, "bits={bits}");
+        assert!((cm.mean_act_err() - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,191 @@
+//! LDLQ / GPTQ error-feedback quantization.
+//!
+//! Quantizes the columns of `W` sequentially; after quantizing a column
+//! block, the rounding error is propagated into the not-yet-quantized
+//! columns through the Cholesky factor of the inverse Hessian, greedily
+//! minimizing the activation-aware error `tr((W−Q) H (W−Q)^T)`. This is the
+//! `Quantize` step CALDERA (and QuIP/OPTQ) use; the paper's Algorithm 1
+//! calls it at every outer iteration on `W − L_{t-1} R_{t-1}`.
+//!
+//! Derivation sketch (GPTQ form): with `H⁻¹ = Uᵀ U` (U upper-triangular),
+//! processing column k and distributing the error
+//! `e = (w_k − q_k)/U_kk` onto columns j>k as `w_j ← w_j − e·U_kj`
+//! keeps the objective's already-paid cost fixed and re-optimizes the rest.
+
+use crate::linalg::{cholesky_jittered, solve_lower, solve_lower_transpose};
+use crate::tensor::Matrix;
+
+/// Run blocked LDLQ. `round` maps a column block (m × b, already
+/// error-adjusted) plus its absolute column offset to its quantized
+/// (dequantized) values. `block` is the feedback granularity: error is
+/// propagated after each block of that many columns (1 = scalar GPTQ,
+/// 8 = E8 blocks).
+pub fn ldlq_quantize(
+    w: &Matrix,
+    h: &Matrix,
+    block: usize,
+    round: impl Fn(&Matrix, usize) -> Matrix,
+) -> Matrix {
+    let (m, n) = w.shape();
+    assert_eq!(h.shape(), (n, n), "Hessian must be n×n");
+    let block = block.max(1);
+
+    // U upper-triangular with H^{-1} = U^T U:
+    //   H = C Cᵀ  ⇒  H⁻¹ = C⁻ᵀ C⁻¹. We need an upper-tri V with
+    //   H⁻¹ = Vᵀ V... note C⁻¹ is lower-tri, so H⁻¹ = (C⁻¹)ᵀ (C⁻¹) with
+    //   (C⁻¹)ᵀ upper: take U = (C⁻¹)ᵀ? Then Uᵀ U = C⁻¹ C⁻ᵀ ≠ H⁻¹.
+    // The GPTQ recursion only needs, for each k, the row vector
+    //   u_k = H⁻¹[k, k:] / sqrt(H⁻¹[k, k])  restricted to the trailing
+    // submatrix of the *remaining* columns. The standard trick: U =
+    // chol_upper(H⁻¹) computed on the reversed index order, or simply the
+    // explicit recursion below, which we implement via one full inverse and
+    // an in-place trailing update (O(n³), fine at our sizes).
+    let (c, _lambda) = cholesky_jittered(h, 1e-4).expect("Hessian not factorizable");
+    // H^{-1} = C^{-T} C^{-1}: solve twice against the identity.
+    let hinv = {
+        let y = solve_lower(&c, &Matrix::eye(n));
+        solve_lower_transpose(&c, &y)
+    };
+
+    let mut work = w.clone(); // columns get error-adjusted in place
+    let mut q = Matrix::zeros(m, n);
+    let mut hinv = hinv; // trailing submatrix updated via Schur complement
+
+    let mut k = 0;
+    while k < n {
+        let b = block.min(n - k);
+        // Quantize the adjusted block.
+        let cols = work.slice(0, m, k, k + b);
+        let qcols = round(&cols, k);
+        for i in 0..m {
+            for j in 0..b {
+                *q.at_mut(i, k + j) = qcols.at(i, j);
+            }
+        }
+        if k + b >= n {
+            break;
+        }
+        // Error feedback: E = (cols − qcols) (m×b);
+        // W[:, k+b:] -= E @ inv(Hinv_bb) @ Hinv_b,rest
+        // where Hinv_bb is the b×b leading block of the current trailing
+        // inverse-Hessian. (For b=1 this reduces to the familiar
+        // e/U_kk · U_k,rest update.)
+        let e = cols.sub(&qcols);
+        let hbb = hinv.slice(k, k + b, k, k + b);
+        let hbr = hinv.slice(k, k + b, k + b, n);
+        // Solve Hbb X = Hbr (b×rest) via its Cholesky (Hinv is SPD, so is
+        // any principal block).
+        let (cb, _l) = cholesky_jittered(&hbb, 1e-8).expect("block not SPD");
+        let y = solve_lower(&cb, &hbr);
+        let x = solve_lower_transpose(&cb, &y); // b × rest
+        let upd = e.dot(&x); // m × rest
+        for i in 0..m {
+            for (j, &u) in upd.row(i).iter().enumerate() {
+                *work.at_mut(i, k + b + j) -= u;
+            }
+        }
+        // Schur-complement the trailing inverse Hessian:
+        // Hinv_rest ← Hinv_rr − Hinv_rb Hbb⁻¹ Hinv_br = Hrr − Xᵀ Hbr... note
+        // X = Hbb⁻¹ Hbr, so correction = Hbr^T X? (rest×b)(b×rest):
+        let corr = hbr.tdot(&x); // rest × rest
+        for i in 0..(n - k - b) {
+            for j in 0..(n - k - b) {
+                *hinv.at_mut(k + b + i, k + b + j) -= corr.at(i, j);
+            }
+        }
+        k += b;
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{hessian_error, Quantizer, UniformQuantizer};
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    /// With an identity Hessian, LDLQ degenerates to round-to-nearest.
+    #[test]
+    fn identity_hessian_is_rtn() {
+        let mut rng = Pcg64::new(110, 1);
+        let w = Matrix::randn(6, 10, 1.0, &mut rng);
+        let h = Matrix::eye(10);
+        let quant = UniformQuantizer::new(3, usize::MAX);
+        let prep = quant.prepare(&w);
+        let q = ldlq_quantize(&w, &h, 1, |c, c0| prep.round_columns(c, c0));
+        let rtn = quant.quantize(&w);
+        assert!(q.max_abs_diff(&rtn.deq) < 1e-5);
+    }
+
+    /// On a correlated Hessian LDLQ should strictly beat RTN most of the
+    /// time — check the aggregate over many trials.
+    #[test]
+    fn beats_rtn_on_correlated_hessian() {
+        let mut wins = 0;
+        let trials = 25;
+        for t in 0..trials {
+            let mut rng = Pcg64::new(111, t + 1);
+            let m = 8;
+            let n = 16;
+            let w = Matrix::randn(m, n, 1.0, &mut rng);
+            // Strongly correlated activations → informative Hessian.
+            let base = Matrix::randn(n, 4, 1.0, &mut rng);
+            let noise = Matrix::randn(n, n, 0.1, &mut rng);
+            let f = base.dot_t(&base).add(&noise.dot_t(&noise));
+            let quant = UniformQuantizer::new(2, usize::MAX);
+            let prep = quant.prepare(&w);
+            let q = ldlq_quantize(&w, &f, 1, |c, c0| prep.round_columns(c, c0));
+            let rtn = quant.quantize(&w);
+            let e_ldlq = hessian_error(&w, &q, &f);
+            let e_rtn = hessian_error(&w, &rtn.deq, &f);
+            if e_ldlq < e_rtn {
+                wins += 1;
+            }
+        }
+        assert!(wins * 10 >= trials * 8, "LDLQ won only {wins}/{trials}");
+    }
+
+    /// Blocked feedback (b=8) must beat RTN *in aggregate*. (Per-case it can
+    /// lose: the feedback adjustment can push values past the frozen scale
+    /// range and clip — the same clipping GPTQ exhibits — so we check the
+    /// mean over many problems plus a no-catastrophe bound per case.)
+    #[test]
+    fn blocked_feedback_sane() {
+        let mut sum_b = 0.0f64;
+        let mut sum_r = 0.0f64;
+        for t in 0..32u64 {
+            let mut rng = Pcg64::new(0xb10c, t + 1);
+            let m = testing::gen_dim(&mut rng, 4, 12);
+            let n = 8 * testing::gen_dim(&mut rng, 2, 4);
+            let w = testing::gen_matrix(&mut rng, m, n);
+            let h = testing::gen_spd(&mut rng, n);
+            let quant = UniformQuantizer::new(2, usize::MAX);
+            let prep = quant.prepare(&w);
+            let q = ldlq_quantize(&w, &h, 8, |c, c0| prep.round_columns(c, c0));
+            let rtn = quant.quantize(&w).deq;
+            let e_b = hessian_error(&w, &q, &h);
+            let e_r = hessian_error(&w, &rtn, &h);
+            assert!(e_b <= e_r * 4.0 + 1e-6, "catastrophic: {e_b:.3e} vs {e_r:.3e}");
+            // Normalize per-problem so no single case dominates the mean.
+            sum_b += e_b / e_r.max(1e-12);
+            sum_r += 1.0;
+        }
+        assert!(sum_b <= sum_r, "blocked LDLQ mean ratio {}", sum_b / sum_r);
+    }
+
+    /// Non-multiple block sizes and tiny matrices don't crash.
+    #[test]
+    fn edge_shapes() {
+        let mut rng = Pcg64::new(112, 1);
+        for &(m, n, b) in &[(1usize, 1usize, 1usize), (2, 3, 8), (5, 7, 3)] {
+            let w = Matrix::randn(m, n, 1.0, &mut rng);
+            let h = testing::gen_spd(&mut rng, n);
+            let quant = UniformQuantizer::new(2, usize::MAX);
+            let prep = quant.prepare(&w);
+            let q = ldlq_quantize(&w, &h, b, |c, c0| prep.round_columns(c, c0));
+            assert_eq!(q.shape(), (m, n));
+            assert!(q.is_finite());
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Quantizers: uniform b-bit (per-group scales), E8 lattice blocks
+//! (QuIP#-style 2-bit operating point), and MXINT shared-exponent blocks
+//! (Table 11 ablation), plus the LDLQ/GPTQ error-feedback wrapper used by
+//! the CALDERA `Quantize` step.
+//!
+//! Every quantizer reports the **quantization scale** it chose — the metric
+//! Figure 2 tracks across joint-optimization iterations (ODLRI shrinks it by
+//! absorbing salient weights into `LR` before quantization).
+
+mod e8;
+mod ldlq;
+mod mxint;
+mod packed;
+mod uniform;
+
+pub use e8::E8Lattice;
+pub use ldlq::ldlq_quantize;
+pub use mxint::MxInt;
+pub use packed::PackedMatrix;
+pub use uniform::UniformQuantizer;
+
+use crate::tensor::Matrix;
+
+/// Output of a (de)quantization pass.
+#[derive(Clone, Debug)]
+pub struct QuantOut {
+    /// Quantize-dequantized weights (same shape as the input).
+    pub deq: Matrix,
+    /// The scale statistic for Figure 2: per-matrix mean of the scales the
+    /// quantizer actually used (global scale for E8, mean row scale for
+    /// uniform, mean 2^e for MXINT).
+    pub scale: f32,
+}
+
+/// A weight quantizer. `quantize` is the direct (round-to-nearest) path;
+/// `quantize_with_hessian` runs the activation-aware LDLQ error-feedback
+/// path that CALDERA's `Quantize(W - LR)` step uses.
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Nominal bits per weight (excluding per-group scale overhead).
+    fn bits(&self) -> f64;
+
+    /// Bits per weight including scale/metadata overhead for a matrix of
+    /// the given shape (used for the paper's Avg-Bits bookkeeping).
+    fn bits_with_overhead(&self, rows: usize, cols: usize) -> f64;
+
+    /// Direct quantize-dequantize.
+    fn quantize(&self, w: &Matrix) -> QuantOut;
+
+    /// Activation-aware quantization with LDLQ error feedback against the
+    /// (regularized) Hessian `h` (shape n×n for W m×n). The default
+    /// implementation precomputes scales from `w`, then runs blocked LDLQ
+    /// with this quantizer's column-block rounding.
+    fn quantize_with_hessian(&self, w: &Matrix, h: &Matrix) -> QuantOut {
+        let prep = self.prepare(w);
+        let deq = ldlq_quantize(w, h, self.feedback_block(), |cols, c0| {
+            prep.round_columns(cols, c0)
+        });
+        QuantOut {
+            deq,
+            scale: prep.scale_metric(),
+        }
+    }
+
+    /// Precompute scales for `w`; the returned object rounds column blocks
+    /// under those fixed scales (LDLQ adjusts columns as it goes, so scales
+    /// must not chase the adjusted values).
+    fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a>;
+
+    /// Column-block width for LDLQ feedback (1 for scalar quantizers, 8 for
+    /// the E8 lattice, MXINT's block for MXINT).
+    fn feedback_block(&self) -> usize {
+        1
+    }
+}
+
+/// Scale-frozen rounding engine used inside LDLQ.
+pub trait Prepared: Send + Sync {
+    /// Quantize-dequantize a block of columns. `cols` is (m × b); `c0` is the
+    /// absolute column offset in the original matrix (for column-dependent
+    /// scale lookup).
+    fn round_columns(&self, cols: &Matrix, c0: usize) -> Matrix;
+
+    /// The Figure-2 scale statistic.
+    fn scale_metric(&self) -> f32;
+}
+
+/// Build a quantizer from a config string (`"e8"`, `"uniform"`, `"mxint"`).
+pub fn make_quantizer(scheme: &str, bits: u32, group: usize) -> anyhow::Result<Box<dyn Quantizer>> {
+    match scheme {
+        "uniform" => Ok(Box::new(UniformQuantizer::new(bits, group))),
+        "e8" => Ok(Box::new(E8Lattice::new(bits))),
+        "mxint" => Ok(Box::new(MxInt::new(bits, group.max(1)))),
+        other => anyhow::bail!("unknown quantizer scheme '{other}'"),
+    }
+}
+
+/// Activation-aware quantization error ‖(W − Q)X‖²_F expressed through the
+/// Hessian: tr((W−Q) H (W−Q)^T). Shared by tests and metrics.
+pub fn hessian_error(w: &Matrix, q: &Matrix, h: &Matrix) -> f64 {
+    let e = w.sub(q);
+    let eh = e.dot(h);
+    // tr(EH E^T) = sum_ij (EH)_ij * E_ij
+    eh.as_slice()
+        .iter()
+        .zip(e.as_slice())
+        .map(|(&a, &b)| a as f64 * b as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn make_quantizer_schemes() {
+        assert!(make_quantizer("uniform", 4, 64).is_ok());
+        assert!(make_quantizer("e8", 2, 8).is_ok());
+        assert!(make_quantizer("mxint", 3, 32).is_ok());
+        assert!(make_quantizer("nope", 2, 1).is_err());
+    }
+
+    #[test]
+    fn hessian_error_matches_direct() {
+        let mut rng = Pcg64::new(80, 1);
+        let w = Matrix::randn(8, 12, 1.0, &mut rng);
+        let q = Matrix::randn(8, 12, 1.0, &mut rng);
+        let x = Matrix::randn(12, 30, 1.0, &mut rng);
+        let h = x.dot_t(&x);
+        let direct = {
+            let d = w.sub(&q).dot(&x).frob_norm() as f64;
+            d * d
+        };
+        let via_h = hessian_error(&w, &q, &h);
+        assert!((direct - via_h).abs() < 1e-2 * direct.max(1.0));
+    }
+
+    /// LDLQ must not be (much) worse than round-to-nearest in
+    /// activation-aware error — property over random problems.
+    #[test]
+    fn ldlq_beats_or_matches_rtn() {
+        testing::quick("ldlq<=rtn", |rng| {
+            let m = testing::gen_dim(rng, 4, 24);
+            let n = testing::gen_dim(rng, 4, 24);
+            let w = testing::gen_matrix(rng, m, n);
+            let h = testing::gen_spd(rng, n);
+            let quant = UniformQuantizer::new(2, usize::MAX);
+            let rtn = quant.quantize(&w);
+            let ldlq = quant.quantize_with_hessian(&w, &h);
+            let e_rtn = hessian_error(&w, &rtn.deq, &h);
+            let e_ldlq = hessian_error(&w, &ldlq.deq, &h);
+            assert!(
+                e_ldlq <= e_rtn * 1.05 + 1e-6,
+                "ldlq={e_ldlq:.4e} rtn={e_rtn:.4e}"
+            );
+        });
+    }
+}

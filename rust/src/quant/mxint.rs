@@ -1,0 +1,205 @@
+//! MXINT shared-exponent block quantizer (Darvish Rouhani et al., ISCA'23),
+//! used by the paper's Table 11 ablation (3-bit, block size 32).
+//!
+//! Each block of `block` consecutive weights shares one power-of-two
+//! exponent; elements are signed fixed-point mantissas with `bits-1`
+//! magnitude bits. The shared exponent is chosen so the block's absmax just
+//! fits.
+
+use super::{Prepared, QuantOut, Quantizer};
+use crate::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct MxInt {
+    pub bits: u32,
+    pub block: usize,
+}
+
+impl MxInt {
+    pub fn new(bits: u32, block: usize) -> MxInt {
+        assert!((2..=8).contains(&bits), "mxint bits must be 2..=8");
+        assert!(block >= 1);
+        MxInt { bits, block }
+    }
+
+    /// Mantissa levels on each side of zero: 2^{bits-1} - 1.
+    #[inline]
+    fn mmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1).max(1) as f32
+    }
+
+    /// Shared power-of-two step for a block with the given absmax.
+    fn block_step(&self, absmax: f32) -> f32 {
+        if absmax <= 0.0 {
+            return 0.0;
+        }
+        // Smallest power-of-two step with absmax/step <= mmax.
+        let raw = absmax / self.mmax();
+        let e = raw.log2().ceil();
+        2f32.powf(e)
+    }
+
+    fn compute_steps(&self, w: &Matrix) -> Vec<f32> {
+        let (m, n) = w.shape();
+        let bpr = n.div_ceil(self.block);
+        let mut steps = vec![0f32; m * bpr];
+        for i in 0..m {
+            let row = w.row(i);
+            for b in 0..bpr {
+                let lo = b * self.block;
+                let hi = ((b + 1) * self.block).min(n);
+                let absmax = row[lo..hi].iter().fold(0f32, |a, &v| a.max(v.abs()));
+                steps[i * bpr + b] = self.block_step(absmax);
+            }
+        }
+        steps
+    }
+}
+
+impl Quantizer for MxInt {
+    fn name(&self) -> String {
+        format!("mxint{}b-b{}", self.bits, self.block)
+    }
+
+    fn bits(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn bits_with_overhead(&self, _rows: usize, _cols: usize) -> f64 {
+        // 8-bit shared exponent per block.
+        self.bits as f64 + 8.0 / self.block as f64
+    }
+
+    fn quantize(&self, w: &Matrix) -> QuantOut {
+        let prep = self.prepare(w);
+        let deq = prep.round_columns(w, 0);
+        QuantOut {
+            deq,
+            scale: prep.scale_metric(),
+        }
+    }
+
+    fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a> {
+        Box::new(PreparedMx {
+            q: self.clone(),
+            cols: w.cols(),
+            steps: self.compute_steps(w),
+        })
+    }
+
+    fn feedback_block(&self) -> usize {
+        self.block
+    }
+}
+
+struct PreparedMx {
+    q: MxInt,
+    cols: usize,
+    steps: Vec<f32>,
+}
+
+impl Prepared for PreparedMx {
+    fn round_columns(&self, cols: &Matrix, c0: usize) -> Matrix {
+        let (m, b) = cols.shape();
+        let bpr = self.cols.div_ceil(self.q.block);
+        let mmax = self.q.mmax();
+        let mut out = Matrix::zeros(m, b);
+        for i in 0..m {
+            let src = cols.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..b {
+                let blk = ((c0 + j) / self.q.block).min(bpr - 1);
+                let step = self.steps[i * bpr + blk];
+                dst[j] = if step == 0.0 {
+                    0.0
+                } else {
+                    (src[j] / step).round().clamp(-mmax, mmax) * step
+                };
+            }
+        }
+        out
+    }
+
+    fn scale_metric(&self) -> f32 {
+        let nz: Vec<f32> = self.steps.iter().copied().filter(|&s| s > 0.0).collect();
+        if nz.is_empty() {
+            return 0.0;
+        }
+        (nz.iter().map(|&s| s as f64).sum::<f64>() / nz.len() as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn steps_are_powers_of_two() {
+        let mut rng = Pcg64::new(120, 1);
+        let w = Matrix::randn(4, 64, 3.0, &mut rng);
+        let q = MxInt::new(3, 32);
+        let steps = q.compute_steps(&w);
+        for &s in &steps {
+            assert!(s > 0.0);
+            let e = s.log2();
+            assert!((e - e.round()).abs() < 1e-5, "step {s} not pow2");
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        testing::quick("mxint-halfstep", |rng| {
+            let m = testing::gen_dim(rng, 1, 8);
+            let n = testing::gen_dim(rng, 1, 96);
+            let w = testing::gen_matrix(rng, m, n);
+            let q = MxInt::new(3, 32);
+            let out = q.quantize(&w);
+            let steps = q.compute_steps(&w);
+            let bpr = n.div_ceil(32);
+            for i in 0..m {
+                for j in 0..n {
+                    let step = steps[i * bpr + j / 32];
+                    let err = (w.at(i, j) - out.deq.at(i, j)).abs();
+                    assert!(err <= step * 0.5 + 1e-6, "err={err} step={step}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn absmax_representable() {
+        // The block's largest element must round to within half a step —
+        // i.e. the chosen exponent never clips the absmax.
+        let w = Matrix::from_vec(1, 4, vec![0.1, -7.3, 2.0, 0.0]);
+        let q = MxInt::new(3, 4);
+        let out = q.quantize(&w);
+        let step = q.compute_steps(&w)[0];
+        assert!((w.at(0, 1) - out.deq.at(0, 1)).abs() <= step * 0.5 + 1e-6);
+    }
+
+    #[test]
+    fn more_bits_monotone() {
+        let mut rng = Pcg64::new(121, 1);
+        let w = Matrix::randn(8, 64, 1.0, &mut rng);
+        let e3 = MxInt::new(3, 32).quantize(&w).deq.sub(&w).frob_norm();
+        let e4 = MxInt::new(4, 32).quantize(&w).deq.sub(&w).frob_norm();
+        let e6 = MxInt::new(6, 32).quantize(&w).deq.sub(&w).frob_norm();
+        assert!(e4 < e3 && e6 < e4, "{e3} {e4} {e6}");
+    }
+
+    #[test]
+    fn overhead_bits() {
+        let q = MxInt::new(3, 32);
+        assert!((q.bits_with_overhead(1, 320) - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_block_stays_zero() {
+        let w = Matrix::zeros(2, 64);
+        let out = MxInt::new(3, 32).quantize(&w);
+        assert_eq!(out.deq, w);
+        assert_eq!(out.scale, 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Symmetric uniform b-bit quantizer with per-(row-)group absmax scales.
+
+use super::{Prepared, QuantOut, Quantizer};
+use crate::tensor::Matrix;
+
+/// Symmetric uniform quantizer: values in a group are mapped to
+/// `round(w / s)` clamped to `[-(2^{b-1}-1), 2^{b-1}-1]`, `s = absmax / qmax`.
+///
+/// Groups are contiguous runs of `group_size` entries within a row
+/// (`usize::MAX` = one group per row, the GPTQ per-output-channel default).
+#[derive(Clone, Debug)]
+pub struct UniformQuantizer {
+    pub bits: u32,
+    pub group_size: usize,
+}
+
+impl UniformQuantizer {
+    pub fn new(bits: u32, group_size: usize) -> UniformQuantizer {
+        assert!((1..=8).contains(&bits), "uniform bits must be 1..=8");
+        UniformQuantizer { bits, group_size }
+    }
+
+    #[inline]
+    fn qmax(&self) -> f32 {
+        ((1i32 << (self.bits - 1)) - 1).max(1) as f32
+    }
+
+    fn groups_per_row(&self, cols: usize) -> usize {
+        if self.group_size == usize::MAX || self.group_size >= cols {
+            1
+        } else {
+            cols.div_ceil(self.group_size)
+        }
+    }
+
+    fn group_width(&self, cols: usize) -> usize {
+        if self.group_size == usize::MAX || self.group_size >= cols {
+            cols
+        } else {
+            self.group_size
+        }
+    }
+
+    /// Per-row, per-group absmax scales.
+    fn compute_scales(&self, w: &Matrix) -> Vec<f32> {
+        let (m, n) = w.shape();
+        let gw = self.group_width(n);
+        let gpr = self.groups_per_row(n);
+        let qmax = self.qmax();
+        let mut scales = vec![0f32; m * gpr];
+        for i in 0..m {
+            let row = w.row(i);
+            for g in 0..gpr {
+                let lo = g * gw;
+                let hi = ((g + 1) * gw).min(n);
+                let absmax = row[lo..hi].iter().fold(0f32, |a, &v| a.max(v.abs()));
+                // Floor the scale so an all-zero group stays exactly zero.
+                scales[i * gpr + g] = if absmax > 0.0 { absmax / qmax } else { 1e-12 };
+            }
+        }
+        scales
+    }
+}
+
+impl Quantizer for UniformQuantizer {
+    fn name(&self) -> String {
+        let g = if self.group_size == usize::MAX {
+            "row".to_string()
+        } else {
+            format!("g{}", self.group_size)
+        };
+        format!("uniform{}b-{}", self.bits, g)
+    }
+
+    fn bits(&self) -> f64 {
+        self.bits as f64
+    }
+
+    fn bits_with_overhead(&self, rows: usize, cols: usize) -> f64 {
+        // 16-bit scale per group.
+        let gpr = self.groups_per_row(cols);
+        self.bits as f64 + (rows * gpr * 16) as f64 / (rows * cols) as f64
+    }
+
+    fn quantize(&self, w: &Matrix) -> QuantOut {
+        let prep = self.prepare(w);
+        let deq = prep.round_columns(w, 0);
+        QuantOut {
+            deq,
+            scale: prep.scale_metric(),
+        }
+    }
+
+    fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a> {
+        let scales = self.compute_scales(w);
+        Box::new(PreparedUniform {
+            q: self.clone(),
+            cols: w.cols(),
+            scales,
+        })
+    }
+}
+
+struct PreparedUniform {
+    q: UniformQuantizer,
+    cols: usize,
+    scales: Vec<f32>,
+}
+
+impl Prepared for PreparedUniform {
+    fn round_columns(&self, cols: &Matrix, c0: usize) -> Matrix {
+        let (m, b) = cols.shape();
+        let gw = self.q.group_width(self.cols);
+        let gpr = self.q.groups_per_row(self.cols);
+        let qmax = self.q.qmax();
+        let mut out = Matrix::zeros(m, b);
+        for i in 0..m {
+            let src = cols.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..b {
+                let g = ((c0 + j) / gw).min(gpr - 1);
+                let s = self.scales[i * gpr + g];
+                let q = (src[j] / s).round().clamp(-qmax, qmax);
+                dst[j] = q * s;
+            }
+        }
+        out
+    }
+
+    fn scale_metric(&self) -> f32 {
+        let n = self.scales.len().max(1);
+        (self.scales.iter().map(|&s| s as f64).sum::<f64>() / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        testing::quick("uniform-halfstep", |rng| {
+            let m = testing::gen_dim(rng, 1, 16);
+            let n = testing::gen_dim(rng, 1, 64);
+            let bits = 2 + (rng.below(3) as u32); // 2..4
+            let w = testing::gen_matrix(rng, m, n);
+            let q = UniformQuantizer::new(bits, usize::MAX);
+            let out = q.quantize(&w);
+            // Every entry within half a step of its row scale.
+            let qmax = ((1 << (bits - 1)) - 1) as f32;
+            for i in 0..m {
+                let absmax = w.row(i).iter().fold(0f32, |a, &v| a.max(v.abs()));
+                let step = absmax / qmax;
+                for j in 0..n {
+                    let err = (w.at(i, j) - out.deq.at(i, j)).abs();
+                    assert!(err <= step * 0.5 + 1e-5, "err={err} step={step}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn grouped_scales_respect_groups() {
+        // Two groups with wildly different ranges: a grouped quantizer must
+        // give the small group a small scale (much lower error there).
+        let mut w = Matrix::zeros(1, 8);
+        for j in 0..4 {
+            *w.at_mut(0, j) = 100.0 * (j as f32 - 1.5);
+        }
+        for j in 4..8 {
+            *w.at_mut(0, j) = 0.01 * (j as f32 - 5.5);
+        }
+        let grouped = UniformQuantizer::new(3, 4).quantize(&w);
+        let global = UniformQuantizer::new(3, usize::MAX).quantize(&w);
+        let err_g: f32 = (4..8).map(|j| (w.at(0, j) - grouped.deq.at(0, j)).abs()).sum();
+        let err_r: f32 = (4..8).map(|j| (w.at(0, j) - global.deq.at(0, j)).abs()).sum();
+        assert!(err_g < err_r * 0.1, "grouped={err_g} global={err_r}");
+    }
+
+    #[test]
+    fn zero_matrix_stays_zero() {
+        let w = Matrix::zeros(4, 16);
+        let out = UniformQuantizer::new(2, 8).quantize(&w);
+        assert_eq!(out.deq, w);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Pcg64::new(90, 1);
+        let w = Matrix::randn(16, 64, 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for bits in [2u32, 3, 4, 6, 8] {
+            let out = UniformQuantizer::new(bits, usize::MAX).quantize(&w);
+            let err = out.deq.sub(&w).frob_norm();
+            assert!(err < last, "bits={bits}: {err} !< {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn scale_metric_tracks_dynamic_range() {
+        let mut rng = Pcg64::new(91, 1);
+        let w = Matrix::randn(8, 32, 1.0, &mut rng);
+        let big = w.scale(10.0);
+        let q = UniformQuantizer::new(2, usize::MAX);
+        assert!(q.quantize(&big).scale > 5.0 * q.quantize(&w).scale);
+    }
+
+    #[test]
+    fn bits_overhead_accounting() {
+        let q = UniformQuantizer::new(2, 64);
+        // 128 cols → 2 groups/row → 32 scale bits per 128 weights = 0.25.
+        assert!((q.bits_with_overhead(16, 128) - 2.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,215 @@
+//! Markdown/CSV table emitters for the experiment harness.
+//!
+//! Every `odlri exp <id>` driver produces a [`Table`] (paper-style rows) or
+//! a [`Series`] set (figure curves) and writes them under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A markdown table with a caption.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{}|", "-".repeat(w + 2));
+        }
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// A set of named (x, y) series — one CSV with an x column plus one column
+/// per series (the figure-reproduction format).
+#[derive(Clone, Debug)]
+pub struct SeriesSet {
+    pub title: String,
+    pub x_label: String,
+    pub x: Vec<f64>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl SeriesSet {
+    pub fn new(title: &str, x_label: &str, x: Vec<f64>) -> SeriesSet {
+        SeriesSet {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            x,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, name: &str, y: Vec<f64>) -> &mut Self {
+        assert_eq!(y.len(), self.x.len(), "series length mismatch");
+        self.series.push((name.to_string(), y));
+        self
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let names: Vec<&str> = self.series.iter().map(|(n, _)| n.as_str()).collect();
+        let _ = writeln!(out, "{},{}", self.x_label, names.join(","));
+        for (i, &xv) in self.x.iter().enumerate() {
+            let ys: Vec<String> = self
+                .series
+                .iter()
+                .map(|(_, y)| format!("{:.6e}", y[i]))
+                .collect();
+            let _ = writeln!(out, "{xv},{}", ys.join(","));
+        }
+        out
+    }
+
+    /// Render a compact ASCII view (min→max per series) so figure shapes can
+    /// be eyeballed in the terminal / EXPERIMENTS.md.
+    pub fn to_summary(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {} (x = {})\n", self.title, self.x_label);
+        for (name, y) in &self.series {
+            let first = y.first().copied().unwrap_or(f64::NAN);
+            let last = y.last().copied().unwrap_or(f64::NAN);
+            let min = y.iter().cloned().fold(f64::INFINITY, f64::min);
+            let _ = writeln!(
+                out,
+                "- {:<24} first={:.4e} last={:.4e} min={:.4e}",
+                name, first, last, min
+            );
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_summary())?;
+        Ok(())
+    }
+}
+
+/// Format a float like the paper's tables (2 decimals).
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Format a probability/accuracy as percent with 2 decimals.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["CALDERA".into(), "7.34".into()]);
+        t.row(vec!["+ODLRI".into(), "7.20".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["hello, world".into(), "q\"q".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"hello, world\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s = SeriesSet::new("fig", "iter", vec![1.0, 2.0, 3.0]);
+        s.add("odlri", vec![0.3, 0.2, 0.1]);
+        s.add("zero", vec![0.5, 0.4, 0.35]);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("iter,odlri,zero"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+}

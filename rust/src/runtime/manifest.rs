@@ -1,0 +1,227 @@
+//! Typed view over `artifacts/manifest.json` (written by aot.py).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input/output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One artifact (HLO module) description.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One model family's parameter layout.
+#[derive(Clone, Debug)]
+pub struct FamilySpec {
+    pub name: String,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub projections: Vec<String>,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+impl FamilySpec {
+    /// Index of a parameter by name in the flat layout.
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| anyhow!("no param '{name}' in family {}", self.name))
+    }
+
+    pub fn param_shape(&self, name: &str) -> Result<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+            .ok_or_else(|| anyhow!("no param '{name}' in family {}", self.name))
+    }
+
+    /// Norm parameters (kept dense; never compressed).
+    pub fn is_norm(name: &str) -> bool {
+        name.ends_with("ln1") || name.ends_with("ln2") || name.ends_with("ln_f")
+    }
+}
+
+/// The full manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    families: BTreeMap<String, FamilySpec>,
+    pub batch: usize,
+    pub seq: usize,
+    pub fused_rank: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.req("artifacts")?.as_obj()? {
+            let io = |key: &str| -> Result<Vec<IoSpec>> {
+                art.req(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok(IoSpec {
+                            name: e
+                                .get("name")
+                                .map(|n| n.as_str().unwrap_or("").to_string())
+                                .unwrap_or_default(),
+                            shape: e.req("shape")?.as_usize_vec()?,
+                            dtype: e
+                                .get("dtype")
+                                .map(|d| d.as_str().unwrap_or("f32").to_string())
+                                .unwrap_or_else(|| "f32".into()),
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: art.req("file")?.as_str()?.to_string(),
+                    inputs: io("inputs")?,
+                    outputs: io("outputs")?,
+                },
+            );
+        }
+        let mut families = BTreeMap::new();
+        for (name, fam) in j.req("families")?.as_obj()? {
+            let params = fam
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok((
+                        p.req("name")?.as_str()?.to_string(),
+                        p.req("shape")?.as_usize_vec()?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let projections = fam
+                .req("projections")?
+                .as_arr()?
+                .iter()
+                .map(|p| Ok(p.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            families.insert(
+                name.clone(),
+                FamilySpec {
+                    name: name.clone(),
+                    params,
+                    projections,
+                    vocab: fam.req("vocab")?.as_usize()?,
+                    d_model: fam.req("d_model")?.as_usize()?,
+                    n_layers: fam.req("n_layers")?.as_usize()?,
+                    d_ff: fam.req("d_ff")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            artifacts,
+            families,
+            batch: j.req("batch")?.as_usize()?,
+            seq: j.req("seq")?.as_usize()?,
+            fused_rank: j.req("fused_rank")?.as_usize()?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilySpec> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model family '{name}'"))
+    }
+
+    pub fn family_names(&self) -> Vec<String> {
+        self.families.keys().cloned().collect()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.artifacts.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "fwd_x": {
+          "file": "fwd_x.hlo.txt",
+          "inputs": [{"name": "w", "shape": [4, 8], "dtype": "float32"},
+                     {"name": "tokens", "shape": [2, 16], "dtype": "int32"}],
+          "outputs": [{"shape": [2, 16, 32], "dtype": "float32"}]
+        }
+      },
+      "families": {
+        "x": {
+          "params": [{"name": "embed", "shape": [32, 8]},
+                     {"name": "layer0.wq", "shape": [8, 8]}],
+          "projections": ["layer0.wq"],
+          "vocab": 32, "d_model": 8, "n_layers": 1, "n_heads": 2,
+          "n_kv_heads": 2, "d_ff": 16, "mlp": "swiglu"
+        }
+      },
+      "batch": 2, "seq": 16, "fused_rank": 4
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.seq, 16);
+        let art = m.artifact("fwd_x").unwrap();
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.inputs[1].shape, vec![2, 16]);
+        assert_eq!(art.outputs[0].shape, vec![2, 16, 32]);
+        let fam = m.family("x").unwrap();
+        assert_eq!(fam.param_index("layer0.wq").unwrap(), 1);
+        assert_eq!(fam.param_shape("embed").unwrap(), &[32, 8]);
+        assert!(fam.param_index("nope").is_err());
+    }
+
+    #[test]
+    fn norm_detection() {
+        assert!(FamilySpec::is_norm("layer3.ln1"));
+        assert!(FamilySpec::is_norm("ln_f"));
+        assert!(!FamilySpec::is_norm("layer0.wq"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.artifact("fwd_tl-7s").is_some());
+            let fam = m.family("tl-7s").unwrap();
+            assert_eq!(fam.projections.len(), 7 * fam.n_layers);
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. Python never runs at
+//! pipeline/eval time — the manifest + HLO text files are the whole
+//! interface. Executables are compiled lazily and cached per artifact name.
+
+mod manifest;
+
+pub use manifest::{ArtifactSpec, FamilySpec, IoSpec, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Matrix;
+
+/// A tensor crossing the runtime boundary (f32 or i32, arbitrary rank).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Value {
+    pub fn from_matrix(m: &Matrix) -> Value {
+        Value::F32 {
+            shape: vec![m.rows(), m.cols()],
+            data: m.as_slice().to_vec(),
+        }
+    }
+
+    pub fn from_vec_f32(shape: Vec<usize>, data: Vec<f32>) -> Value {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Value::F32 { shape, data }
+    }
+
+    pub fn from_vec_i32(shape: Vec<usize>, data: Vec<i32>) -> Value {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Value::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } => shape,
+            Value::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    /// Interpret as a 2-D matrix (rank ≤ 2 required; rank-1/0 become 1×n).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        let data = self.f32_data()?.to_vec();
+        let shape = self.shape();
+        let (r, c) = match shape.len() {
+            0 => (1, 1),
+            1 => (1, shape[0]),
+            2 => (shape[0], shape[1]),
+            _ => bail!("to_matrix on rank-{} value", shape.len()),
+        };
+        Ok(Matrix::from_vec(r, c, data))
+    }
+
+    /// Flatten leading axes: (a, b, c) → (a·b, c) — used for logits.
+    pub fn to_matrix_2d(&self) -> Result<Matrix> {
+        let data = self.f32_data()?.to_vec();
+        let shape = self.shape();
+        if shape.is_empty() {
+            return Ok(Matrix::from_vec(1, 1, data));
+        }
+        let last = *shape.last().unwrap();
+        let lead: usize = shape[..shape.len() - 1].iter().product();
+        Ok(Matrix::from_vec(lead, last, data))
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
+            }
+            Value::I32 { shape, data } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Value::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            }),
+            xla::ElementType::S32 => Ok(Value::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// The runtime: PJRT client + artifact directory + executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (reads `manifest.json`; compiles nothing
+    /// yet).
+    pub fn open(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (warm-up; used by the pipeline so timing
+    /// excludes compilation).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest;
+    /// outputs arrive in manifest order.
+    pub fn exec(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}' wants {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (v, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if v.shape() != want.shape.as_slice() {
+                bail!(
+                    "artifact '{name}' input {i} ('{}'): shape {:?} != expected {:?}",
+                    want.name,
+                    v.shape(),
+                    want.shape
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts.iter().map(Value::from_literal).collect()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.names()
+    }
+}
+
+/// Default artifact directory: `$ODLRI_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("ODLRI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let v = Value::from_matrix(&m);
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.to_matrix().unwrap(), m);
+    }
+
+    #[test]
+    fn value_flatten_leading() {
+        let v = Value::from_vec_f32(vec![2, 3, 4], (0..24).map(|i| i as f32).collect());
+        let m = v.to_matrix_2d().unwrap();
+        assert_eq!(m.shape(), (6, 4));
+        assert_eq!(m.at(5, 3), 23.0);
+    }
+
+    #[test]
+    fn value_type_checks() {
+        let v = Value::from_vec_i32(vec![2], vec![1, 2]);
+        assert!(v.f32_data().is_err());
+        assert!(v.to_matrix().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn value_shape_checked() {
+        Value::from_vec_f32(vec![2, 2], vec![1.0]);
+    }
+}

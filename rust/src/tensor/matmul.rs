@@ -1,0 +1,312 @@
+//! Cache-blocked, multi-threaded matrix multiplication.
+//!
+//! The compression loop is matmul-bound (LDLQ feedback, LPLR alternation,
+//! Hessian products), so this gets a real implementation: i-k-j loop order
+//! with 8-wide unrolled FMA over the contiguous B rows, L2-sized panel
+//! blocking, and row-parallel threading over std::thread::scope. Perf notes
+//! live in EXPERIMENTS.md §Perf.
+
+use super::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global thread budget for matmul (0 = auto from available_parallelism).
+static MATMUL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the matmul thread count (used by benches and the coordinator so
+/// per-matrix jobs don't oversubscribe when the worker pool is already wide).
+pub fn set_matmul_threads(n: usize) {
+    MATMUL_THREADS.store(n, Ordering::Relaxed);
+}
+
+fn threads_for(work: usize) -> usize {
+    let cap = match MATMUL_THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+    // Don't spawn threads for small problems. Perf pass (EXPERIMENTS.md
+    // §Perf iteration 1): at the original 2 MFLOP threshold a 128³ matmul
+    // (4.2 MFLOP) was *slower* threaded than single-threaded (2.6 ms vs
+    // 1.7 ms — spawn cost dominates); 24 MFLOP puts the crossover where
+    // the measured win begins (352×128×512 = 46 MFLOP: 16.3 → 10.1 ms).
+    if work < 24_000_000 {
+        1
+    } else {
+        cap.min(16)
+    }
+}
+
+/// C = A @ B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A @ B into a pre-allocated output (overwrites C).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "matmul output shape");
+    c.as_mut_slice().fill(0.0);
+    let nthreads = threads_for(2 * m * n * k);
+    if nthreads <= 1 || m < nthreads {
+        kernel_rows(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, m, k, n);
+        return;
+    }
+    // Split output rows across threads; each thread owns a disjoint slice of C.
+    let a_s = a.as_slice();
+    let b_s = b.as_slice();
+    let rows_per = m.div_ceil(nthreads);
+    let chunks: Vec<&mut [f32]> = c.as_mut_slice().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let r0 = t * rows_per;
+            let r1 = (r0 + chunk.len() / n).min(m);
+            s.spawn(move || {
+                kernel_rows_out(a_s, b_s, chunk, r0, r1, k, n);
+            });
+        }
+    });
+}
+
+/// Core kernel computing rows [r0, r1) of C (C indexed absolutely).
+fn kernel_rows(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    kernel_rows_out(a, b, &mut c[r0 * n..r1 * n], r0, r1, k, n);
+}
+
+/// Same, but C slice starts at row r0 (thread-local chunk).
+fn kernel_rows_out(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    // Panel over k to keep the active B panel in L2 (~256 rows * n floats).
+    const KB: usize = 256;
+    for kp in (0..k).step_by(KB) {
+        let kend = (kp + KB).min(k);
+        for i in r0..r1 {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+            for p in kp..kend {
+                let av = arow[p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                axpy(av, brow, crow);
+            }
+        }
+    }
+}
+
+/// crow += av * brow, 8-wide unrolled (autovectorizes to AVX on release).
+#[inline]
+fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let n = brow.len();
+    let chunks = n / 8;
+    // Unrolled main loop.
+    for c8 in 0..chunks {
+        let o = c8 * 8;
+        crow[o] += av * brow[o];
+        crow[o + 1] += av * brow[o + 1];
+        crow[o + 2] += av * brow[o + 2];
+        crow[o + 3] += av * brow[o + 3];
+        crow[o + 4] += av * brow[o + 4];
+        crow[o + 5] += av * brow[o + 5];
+        crow[o + 6] += av * brow[o + 6];
+        crow[o + 7] += av * brow[o + 7];
+    }
+    for o in chunks * 8..n {
+        crow[o] += av * brow[o];
+    }
+}
+
+/// C = A^T @ B without materializing A^T.
+/// A is (k x m) stored row-major; result is (m x n).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "matmul_tn inner dims");
+    let mut c = Matrix::zeros(m, n);
+    // For each row p of A (length m) and row p of B (length n):
+    //   C[i, :] += A[p, i] * B[p, :]
+    // This keeps both reads sequential; parallelize over k-panels with
+    // per-thread accumulators, reduced at the end.
+    let nthreads = threads_for(2 * m * n * k);
+    if nthreads <= 1 {
+        for p in 0..k {
+            let arow = a.row(p);
+            let brow = b.row(p);
+            for i in 0..m {
+                let av = arow[i];
+                if av != 0.0 {
+                    axpy(av, brow, c.row_mut(i));
+                }
+            }
+        }
+        return c;
+    }
+    let per = k.div_ceil(nthreads);
+    let mut partials: Vec<Matrix> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let p0 = t * per;
+            let p1 = ((t + 1) * per).min(k);
+            if p0 >= p1 {
+                continue;
+            }
+            handles.push(s.spawn(move || {
+                let mut part = Matrix::zeros(m, n);
+                for p in p0..p1 {
+                    let arow = a.row(p);
+                    let brow = b.row(p);
+                    for i in 0..m {
+                        let av = arow[i];
+                        if av != 0.0 {
+                            axpy(av, brow, part.row_mut(i));
+                        }
+                    }
+                }
+                part
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("matmul_tn worker panicked"));
+        }
+    });
+    for p in partials {
+        c.add_assign(&p);
+    }
+    c
+}
+
+/// C = A @ B^T without materializing B^T. A is (m x k), B is (n x k) → (m x n).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "matmul_nt inner dims");
+    let mut c = Matrix::zeros(m, n);
+    let nthreads = threads_for(2 * m * n * k);
+    let run = |rows: std::ops::Range<usize>, out: &mut [f32]| {
+        for i in rows.clone() {
+            let arow = a.row(i);
+            let orow = &mut out[(i - rows.start) * n..(i - rows.start + 1) * n];
+            for (j, ov) in orow.iter_mut().enumerate() {
+                *ov = dotp(arow, b.row(j));
+            }
+        }
+    };
+    if nthreads <= 1 || m < nthreads {
+        let out = c.as_mut_slice();
+        run(0..m, out);
+        return c;
+    }
+    let rows_per = m.div_ceil(nthreads);
+    let chunks: Vec<&mut [f32]> = c.as_mut_slice().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|s| {
+        for (t, chunk) in chunks.into_iter().enumerate() {
+            let r0 = t * rows_per;
+            let r1 = (r0 + chunk.len() / n).min(m);
+            let runr = &run;
+            s.spawn(move || runr(r0..r1, chunk));
+        }
+    });
+    c
+}
+
+/// Dot product, 8-wide unrolled with 4 accumulators (better ILP + accuracy).
+#[inline]
+pub fn dotp(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += x[o] * y[o];
+        s1 += x[o + 1] * y[o + 1];
+        s2 += x[o + 2] * y[o + 2];
+        s3 += x[o + 3] * y[o + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for o in chunks * 4..n {
+        s += x[o] * y[o];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        Matrix::from_fn(m, n, |i, j| {
+            (0..k).map(|p| a.at(i, p) * b.at(p, j)).sum()
+        })
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let mut rng = Pcg64::new(1, 1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (7, 9, 2), (16, 16, 16)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_naive_threaded() {
+        // Big enough to clear the threading threshold (see threads_for).
+        let mut rng = Pcg64::new(2, 1);
+        let a = Matrix::randn(300, 260, 1.0, &mut rng);
+        let b = Matrix::randn(260, 310, 1.0, &mut rng);
+        set_matmul_threads(4);
+        let c = matmul(&a, &b);
+        set_matmul_threads(1);
+        let c1 = matmul(&a, &b);
+        set_matmul_threads(0);
+        assert!(c.max_abs_diff(&c1) < 1e-4);
+        assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn tn_nt_match_explicit_transpose() {
+        let mut rng = Pcg64::new(3, 1);
+        let a = Matrix::randn(40, 30, 1.0, &mut rng);
+        let b = Matrix::randn(40, 20, 1.0, &mut rng);
+        let tn = matmul_tn(&a, &b); // (30x40)@(40x20)
+        assert!(tn.max_abs_diff(&a.transpose().dot(&b)) < 1e-4);
+
+        let a2 = Matrix::randn(25, 30, 1.0, &mut rng);
+        let b2 = Matrix::randn(35, 30, 1.0, &mut rng);
+        let nt = matmul_nt(&a2, &b2); // (25x30)@(30x35)
+        assert!(nt.max_abs_diff(&a2.dot(&b2.transpose())) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(4, 1);
+        let a = Matrix::randn(12, 12, 1.0, &mut rng);
+        let i = Matrix::eye(12);
+        assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn associativity_with_vectors() {
+        // (A@B)@x == A@(B@x) within tolerance.
+        let mut rng = Pcg64::new(5, 1);
+        let a = Matrix::randn(20, 30, 1.0, &mut rng);
+        let b = Matrix::randn(30, 25, 1.0, &mut rng);
+        let x = Matrix::randn(25, 1, 1.0, &mut rng);
+        let left = matmul(&matmul(&a, &b), &x);
+        let right = matmul(&a, &matmul(&b, &x));
+        assert!(left.max_abs_diff(&right) < 1e-3);
+    }
+}

@@ -1,0 +1,484 @@
+//! Dense f32 matrix substrate.
+//!
+//! Everything the compression algorithms need — row-major [`Matrix`],
+//! cache-blocked (and optionally multi-threaded) matmul, transposes, norms,
+//! row/column ops — built on std only. This is deliberately small and
+//! predictable rather than a general ndarray: all paper math is 2-D.
+
+mod matmul;
+
+pub use matmul::{matmul, matmul_into, matmul_tn, matmul_nt, set_matmul_threads};
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix[{}x{}]", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Pcg64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = A @ B (convenience over [`matmul`]).
+    pub fn dot(&self, other: &Matrix) -> Matrix {
+        matmul(self, other)
+    }
+
+    /// self^T @ other without materializing the transpose.
+    pub fn tdot(&self, other: &Matrix) -> Matrix {
+        matmul_tn(self, other)
+    }
+
+    /// self @ other^T without materializing the transpose.
+    pub fn dot_t(&self, other: &Matrix) -> Matrix {
+        matmul_nt(self, other)
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        let mut out = self.clone();
+        for a in out.data.iter_mut() {
+            *a *= s;
+        }
+        out
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Scale column j by s (in place).
+    pub fn scale_col(&mut self, j: usize, s: f32) {
+        for i in 0..self.rows {
+            *self.at_mut(i, j) *= s;
+        }
+    }
+
+    /// Scale row i by s (in place).
+    pub fn scale_row(&mut self, i: usize, s: f32) {
+        for v in self.row_mut(i) {
+            *v *= s;
+        }
+    }
+
+    /// Multiply on the right by diag(d): scales column j by d[j].
+    pub fn mul_diag_right(&self, d: &[f32]) -> Matrix {
+        assert_eq!(d.len(), self.cols);
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            let r = out.row_mut(i);
+            for j in 0..d.len() {
+                r[j] *= d[j];
+            }
+        }
+        out
+    }
+
+    /// Multiply on the left by diag(d): scales row i by d[i].
+    pub fn mul_diag_left(&self, d: &[f32]) -> Matrix {
+        assert_eq!(d.len(), self.rows);
+        let mut out = self.clone();
+        for i in 0..out.rows {
+            let s = d[i];
+            for v in out.row_mut(i) {
+                *v *= s;
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        // Two-pass scaled sum to avoid overflow on large matrices.
+        let mx = self.abs_max();
+        if mx == 0.0 {
+            return 0.0;
+        }
+        let mut s = 0.0f64;
+        for &v in &self.data {
+            let t = (v / mx) as f64;
+            s += t * t;
+        }
+        mx * (s.sqrt() as f32)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&v| v as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Extract a sub-matrix (row range, col range).
+    pub fn slice(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Matrix {
+        assert!(r1 <= self.rows && c1 <= self.cols && r0 <= r1 && c0 <= c1);
+        let mut out = Matrix::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0)
+                .copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Gather the given columns into a new matrix (in index order).
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in idx.iter().enumerate() {
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Gather the given rows into a new matrix (in index order).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Keep only the listed columns, zeroing the rest (the paper's X_o / X_r
+    /// split keeps original dimensions with complementary supports).
+    pub fn mask_cols(&self, keep: &[usize]) -> Matrix {
+        let mut mask = vec![false; self.cols];
+        for &j in keep {
+            mask[j] = true;
+        }
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for j in 0..self.cols {
+                if mask[j] {
+                    dst[j] = src[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Keep only the listed rows, zeroing the rest.
+    pub fn mask_rows(&self, keep: &[usize]) -> Matrix {
+        let mut mask = vec![false; self.rows];
+        for &i in keep {
+            mask[i] = true;
+        }
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            if mask[i] {
+                out.row_mut(i).copy_from_slice(self.row(i));
+            }
+        }
+        out
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self.at(i, i)).collect()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Relative Frobenius error ‖a-b‖/‖b‖ (0 if both zero).
+    pub fn rel_err(&self, reference: &Matrix) -> f32 {
+        let denom = reference.frob_norm();
+        let diff = self.sub(reference).frob_norm();
+        if denom == 0.0 {
+            diff
+        } else {
+            diff / denom
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    // ---- serialization (little-endian, versioned header) ----
+
+    /// Binary layout: magic "ODM1", u32 rows, u32 cols, f32 data.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> Result<()> {
+        w.write_all(b"ODM1")?;
+        w.write_all(&(self.rows as u32).to_le_bytes())?;
+        w.write_all(&(self.cols as u32).to_le_bytes())?;
+        for &v in &self.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl std::io::Read) -> Result<Matrix> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"ODM1" {
+            bail!("bad matrix magic {magic:?}");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let rows = u32::from_le_bytes(b4) as usize;
+        r.read_exact(&mut b4)?;
+        let cols = u32::from_le_bytes(b4) as usize;
+        let mut data = vec![0f32; rows * cols];
+        let mut buf = vec![0u8; rows * cols * 4];
+        r.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+}
+
+/// ‖AX‖_F for the paper's activation-aware norms, given X as columns=samples.
+pub fn act_norm(a: &Matrix, x: &Matrix) -> f32 {
+    a.dot(x).frob_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(1, 1);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(10, 20), a.at(20, 10));
+    }
+
+    #[test]
+    fn add_sub_scale() {
+        let a = m(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = m(2, 2, &[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.add(&b), m(2, 2, &[5.0; 4]));
+        assert_eq!(a.sub(&a), Matrix::zeros(2, 2));
+        assert_eq!(a.scale(2.0), m(2, 2, &[2.0, 4.0, 6.0, 8.0]));
+    }
+
+    #[test]
+    fn frob_norm_matches_definition() {
+        let a = m(2, 2, &[3.0, 0.0, 4.0, 0.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(Matrix::zeros(3, 3).frob_norm(), 0.0);
+    }
+
+    #[test]
+    fn diag_ops() {
+        let a = m(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let d = a.mul_diag_right(&[2.0, 3.0, 4.0]);
+        assert_eq!(d, m(2, 3, &[2.0, 6.0, 12.0, 8.0, 15.0, 24.0]));
+        let e = a.mul_diag_left(&[10.0, 0.5]);
+        assert_eq!(e, m(2, 3, &[10.0, 20.0, 30.0, 2.0, 2.5, 3.0]));
+    }
+
+    #[test]
+    fn slice_gather_mask() {
+        let a = Matrix::from_fn(4, 5, |i, j| (i * 5 + j) as f32);
+        let s = a.slice(1, 3, 2, 4);
+        assert_eq!(s, m(2, 2, &[7.0, 8.0, 12.0, 13.0]));
+        let g = a.gather_cols(&[4, 0]);
+        assert_eq!(g.col(0), a.col(4));
+        assert_eq!(g.col(1), a.col(0));
+        let mk = a.mask_cols(&[1]);
+        assert_eq!(mk.col(1), a.col(1));
+        assert_eq!(mk.col(0), vec![0.0; 4]);
+        let mr = a.mask_rows(&[2]);
+        assert_eq!(mr.row(2), a.row(2));
+        assert_eq!(mr.row(0), &[0.0; 5]);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Pcg64::new(7, 7);
+        let a = Matrix::randn(13, 17, 2.0, &mut rng);
+        let mut buf = Vec::new();
+        a.write_to(&mut buf).unwrap();
+        let b = Matrix::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mask_split_is_complementary() {
+        // X = X_o + X_r with complementary supports (paper §3.2).
+        let mut rng = Pcg64::new(3, 1);
+        let x = Matrix::randn(8, 10, 1.0, &mut rng);
+        let keep = [1usize, 4, 7];
+        let rest: Vec<usize> = (0..8).filter(|i| !keep.contains(i)).collect();
+        let xo = x.mask_rows(&keep);
+        let xr = x.mask_rows(&rest);
+        assert_eq!(xo.add(&xr), x);
+    }
+}

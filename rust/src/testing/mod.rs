@@ -1,0 +1,159 @@
+//! Property-testing kit (std-only `proptest` replacement).
+//!
+//! Runs a closure over `cases` seeded random inputs; on failure it reports
+//! the failing case index and seed so the exact input can be replayed with
+//! `replay(seed, case)`. No shrinking — our generators take explicit size
+//! parameters, so failures are already small.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 32, seed: 0xD15EA5E }
+    }
+}
+
+/// Run `prop` for `cfg.cases` cases. `prop` gets a per-case RNG and should
+/// panic (assert) on violation.
+pub fn check(cfg: PropConfig, name: &str, prop: impl Fn(&mut Pcg64)) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64 + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay: Pcg64::new({:#x}, {})): {msg}",
+                cfg.seed,
+                case + 1
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quick(name: &str, prop: impl Fn(&mut Pcg64)) {
+    check(PropConfig::default(), name, prop);
+}
+
+// ---- generators ----
+
+/// Random dimension in [lo, hi].
+pub fn gen_dim(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Random Gaussian matrix with random scale in [0.1, 10].
+pub fn gen_matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Matrix {
+    let sigma = rng.uniform_in(0.1, 10.0);
+    Matrix::randn(rows, cols, sigma, rng)
+}
+
+/// Random matrix with planted low-rank structure plus noise.
+pub fn gen_lowrank_plus_noise(
+    rng: &mut Pcg64,
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    noise: f32,
+) -> Matrix {
+    let l = Matrix::randn(rows, rank, 1.0, rng);
+    let r = Matrix::randn(rank, cols, 1.0, rng);
+    let mut w = l.dot(&r);
+    let n = Matrix::randn(rows, cols, noise, rng);
+    w.add_assign(&n);
+    w
+}
+
+/// Random SPD matrix (Gram of a slightly-overcomplete Gaussian).
+pub fn gen_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+    let a = Matrix::randn(n, n + 8, 1.0, rng);
+    let mut h = a.dot_t(&a);
+    let jit = 0.01 * (n as f32).max(1.0);
+    for i in 0..n {
+        *h.at_mut(i, i) += jit;
+    }
+    h
+}
+
+/// Activations with planted outlier channels: `n` channels × `d` samples,
+/// with `n_outliers` channels scaled by a factor in [10, 50]. Returns
+/// (X, outlier_indices). This is the synthetic stand-in for LLM activation
+/// outliers (see DESIGN.md §2).
+pub fn gen_outlier_acts(
+    rng: &mut Pcg64,
+    n: usize,
+    d: usize,
+    n_outliers: usize,
+) -> (Matrix, Vec<usize>) {
+    let mut x = Matrix::randn(n, d, 1.0, rng);
+    let idx = rng.sample_indices(n, n_outliers);
+    for &i in &idx {
+        let boost = rng.uniform_in(10.0, 50.0);
+        x.scale_row(i, boost);
+    }
+    let mut sorted = idx.clone();
+    sorted.sort_unstable();
+    (x, sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        quick("sum-commutes", |rng| {
+            let a = rng.normal();
+            let b = rng.normal();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failure() {
+        check(
+            PropConfig { cases: 3, seed: 1 },
+            "always-fails",
+            |_| panic!("boom"),
+        );
+    }
+
+    #[test]
+    fn outlier_acts_have_dominant_rows() {
+        let mut rng = Pcg64::new(70, 1);
+        let (x, idx) = gen_outlier_acts(&mut rng, 32, 64, 3);
+        assert_eq!(idx.len(), 3);
+        // Outlier rows must dominate the row-norm ranking.
+        let norms: Vec<f32> = (0..32)
+            .map(|i| x.row(i).iter().map(|v| v * v).sum::<f32>())
+            .collect();
+        let mut order: Vec<usize> = (0..32).collect();
+        order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+        let top3: Vec<usize> = {
+            let mut t = order[..3].to_vec();
+            t.sort_unstable();
+            t
+        };
+        assert_eq!(top3, idx);
+    }
+
+    #[test]
+    fn gen_spd_is_pd() {
+        let mut rng = Pcg64::new(71, 1);
+        let h = gen_spd(&mut rng, 20);
+        assert!(crate::linalg::cholesky(&h).is_ok());
+    }
+}

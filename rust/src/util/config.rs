@@ -1,0 +1,240 @@
+//! Tiny INI/TOML-subset config parser for `configs/*.toml`.
+//!
+//! Supports `[section]` headers, `key = value` lines (string, int, float,
+//! bool, and `[a, b, c]` lists of ints/strings), `#` comments. That is the
+//! entire surface the experiment configs need; nested tables are spelled as
+//! `section.sub` headers.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed config: flat map from `section.key` → raw value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    vals: BTreeMap<String, Value>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+    StrList(Vec<String>),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut vals = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value for '{key}'", lineno + 1))?;
+            vals.insert(key, value);
+        }
+        Ok(Config { vals })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    /// Apply `key=value` overrides (CLI `--set section.key=value`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value, got '{spec}'"))?;
+        self.vals.insert(k.trim().to_string(), parse_value(v.trim())?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.vals.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.vals.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => format!("{v:?}"),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        match self.vals.get(key) {
+            Some(Value::Int(v)) => *v,
+            Some(Value::Float(v)) => *v as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        match self.vals.get(key) {
+            Some(Value::Float(v)) => *v,
+            Some(Value::Int(v)) => *v as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.vals.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn int_list(&self, key: &str, default: &[i64]) -> Vec<i64> {
+        match self.vals.get(key) {
+            Some(Value::IntList(v)) => v.clone(),
+            Some(Value::Int(v)) => vec![*v],
+            _ => default.to_vec(),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.vals.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated list"))?;
+        let items: Vec<&str> = inner
+            .split(',')
+            .map(|x| x.trim())
+            .filter(|x| !x.is_empty())
+            .collect();
+        if items.iter().all(|x| x.parse::<i64>().is_ok()) {
+            return Ok(Value::IntList(
+                items.iter().map(|x| x.parse::<i64>().unwrap()).collect(),
+            ));
+        }
+        return Ok(Value::StrList(
+            items
+                .iter()
+                .map(|x| x.trim_matches('"').to_string())
+                .collect(),
+        ));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    // Bare word: treat as string (model names etc.).
+    Ok(Value::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# compression config
+model = "tl-7s"
+
+[quant]
+bits = 2            # Q bits
+scheme = e8
+group = 64
+
+[lowrank]
+ranks = [64, 128, 256]
+lr_bits = 4
+lplr_iters = 10
+
+[joint]
+outer_iters = 15
+hadamard = true
+reg = 1e-4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("model", ""), "tl-7s");
+        assert_eq!(c.int("quant.bits", 0), 2);
+        assert_eq!(c.str("quant.scheme", ""), "e8");
+        assert_eq!(c.int_list("lowrank.ranks", &[]), vec![64, 128, 256]);
+        assert!(c.bool("joint.hadamard", false));
+        assert!((c.float("joint.reg", 0.0) - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("missing.key", 7), 7);
+        assert_eq!(c.str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_override("quant.bits=3").unwrap();
+        c.set_override("model=\"tm-7s\"").unwrap();
+        assert_eq!(c.int("quant.bits", 0), 3);
+        assert_eq!(c.str("model", ""), "tm-7s");
+        assert!(c.set_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+}

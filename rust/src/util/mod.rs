@@ -1,0 +1,78 @@
+//! Small std-only utilities: deterministic RNG, JSON, config parsing,
+//! formatting helpers. These exist because the offline vendor set contains
+//! only `xla` + `anyhow`; everything else is built from std.
+
+pub mod config;
+pub mod json;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (`1.5 MiB`).
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with adaptive precision.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+/// FNV-1a 64-bit hash — stable across runs/platforms (used to derive
+/// per-job RNG streams from names).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(12), "12 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert!(human_secs(2e-9).ends_with("ns"));
+        assert!(human_secs(2e-5).ends_with("µs"));
+        assert!(human_secs(0.02).ends_with("ms"));
+        assert!(human_secs(3.0).ends_with(" s"));
+        assert!(human_secs(300.0).ends_with("min"));
+    }
+
+    #[test]
+    fn fnv1a_stable() {
+        // Known FNV-1a vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a(b"layer0.key"), fnv1a(b"layer0.query"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Integration tests across the three layers: the Rust runtime loading and
+//! executing the AOT HLO artifacts (Layer 1 Pallas kernels + Layer 2 JAX
+//! model), the calibration/compression/eval pipeline, and end-to-end
+//! composition checks.
+//!
+//! These need `artifacts/` (run `make artifacts`); they are skipped — with
+//! a loud message — when it is missing so `cargo test` works pre-build.
+
+use std::path::Path;
+
+use odlri::calib::{calibrate, CalibConfig};
+use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::corpus;
+use odlri::eval;
+use odlri::model::{inject_outliers, ModelParams};
+use odlri::runtime::{Value, XlaRuntime};
+use odlri::tensor::Matrix;
+use odlri::train::{train, TrainConfig};
+use odlri::util::rng::Pcg64;
+
+// XlaRuntime holds a PJRT client (not Sync), so each test builds its own —
+// cheap next to the artifact compilations the tests do anyway.
+fn runtime() -> Option<XlaRuntime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaRuntime::open(dir).expect("opening runtime"))
+}
+
+macro_rules! need_rt {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+// ---------------------------------------------------------------- kernels
+
+#[test]
+fn kernel_quantize_matches_rust_quantizer() {
+    let rt = need_rt!();
+    let mut rng = Pcg64::new(1, 1);
+    let w = Matrix::randn(128, 128, 2.0, &mut rng);
+    let outs = rt
+        .exec("kernel_quantize", &[Value::from_matrix(&w)])
+        .expect("exec kernel_quantize");
+    let got = outs[0].to_matrix().unwrap();
+    // The Pallas kernel is 4-bit group-32 — identical semantics to the Rust
+    // UniformQuantizer(4, 32).
+    use odlri::quant::Quantizer as _;
+    let want = odlri::quant::UniformQuantizer::new(4, 32).quantize(&w).deq;
+    assert!(
+        got.max_abs_diff(&want) < 1e-4,
+        "pallas vs rust quantizer diff = {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn kernel_fused_qlr_matches_rust_matmul() {
+    let rt = need_rt!();
+    let mut rng = Pcg64::new(2, 1);
+    let q = Matrix::randn(128, 128, 1.0, &mut rng);
+    let l = Matrix::randn(128, 32, 1.0, &mut rng);
+    let r = Matrix::randn(32, 128, 1.0, &mut rng);
+    let x = Matrix::randn(128, 16, 1.0, &mut rng);
+    let outs = rt
+        .exec(
+            "kernel_fused_qlr",
+            &[
+                Value::from_matrix(&q),
+                Value::from_matrix(&l),
+                Value::from_matrix(&r),
+                Value::from_matrix(&x),
+            ],
+        )
+        .expect("exec kernel_fused_qlr");
+    let got = outs[0].to_matrix().unwrap();
+    let want = q.add(&l.dot(&r)).dot(&x);
+    assert!(got.rel_err(&want) < 1e-4, "rel err {}", got.rel_err(&want));
+}
+
+#[test]
+fn kernel_fwht_matches_rust_fwht() {
+    let rt = need_rt!();
+    let mut rng = Pcg64::new(3, 1);
+    let w = Matrix::randn(128, 128, 1.0, &mut rng);
+    let outs = rt
+        .exec("kernel_fwht", &[Value::from_matrix(&w)])
+        .expect("exec kernel_fwht");
+    let got = outs[0].to_matrix().unwrap();
+    let mut want = w.clone();
+    odlri::hadamard::fwht_rows(&mut want);
+    assert!(got.rel_err(&want) < 1e-4);
+}
+
+// ------------------------------------------------------------ model paths
+
+fn quick_train(rt: &XlaRuntime, steps: usize) -> ModelParams {
+    train(
+        &rt,
+        &TrainConfig {
+            family: "tl-7s".into(),
+            steps,
+            corpus_tokens: 120_000,
+            seed: 7,
+            log_every: 0,
+        },
+    )
+    .expect("training")
+    .params
+}
+
+#[test]
+fn forward_runs_and_is_finite() {
+    let rt = need_rt!();
+    let fam = rt.manifest.family("tl-7s").unwrap();
+    let params = ModelParams::init(fam, 5);
+    let (b, s) = (rt.manifest.batch, rt.manifest.seq);
+    let data = corpus::generate(corpus::Split::WikiSim, 50_000, 1);
+    let mut rng = Pcg64::new(4, 4);
+    let toks = corpus::sample_batch(&data, b, s, &mut rng);
+    let mut inputs = params.values.clone();
+    inputs.push(Value::from_vec_i32(vec![b, s], toks));
+    let outs = rt.exec("fwd_tl-7s", &inputs).expect("fwd");
+    let logits = outs[0].to_matrix_2d().unwrap();
+    assert_eq!(logits.shape(), (b * s, fam.vocab));
+    assert!(logits.is_finite());
+}
+
+#[test]
+fn training_reduces_loss_e2e() {
+    let rt = need_rt!();
+    let result = train(
+        &rt,
+        &TrainConfig {
+            family: "tl-7s".into(),
+            steps: 25,
+            corpus_tokens: 120_000,
+            seed: 3,
+            log_every: 0,
+        },
+    )
+    .expect("train");
+    let first = result.losses[0].1;
+    let last = result.losses.last().unwrap().1;
+    assert!(
+        last < first - 1.0,
+        "loss did not drop: {first} → {last}"
+    );
+}
+
+#[test]
+fn untrained_ppl_near_uniform() {
+    let rt = need_rt!();
+    let fam = rt.manifest.family("tl-7s").unwrap();
+    let params = ModelParams::init(fam, 6);
+    let ppl = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 6, 42).unwrap();
+    // Byte-uniform would be 256; random init is close (the corpus is
+    // lowercase ASCII, so logits are uninformative).
+    assert!(ppl > 60.0 && ppl < 600.0, "ppl={ppl}");
+}
+
+#[test]
+fn calibration_hessians_cover_all_projections() {
+    let rt = need_rt!();
+    let fam = rt.manifest.family("tl-7s").unwrap();
+    let params = ModelParams::init(fam, 8);
+    let hessians = calibrate(
+        &rt,
+        &params,
+        &CalibConfig {
+            batches: 2,
+            seed: 1,
+        },
+    )
+    .expect("calibrate");
+    assert_eq!(hessians.len(), fam.projections.len());
+    for name in &fam.projections {
+        let h = &hessians[name];
+        let in_dim = fam.param_shape(name).unwrap()[1];
+        assert_eq!(h.dim(), in_dim, "{name}");
+        assert!(h.samples > 0);
+        // PSD-ish: diagonal positive.
+        assert!(h.matrix().diag().iter().all(|&d| d >= 0.0), "{name}");
+    }
+}
+
+#[test]
+fn outlier_injection_preserves_model_function() {
+    // Logits before and after injection must match (function-preserving).
+    let rt = need_rt!();
+    let params = quick_train(&rt, 8);
+    let (b, s) = (rt.manifest.batch, rt.manifest.seq);
+    let data = corpus::generate(corpus::Split::WikiSim, 50_000, 2);
+    let mut rng = Pcg64::new(5, 5);
+    let toks = corpus::sample_batch(&data, b, s, &mut rng);
+
+    let run = |p: &ModelParams| {
+        let mut inputs = p.values.clone();
+        inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+        rt.exec("fwd_tl-7s", &inputs).unwrap()[0]
+            .to_matrix_2d()
+            .unwrap()
+    };
+    let before = run(&params);
+    let mut injected = params.clone();
+    inject_outliers(&mut injected, 4, 16.0, 11).unwrap();
+    let after = run(&injected);
+    assert!(
+        after.rel_err(&before) < 1e-3,
+        "outlier injection changed the function: rel err {}",
+        after.rel_err(&before)
+    );
+}
+
+#[test]
+fn fused_forward_matches_dense_forward() {
+    // The Layer-1 fused kernel inside the Layer-2 deploy graph, executed by
+    // Layer 3, must agree with the dense forward when Q+LR == W exactly.
+    let rt = need_rt!();
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, 12);
+    let (b, s) = (rt.manifest.batch, rt.manifest.seq);
+    let rank = rt.manifest.fused_rank;
+    let data = corpus::generate(corpus::Split::C4Sim, 50_000, 3);
+    let mut rng = Pcg64::new(6, 6);
+    let toks = corpus::sample_batch(&data, b, s, &mut rng);
+
+    // Dense logits.
+    let mut inputs = params.values.clone();
+    inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+    let dense = rt.exec("fwd_tl-7s", &inputs).unwrap()[0]
+        .to_matrix_2d()
+        .unwrap();
+
+    // Fused with Q = W − LR for random small LR.
+    let mut fused_inputs = params.values.clone();
+    for name in &fam.projections {
+        let w = params.get_matrix(name).unwrap();
+        let l = Matrix::randn(w.rows(), rank, 0.02, &mut rng);
+        let r = Matrix::randn(rank, w.cols(), 0.02, &mut rng);
+        let q = w.sub(&l.dot(&r));
+        fused_inputs.push(Value::from_matrix(&q));
+        fused_inputs.push(Value::from_matrix(&l));
+        fused_inputs.push(Value::from_matrix(&r));
+    }
+    fused_inputs.push(Value::from_vec_i32(vec![b, s], toks));
+    let fused = rt.exec("fwd_fused_tl-7s", &fused_inputs).unwrap()[0]
+        .to_matrix_2d()
+        .unwrap();
+    assert!(
+        fused.rel_err(&dense) < 5e-3,
+        "fused vs dense rel err {}",
+        fused.rel_err(&dense)
+    );
+}
+
+#[test]
+fn compress_then_eval_beats_random_and_tracks_fp32() {
+    // Tiny end-to-end: short train → calibrate → ODLRI compress → eval.
+    let rt = need_rt!();
+    let mut params = quick_train(&rt, 20);
+    inject_outliers(&mut params, 4, 16.0, 3).unwrap();
+    let hessians = calibrate(
+        &rt,
+        &params,
+        &CalibConfig {
+            batches: 2,
+            seed: 2,
+        },
+    )
+    .unwrap();
+    let cfg = PipelineConfig {
+        init: InitKind::Odlri,
+        rank: 8,
+        lr_bits: 16,
+        outer_iters: 3,
+        lplr_iters: 2,
+        workers: 4,
+        ..Default::default()
+    };
+    let out = CompressionPipeline::new(cfg).run(&params, &hessians).unwrap();
+    let applied = out.model.apply_to(&params).unwrap();
+
+    let ppl_fp = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 6, 42).unwrap();
+    let ppl_q = eval::perplexity(&rt, &applied, corpus::Split::WikiSim, 6, 42).unwrap();
+    // Compressed is worse than FP32 but far better than an untrained model.
+    let fam = rt.manifest.family("tl-7s").unwrap();
+    let random = ModelParams::init(fam, 99);
+    let ppl_rand = eval::perplexity(&rt, &random, corpus::Split::WikiSim, 6, 42).unwrap();
+    assert!(ppl_q >= ppl_fp * 0.99, "ppl_q={ppl_q} ppl_fp={ppl_fp}");
+    assert!(
+        ppl_q < ppl_rand * 0.5,
+        "compression destroyed the model: {ppl_q} vs random {ppl_rand}"
+    );
+}
+
+#[test]
+fn task_scoring_pipeline_runs() {
+    let rt = need_rt!();
+    let params = quick_train(&rt, 15);
+    for task in corpus::ALL_TASKS {
+        let score = eval::task_accuracy(&rt, &params, task, 16, 5).unwrap();
+        assert_eq!(score.items, 16);
+        assert!((0.0..=1.0).contains(&score.accuracy), "{task:?}");
+    }
+}
