@@ -1,36 +1,36 @@
-//! Serving example: a threaded batch server over the compressed model.
+//! Serving example: the threaded dynamic-batching server from
+//! [`odlri::serve`] over either forward path.
 //!
-//! Client threads submit single-sequence generation-scoring requests; the
-//! leader batches them up to the artifact's batch size (dynamic batching
-//! with a deadline, vLLM-router-style) and executes the `fwd_tl-7s`
-//! artifact. Reports p50/p95 latency and throughput.
+//! Client threads submit single-sequence scoring requests; the leader
+//! batches them up to the model's batch size (deadline-based dynamic
+//! batching, vLLM-router-style) and executes one forward per batch.
+//! Runs artifact-free on the native engine; add `--fused` to serve the
+//! bit-packed `(Q+LR)·x` engine instead of dense weights.
 //!
 //! ```bash
-//! cargo run --release --example serve -- 200   # number of requests
+//! cargo run --release --example serve -- 200           # dense, 200 requests
+//! cargo run --release --example serve -- 200 --fused   # packed fused engine
 //! ```
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
-
-use odlri::corpus;
+use odlri::eval::RuntimeForward;
+use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
-use odlri::runtime::{Value, XlaRuntime};
-use odlri::util::rng::Pcg64;
-
-struct Request {
-    tokens: Vec<i32>, // length = seq
-    done: mpsc::Sender<f32>, // mean NLL of the sequence (the "score")
-    submitted: Instant,
-}
+use odlri::runtime::Runtime;
+use odlri::serve::{run_batch_server, ServeConfig};
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::args()
-        .nth(1)
-        .and_then(|a| a.parse().ok())
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = argv
+        .iter()
+        .find_map(|a| a.parse().ok())
         .unwrap_or(120);
-    let rt = XlaRuntime::open(&odlri::runtime::default_artifact_dir())?;
+    let fused = argv.iter().any(|a| a == "--fused");
+
+    let rt = Runtime::open(&odlri::runtime::default_artifact_dir())?;
+    if rt.is_native() {
+        eprintln!("[serve] native engine (no XLA artifacts needed)");
+    }
     let fam = rt.manifest.family("tl-7s")?.clone();
-    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
 
     // Use trained weights if the e2e run produced them, else random init
     // (the serving path is identical either way).
@@ -38,104 +38,46 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|_| ModelParams::load(&fam, std::path::Path::new("runs/tl-7s.odw")).ok())
         .unwrap_or_else(|| ModelParams::init(&fam, 1));
-    rt.warm("fwd_tl-7s")?;
 
-    let (tx, rx) = mpsc::channel::<Request>();
-    let mut latencies: Vec<f64> = Vec::new();
-    let t_start = Instant::now();
+    let cfg = ServeConfig {
+        requests: n_requests,
+        clients: 4,
+        ..Default::default()
+    };
+    let report = if fused {
+        // Pack the projections at 8 bits (near-lossless) and serve the
+        // dequant-on-the-fly kernels — no dense W is ever materialized.
+        let fm = FusedModel::pack_dense(&params, 8, 64)?;
+        eprintln!(
+            "[serve] fused engine: {:.2} bits/weight packed ({} total)",
+            fm.avg_bits(),
+            odlri::util::human_bytes(fm.packed_bytes())
+        );
+        run_batch_server(&fm, &cfg)?
+    } else {
+        rt.warm("fwd_tl-7s")?;
+        let fwd = RuntimeForward {
+            rt: &rt,
+            params: &params,
+        };
+        run_batch_server(&fwd, &cfg)?
+    };
 
-    std::thread::scope(|s| -> anyhow::Result<()> {
-        // Client threads: each submits a burst of requests with jitter.
-        let n_clients = 4;
-        for c in 0..n_clients {
-            let tx = tx.clone();
-            s.spawn(move || {
-                let mut rng = Pcg64::new(c as u64, 77);
-                let data = corpus::generate(corpus::Split::C4Sim, 200_000, c as u64);
-                let per_client = n_requests / n_clients;
-                for _ in 0..per_client {
-                    let start = rng.below(data.len() - seq - 1);
-                    let tokens: Vec<i32> =
-                        data[start..start + seq].iter().map(|&b| b as i32).collect();
-                    let (dtx, drx) = mpsc::channel();
-                    tx.send(Request {
-                        tokens,
-                        done: dtx,
-                        submitted: Instant::now(),
-                    })
-                    .ok();
-                    // Wait for completion (closed-loop client).
-                    let _score = drx.recv().ok();
-                    std::thread::sleep(Duration::from_millis(rng.below(5) as u64));
-                }
-            });
-        }
-        drop(tx);
-
-        // Leader: dynamic batcher. Collect up to `batch` requests or 10 ms.
-        let deadline = Duration::from_millis(10);
-        let mut pending: Vec<Request> = Vec::new();
-        loop {
-            let req = if pending.is_empty() {
-                match rx.recv() {
-                    Ok(r) => Some(r),
-                    Err(_) => break, // all clients done
-                }
-            } else {
-                match rx.recv_timeout(deadline) {
-                    Ok(r) => Some(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
-                }
-            };
-            if let Some(r) = req {
-                pending.push(r);
-                if pending.len() < batch {
-                    continue;
-                }
-            }
-            if pending.is_empty() {
-                break;
-            }
-            // Build the batch (pad by repeating the first request).
-            let mut tokens = Vec::with_capacity(batch * seq);
-            for b in 0..batch {
-                let r = pending.get(b).unwrap_or(&pending[0]);
-                tokens.extend(&r.tokens);
-            }
-            let mut inputs = params.values.clone();
-            inputs.push(Value::from_vec_i32(vec![batch, seq], tokens));
-            let outs = rt.exec("fwd_tl-7s", &inputs)?;
-            let logits = outs[0].to_matrix_2d()?;
-            for (b, r) in pending.drain(..).enumerate() {
-                // Mean NLL over the sequence = the response payload.
-                let mut nll = 0f64;
-                for t in 0..seq - 1 {
-                    let row = logits.row(b * seq + t);
-                    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v)) as f64;
-                    let lse: f64 = row.iter().map(|&v| (v as f64 - mx).exp()).sum::<f64>().ln() + mx;
-                    nll += lse - row[r.tokens[t + 1] as usize] as f64;
-                }
-                latencies.push(r.submitted.elapsed().as_secs_f64());
-                r.done.send((nll / (seq - 1) as f64) as f32).ok();
-            }
-        }
-        Ok(())
-    })?;
-
-    let total = t_start.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = latencies.len();
+    let n = report.scores.len();
+    let seq = rt.manifest.seq;
     println!(
-        "served {n} requests in {total:.2}s  ({:.0} req/s, {:.0} tok/s)",
-        n as f64 / total,
-        (n * seq) as f64 / total
+        "served {n} requests in {:.2}s  ({:.0} req/s, {:.0} tok/s)",
+        report.wall_secs,
+        report.requests_per_sec(),
+        report.requests_per_sec() * seq as f64
     );
     println!(
-        "latency p50 = {:.1} ms   p95 = {:.1} ms   max = {:.1} ms",
-        latencies[n / 2] * 1e3,
-        latencies[(n as f64 * 0.95) as usize % n] * 1e3,
-        latencies[n - 1] * 1e3
+        "latency p50 = {:.1} ms   p95 = {:.1} ms   batches = {}",
+        report.p50_ms(),
+        report.p95_ms(),
+        report.batches
     );
+    let finite = report.scores.iter().filter(|s| s.is_finite()).count();
+    println!("finite scores: {finite}/{n}");
     Ok(())
 }

@@ -1,12 +1,14 @@
 //! Micro-benchmarks of the Rust compute substrate (the L3 hot paths the
-//! profiler pointed at: matmul, SVD, LDLQ, E8 rounding, FWHT, LPLR).
-//! Output format feeds EXPERIMENTS.md §Perf.
+//! profiler pointed at: matmul, SVD, LDLQ, E8 rounding, FWHT, LPLR) plus
+//! the fused packed `(Q+LR)·x` serving kernels vs the historical
+//! reconstruct-then-matmul path. Output format feeds EXPERIMENTS.md §Perf.
 
 use odlri::benchkit::{group, Bencher};
+use odlri::fused::FusedQlrMatrix;
 use odlri::hessian::Hessian;
 use odlri::linalg::{svd_jacobi, truncated_svd};
-use odlri::lowrank::{lplr, whitened_svd_lr, LowRankConfig};
-use odlri::quant::{E8Lattice, Quantizer, UniformQuantizer};
+use odlri::lowrank::{lplr, whitened_svd_lr, LowRankConfig, LrPair};
+use odlri::quant::{E8Lattice, PackedMatrix, Quantizer, UniformQuantizer};
 use odlri::tensor::{matmul, set_matmul_threads, Matrix};
 use odlri::util::rng::Pcg64;
 
@@ -95,4 +97,35 @@ fn main() {
         opt.run(&w, &hess, &odlri::decompose::Initializer::Odlri { k: 4 })
     });
     println!("{}", s.line());
+
+    group("fused (Q+LR)·x vs reconstruct-then-matmul");
+    // Serving-shaped problem: a 512×256 projection, rank-16 correction,
+    // X = (in_dim, batch) activations. The fused kernel dequantizes Q on
+    // the fly and applies L·R as two skinny matmuls; the reconstruct path
+    // (what the eval stack used to do per matrix) densifies Q + L·R first.
+    let (m, n, rank) = (512usize, 256usize, 16usize);
+    let wq = Matrix::randn(m, n, 1.0, &mut rng);
+    let lr = LrPair {
+        l: Matrix::randn(m, rank, 0.05, &mut rng),
+        r: Matrix::randn(rank, n, 0.05, &mut rng),
+    };
+    for &bits in &[2u32, 4] {
+        let packed = PackedMatrix::pack(&wq, bits, 64);
+        let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
+        for &batch in &[1usize, 8, 32, 96] {
+            let x = Matrix::randn(n, batch, 1.0, &mut rng);
+            let flops = 2.0 * (m * n * batch) as f64;
+            let s = Bencher::new(&format!("reconstruct_{m}x{n}_q{bits}b_x{batch}"))
+                .fast()
+                .run(|| {
+                    let dense = fm.q.unpack().add(&fm.l.dot(&fm.r));
+                    dense.dot(&x)
+                });
+            println!("{}", s.line_throughput(flops, "flop"));
+            let s = Bencher::new(&format!("fused_{m}x{n}_q{bits}b_x{batch}"))
+                .fast()
+                .run(|| fm.matmul(&x));
+            println!("{}", s.line_throughput(flops, "flop"));
+        }
+    }
 }

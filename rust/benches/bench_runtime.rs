@@ -1,26 +1,28 @@
-//! Runtime benches: HLO artifact dispatch latency, dense vs fused-kernel
-//! forward, train-step throughput. Needs `artifacts/` (skips politely
-//! otherwise).
+//! Runtime benches: artifact dispatch latency, dense vs fused-kernel
+//! forward, packed-engine forward, train-step throughput. Runs on the XLA
+//! backend when artifacts are present (and the `xla` feature is on),
+//! otherwise on the native engine — no setup required.
 
 use odlri::benchkit::{group, Bencher};
 use odlri::corpus;
+use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
-use odlri::runtime::{Value, XlaRuntime};
+use odlri::runtime::{Runtime, Value};
 use odlri::tensor::Matrix;
 use odlri::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let dir = odlri::runtime::default_artifact_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("SKIP bench_runtime: artifacts/ not built (run `make artifacts`)");
-        return Ok(());
-    }
-    let rt = XlaRuntime::open(&dir)?;
+    let rt = Runtime::open(&dir)?;
+    println!(
+        "engine: {}",
+        if rt.is_native() { "native" } else { "xla/pjrt" }
+    );
     let fam = rt.manifest.family("tl-7s")?.clone();
     let (b, s) = (rt.manifest.batch, rt.manifest.seq);
     let mut rng = Pcg64::new(1, 1);
 
-    group("kernel dispatch (Pallas artifacts through PJRT)");
+    group("kernel dispatch");
     rt.warm("kernel_fused_qlr")?;
     let q = Matrix::randn(128, 128, 1.0, &mut rng);
     let l = Matrix::randn(128, 32, 1.0, &mut rng);
@@ -39,10 +41,10 @@ fn main() -> anyhow::Result<()> {
         .unwrap()
     });
     println!("{}", stats.line());
-    // Rust-native fused equivalent for comparison (dispatch overhead view).
-    let stats = Bencher::new("rust_fused_equivalent").fast().run(|| {
-        q.dot(&x).add(&l.dot(&r.dot(&x)))
-    });
+    // Direct call without the Value boundary (dispatch overhead view).
+    let stats = Bencher::new("rust_fused_equivalent")
+        .fast()
+        .run(|| odlri::fused::qlr_matmul(&q, &l, &r, &x));
     println!("{}", stats.line());
 
     group("model forward (B=8, S=96)");
@@ -57,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{}", stats.line_throughput((b * s) as f64, "tok"));
 
-    group("fused deploy forward (every projection via the Pallas kernel)");
+    group("fused deploy forward (every projection via the fused kernel)");
     rt.warm("fwd_fused_tl-7s")?;
     let rank = rt.manifest.fused_rank;
     let mut fused_inputs = params.values.clone();
@@ -72,6 +74,19 @@ fn main() -> anyhow::Result<()> {
         rt.exec("fwd_fused_tl-7s", &fused_inputs).unwrap()
     });
     println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+
+    group("packed fused engine (bit-packed Q, dequant on the fly)");
+    for bits in [2u32, 8] {
+        let fm = FusedModel::pack_dense(&params, bits, 64)?;
+        let stats = Bencher::new(&format!("fused_model_q{bits}b"))
+            .iters(3, 20)
+            .run(|| fm.forward(&toks, b, s).unwrap());
+        println!(
+            "{}  [{:.2} bits/weight]",
+            stats.line_throughput((b * s) as f64, "tok"),
+            fm.avg_bits()
+        );
+    }
 
     group("train step (B=8, S=97)");
     rt.warm("train_tl-7s")?;

@@ -75,6 +75,10 @@ fn toy_pipeline_inputs() -> (ModelParams, BTreeMap<String, Hessian>) {
         d_model: 128,
         n_layers: 1,
         d_ff: 352,
+        n_heads: 4,
+        n_kv_heads: 4,
+        mlp: "swiglu".into(),
+        rope_theta: 10000.0,
     };
     let mut params = ModelParams::init(&fam, 1);
     let mut hessians = BTreeMap::new();

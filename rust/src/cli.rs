@@ -130,18 +130,24 @@ COMMANDS
   compress     Compress a trained model (CALDERA / +ODLRI)
                  --family tl-7s --init odlri|caldera|lr-first --rank 64
                  --lr-bits 4 --scheme e8|uniform|mxint --bits 2 --iters 15
+                 --fused (also write runs/<family>.odf, the packed container)
+                 --fused-out PATH --fused-bits N (packing width for Q)
   eval         Perplexity + zero-shot proxy accuracy of a weight file
                  --family tl-7s --weights runs/tl-7s.odw
+                 --fused (packed engine; default weights runs/<family>.odf)
   pipeline     train → calibrate → compress → eval, end to end
                  --family tl-7s --steps 300 --rank 64
   exp <id>     Regenerate a paper table/figure into results/
                  ids: table1 fig2 fig3 fig4 fig5 table2 table3 table4
                       table5 table8 table9 table10 table11 t1norms all
-  serve-bench  Batched generation latency/throughput on a compressed model
-  artifacts    List available AOT artifacts
+  serve-bench  Dynamic-batching serving latency/throughput
+                 --requests 32 --clients 4 --deadline-ms 10
+                 --fused --weights runs/<family>.odf (packed (Q+LR)·x engine)
+  artifacts    List available artifact entry points
   help         This message
 
-Global flags: --artifacts DIR (default ./artifacts, or $ODLRI_ARTIFACTS)
+Global flags: --artifacts DIR (default ./artifacts, or $ODLRI_ARTIFACTS).
+Without artifacts every command runs on the built-in native engine.
 ";
 
 #[cfg(test)]

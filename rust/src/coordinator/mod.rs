@@ -251,6 +251,10 @@ mod tests {
             d_model: 24,
             n_layers: 1,
             d_ff: 40,
+            n_heads: 4,
+            n_kv_heads: 4,
+            mlp: "swiglu".into(),
+            rope_theta: 10000.0,
         };
         let mut params = ModelParams::init(&fam, 7);
         let mut hessians = BTreeMap::new();

@@ -1,0 +1,771 @@
+//! Native fused `(Q + L·R)·x` inference engine over **packed** weights —
+//! the serving hot path.
+//!
+//! The compression pipeline produces `W ≈ Q + L·R`, where `Q` is a low-bit
+//! quantized matrix and `L·R` a skinny low-rank correction. The historical
+//! eval path called `CompressedMatrix::reconstruct()`, densifying every
+//! layer to f32 before any matmul — which throws away the entire memory
+//! and bandwidth win at inference time. This module keeps the structure on
+//! the hot path:
+//!
+//! * [`FusedQlrMatrix`] holds `Q` as a [`PackedMatrix`] (b-bit codes +
+//!   per-group scales) plus the `L`/`R` factors, and computes
+//!   `y = Q·x + L·(R·x)` with blocked, multithreaded kernels that
+//!   dequantize `Q` **on the fly**, one row/panel at a time — the full
+//!   dense `Q + L·R` is never materialized.
+//! * [`FusedModel`] is a whole compressed transformer in that form: dense
+//!   embeddings/norms plus one `FusedQlrMatrix` per projection, driving the
+//!   shared native forward ([`crate::runtime::native::forward_with`]).
+//! * [`qlr_matmul`]/[`qlr_matmul_t`] are the dense-`Q` fused helpers used
+//!   by the `kernel_fused_qlr` and `fwd_fused_*` artifact semantics.
+//!
+//! Numerical contract (property-tested below, per quantizer): every fused
+//! kernel matches the dense `reconstruct()`-then-matmul reference within
+//! 1e-4 relative error, and raw round-to-nearest uniform output round-trips
+//! the packed grid exactly. Pipeline `Q` (LDLQ + incoherence rotation) is
+//! not grid-aligned, so the deployment default repacks at 8 bits.
+//!
+//! Threading reuses [`crate::exec::parallel_map`] over output-row blocks
+//! and the panel/blocking idiom of [`crate::tensor::matmul`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec;
+use crate::lowrank::LrPair;
+use crate::model::{CompressedModel, ModelParams};
+use crate::quant::PackedMatrix;
+use crate::runtime::native::{forward_with, ParamView, ProjectionOps};
+use crate::runtime::{FamilySpec, Value, NATIVE_BATCH, NATIVE_SEQ};
+use crate::tensor::{axpy, matmul_nt, Matrix};
+
+/// Dense-`Q` fused product `(Q + L·R)·X` — two skinny matmuls instead of a
+/// dense `Q + L·R` materialization. `x` is (in, cols).
+pub fn qlr_matmul(q: &Matrix, l: &Matrix, r: &Matrix, x: &Matrix) -> Matrix {
+    let mut y = q.dot(x);
+    if l.cols() > 0 {
+        y.add_assign(&l.dot(&r.dot(x)));
+    }
+    y
+}
+
+/// Dense-`Q` fused product `X·(Q + L·R)ᵀ = X·Qᵀ + (X·Rᵀ)·Lᵀ` for
+/// activations `x` of shape (tokens, in).
+pub fn qlr_matmul_t(x: &Matrix, q: &Matrix, l: &Matrix, r: &Matrix) -> Matrix {
+    let mut y = matmul_nt(x, q);
+    if l.cols() > 0 {
+        let xr = matmul_nt(x, r); // (tokens, rank)
+        y.add_assign(&matmul_nt(&xr, l)); // (tokens, out)
+    }
+    y
+}
+
+fn fused_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// A compressed projection kept in deployment form: packed `Q` plus `L`/`R`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FusedQlrMatrix {
+    pub q: PackedMatrix,
+    pub l: Matrix,
+    pub r: Matrix,
+}
+
+impl FusedQlrMatrix {
+    pub fn new(q: PackedMatrix, lr: LrPair) -> Result<FusedQlrMatrix> {
+        if lr.l.rows() != q.rows || lr.r.cols() != q.cols || lr.l.cols() != lr.r.rows() {
+            bail!(
+                "fused factor shapes L{:?} R{:?} incompatible with Q {}x{}",
+                lr.l.shape(),
+                lr.r.shape(),
+                q.rows,
+                q.cols
+            );
+        }
+        Ok(FusedQlrMatrix {
+            q,
+            l: lr.l,
+            r: lr.r,
+        })
+    }
+
+    /// Pack a dense quantizer output `q_dense` at `bits`/`group` and attach
+    /// the factors. For *raw round-to-nearest* uniform-quantizer output at
+    /// matching bits/group the packing is exact (same absmax grid;
+    /// property-tested). `Q` that went through LDLQ error feedback or the
+    /// Hadamard incoherence rotation is no longer on that grid — pack it
+    /// with headroom (8 bits) or accept a Hessian-free re-quantization.
+    pub fn from_dense(q_dense: &Matrix, lr: &LrPair, bits: u32, group: usize) -> FusedQlrMatrix {
+        FusedQlrMatrix {
+            q: PackedMatrix::pack(q_dense, bits, group),
+            l: lr.l.clone(),
+            r: lr.r.clone(),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.q.rows
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.q.cols
+    }
+
+    pub fn rank(&self) -> usize {
+        self.l.cols()
+    }
+
+    /// Dense `Q + L·R` (tests/debugging only — the kernels never call this).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut w = self.q.unpack();
+        if self.rank() > 0 {
+            w.add_assign(&self.l.dot(&self.r));
+        }
+        w
+    }
+
+    /// Serialized footprint in bytes (packed codes + scales + factors).
+    pub fn byte_size(&self) -> usize {
+        4 + self.q.byte_size() + 8 + (self.l.as_slice().len() + self.r.as_slice().len()) * 4 + 16
+    }
+
+    /// Effective bits per weight of the deployment form.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.byte_size() as f64 * 8.0 / (self.q.rows * self.q.cols) as f64
+    }
+
+    /// `y = (Q + L·R)·X` for `x` of shape (in, cols): blocked over output
+    /// rows, each block dequantizing its `Q` rows on the fly.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let (m, n) = (self.q.rows, self.q.cols);
+        assert_eq!(x.rows(), n, "fused matmul inner dims");
+        let cols = x.cols();
+        let mut out = Matrix::zeros(m, cols);
+        let nblocks = self.row_blocks(cols);
+        let block = m.div_ceil(nblocks);
+        let blocks: Vec<(usize, Matrix)> = exec::parallel_map(nblocks, fused_workers(), |bi| {
+            let r0 = (bi * block).min(m);
+            let r1 = ((bi + 1) * block).min(m);
+            let mut part = Matrix::zeros(r1 - r0, cols);
+            let mut wrow = vec![0f32; n];
+            for i in r0..r1 {
+                self.q.dequant_row_into(i, &mut wrow);
+                let orow = part.row_mut(i - r0);
+                for (j, &wv) in wrow.iter().enumerate() {
+                    if wv != 0.0 {
+                        axpy(wv, x.row(j), orow);
+                    }
+                }
+            }
+            (r0, part)
+        });
+        for (r0, part) in blocks {
+            for i in 0..part.rows() {
+                out.row_mut(r0 + i).copy_from_slice(part.row(i));
+            }
+        }
+        if self.rank() > 0 {
+            let rx = self.r.dot(x); // (rank, cols)
+            out.add_assign(&self.l.dot(&rx));
+        }
+        out
+    }
+
+    /// `y = X·(Q + L·R)ᵀ` for activations `x` of shape (tokens, in) — the
+    /// transformer layout. Blocked over output columns: each block decodes
+    /// a panel of `Q` rows and reuses the cache-blocked [`matmul_nt`].
+    pub fn matmul_t(&self, x: &Matrix) -> Matrix {
+        let (m, n) = (self.q.rows, self.q.cols);
+        assert_eq!(x.cols(), n, "fused matmul_t inner dims");
+        let t = x.rows();
+        let mut out = Matrix::zeros(t, m);
+        let nblocks = self.row_blocks(t);
+        let block = m.div_ceil(nblocks);
+        let blocks: Vec<(usize, Matrix)> = exec::parallel_map(nblocks, fused_workers(), |bi| {
+            let r0 = (bi * block).min(m);
+            let r1 = ((bi + 1) * block).min(m);
+            let mut panel = Matrix::zeros(r1 - r0, n);
+            for i in r0..r1 {
+                self.q.dequant_row_into(i, panel.row_mut(i - r0));
+            }
+            (r0, matmul_nt(x, &panel)) // (t, r1-r0)
+        });
+        for (c0, part) in blocks {
+            for i in 0..t {
+                out.row_mut(i)[c0..c0 + part.cols()].copy_from_slice(part.row(i));
+            }
+        }
+        if self.rank() > 0 {
+            let xr = matmul_nt(x, &self.r); // (t, rank)
+            out.add_assign(&matmul_nt(&xr, &self.l));
+        }
+        out
+    }
+
+    /// `y = (Q + L·R)·x` for a single vector.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.q.cols);
+        let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+        self.matmul(&xm).into_vec()
+    }
+
+    /// Block count heuristic: parallelize only when the decode+FMA work is
+    /// worth the thread fan-out (mirrors `tensor::matmul`'s threshold).
+    fn row_blocks(&self, cols: usize) -> usize {
+        let work = 2 * self.q.rows * self.q.cols * cols.max(1);
+        if work < 4_000_000 {
+            1
+        } else {
+            (fused_workers() * 4).min(self.q.rows.max(1))
+        }
+    }
+
+    // ---- serialization ----
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(b"ODQ1")?;
+        self.q.write_to(w)?;
+        self.l.write_to(w)?;
+        self.r.write_to(w)?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<FusedQlrMatrix> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"ODQ1" {
+            bail!("bad fused-matrix magic {magic:?}");
+        }
+        let q = PackedMatrix::read_from(r)?;
+        let l = Matrix::read_from(r)?;
+        let rm = Matrix::read_from(r)?;
+        FusedQlrMatrix::new(q, LrPair { l, r: rm })
+    }
+}
+
+/// A whole compressed model in deployment form: dense embed/norms/unembed
+/// plus one packed fused projection per compressible matrix. Implements
+/// [`ProjectionOps`] (native forward) and [`crate::eval::Forward`]
+/// (perplexity/task eval and batch serving) — `reconstruct()` is never on
+/// the inference path.
+pub struct FusedModel {
+    pub family: FamilySpec,
+    /// Uncompressed non-projection parameters (embed/norms/unembed);
+    /// projection slots are zeroed — the fused forward never reads them and
+    /// the `.odf` container never stores them.
+    dense: ModelParams,
+    /// `dense` resolved to matrices once, so serving batches borrow instead
+    /// of re-copying every parameter per forward.
+    dense_mats: Vec<Matrix>,
+    pub mats: BTreeMap<String, FusedQlrMatrix>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl FusedModel {
+    /// Build the deployment container: replace the projection slots of the
+    /// dense params with **empty** placeholders (the fused forward reads
+    /// projections only from the packed `mats`, so no dense projection
+    /// memory stays resident) and resolve the rest to matrices once.
+    fn assemble(
+        family: FamilySpec,
+        base: &ModelParams,
+        mats: BTreeMap<String, FusedQlrMatrix>,
+    ) -> Result<FusedModel> {
+        let mut dense = base.clone();
+        for name in &family.projections {
+            let idx = family.param_index(name)?;
+            dense.values[idx] = Value::from_vec_f32(vec![0], Vec::new());
+        }
+        let dense_mats = dense
+            .values
+            .iter()
+            .map(|v| v.to_matrix())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FusedModel {
+            family,
+            dense,
+            dense_mats,
+            mats,
+            batch: NATIVE_BATCH,
+            seq: NATIVE_SEQ,
+        })
+    }
+
+    /// Deployment form of a pipeline result: packs every projection's `Q`
+    /// at `bits`/`group` and keeps the factors skinny.
+    pub fn from_compressed(
+        model: &CompressedModel,
+        base: &ModelParams,
+        bits: u32,
+        group: usize,
+    ) -> Result<FusedModel> {
+        if base.family.name != model.family.name {
+            bail!(
+                "compressed model family '{}' != params family '{}'",
+                model.family.name,
+                base.family.name
+            );
+        }
+        let mut mats = BTreeMap::new();
+        for (name, cm) in &model.matrices {
+            mats.insert(name.clone(), cm.to_fused(bits, group));
+        }
+        FusedModel::assemble(model.family.clone(), base, mats)
+    }
+
+    /// Pack an *uncompressed* model's projections directly (rank-0 factors)
+    /// — near-lossless at 8 bits; used for fused serving without a
+    /// compression run.
+    pub fn pack_dense(base: &ModelParams, bits: u32, group: usize) -> Result<FusedModel> {
+        let fam = base.family.clone();
+        let mut mats = BTreeMap::new();
+        for name in &fam.projections {
+            let w = base.get_matrix(name)?;
+            let lr = LrPair::zeros(w.rows(), w.cols(), 0);
+            mats.insert(name.clone(), FusedQlrMatrix::from_dense(&w, &lr, bits, group));
+        }
+        FusedModel::assemble(fam, base, mats)
+    }
+
+    /// Override the forward block shape (defaults mirror the artifacts).
+    pub fn with_shape(mut self, batch: usize, seq: usize) -> FusedModel {
+        self.batch = batch;
+        self.seq = seq;
+        self
+    }
+
+    /// Logits for a row-major (batch, seq) token block → (batch·seq, vocab).
+    pub fn forward(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<Matrix> {
+        let view = ParamView::from_slice(&self.family, &self.dense_mats)?;
+        forward_with(&self.family, &view, self, tokens, batch, seq, None)
+    }
+
+    /// Total deployment footprint of the packed projections.
+    pub fn packed_bytes(&self) -> usize {
+        self.mats.values().map(|m| m.byte_size()).sum()
+    }
+
+    /// Mean bits/weight across the packed projections.
+    pub fn avg_bits(&self) -> f64 {
+        let mut bits = 0.0;
+        let mut weights = 0.0;
+        for m in self.mats.values() {
+            bits += m.byte_size() as f64 * 8.0;
+            weights += (m.q.rows * m.q.cols) as f64;
+        }
+        if weights == 0.0 {
+            0.0
+        } else {
+            bits / weights
+        }
+    }
+
+    // ---- serialization (`.odf` container) ----
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(b"ODF1")?;
+        let nb = self.family.name.as_bytes();
+        f.write_all(&(nb.len() as u32).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(self.batch as u32).to_le_bytes())?;
+        f.write_all(&(self.seq as u32).to_le_bytes())?;
+        // Dense section: only the non-projection params — the projections
+        // live exclusively in packed form, so the container is genuinely
+        // small.
+        let keep: Vec<usize> = (0..self.family.params.len())
+            .filter(|&i| !self.family.projections.contains(&self.family.params[i].0))
+            .collect();
+        f.write_all(&(keep.len() as u32).to_le_bytes())?;
+        for &i in &keep {
+            let (pname, shape) = &self.family.params[i];
+            let nb = pname.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &x in self.dense.values[i].f32_data()? {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        f.write_all(&(self.mats.len() as u32).to_le_bytes())?;
+        for (name, m) in &self.mats {
+            let nb = name.as_bytes();
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            m.write_to(&mut f)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(family: &FamilySpec, path: &Path) -> Result<FusedModel> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ODF1" {
+            bail!("bad fused-model magic");
+        }
+        let mut b4 = [0u8; 4];
+        let mut next_u32 = |f: &mut std::fs::File| -> Result<u32> {
+            f.read_exact(&mut b4)?;
+            Ok(u32::from_le_bytes(b4))
+        };
+        let nlen = next_u32(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        if name != family.name {
+            bail!("fused model is for family '{name}', expected '{}'", family.name);
+        }
+        let batch = next_u32(&mut f)? as usize;
+        let seq = next_u32(&mut f)? as usize;
+        // Dense section: empty placeholders for projection slots (never
+        // read — no transient dense-model allocation), zero-init for the
+        // rest, then fill the stored params.
+        let mut values: Vec<Value> = family
+            .params
+            .iter()
+            .map(|(pname, sh)| {
+                if family.projections.contains(pname) {
+                    Value::from_vec_f32(vec![0], Vec::new())
+                } else {
+                    Value::from_vec_f32(sh.clone(), vec![0.0; sh.iter().product()])
+                }
+            })
+            .collect();
+        let mut filled = vec![false; family.params.len()];
+        let ndense = next_u32(&mut f)? as usize;
+        for _ in 0..ndense {
+            let nlen = next_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let pname = String::from_utf8(nb)?;
+            let ndim = next_u32(&mut f)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(next_u32(&mut f)? as usize);
+            }
+            let idx = family.param_index(&pname)?;
+            if dims != family.params[idx].1 {
+                bail!("fused container shape mismatch for '{pname}'");
+            }
+            let count: usize = dims.iter().product();
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            values[idx] = Value::from_vec_f32(dims, data);
+            filled[idx] = true;
+        }
+        // A structurally-valid but truncated container must not load into a
+        // silently-garbage model: every non-projection param is required.
+        for (i, (pname, _)) in family.params.iter().enumerate() {
+            if !family.projections.contains(pname) && !filled[i] {
+                bail!("fused container is missing dense param '{pname}'");
+            }
+        }
+        let dense = ModelParams {
+            family: family.clone(),
+            values,
+        };
+        let count = next_u32(&mut f)? as usize;
+        let mut mats = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = next_u32(&mut f)? as usize;
+            let mut nb = vec![0u8; nlen];
+            f.read_exact(&mut nb)?;
+            let mname = String::from_utf8(nb)?;
+            let fm = FusedQlrMatrix::read_from(&mut f)?;
+            let shape = family.param_shape(&mname)?;
+            if shape != &[fm.out_dim(), fm.in_dim()][..] {
+                bail!("fused matrix '{mname}' shape mismatch");
+            }
+            mats.insert(mname, fm);
+        }
+        for pname in &family.projections {
+            if !mats.contains_key(pname) {
+                bail!("fused container is missing packed projection '{pname}'");
+            }
+        }
+        let loaded = FusedModel::assemble(family.clone(), &dense, mats)?;
+        Ok(FusedModel {
+            batch,
+            seq,
+            ..loaded
+        })
+    }
+}
+
+impl ProjectionOps for FusedModel {
+    fn project(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        match self.mats.get(name) {
+            Some(m) => Ok(m.matmul_t(x)),
+            None => bail!("no fused projection '{name}'"),
+        }
+    }
+}
+
+impl crate::eval::Forward for FusedModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn logits(&self, tokens: Vec<i32>) -> Result<Matrix> {
+        self.forward(&tokens, self.batch, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::svd_lr;
+    use crate::model::CompressedMatrix;
+    use crate::quant::{make_quantizer, UniformQuantizer, Quantizer as _};
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    /// Quantize → factorize-residual → pack, returning both the pipeline's
+    /// dense `CompressedMatrix` and the packed fused form.
+    fn random_compressed(
+        rng: &mut Pcg64,
+        scheme: &str,
+        m: usize,
+        n: usize,
+        rank: usize,
+        bits: u32,
+        group: usize,
+    ) -> (CompressedMatrix, FusedQlrMatrix) {
+        let w = testing::gen_matrix(rng, m, n);
+        let quant = make_quantizer(scheme, bits, group).unwrap();
+        let qout = quant.quantize(&w);
+        let lr = if rank == 0 {
+            LrPair::zeros(m, n, 0)
+        } else {
+            let resid = w.sub(&qout.deq);
+            svd_lr(&resid, rank.min(m).min(n), rng)
+        };
+        let cm = CompressedMatrix {
+            q: qout.deq,
+            lr,
+            quant_scale: qout.scale,
+            final_act_err: 0.0,
+        };
+        // Pack at 8 bits so every scheme's Q survives with headroom; the
+        // uniform-exact case is covered separately below.
+        let fm = cm.to_fused(8, group);
+        (cm, fm)
+    }
+
+    #[test]
+    fn fused_kernels_match_dense_reconstruct_per_quantizer() {
+        testing::quick("fused-vs-dense", |rng| {
+            let m = testing::gen_dim(rng, 4, 48);
+            let n = testing::gen_dim(rng, 4, 48);
+            let rank = rng.below(5); // 0..=4
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let bits = 2 + rng.below(3) as u32;
+            let group = [8usize, 16, 32][rng.below(3)];
+            let (_cm, fm) = random_compressed(rng, scheme, m, n, rank, bits, group);
+            let dense = fm.reconstruct();
+            let cols = 1 + rng.below(12);
+            let x = testing::gen_matrix(rng, n, cols);
+
+            let fused = fm.matmul(&x);
+            let reference = dense.dot(&x);
+            assert!(
+                fused.rel_err(&reference) < 1e-4,
+                "{scheme} matmul rel err {}",
+                fused.rel_err(&reference)
+            );
+
+            let xt = testing::gen_matrix(rng, cols, n);
+            let fused_t = fm.matmul_t(&xt);
+            let reference_t = matmul_nt(&xt, &dense);
+            assert!(
+                fused_t.rel_err(&reference_t) < 1e-4,
+                "{scheme} matmul_t rel err {}",
+                fused_t.rel_err(&reference_t)
+            );
+        });
+    }
+
+    #[test]
+    fn uniform_packing_is_exact_end_to_end() {
+        // For the uniform quantizer at matching bits/group, pack(Q) lands on
+        // the identical grid: the fused path reproduces the pipeline's dense
+        // reconstruct()-then-matmul bit-for-bit (up to f32 summation order).
+        testing::quick("fused-uniform-exact", |rng| {
+            let m = testing::gen_dim(rng, 4, 40);
+            let n = testing::gen_dim(rng, 4, 40);
+            let bits = 2 + rng.below(3) as u32;
+            let group = [8usize, 32][rng.below(2)];
+            let rank = rng.below(4);
+            let w = testing::gen_matrix(rng, m, n);
+            let quant = UniformQuantizer::new(bits, group);
+            let qout = quant.quantize(&w);
+            let lr = if rank == 0 {
+                LrPair::zeros(m, n, 0)
+            } else {
+                svd_lr(&w.sub(&qout.deq), rank.min(m).min(n), rng)
+            };
+            let cm = CompressedMatrix {
+                q: qout.deq,
+                lr,
+                quant_scale: qout.scale,
+                final_act_err: 0.0,
+            };
+            let fm = cm.to_fused(bits, group);
+            // Exact up to one f32 scale-recompute rounding per group.
+            let tol = 1e-5 * cm.q.abs_max().max(1.0);
+            assert!(
+                fm.q.unpack().max_abs_diff(&cm.q) <= tol,
+                "uniform pack not exact: {} > {tol}",
+                fm.q.unpack().max_abs_diff(&cm.q)
+            );
+            let x = testing::gen_matrix(rng, n, 1 + rng.below(8));
+            let fused = fm.matmul(&x);
+            let reference = cm.reconstruct().dot(&x);
+            assert!(
+                fused.rel_err(&reference) < 1e-4,
+                "rel err {}",
+                fused.rel_err(&reference)
+            );
+        });
+    }
+
+    #[test]
+    fn dense_qlr_helpers_match_materialized() {
+        testing::quick("qlr-dense-helpers", |rng| {
+            let m = testing::gen_dim(rng, 2, 32);
+            let n = testing::gen_dim(rng, 2, 32);
+            let rank = rng.below(5);
+            let q = testing::gen_matrix(rng, m, n);
+            let l = Matrix::randn(m, rank, 1.0, rng);
+            let r = Matrix::randn(rank, n, 1.0, rng);
+            let w = if rank > 0 { q.add(&l.dot(&r)) } else { q.clone() };
+            let x = testing::gen_matrix(rng, n, 1 + rng.below(6));
+            assert!(qlr_matmul(&q, &l, &r, &x).rel_err(&w.dot(&x)) < 1e-4);
+            let xt = testing::gen_matrix(rng, 1 + rng.below(6), n);
+            assert!(qlr_matmul_t(&xt, &q, &l, &r).rel_err(&matmul_nt(&xt, &w)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul_column() {
+        let mut rng = Pcg64::new(31, 1);
+        let (_cm, fm) = random_compressed(&mut rng, "uniform", 24, 16, 3, 4, 8);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32) * 0.25 - 2.0).collect();
+        let y = fm.matvec(&x);
+        let xm = Matrix::from_vec(16, 1, x);
+        let ym = fm.matmul(&xm);
+        assert_eq!(y.len(), 24);
+        for i in 0..24 {
+            assert!((y[i] - ym.at(i, 0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn large_blocked_path_matches_reference() {
+        // Big enough to cross the threading threshold so the parallel
+        // block assembly is exercised.
+        let mut rng = Pcg64::new(32, 1);
+        let (_cm, fm) = random_compressed(&mut rng, "uniform", 320, 256, 8, 4, 64);
+        let x = Matrix::randn(256, 32, 1.0, &mut rng);
+        let dense = fm.reconstruct();
+        assert!(fm.matmul(&x).rel_err(&dense.dot(&x)) < 1e-4);
+        let xt = Matrix::randn(48, 256, 1.0, &mut rng);
+        assert!(fm.matmul_t(&xt).rel_err(&matmul_nt(&xt, &dense)) < 1e-4);
+    }
+
+    #[test]
+    fn fused_matrix_serialization_roundtrip() {
+        let mut rng = Pcg64::new(33, 1);
+        let (_cm, fm) = random_compressed(&mut rng, "mxint", 20, 28, 4, 3, 16);
+        let mut buf = Vec::new();
+        fm.write_to(&mut buf).unwrap();
+        let back = FusedQlrMatrix::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(fm, back);
+        assert!(fm.byte_size() > 0 && fm.bits_per_weight() > 0.0);
+    }
+
+    #[test]
+    fn fused_model_forward_matches_repacked_dense() {
+        // pack_dense at 8 bits, then compare the packed-kernel forward with
+        // a dense forward over the *reconstructed* weights: identical math,
+        // different kernels.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 21);
+        let fm = FusedModel::pack_dense(&params, 8, 32).unwrap();
+        let mut dense_params = params.clone();
+        for name in &fam.projections {
+            dense_params
+                .set_matrix(name, &fm.mats[name].reconstruct())
+                .unwrap();
+        }
+        let (b, s) = (2usize, 6usize);
+        let mut rng = Pcg64::new(22, 2);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(fam.vocab) as i32).collect();
+        let fused_logits = fm.forward(&tokens, b, s).unwrap();
+        let view = ParamView::from_params(&dense_params).unwrap();
+        let dense_logits = forward_with(
+            &fam,
+            &view,
+            &crate::runtime::native::DenseProj { view: &view },
+            &tokens,
+            b,
+            s,
+            None,
+        )
+        .unwrap();
+        assert!(
+            fused_logits.rel_err(&dense_logits) < 1e-4,
+            "rel err {}",
+            fused_logits.rel_err(&dense_logits)
+        );
+        // 8-bit codes + scales + per-matrix headers (the micro matrices are
+        // tiny, so header overhead is a large fraction).
+        assert!(fm.avg_bits() > 8.0 && fm.avg_bits() < 40.0, "{}", fm.avg_bits());
+    }
+
+    #[test]
+    fn fused_model_serialization_roundtrip() {
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let fm = FusedModel::pack_dense(&params, 4, 16).unwrap().with_shape(2, 6);
+        let dir = std::env::temp_dir().join("odlri_test_odf");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("micro.odf");
+        fm.save(&path).unwrap();
+        let back = FusedModel::load(&fam, &path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.batch, 2);
+        assert_eq!(back.seq, 6);
+        assert_eq!(back.mats.len(), fm.mats.len());
+        for (name, m) in &fm.mats {
+            assert_eq!(m, &back.mats[name], "{name}");
+        }
+        let mut rng = Pcg64::new(24, 2);
+        let tokens: Vec<i32> = (0..12).map(|_| rng.below(fam.vocab) as i32).collect();
+        let a = fm.forward(&tokens, 2, 6).unwrap();
+        let b = back.forward(&tokens, 2, 6).unwrap();
+        assert!(a.max_abs_diff(&b) == 0.0);
+    }
+}

@@ -10,17 +10,30 @@
 //!   coordinator, model evaluation (perplexity + zero-shot proxies), and a
 //!   full experiment harness regenerating every table/figure of the paper.
 //! * **Layer 2** — a tiny Llama-style transformer authored in JAX and
-//!   AOT-lowered to HLO text artifacts, executed here through PJRT
-//!   ([`runtime`]).
-//! * **Layer 1** — Pallas kernels (fused `(Q+LR)·x`, per-group quantize,
-//!   Walsh–Hadamard) lowered inside the same artifacts.
+//!   AOT-lowered to HLO text artifacts, executed through PJRT when the
+//!   `xla` feature is enabled ([`runtime`]).
+//! * **Layer 1** — fused `(Q+LR)·x`, per-group quantize, and Walsh–Hadamard
+//!   kernels. The Pallas lowerings live inside the AOT artifacts; the
+//!   native equivalents live in [`fused`] and [`runtime::native`].
 //!
-//! Python never runs at pipeline/eval time: after `make artifacts`, the
-//! `odlri` binary is self-contained.
+//! **Artifact-free by default:** every artifact entry point (`fwd_*`,
+//! `fwd_fused_*`, `train_*`, `capture_*`, `kernel_*`) has a native Rust
+//! implementation, so training, compression, evaluation, serving, benches,
+//! and the full test suite run with no artifacts and no Python. When
+//! `artifacts/` exists and the crate is built with `--features xla`, the
+//! same calls execute the HLO artifacts instead.
+//!
+//! **Serving hot path:** [`fused::FusedQlrMatrix`] keeps `Q` bit-packed
+//! (dequant-on-the-fly, blocked + multithreaded) and applies the low-rank
+//! correction as two skinny matmuls — `CompressedMatrix::reconstruct()` is
+//! never called at inference time. [`serve`] runs a dynamic-batching
+//! threaded server over either path.
 //!
 //! Entry points: [`decompose::JointOptimizer`] (the algorithm),
 //! [`coordinator::CompressionPipeline`] (whole-model compression),
-//! [`eval`] (metrics), `odlri exp <id>` (paper reproductions).
+//! [`fused::FusedModel`] (deployment form), [`eval`] (metrics),
+//! `odlri exp <id>` (paper reproductions), `odlri serve-bench --fused`
+//! (packed serving).
 
 pub mod benchkit;
 pub mod calib;
@@ -31,6 +44,7 @@ pub mod decompose;
 pub mod eval;
 pub mod exec;
 pub mod exp;
+pub mod fused;
 pub mod hadamard;
 pub mod hessian;
 pub mod linalg;
@@ -39,6 +53,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 pub mod train;

@@ -1,4 +1,8 @@
-//! `odlri` — leader binary: train / calibrate / compress / eval / exp.
+//! `odlri` — leader binary: train / calibrate / compress / eval / serve / exp.
+//!
+//! Runs artifact-free on the native engine by default; with `--features
+//! xla` and an `artifacts/` directory the same commands execute the AOT
+//! HLO artifacts through PJRT.
 
 use std::path::PathBuf;
 
@@ -6,11 +10,12 @@ use anyhow::{bail, Result};
 
 use odlri::cli::{Args, HELP};
 use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
-use odlri::corpus;
 use odlri::eval;
 use odlri::exp;
+use odlri::fused::FusedModel;
 use odlri::model::{inject_outliers, ModelParams};
-use odlri::runtime::XlaRuntime;
+use odlri::runtime::Runtime;
+use odlri::serve::{run_batch_server, ServeConfig};
 use odlri::train::{train, TrainConfig};
 
 fn main() {
@@ -36,8 +41,12 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     }
 }
 
-fn open_runtime(args: &Args) -> Result<XlaRuntime> {
-    XlaRuntime::open(&artifacts_dir(args))
+fn open_runtime(args: &Args) -> Result<Runtime> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    if rt.is_native() {
+        eprintln!("[runtime] native engine (no XLA artifacts)");
+    }
+    Ok(rt)
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -106,7 +115,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_model(rt: &XlaRuntime, args: &Args, family: &str) -> Result<ModelParams> {
+fn load_model(rt: &Runtime, args: &Args, family: &str) -> Result<ModelParams> {
     let fam = rt.manifest.family(family)?;
     let weights = args.str("weights", &format!("runs/{family}.odw"));
     ModelParams::load(fam, &PathBuf::from(weights))
@@ -202,6 +211,16 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     })
 }
 
+/// Bits for packing `Q` into the fused container. Defaults to a
+/// near-lossless 8-bit repack for every scheme: the pipeline's `Q` is the
+/// LDLQ- and (by default) Hadamard-rotated result, so it does not sit on
+/// the packed format's absmax grid even for `--scheme uniform` — packing
+/// at `q_bits` would silently re-quantize it without the Hessian. Use
+/// `--fused-bits N` to trade size for fidelity explicitly.
+fn fused_pack_bits(args: &Args, _cfg: &PipelineConfig) -> Result<u32> {
+    Ok(args.usize("fused-bits", 8)? as u32)
+}
+
 fn cmd_compress(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
@@ -229,20 +248,53 @@ fn cmd_compress(args: &Args) -> Result<()> {
     ));
     applied.save(&path)?;
     println!("wrote {}", path.display());
+    // Deployment container for the fused serving path.
+    if args.switch("fused") || !args.str("fused-out", "").is_empty() {
+        let bits = fused_pack_bits(args, &cfg)?;
+        let fm = out.model.to_fused(&params, bits, cfg.q_group)?;
+        // Canonical serving artifact path — matches the default that
+        // `eval --fused` / `serve-bench --fused` look for.
+        let fpath = PathBuf::from(args.str("fused-out", &format!("runs/{family}.odf")));
+        fm.save(&fpath)?;
+        println!(
+            "wrote {} (packed Q at {bits} bits: {:.2} bits/weight, {} packed)",
+            fpath.display(),
+            fm.avg_bits(),
+            odlri::util::human_bytes(fm.packed_bytes())
+        );
+    }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
-    let params = load_model(&rt, args, &family)?;
-    let report = eval::evaluate(
-        &rt,
-        &params,
-        args.usize("windows", 40)?,
-        args.usize("task-items", 64)?,
-        args.u64("seed", 1000)?,
-    )?;
+    let report = if args.switch("fused") {
+        // Packed fused engine: weights point at a `.odf` container.
+        let fam = rt.manifest.family(&family)?;
+        let weights = args.str("weights", &format!("runs/{family}.odf"));
+        let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
+        eprintln!(
+            "[eval] fused engine: {:.2} bits/weight over {} packed projections",
+            fm.avg_bits(),
+            fm.mats.len()
+        );
+        eval::evaluate_of(
+            &fm,
+            args.usize("windows", 40)?,
+            args.usize("task-items", 64)?,
+            args.u64("seed", 1000)?,
+        )?
+    } else {
+        let params = load_model(&rt, args, &family)?;
+        eval::evaluate(
+            &rt,
+            &params,
+            args.usize("windows", 40)?,
+            args.usize("task-items", 64)?,
+            args.u64("seed", 1000)?,
+        )?
+    };
     println!("ppl wiki-sim = {:.4}", report.ppl_wiki);
     println!("ppl c4-sim   = {:.4}", report.ppl_c4);
     for t in &report.tasks {
@@ -329,30 +381,45 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
-    let params = load_model(&rt, args, &family)?;
-    let requests = args.usize("requests", 32)?;
-    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
-    let data = corpus::generate(corpus::Split::C4Sim, 100_000, 3);
-    let mut rng = odlri::util::rng::Pcg64::new(9, 9);
-    rt.warm(&format!("fwd_{family}"))?;
-    let t0 = std::time::Instant::now();
-    let mut lat = Vec::new();
-    for _ in 0..requests {
-        let toks = corpus::sample_batch(&data, batch, seq, &mut rng);
-        let t = std::time::Instant::now();
-        let mut inputs = params.values.clone();
-        inputs.push(odlri::runtime::Value::from_vec_i32(vec![batch, seq], toks));
-        rt.exec(&format!("fwd_{family}"), &inputs)?;
-        lat.push(t.elapsed().as_secs_f64());
-    }
-    let total = t0.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let toks_per_req = (batch * seq) as f64;
+    let cfg = ServeConfig {
+        requests: args.usize("requests", 32)?,
+        clients: args.usize("clients", 4)?,
+        deadline: std::time::Duration::from_millis(args.u64("deadline-ms", 10)?),
+        seed: args.u64("seed", 9)?,
+    };
+    let report = if args.switch("fused") {
+        let fam = rt.manifest.family(&family)?;
+        let weights = args.str("weights", &format!("runs/{family}.odf"));
+        let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
+        eprintln!(
+            "[serve-bench] fused engine ({:.2} bits/weight packed)",
+            fm.avg_bits()
+        );
+        run_batch_server(&fm, &cfg)?
+    } else {
+        let params = load_model(&rt, args, &family)?;
+        rt.warm(&format!("fwd_{family}"))?;
+        let fwd = eval::RuntimeForward {
+            rt: &rt,
+            params: &params,
+        };
+        run_batch_server(&fwd, &cfg)?
+    };
+    let seq = rt.manifest.seq;
     println!(
-        "{requests} batched fwd requests: p50={:.1} ms  p95={:.1} ms  throughput={:.0} tok/s",
-        lat[lat.len() / 2] * 1e3,
-        lat[(lat.len() as f64 * 0.95) as usize % lat.len()] * 1e3,
-        requests as f64 * toks_per_req / total
+        "served {} requests in {} batches over {:.2}s  ({:.0} req/s, {:.0} tok/s)",
+        report.scores.len(),
+        report.batches,
+        report.wall_secs,
+        report.requests_per_sec(),
+        report.requests_per_sec() * seq as f64
     );
+    println!(
+        "latency p50 = {:.1} ms   p95 = {:.1} ms",
+        report.p50_ms(),
+        report.p95_ms()
+    );
+    let finite = report.scores.iter().filter(|s| s.is_finite()).count();
+    println!("finite scores: {finite}/{}", report.scores.len());
     Ok(())
 }

@@ -72,10 +72,8 @@ impl ModelParams {
             .sum()
     }
 
-    /// Write to the `.odw` weight-store format.
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
+    /// Write the `.odw` weight-store format to any writer.
+    pub fn write_to(&self, f: &mut impl Write) -> Result<()> {
         f.write_all(b"ODW1")?;
         f.write_all(&(self.values.len() as u32).to_le_bytes())?;
         for ((name, shape), v) in self.family.params.iter().zip(&self.values) {
@@ -93,10 +91,16 @@ impl ModelParams {
         Ok(())
     }
 
-    /// Load from `.odw`, validating against the family layout.
-    pub fn load(family: &FamilySpec, path: &Path) -> Result<ModelParams> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
+    /// Write to the `.odw` weight-store format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        self.write_to(&mut f)
+    }
+
+    /// Read the `.odw` format from any reader, validating against the
+    /// family layout.
+    pub fn read_from(family: &FamilySpec, f: &mut impl Read) -> Result<ModelParams> {
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != b"ODW1" {
@@ -145,6 +149,13 @@ impl ModelParams {
             family: family.clone(),
             values,
         })
+    }
+
+    /// Load from `.odw`, validating against the family layout.
+    pub fn load(family: &FamilySpec, path: &Path) -> Result<ModelParams> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        ModelParams::read_from(family, &mut f)
     }
 }
 
@@ -214,8 +225,17 @@ pub struct CompressedMatrix {
 }
 
 impl CompressedMatrix {
+    /// Densify `Q + L·R`. Offline/debug only — the inference path uses
+    /// [`CompressedMatrix::to_fused`] and never materializes this.
     pub fn reconstruct(&self) -> Matrix {
         self.q.add(&self.lr.product())
+    }
+
+    /// Deployment form: pack `Q` at `bits`/`group` (exact for the uniform
+    /// scheme at matching parameters) and keep the factors skinny. The
+    /// fused kernels then compute `Q·x + L·(R·x)` without densifying.
+    pub fn to_fused(&self, bits: u32, group: usize) -> crate::fused::FusedQlrMatrix {
+        crate::fused::FusedQlrMatrix::from_dense(&self.q, &self.lr, bits, group)
     }
 }
 
@@ -230,9 +250,21 @@ pub struct CompressedModel {
 }
 
 impl CompressedModel {
+    /// Deployment form: every projection packed for the fused `(Q+LR)·x`
+    /// engine, dense params carried alongside for embed/norms/unembed.
+    pub fn to_fused(
+        &self,
+        base: &ModelParams,
+        bits: u32,
+        group: usize,
+    ) -> Result<crate::fused::FusedModel> {
+        crate::fused::FusedModel::from_compressed(self, base, bits, group)
+    }
+
     /// Model parameters with every projection replaced by its
     /// reconstruction (weight-only compression ⇒ numerically identical to
-    /// running the decomposed form).
+    /// running the decomposed form). Offline export path — serving should
+    /// prefer [`CompressedModel::to_fused`].
     pub fn apply_to(&self, base: &ModelParams) -> Result<ModelParams> {
         let mut out = base.clone();
         for (name, cm) in &self.matrices {
@@ -303,6 +335,10 @@ mod tests {
             d_model: 16,
             n_layers: 1,
             d_ff: 24,
+            n_heads: 4,
+            n_kv_heads: 4,
+            mlp: "swiglu".into(),
+            rope_theta: 10000.0,
         }
     }
 

@@ -60,20 +60,29 @@ impl PackedMatrix {
 
     /// Dequantize to dense f32.
     pub fn unpack(&self) -> Matrix {
-        let qmax = ((1i32 << (self.bits - 1)) - 1).max(1);
-        let gpr = self.cols.div_ceil(self.group_size);
         let mut m = Matrix::zeros(self.rows, self.cols);
-        let mut bitpos = 0usize;
         for i in 0..self.rows {
-            for j in 0..self.cols {
-                let code = read_bits(&self.codes, bitpos, self.bits) as i32;
-                bitpos += self.bits as usize;
-                let q = code - qmax;
-                let s = self.scales[i * gpr + (j / self.group_size).min(gpr - 1)];
-                *m.at_mut(i, j) = q as f32 * s;
-            }
+            self.dequant_row_into(i, m.row_mut(i));
         }
         m
+    }
+
+    /// Dequantize row `i` into `out` (length = `cols`) without touching any
+    /// other row — the fused `(Q+LR)·x` kernels stream rows/panels through
+    /// this so the dense matrix is never materialized. Uses a sequential
+    /// bit-stream reader (one shift/mask per code instead of a per-bit
+    /// loop).
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        assert!(i < self.rows, "row {i} out of range");
+        assert_eq!(out.len(), self.cols, "dequant_row_into length");
+        let qmax = ((1i32 << (self.bits - 1)) - 1).max(1);
+        let gpr = self.cols.div_ceil(self.group_size);
+        let mut reader = BitReader::at(&self.codes, i * self.cols * self.bits as usize);
+        for (j, slot) in out.iter_mut().enumerate() {
+            let code = reader.take(self.bits) as i32;
+            let s = self.scales[i * gpr + (j / self.group_size).min(gpr - 1)];
+            *slot = (code - qmax) as f32 * s;
+        }
     }
 
     /// Serialized byte size (codes + scales + header).
@@ -143,6 +152,59 @@ impl PackedMatrix {
     }
 }
 
+/// Sequential LSB-first bit-stream reader over the packed code buffer.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next byte to refill from.
+    byte: usize,
+    /// Bit accumulator (LSB-aligned) and its fill level.
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    /// Position the reader at an absolute bit offset.
+    fn at(buf: &'a [u8], bitpos: usize) -> BitReader<'a> {
+        let byte = bitpos / 8;
+        let skip = (bitpos % 8) as u32;
+        let mut r = BitReader {
+            buf,
+            byte,
+            acc: 0,
+            nbits: 0,
+        };
+        if skip > 0 {
+            r.refill(skip);
+            r.acc >>= skip;
+            r.nbits -= skip;
+        }
+        r
+    }
+
+    #[inline]
+    fn refill(&mut self, want: u32) {
+        while self.nbits < want {
+            let b = if self.byte < self.buf.len() {
+                self.buf[self.byte]
+            } else {
+                0
+            };
+            self.byte += 1;
+            self.acc |= (b as u64) << self.nbits;
+            self.nbits += 8;
+        }
+    }
+
+    #[inline]
+    fn take(&mut self, n: u32) -> u32 {
+        self.refill(n);
+        let v = (self.acc & ((1u64 << n) - 1)) as u32;
+        self.acc >>= n;
+        self.nbits -= n;
+        v
+    }
+}
+
 fn write_bits(buf: &mut [u8], bitpos: usize, nbits: u32, value: u32) {
     for b in 0..nbits {
         let bit = (value >> b) & 1;
@@ -153,22 +215,24 @@ fn write_bits(buf: &mut [u8], bitpos: usize, nbits: u32, value: u32) {
     }
 }
 
-fn read_bits(buf: &[u8], bitpos: usize, nbits: u32) -> u32 {
-    let mut v = 0u32;
-    for b in 0..nbits {
-        let pos = bitpos + b as usize;
-        if buf[pos / 8] & (1 << (pos % 8)) != 0 {
-            v |= 1 << b;
-        }
-    }
-    v
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testing;
     use crate::util::rng::Pcg64;
+
+    /// Bit-at-a-time reference reader (the original implementation) used to
+    /// cross-check the streaming [`BitReader`].
+    fn read_bits(buf: &[u8], bitpos: usize, nbits: u32) -> u32 {
+        let mut v = 0u32;
+        for b in 0..nbits {
+            let pos = bitpos + b as usize;
+            if buf[pos / 8] & (1 << (pos % 8)) != 0 {
+                v |= 1 << b;
+            }
+        }
+        v
+    }
 
     #[test]
     fn pack_unpack_matches_uniform_quantizer() {
@@ -220,5 +284,97 @@ mod tests {
         for (i, &v) in vals.iter().enumerate() {
             assert_eq!(read_bits(&buf, i * 3, 3), v);
         }
+    }
+
+    #[test]
+    fn bit_reader_matches_reference_at_any_offset() {
+        let mut rng = Pcg64::new(200, 1);
+        let buf: Vec<u8> = (0..64).map(|_| rng.below(256) as u8).collect();
+        for bits in [2u32, 3, 4, 5, 7, 8] {
+            for start in 0..16 {
+                let mut reader = BitReader::at(&buf, start);
+                let mut pos = start;
+                for _ in 0..40 {
+                    assert_eq!(
+                        reader.take(bits),
+                        read_bits(&buf, pos, bits),
+                        "bits={bits} start={start} pos={pos}"
+                    );
+                    pos += bits as usize;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_bit_widths_with_tails() {
+        // 2/3/4/8 bits × shapes whose widths are NOT multiples of the group
+        // size (tail groups) and whose code streams are NOT byte-aligned.
+        testing::quick("pack-roundtrip-widths", |rng| {
+            let m = testing::gen_dim(rng, 1, 9);
+            let n = testing::gen_dim(rng, 1, 77);
+            let bits = [2u32, 3, 4, 8][rng.below(4)];
+            let group = [3usize, 5, 16, 32][rng.below(4)];
+            let w = testing::gen_matrix(rng, m, n);
+            let p = PackedMatrix::pack(&w, bits, group);
+            let deq = p.unpack();
+            // Packing the dequantized output again is a fixed point.
+            let p2 = PackedMatrix::pack(&deq, bits, group);
+            let tol = 1e-5 * w.abs_max().max(1.0);
+            assert!(
+                p2.unpack().max_abs_diff(&deq) <= tol,
+                "pack not idempotent at {bits} bits group {group}"
+            );
+            // And the serialized form round-trips bit-exactly.
+            let mut buf = Vec::new();
+            p.write_to(&mut buf).unwrap();
+            let back = PackedMatrix::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(p, back);
+            assert!(back.unpack().max_abs_diff(&deq) == 0.0);
+        });
+    }
+
+    #[test]
+    fn dequant_row_matches_unpack() {
+        testing::quick("dequant-row", |rng| {
+            let m = testing::gen_dim(rng, 1, 12);
+            let n = testing::gen_dim(rng, 1, 50);
+            let bits = [2u32, 3, 4, 8][rng.below(4)];
+            let w = testing::gen_matrix(rng, m, n);
+            let p = PackedMatrix::pack(&w, bits, 7);
+            let dense = p.unpack();
+            let mut row = vec![0f32; n];
+            for i in 0..m {
+                p.dequant_row_into(i, &mut row);
+                assert_eq!(&row[..], dense.row(i), "row {i}");
+            }
+        });
+    }
+
+    /// Golden-bytes check: the on-disk format must not silently drift.
+    /// Hand-assembled: W = [3, -1, 2, 0] at 3 bits, group 4 ⇒ scale
+    /// = absmax/qmax = 3/3 = 1.0, codes (q+3) = [6, 2, 5, 3], packed
+    /// LSB-first into 0x56, 0x07.
+    #[test]
+    fn serialized_golden_bytes() {
+        let w = Matrix::from_vec(1, 4, vec![3.0, -1.0, 2.0, 0.0]);
+        let p = PackedMatrix::pack(&w, 3, 4);
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let expect: Vec<u8> = [
+            &b"ODP1"[..],              // magic
+            &1u32.to_le_bytes()[..],   // rows
+            &4u32.to_le_bytes()[..],   // cols
+            &3u32.to_le_bytes()[..],   // bits
+            &4u32.to_le_bytes()[..],   // group_size
+            &2u32.to_le_bytes()[..],   // ncodes
+            &[0x56u8, 0x07][..],       // codes
+            &1u32.to_le_bytes()[..],   // nscales
+            &1.0f32.to_le_bytes()[..], // scale
+        ]
+        .concat();
+        assert_eq!(buf, expect, "packed on-disk format drifted");
+        // And it decodes back to the exact input (all values on-grid).
+        assert_eq!(p.unpack(), w);
     }
 }

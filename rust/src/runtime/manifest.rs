@@ -1,4 +1,7 @@
-//! Typed view over `artifacts/manifest.json` (written by aot.py).
+//! Typed view over `artifacts/manifest.json` (written by aot.py), plus the
+//! built-in family table and the synthesized **native manifest** used when
+//! no artifacts are present (the artifact-free fallback executes the same
+//! artifact names through [`crate::runtime::native`]).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,7 +18,25 @@ pub struct IoSpec {
     pub dtype: String,
 }
 
-/// One artifact (HLO module) description.
+impl IoSpec {
+    fn f32(name: &str, shape: Vec<usize>) -> IoSpec {
+        IoSpec {
+            name: name.to_string(),
+            shape,
+            dtype: "float32".into(),
+        }
+    }
+
+    fn i32(name: &str, shape: Vec<usize>) -> IoSpec {
+        IoSpec {
+            name: name.to_string(),
+            shape,
+            dtype: "int32".into(),
+        }
+    }
+}
+
+/// One artifact (HLO module or native-engine entry point) description.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
     pub file: String,
@@ -23,7 +44,7 @@ pub struct ArtifactSpec {
     pub outputs: Vec<IoSpec>,
 }
 
-/// One model family's parameter layout.
+/// One model family's parameter layout and architecture knobs.
 #[derive(Clone, Debug)]
 pub struct FamilySpec {
     pub name: String,
@@ -33,6 +54,11 @@ pub struct FamilySpec {
     pub d_model: usize,
     pub n_layers: usize,
     pub d_ff: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    /// `"swiglu"` (silu(gate)·up) or `"geglu"` (gelu(gate)·up, Gemma-style).
+    pub mlp: String,
+    pub rope_theta: f32,
 }
 
 impl FamilySpec {
@@ -56,6 +82,94 @@ impl FamilySpec {
     pub fn is_norm(name: &str) -> bool {
         name.ends_with("ln1") || name.ends_with("ln2") || name.ends_with("ln_f")
     }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    pub fn is_geglu(&self) -> bool {
+        self.mlp == "geglu"
+    }
+
+    /// The five built-in tiny families (mirrors `python/compile/model.py`).
+    pub fn builtin_names() -> [&'static str; 5] {
+        ["tl-7s", "tl-13s", "tl3-8s", "tm-7s", "tg-2s"]
+    }
+
+    /// Construct a built-in family spec by name.
+    pub fn builtin(name: &str) -> Option<FamilySpec> {
+        let (vocab, d_model, n_layers, n_heads, n_kv_heads, d_ff, mlp) = match name {
+            "tl-7s" => (256, 128, 4, 4, 4, 352, "swiglu"),
+            "tl-13s" => (256, 192, 5, 6, 6, 512, "swiglu"),
+            "tl3-8s" => (384, 128, 4, 4, 2, 384, "swiglu"),
+            "tm-7s" => (256, 128, 4, 4, 2, 448, "swiglu"),
+            "tg-2s" => (256, 96, 3, 4, 4, 320, "geglu"),
+            _ => return None,
+        };
+        Some(FamilySpec::build(
+            name, vocab, d_model, n_layers, n_heads, n_kv_heads, d_ff, mlp,
+        ))
+    }
+
+    /// Build a family spec with the canonical Llama-style parameter layout
+    /// (embed, per-layer [ln1 wq wk wv wo ln2 wgate wup wdown], ln_f,
+    /// unembed) — the exact order every artifact expects.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        name: &str,
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        d_ff: usize,
+        mlp: &str,
+    ) -> FamilySpec {
+        assert!(n_heads > 0 && d_model % n_heads == 0, "d_model % n_heads");
+        assert!(
+            n_kv_heads > 0 && n_heads % n_kv_heads == 0,
+            "n_heads % n_kv_heads"
+        );
+        let head_dim = d_model / n_heads;
+        let kv_dim = n_kv_heads * head_dim;
+        let mut params: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![vocab, d_model])];
+        let mut projections = Vec::with_capacity(7 * n_layers);
+        for i in 0..n_layers {
+            let p = format!("layer{i}.");
+            params.push((format!("{p}ln1"), vec![d_model]));
+            params.push((format!("{p}wq"), vec![d_model, d_model]));
+            params.push((format!("{p}wk"), vec![kv_dim, d_model]));
+            params.push((format!("{p}wv"), vec![kv_dim, d_model]));
+            params.push((format!("{p}wo"), vec![d_model, d_model]));
+            params.push((format!("{p}ln2"), vec![d_model]));
+            params.push((format!("{p}wgate"), vec![d_ff, d_model]));
+            params.push((format!("{p}wup"), vec![d_ff, d_model]));
+            params.push((format!("{p}wdown"), vec![d_model, d_ff]));
+            for w in ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"] {
+                projections.push(format!("{p}{w}"));
+            }
+        }
+        params.push(("ln_f".into(), vec![d_model]));
+        params.push(("unembed".into(), vec![vocab, d_model]));
+        FamilySpec {
+            name: name.to_string(),
+            params,
+            projections,
+            vocab,
+            d_model,
+            n_layers,
+            d_ff,
+            n_heads,
+            n_kv_heads,
+            mlp: mlp.to_string(),
+            rope_theta: 10000.0,
+        }
+    }
 }
 
 /// The full manifest.
@@ -67,6 +181,11 @@ pub struct Manifest {
     pub seq: usize,
     pub fused_rank: usize,
 }
+
+/// Batch/sequence/fused-rank the native engine mirrors from aot.py.
+pub const NATIVE_BATCH: usize = 8;
+pub const NATIVE_SEQ: usize = 96;
+pub const NATIVE_FUSED_RANK: usize = 32;
 
 impl Manifest {
     pub fn load(path: &Path) -> Result<Manifest> {
@@ -126,6 +245,24 @@ impl Manifest {
                 .iter()
                 .map(|p| Ok(p.as_str()?.to_string()))
                 .collect::<Result<Vec<_>>>()?;
+            let d_model = fam.req("d_model")?.as_usize()?;
+            let n_heads = match fam.get("n_heads") {
+                Some(v) => v.as_usize()?,
+                None => (d_model / 32).max(1),
+            };
+            let n_kv_heads = match fam.get("n_kv_heads") {
+                Some(v) => v.as_usize()?,
+                None => n_heads,
+            };
+            let mlp = fam
+                .get("mlp")
+                .and_then(|v| v.as_str().ok())
+                .unwrap_or("swiglu")
+                .to_string();
+            let rope_theta = match fam.get("rope_theta") {
+                Some(v) => v.as_f64()? as f32,
+                None => 10000.0,
+            };
             families.insert(
                 name.clone(),
                 FamilySpec {
@@ -133,9 +270,13 @@ impl Manifest {
                     params,
                     projections,
                     vocab: fam.req("vocab")?.as_usize()?,
-                    d_model: fam.req("d_model")?.as_usize()?,
+                    d_model,
                     n_layers: fam.req("n_layers")?.as_usize()?,
                     d_ff: fam.req("d_ff")?.as_usize()?,
+                    n_heads,
+                    n_kv_heads,
+                    mlp,
+                    rope_theta,
                 },
             );
         }
@@ -146,6 +287,160 @@ impl Manifest {
             seq: j.req("seq")?.as_usize()?,
             fused_rank: j.req("fused_rank")?.as_usize()?,
         })
+    }
+
+    /// Synthesize the manifest the native engine serves when no artifact
+    /// directory exists: all five built-in families with `fwd_*`,
+    /// `fwd_fused_*`, `train_*`, `capture_*` entry points plus the three
+    /// standalone kernels — identical names, shapes, and semantics to the
+    /// AOT-lowered artifacts.
+    pub fn native() -> Manifest {
+        let (batch, seq, fused_rank) = (NATIVE_BATCH, NATIVE_SEQ, NATIVE_FUSED_RANK);
+        let mut artifacts = BTreeMap::new();
+        let mut families = BTreeMap::new();
+        for name in FamilySpec::builtin_names() {
+            let fam = FamilySpec::builtin(name).expect("builtin family");
+            let pspecs: Vec<IoSpec> = fam
+                .params
+                .iter()
+                .map(|(n, s)| IoSpec::f32(n, s.clone()))
+                .collect();
+            let bs = batch * seq;
+
+            // fwd: params + tokens → logits
+            let mut inputs = pspecs.clone();
+            inputs.push(IoSpec::i32("tokens", vec![batch, seq]));
+            artifacts.insert(
+                format!("fwd_{name}"),
+                ArtifactSpec {
+                    file: "<native>".into(),
+                    inputs,
+                    outputs: vec![IoSpec::f32("logits", vec![batch, seq, fam.vocab])],
+                },
+            );
+
+            // fwd_fused: params + (Q, L, R) per projection + tokens → logits
+            let mut inputs = pspecs.clone();
+            for proj in &fam.projections {
+                let shape = fam.param_shape(proj).expect("projection shape");
+                inputs.push(IoSpec::f32(&format!("{proj}.q"), shape.to_vec()));
+                inputs.push(IoSpec::f32(
+                    &format!("{proj}.l"),
+                    vec![shape[0], fused_rank],
+                ));
+                inputs.push(IoSpec::f32(
+                    &format!("{proj}.r"),
+                    vec![fused_rank, shape[1]],
+                ));
+            }
+            inputs.push(IoSpec::i32("tokens", vec![batch, seq]));
+            artifacts.insert(
+                format!("fwd_fused_{name}"),
+                ArtifactSpec {
+                    file: "<native>".into(),
+                    inputs,
+                    outputs: vec![IoSpec::f32("logits", vec![batch, seq, fam.vocab])],
+                },
+            );
+
+            // train: params + m + v + step + tokens → params' + m' + v' + loss
+            let mut inputs = pspecs.clone();
+            for suffix in ["m", "v"] {
+                for (n, s) in &fam.params {
+                    inputs.push(IoSpec::f32(&format!("{n}.{suffix}"), s.clone()));
+                }
+            }
+            inputs.push(IoSpec::f32("step", vec![]));
+            inputs.push(IoSpec::i32("tokens", vec![batch, seq + 1]));
+            let mut outputs = pspecs.clone();
+            for suffix in ["m", "v"] {
+                for (n, s) in &fam.params {
+                    outputs.push(IoSpec::f32(&format!("{n}.{suffix}"), s.clone()));
+                }
+            }
+            outputs.push(IoSpec::f32("loss", vec![]));
+            artifacts.insert(
+                format!("train_{name}"),
+                ArtifactSpec {
+                    file: "<native>".into(),
+                    inputs,
+                    outputs,
+                },
+            );
+
+            // capture: params + tokens → 4 activation matrices per layer,
+            // each (in_dim, batch·seq) with columns as samples.
+            let mut inputs = pspecs.clone();
+            inputs.push(IoSpec::i32("tokens", vec![batch, seq]));
+            let mut outputs = Vec::with_capacity(4 * fam.n_layers);
+            for layer in 0..fam.n_layers {
+                outputs.push(IoSpec::f32(
+                    &format!("layer{layer}.attn_in"),
+                    vec![fam.d_model, bs],
+                ));
+                outputs.push(IoSpec::f32(
+                    &format!("layer{layer}.attn_ctx"),
+                    vec![fam.d_model, bs],
+                ));
+                outputs.push(IoSpec::f32(
+                    &format!("layer{layer}.mlp_in"),
+                    vec![fam.d_model, bs],
+                ));
+                outputs.push(IoSpec::f32(
+                    &format!("layer{layer}.mlp_mid"),
+                    vec![fam.d_ff, bs],
+                ));
+            }
+            artifacts.insert(
+                format!("capture_{name}"),
+                ArtifactSpec {
+                    file: "<native>".into(),
+                    inputs,
+                    outputs,
+                },
+            );
+
+            families.insert(name.to_string(), fam);
+        }
+
+        // Standalone kernels (shapes match the Pallas lowerings).
+        artifacts.insert(
+            "kernel_quantize".into(),
+            ArtifactSpec {
+                file: "<native>".into(),
+                inputs: vec![IoSpec::f32("w", vec![128, 128])],
+                outputs: vec![IoSpec::f32("deq", vec![128, 128])],
+            },
+        );
+        artifacts.insert(
+            "kernel_fused_qlr".into(),
+            ArtifactSpec {
+                file: "<native>".into(),
+                inputs: vec![
+                    IoSpec::f32("q", vec![128, 128]),
+                    IoSpec::f32("l", vec![128, 32]),
+                    IoSpec::f32("r", vec![32, 128]),
+                    IoSpec::f32("x", vec![128, 16]),
+                ],
+                outputs: vec![IoSpec::f32("y", vec![128, 16])],
+            },
+        );
+        artifacts.insert(
+            "kernel_fwht".into(),
+            ArtifactSpec {
+                file: "<native>".into(),
+                inputs: vec![IoSpec::f32("w", vec![128, 128])],
+                outputs: vec![IoSpec::f32("hw", vec![128, 128])],
+            },
+        );
+
+        Manifest {
+            artifacts,
+            families,
+            batch,
+            seq,
+            fused_rank,
+        }
     }
 
     pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
@@ -205,6 +500,11 @@ mod tests {
         assert_eq!(fam.param_index("layer0.wq").unwrap(), 1);
         assert_eq!(fam.param_shape("embed").unwrap(), &[32, 8]);
         assert!(fam.param_index("nope").is_err());
+        // Architecture knobs parsed (with graceful defaults elsewhere).
+        assert_eq!(fam.n_heads, 2);
+        assert_eq!(fam.n_kv_heads, 2);
+        assert_eq!(fam.mlp, "swiglu");
+        assert_eq!(fam.head_dim(), 4);
     }
 
     #[test]
@@ -212,6 +512,60 @@ mod tests {
         assert!(FamilySpec::is_norm("layer3.ln1"));
         assert!(FamilySpec::is_norm("ln_f"));
         assert!(!FamilySpec::is_norm("layer0.wq"));
+    }
+
+    #[test]
+    fn builtin_families_match_model_py() {
+        for name in FamilySpec::builtin_names() {
+            let fam = FamilySpec::builtin(name).unwrap();
+            assert_eq!(fam.projections.len(), 7 * fam.n_layers, "{name}");
+            assert_eq!(fam.params.len(), 3 + 9 * fam.n_layers, "{name}");
+            assert_eq!(fam.d_model % fam.n_heads, 0, "{name}");
+            assert_eq!(fam.n_heads % fam.n_kv_heads, 0, "{name}");
+        }
+        let tl = FamilySpec::builtin("tl-7s").unwrap();
+        assert_eq!(tl.param_shape("layer0.wgate").unwrap(), &[352, 128]);
+        assert_eq!(tl.param_shape("layer3.wdown").unwrap(), &[128, 352]);
+        let tl3 = FamilySpec::builtin("tl3-8s").unwrap();
+        assert_eq!(tl3.kv_dim(), 64); // GQA: 2 kv-heads × head_dim 32
+        assert_eq!(tl3.param_shape("layer0.wk").unwrap(), &[64, 128]);
+        let tg = FamilySpec::builtin("tg-2s").unwrap();
+        assert!(tg.is_geglu());
+        assert!(FamilySpec::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn native_manifest_is_complete() {
+        let m = Manifest::native();
+        assert_eq!(m.batch, NATIVE_BATCH);
+        assert_eq!(m.seq, NATIVE_SEQ);
+        assert_eq!(m.fused_rank, NATIVE_FUSED_RANK);
+        for name in FamilySpec::builtin_names() {
+            for prefix in ["fwd", "fwd_fused", "train", "capture"] {
+                assert!(
+                    m.artifact(&format!("{prefix}_{name}")).is_some(),
+                    "missing {prefix}_{name}"
+                );
+            }
+        }
+        let fam = m.family("tl-7s").unwrap();
+        let fwd = m.artifact("fwd_tl-7s").unwrap();
+        assert_eq!(fwd.inputs.len(), fam.params.len() + 1);
+        assert_eq!(fwd.outputs[0].shape, vec![8, 96, 256]);
+        let train = m.artifact("train_tl-7s").unwrap();
+        assert_eq!(train.inputs.len(), 3 * fam.params.len() + 2);
+        assert_eq!(train.outputs.len(), 3 * fam.params.len() + 1);
+        assert_eq!(train.inputs.last().unwrap().shape, vec![8, 97]);
+        let cap = m.artifact("capture_tl-7s").unwrap();
+        assert_eq!(cap.outputs.len(), 4 * fam.n_layers);
+        assert_eq!(cap.outputs[0].shape, vec![128, 8 * 96]);
+        assert_eq!(cap.outputs[3].shape, vec![352, 8 * 96]);
+        let fused = m.artifact("fwd_fused_tl-7s").unwrap();
+        assert_eq!(
+            fused.inputs.len(),
+            fam.params.len() + 3 * fam.projections.len() + 1
+        );
+        assert!(m.artifact("kernel_fused_qlr").is_some());
     }
 
     #[test]

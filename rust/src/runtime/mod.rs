@@ -1,17 +1,31 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Artifact runtime: executes the model entry points (`fwd_*`,
+//! `fwd_fused_*`, `train_*`, `capture_*`, `kernel_*`) behind one interface
+//! with two interchangeable engines:
 //!
-//! This is the only place the `xla` crate is touched. Python never runs at
-//! pipeline/eval time — the manifest + HLO text files are the whole
-//! interface. Executables are compiled lazily and cached per artifact name.
+//! * **Native** (always available) — the pure-Rust engine in [`native`],
+//!   which implements the same artifact semantics with the blocked
+//!   multithreaded kernels from [`crate::tensor`] and [`crate::fused`]. No
+//!   files are needed: when no `artifacts/` directory exists, a synthesized
+//!   manifest ([`Manifest::native`]) describes the built-in families.
+//! * **XLA/PJRT** (feature `xla`) — loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//!   client. Gated because the binding crate is not in the offline vendor
+//!   set; see `Cargo.toml`.
+//!
+//! [`Runtime::open`] prefers XLA when compiled in *and* a manifest exists,
+//! and falls back to the native engine otherwise, so every pipeline, bench,
+//! example, and test runs artifact-free.
 
 mod manifest;
+pub mod native;
+#[cfg(feature = "xla")]
+mod pjrt;
 
-pub use manifest::{ArtifactSpec, FamilySpec, IoSpec, Manifest};
+pub use manifest::{
+    ArtifactSpec, FamilySpec, IoSpec, Manifest, NATIVE_BATCH, NATIVE_FUSED_RANK, NATIVE_SEQ,
+};
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -71,6 +85,13 @@ impl Value {
         }
     }
 
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
     /// Interpret as a 2-D matrix (rank ≤ 2 required; rank-1/0 become 1×n).
     pub fn to_matrix(&self) -> Result<Matrix> {
         let data = self.f32_data()?.to_vec();
@@ -95,94 +116,72 @@ impl Value {
         let lead: usize = shape[..shape.len() - 1].iter().product();
         Ok(Matrix::from_vec(lead, last, data))
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Value::F32 { shape, data } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
-            }
-            Value::I32 { shape, data } => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow!("reshape literal: {e:?}"))?
-            }
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Value> {
-        let shape = lit.array_shape().map_err(|e| anyhow!("{e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Value::F32 {
-                shape: dims,
-                data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
-            }),
-            xla::ElementType::S32 => Ok(Value::I32 {
-                shape: dims,
-                data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
-            }),
-            other => bail!("unsupported output element type {other:?}"),
-        }
-    }
 }
 
-/// The runtime: PJRT client + artifact directory + executable cache.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+enum Engine {
+    Native,
+    #[cfg(feature = "xla")]
+    Xla(pjrt::PjrtEngine),
+}
+
+/// The runtime: a manifest plus an execution engine.
+pub struct Runtime {
     pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    engine: Engine,
 }
 
-impl XlaRuntime {
-    /// Open the artifact directory (reads `manifest.json`; compiles nothing
-    /// yet).
-    pub fn open(dir: &Path) -> Result<XlaRuntime> {
-        let manifest = Manifest::load(&dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(XlaRuntime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
+#[cfg(feature = "xla")]
+fn engine_for(dir: &Path) -> Result<Engine> {
+    Ok(Engine::Xla(pjrt::PjrtEngine::open(dir)?))
+}
 
-    /// Compile (or fetch from cache) an artifact by name.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+#[cfg(not(feature = "xla"))]
+fn engine_for(_dir: &Path) -> Result<Engine> {
+    Ok(Engine::Native)
+}
+
+impl Runtime {
+    /// Open the artifact directory. With the `xla` feature and a manifest
+    /// present this compiles HLO artifacts lazily through PJRT; otherwise
+    /// the native engine serves the manifest (a synthesized one when the
+    /// directory has no `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let mpath = dir.join("manifest.json");
+        if mpath.exists() {
+            let manifest = Manifest::load(&mpath)
+                .with_context(|| format!("loading manifest from {}", dir.display()))?;
+            return Ok(Runtime {
+                manifest,
+                engine: engine_for(dir)?,
+            });
         }
-        let spec = self
-            .manifest
-            .artifact(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::sync::Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), exe.clone());
-        Ok(exe)
+        Ok(Runtime::native())
     }
 
-    /// Pre-compile an artifact (warm-up; used by the pipeline so timing
-    /// excludes compilation).
+    /// The artifact-free native runtime (built-in families).
+    pub fn native() -> Runtime {
+        Runtime {
+            manifest: Manifest::native(),
+            engine: Engine::Native,
+        }
+    }
+
+    /// True when executing through the native Rust engine.
+    pub fn is_native(&self) -> bool {
+        matches!(self.engine, Engine::Native)
+    }
+
+    /// Pre-compile an artifact (warm-up; a no-op on the native engine).
     pub fn warm(&self, name: &str) -> Result<()> {
-        self.executable(name).map(|_| ())
+        match &self.engine {
+            Engine::Native => self
+                .manifest
+                .artifact(name)
+                .map(|_| ())
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'")),
+            #[cfg(feature = "xla")]
+            Engine::Xla(e) => e.warm(&self.manifest, name),
+        }
     }
 
     /// Execute an artifact. Inputs are validated against the manifest;
@@ -191,8 +190,7 @@ impl XlaRuntime {
         let spec = self
             .manifest
             .artifact(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
-            .clone();
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "artifact '{name}' wants {} inputs, got {}",
@@ -210,35 +208,21 @@ impl XlaRuntime {
                 );
             }
         }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|v| v.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name}: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "artifact '{name}' returned {} outputs, manifest says {}",
-                parts.len(),
-                spec.outputs.len()
-            );
+        match &self.engine {
+            Engine::Native => native::exec(&self.manifest, name, inputs),
+            #[cfg(feature = "xla")]
+            Engine::Xla(e) => e.exec(&self.manifest, name, inputs),
         }
-        parts.iter().map(Value::from_literal).collect()
     }
 
     pub fn artifact_names(&self) -> Vec<String> {
         self.manifest.names()
     }
 }
+
+/// Backwards-compatible name from the PJRT-only era; the serving/eval stack
+/// is engine-agnostic.
+pub type XlaRuntime = Runtime;
 
 /// Default artifact directory: `$ODLRI_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
@@ -272,11 +256,30 @@ mod tests {
         let v = Value::from_vec_i32(vec![2], vec![1, 2]);
         assert!(v.f32_data().is_err());
         assert!(v.to_matrix().is_err());
+        assert_eq!(v.i32_data().unwrap(), &[1, 2]);
     }
 
     #[test]
     #[should_panic(expected = "shape/data mismatch")]
     fn value_shape_checked() {
         Value::from_vec_f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn native_runtime_opens_without_artifacts() {
+        let rt = Runtime::open(Path::new("definitely/not/a/real/dir")).unwrap();
+        assert!(rt.is_native());
+        assert!(rt.manifest.family("tl-7s").is_ok());
+        assert!(rt.warm("fwd_tl-7s").is_ok());
+        assert!(rt.warm("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn exec_validates_shapes() {
+        let rt = Runtime::native();
+        // kernel_fwht wants (128, 128); hand it garbage.
+        let bad = Value::from_vec_f32(vec![2, 2], vec![0.0; 4]);
+        assert!(rt.exec("kernel_fwht", &[bad]).is_err());
+        assert!(rt.exec("nope", &[]).is_err());
     }
 }

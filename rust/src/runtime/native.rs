@@ -1,0 +1,1116 @@
+//! Native execution engine: pure-Rust implementations of every artifact the
+//! runtime serves (`fwd_*`, `fwd_fused_*`, `train_*`, `capture_*`,
+//! `kernel_*`), numerically mirroring the JAX definitions in
+//! `python/compile/model.py`.
+//!
+//! The transformer forward is parameterized over a [`ProjectionOps`]
+//! provider so the same code drives three weight representations:
+//!
+//! * dense `W` matrices ([`DenseProj`], the `fwd_*` path),
+//! * explicit `(Q, L, R)` triples computed as `x·Qᵀ + (x·Rᵀ)·Lᵀ` without
+//!   ever forming `Q + L·R` ([`QlrDenseProj`], the `fwd_fused_*` path),
+//! * bit-packed `Q` plus factors ([`crate::fused::FusedModel`], the
+//!   serving hot path — dequantizes on the fly).
+//!
+//! `train_*` is a full hand-derived reverse pass (RMSNorm, RoPE, causal
+//! GQA attention, SwiGLU/GeGLU) plus the exact AdamW update from
+//! `model.train_step`; gradients are checked against finite differences in
+//! the tests below.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::f32::consts::PI;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{FamilySpec, Manifest, Value};
+use crate::model::ModelParams;
+use crate::quant::{Quantizer as _, UniformQuantizer};
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Matrix};
+
+const RMS_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------- params
+
+/// Flat parameter list resolved to matrices, indexed by family layout.
+/// Owns the matrices when built from [`Value`]s, or borrows them when the
+/// caller already holds resolved matrices (the fused serving hot path, so
+/// no per-batch parameter copies happen).
+pub struct ParamView<'a> {
+    pub fam: &'a FamilySpec,
+    mats: Cow<'a, [Matrix]>,
+}
+
+impl<'a> ParamView<'a> {
+    pub fn from_values(fam: &'a FamilySpec, values: &[Value]) -> Result<ParamView<'a>> {
+        if values.len() != fam.params.len() {
+            bail!(
+                "family {} wants {} params, got {}",
+                fam.name,
+                fam.params.len(),
+                values.len()
+            );
+        }
+        let mats = values
+            .iter()
+            .map(|v| v.to_matrix())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamView {
+            fam,
+            mats: Cow::Owned(mats),
+        })
+    }
+
+    pub fn from_params(params: &'a ModelParams) -> Result<ParamView<'a>> {
+        ParamView::from_values(&params.family, &params.values)
+    }
+
+    /// Borrow pre-resolved matrices (must be in family layout order).
+    pub fn from_slice(fam: &'a FamilySpec, mats: &'a [Matrix]) -> Result<ParamView<'a>> {
+        if mats.len() != fam.params.len() {
+            bail!(
+                "family {} wants {} params, got {}",
+                fam.name,
+                fam.params.len(),
+                mats.len()
+            );
+        }
+        Ok(ParamView {
+            fam,
+            mats: Cow::Borrowed(mats),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Matrix> {
+        Ok(&self.mats[self.fam.param_index(name)?])
+    }
+}
+
+/// How the transformer applies a (possibly compressed) projection matrix:
+/// `project` computes `x · Wᵀ` for activations `x` of shape (tokens, in).
+pub trait ProjectionOps {
+    fn project(&self, name: &str, x: &Matrix) -> Result<Matrix>;
+}
+
+/// Dense weights straight out of a [`ParamView`].
+pub struct DenseProj<'a> {
+    pub view: &'a ParamView<'a>,
+}
+
+impl ProjectionOps for DenseProj<'_> {
+    fn project(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        Ok(matmul_nt(x, self.view.get(name)?))
+    }
+}
+
+/// Explicit dense `(Q, L, R)` per projection; computes `x·Qᵀ + (x·Rᵀ)·Lᵀ`
+/// without materializing `Q + L·R` (the `fwd_fused_*` artifact semantics).
+pub struct QlrDenseProj {
+    pub mats: BTreeMap<String, (Matrix, Matrix, Matrix)>,
+}
+
+impl ProjectionOps for QlrDenseProj {
+    fn project(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        let (q, l, r) = self
+            .mats
+            .get(name)
+            .ok_or_else(|| anyhow!("no Q/L/R for projection '{name}'"))?;
+        Ok(crate::fused::qlr_matmul_t(x, q, l, r))
+    }
+}
+
+// ------------------------------------------------------------- primitives
+
+/// Row-wise RMSNorm; returns the normalized rows and the per-row factor
+/// `r_i = 1/√(mean(x_i²)+ε)` needed by the backward pass.
+fn rms_norm(x: &Matrix, g: &[f32]) -> (Matrix, Vec<f32>) {
+    let (t, d) = x.shape();
+    assert_eq!(g.len(), d, "rms_norm gain length");
+    let mut out = Matrix::zeros(t, d);
+    let mut rs = vec![0f32; t];
+    for i in 0..t {
+        let row = x.row(i);
+        let ms = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let r = 1.0 / ((ms as f32) + RMS_EPS).sqrt();
+        rs[i] = r;
+        let dst = out.row_mut(i);
+        for j in 0..d {
+            dst[j] = row[j] * r * g[j];
+        }
+    }
+    (out, rs)
+}
+
+/// RMSNorm backward: given the forward inputs and `dy`, produce `dx` and
+/// the gain gradient.
+fn rms_backward(x: &Matrix, g: &[f32], r: &[f32], dy: &Matrix) -> (Matrix, Vec<f32>) {
+    let (t, d) = x.shape();
+    let mut dx = Matrix::zeros(t, d);
+    let mut dg = vec![0f32; d];
+    for i in 0..t {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let ri = r[i];
+        let mut dot = 0f64;
+        for j in 0..d {
+            dg[j] += dyr[j] * xr[j] * ri;
+            dot += (dyr[j] as f64) * (g[j] as f64) * (xr[j] as f64);
+        }
+        // ∂r/∂x_j = -r³ x_j / d  ⇒  dx_j = r·dy_j·g_j − x_j·r³·(dy·g·x)/d
+        let coef = ri * ri * ri * (dot as f32) / d as f32;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = ri * dyr[j] * g[j] - xr[j] * coef;
+        }
+    }
+    (dx, dg)
+}
+
+/// Precomputed rotary-embedding tables for one (seq, head_dim) shape.
+struct RopeTable {
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    half: usize,
+}
+
+impl RopeTable {
+    fn new(seq: usize, head_dim: usize, theta: f32) -> RopeTable {
+        assert!(head_dim % 2 == 0, "rope needs even head_dim");
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(seq * half);
+        let mut sin = Vec::with_capacity(seq * half);
+        for t in 0..seq {
+            for i in 0..half {
+                let freq = theta.powf(-(i as f32) / half as f32);
+                let ang = t as f32 * freq;
+                cos.push(ang.cos());
+                sin.push(ang.sin());
+            }
+        }
+        RopeTable { cos, sin, half }
+    }
+
+    /// Rotate every head of every row in place. Rows are (batch·seq, H·hd)
+    /// with position = row % seq. `inverse` applies the transpose rotation
+    /// (exact inverse — used by the backward pass).
+    fn apply(&self, m: &mut Matrix, seq: usize, inverse: bool) {
+        let (rows, width) = m.shape();
+        let hd = 2 * self.half;
+        assert_eq!(width % hd, 0, "rope width");
+        let nh = width / hd;
+        for rix in 0..rows {
+            let t = rix % seq;
+            let row = m.row_mut(rix);
+            for h in 0..nh {
+                let base = h * hd;
+                for i in 0..self.half {
+                    let c = self.cos[t * self.half + i];
+                    let mut s = self.sin[t * self.half + i];
+                    if inverse {
+                        s = -s;
+                    }
+                    let x1 = row[base + i];
+                    let x2 = row[base + self.half + i];
+                    row[base + i] = x1 * c - x2 * s;
+                    row[base + self.half + i] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn silu_and_grad(x: f32) -> (f32, f32) {
+    let s = 1.0 / (1.0 + (-x).exp());
+    (x * s, s * (1.0 + x * (1.0 - s)))
+}
+
+#[inline]
+fn gelu_and_grad(x: f32) -> (f32, f32) {
+    // tanh approximation (jax.nn.gelu default).
+    let c = (2.0 / PI).sqrt();
+    let u = c * (x + 0.044715 * x * x * x);
+    let th = u.tanh();
+    let val = 0.5 * x * (1.0 + th);
+    let grad = 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * c * (1.0 + 3.0 * 0.044715 * x * x);
+    (val, grad)
+}
+
+/// `mid = act(gate) ⊙ up`.
+fn glu_mid(gate: &Matrix, up: &Matrix, geglu: bool) -> Matrix {
+    let (t, d) = gate.shape();
+    let gs = gate.as_slice();
+    let us = up.as_slice();
+    let mut out = vec![0f32; gs.len()];
+    for i in 0..gs.len() {
+        let (a, _) = if geglu {
+            gelu_and_grad(gs[i])
+        } else {
+            silu_and_grad(gs[i])
+        };
+        out[i] = a * us[i];
+    }
+    Matrix::from_vec(t, d, out)
+}
+
+/// Backward of `mid = act(gate) ⊙ up` → (dgate, dup).
+fn glu_backward(gate: &Matrix, up: &Matrix, dmid: &Matrix, geglu: bool) -> (Matrix, Matrix) {
+    let (t, d) = gate.shape();
+    let gs = gate.as_slice();
+    let us = up.as_slice();
+    let ds = dmid.as_slice();
+    let mut dgate = vec![0f32; gs.len()];
+    let mut dup = vec![0f32; gs.len()];
+    for i in 0..gs.len() {
+        let (a, ap) = if geglu {
+            gelu_and_grad(gs[i])
+        } else {
+            silu_and_grad(gs[i])
+        };
+        dup[i] = ds[i] * a;
+        dgate[i] = ds[i] * us[i] * ap;
+    }
+    (Matrix::from_vec(t, d, dgate), Matrix::from_vec(t, d, dup))
+}
+
+/// Causal multi-head attention over flattened (batch·seq, ·) activations.
+/// `q` is post-RoPE (batch·seq, d_model); `k`/`v` are post-RoPE/raw
+/// (batch·seq, kv_dim). When `save` is provided, the post-softmax attention
+/// matrix of each (batch, head) is pushed in order (needed for backward).
+fn attention(
+    fam: &FamilySpec,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    batch: usize,
+    seq: usize,
+    mut save: Option<&mut Vec<Matrix>>,
+) -> Matrix {
+    let hd = fam.head_dim();
+    let nh = fam.n_heads;
+    let rep = nh / fam.n_kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = Matrix::zeros(q.rows(), fam.d_model);
+    for b in 0..batch {
+        let r0 = b * seq;
+        let r1 = r0 + seq;
+        for h in 0..nh {
+            let g = h / rep;
+            let qh = q.slice(r0, r1, h * hd, (h + 1) * hd);
+            let kh = k.slice(r0, r1, g * hd, (g + 1) * hd);
+            let vh = v.slice(r0, r1, g * hd, (g + 1) * hd);
+            let mut scores = matmul_nt(&qh, &kh); // (seq, seq)
+            for i in 0..seq {
+                let row = scores.row_mut(i);
+                let mut mx = f32::NEG_INFINITY;
+                for cell in row.iter_mut().take(i + 1) {
+                    *cell *= scale;
+                    mx = mx.max(*cell);
+                }
+                let mut sum = 0f32;
+                for cell in row.iter_mut().take(i + 1) {
+                    *cell = (*cell - mx).exp();
+                    sum += *cell;
+                }
+                let inv = 1.0 / sum;
+                for cell in row.iter_mut().take(i + 1) {
+                    *cell *= inv;
+                }
+                for cell in row.iter_mut().skip(i + 1) {
+                    *cell = 0.0;
+                }
+            }
+            let ctx_h = matmul(&scores, &vh); // (seq, hd)
+            for i in 0..seq {
+                ctx.row_mut(r0 + i)[h * hd..(h + 1) * hd].copy_from_slice(ctx_h.row(i));
+            }
+            if let Some(sv) = save.as_mut() {
+                sv.push(scores);
+            }
+        }
+    }
+    ctx
+}
+
+// ---------------------------------------------------------------- forward
+
+/// Dense/compressed transformer forward: `tokens` is a row-major
+/// (batch, seq) i32 block; returns logits (batch·seq, vocab). When
+/// `capture` is provided, the four calibration activation matrices per
+/// layer are appended **untransposed** as (batch·seq, in_dim) — the exec
+/// layer transposes them to the artifact's (in_dim, batch·seq) convention.
+pub fn forward_with(
+    fam: &FamilySpec,
+    view: &ParamView,
+    proj: &dyn ProjectionOps,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    mut capture: Option<&mut Vec<Matrix>>,
+) -> Result<Matrix> {
+    if tokens.len() != batch * seq {
+        bail!("forward expects {}x{} tokens", batch, seq);
+    }
+    let d = fam.d_model;
+    let embed = view.get("embed")?;
+    let mut x = Matrix::zeros(batch * seq, d);
+    for (t, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= fam.vocab {
+            bail!("token {tok} out of range for vocab {}", fam.vocab);
+        }
+        x.row_mut(t).copy_from_slice(embed.row(tok));
+    }
+    let rope = RopeTable::new(seq, fam.head_dim(), fam.rope_theta);
+    for layer in 0..fam.n_layers {
+        let p = format!("layer{layer}.");
+        let g1 = view.get(&format!("{p}ln1"))?;
+        let (h, _r1) = rms_norm(&x, g1.as_slice());
+        if let Some(cap) = capture.as_mut() {
+            cap.push(h.clone()); // attn_in
+        }
+        let mut q = proj.project(&format!("{p}wq"), &h)?;
+        let mut k = proj.project(&format!("{p}wk"), &h)?;
+        let v = proj.project(&format!("{p}wv"), &h)?;
+        rope.apply(&mut q, seq, false);
+        rope.apply(&mut k, seq, false);
+        let ctx = attention(fam, &q, &k, &v, batch, seq, None);
+        if let Some(cap) = capture.as_mut() {
+            cap.push(ctx.clone()); // attn_ctx
+        }
+        let attn_out = proj.project(&format!("{p}wo"), &ctx)?;
+        x.add_assign(&attn_out);
+
+        let g2 = view.get(&format!("{p}ln2"))?;
+        let (h2, _r2) = rms_norm(&x, g2.as_slice());
+        if let Some(cap) = capture.as_mut() {
+            cap.push(h2.clone()); // mlp_in
+        }
+        let gate = proj.project(&format!("{p}wgate"), &h2)?;
+        let up = proj.project(&format!("{p}wup"), &h2)?;
+        let mid = glu_mid(&gate, &up, fam.is_geglu());
+        if let Some(cap) = capture.as_mut() {
+            cap.push(mid.clone()); // mlp_mid
+        }
+        let down = proj.project(&format!("{p}wdown"), &mid)?;
+        x.add_assign(&down);
+    }
+    let gf = view.get("ln_f")?;
+    let (hf, _rf) = rms_norm(&x, gf.as_slice());
+    Ok(matmul_nt(&hf, view.get("unembed")?))
+}
+
+// --------------------------------------------------------------- backward
+
+/// Loss + parameter gradients of one next-token-prediction step.
+pub struct TrainStepOut {
+    pub loss: f32,
+    /// Flat gradients, one per family parameter, in layout order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+struct LayerTape {
+    x_in: Matrix,
+    h: Matrix,
+    r1: Vec<f32>,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    att: Vec<Matrix>,
+    ctx: Matrix,
+    x_mid: Matrix,
+    h2: Matrix,
+    r2: Vec<f32>,
+    gate: Matrix,
+    up: Matrix,
+    mid: Matrix,
+}
+
+fn attention_backward(
+    fam: &FamilySpec,
+    tp: &LayerTape,
+    dctx: &Matrix,
+    batch: usize,
+    seq: usize,
+) -> (Matrix, Matrix, Matrix) {
+    let hd = fam.head_dim();
+    let nh = fam.n_heads;
+    let rep = nh / fam.n_kv_heads;
+    let kv = fam.kv_dim();
+    let scale = 1.0 / (hd as f32).sqrt();
+    let t_total = dctx.rows();
+    let mut dq = Matrix::zeros(t_total, fam.d_model);
+    let mut dk = Matrix::zeros(t_total, kv);
+    let mut dv = Matrix::zeros(t_total, kv);
+    for b in 0..batch {
+        let r0 = b * seq;
+        let r1 = r0 + seq;
+        for h in 0..nh {
+            let a = &tp.att[b * nh + h]; // post-softmax (seq, seq)
+            let g = h / rep;
+            let qh = tp.q.slice(r0, r1, h * hd, (h + 1) * hd);
+            let kh = tp.k.slice(r0, r1, g * hd, (g + 1) * hd);
+            let vh = tp.v.slice(r0, r1, g * hd, (g + 1) * hd);
+            let dctx_h = dctx.slice(r0, r1, h * hd, (h + 1) * hd);
+            let da = matmul_nt(&dctx_h, &vh); // (seq, seq)
+            let dvh = matmul_tn(a, &dctx_h); // Aᵀ·dctx → (seq, hd)
+            // Softmax backward per causal row; the 1/√hd factor of the
+            // score computation is folded in here.
+            let mut ds = Matrix::zeros(seq, seq);
+            for i in 0..seq {
+                let arow = a.row(i);
+                let darow = da.row(i);
+                let mut dot = 0f32;
+                for j in 0..=i {
+                    dot += arow[j] * darow[j];
+                }
+                let dsrow = ds.row_mut(i);
+                for j in 0..=i {
+                    dsrow[j] = arow[j] * (darow[j] - dot) * scale;
+                }
+            }
+            let dqh = matmul(&ds, &kh); // (seq, hd)
+            let dkh = matmul_tn(&ds, &qh); // dSᵀ·Q → (seq, hd)
+            for i in 0..seq {
+                dq.row_mut(r0 + i)[h * hd..(h + 1) * hd].copy_from_slice(dqh.row(i));
+                // kv heads are shared across `rep` query heads: accumulate.
+                let dst = &mut dk.row_mut(r0 + i)[g * hd..(g + 1) * hd];
+                for (o, s0) in dst.iter_mut().zip(dkh.row(i)) {
+                    *o += *s0;
+                }
+                let dst = &mut dv.row_mut(r0 + i)[g * hd..(g + 1) * hd];
+                for (o, s0) in dst.iter_mut().zip(dvh.row(i)) {
+                    *o += *s0;
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Next-token cross-entropy loss and full gradients for a (batch, seq+1)
+/// token block — the reverse-mode mirror of `model.loss_fn`.
+pub fn loss_and_grads(
+    fam: &FamilySpec,
+    view: &ParamView,
+    tokens: &[i32],
+    batch: usize,
+    seq_plus1: usize,
+) -> Result<TrainStepOut> {
+    if tokens.len() != batch * seq_plus1 {
+        bail!("train expects {}x{} tokens", batch, seq_plus1);
+    }
+    let s = seq_plus1 - 1;
+    let t_total = batch * s;
+    let d = fam.d_model;
+
+    let mut inp = vec![0i32; t_total];
+    let mut tgt = vec![0usize; t_total];
+    for b in 0..batch {
+        for t in 0..s {
+            inp[b * s + t] = tokens[b * seq_plus1 + t];
+            tgt[b * s + t] = tokens[b * seq_plus1 + t + 1] as usize;
+        }
+    }
+
+    // ---- forward with tape ----
+    let embed = view.get("embed")?;
+    let mut x = Matrix::zeros(t_total, d);
+    for (i, &tok) in inp.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= fam.vocab {
+            bail!("token {tok} out of range for vocab {}", fam.vocab);
+        }
+        x.row_mut(i).copy_from_slice(embed.row(tok));
+    }
+    for &t in &tgt {
+        if t >= fam.vocab {
+            bail!("target token {t} out of range");
+        }
+    }
+    let rope = RopeTable::new(s, fam.head_dim(), fam.rope_theta);
+    let geglu = fam.is_geglu();
+    let mut tapes: Vec<LayerTape> = Vec::with_capacity(fam.n_layers);
+    for layer in 0..fam.n_layers {
+        let p = format!("layer{layer}.");
+        let x_in = x.clone();
+        let g1 = view.get(&format!("{p}ln1"))?;
+        let (h, r1) = rms_norm(&x, g1.as_slice());
+        let mut q = matmul_nt(&h, view.get(&format!("{p}wq"))?);
+        let mut k = matmul_nt(&h, view.get(&format!("{p}wk"))?);
+        let v = matmul_nt(&h, view.get(&format!("{p}wv"))?);
+        rope.apply(&mut q, s, false);
+        rope.apply(&mut k, s, false);
+        let mut att = Vec::with_capacity(batch * fam.n_heads);
+        let ctx = attention(fam, &q, &k, &v, batch, s, Some(&mut att));
+        let attn_out = matmul_nt(&ctx, view.get(&format!("{p}wo"))?);
+        x.add_assign(&attn_out);
+        let x_mid = x.clone();
+        let g2 = view.get(&format!("{p}ln2"))?;
+        let (h2, r2) = rms_norm(&x, g2.as_slice());
+        let gate = matmul_nt(&h2, view.get(&format!("{p}wgate"))?);
+        let up = matmul_nt(&h2, view.get(&format!("{p}wup"))?);
+        let mid = glu_mid(&gate, &up, geglu);
+        let down = matmul_nt(&mid, view.get(&format!("{p}wdown"))?);
+        x.add_assign(&down);
+        tapes.push(LayerTape {
+            x_in,
+            h,
+            r1,
+            q,
+            k,
+            v,
+            att,
+            ctx,
+            x_mid,
+            h2,
+            r2,
+            gate,
+            up,
+            mid,
+        });
+    }
+    let x_final = x;
+    let gf = view.get("ln_f")?;
+    let (hf, rf) = rms_norm(&x_final, gf.as_slice());
+    let unembed = view.get("unembed")?;
+    let logits = matmul_nt(&hf, unembed);
+
+    // ---- loss + dlogits ----
+    let vocab = fam.vocab;
+    let mut dlogits = Matrix::zeros(t_total, vocab);
+    let mut nll_sum = 0f64;
+    let invn = 1.0 / t_total as f32;
+    for i in 0..t_total {
+        let row = logits.row(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+        let mut sum = 0f64;
+        for &v in row {
+            sum += ((v as f64) - mx).exp();
+        }
+        let lse = sum.ln() + mx;
+        nll_sum += lse - row[tgt[i]] as f64;
+        let drow = dlogits.row_mut(i);
+        for j in 0..vocab {
+            drow[j] = (((row[j] as f64) - lse).exp() as f32) * invn;
+        }
+        drow[tgt[i]] -= invn;
+    }
+    let loss = (nll_sum / t_total as f64) as f32;
+
+    // ---- backward ----
+    let mut grads: Vec<Vec<f32>> = fam
+        .params
+        .iter()
+        .map(|(_, sh)| vec![0f32; sh.iter().product()])
+        .collect();
+    let acc_mat = |grads: &mut Vec<Vec<f32>>, name: &str, m: &Matrix| -> Result<()> {
+        let idx = fam.param_index(name)?;
+        let dst = &mut grads[idx];
+        debug_assert_eq!(dst.len(), m.as_slice().len(), "grad shape for {name}");
+        for (o, &v) in dst.iter_mut().zip(m.as_slice()) {
+            *o += v;
+        }
+        Ok(())
+    };
+    let acc_vec = |grads: &mut Vec<Vec<f32>>, name: &str, v: &[f32]| -> Result<()> {
+        let idx = fam.param_index(name)?;
+        let dst = &mut grads[idx];
+        debug_assert_eq!(dst.len(), v.len(), "grad shape for {name}");
+        for (o, &x) in dst.iter_mut().zip(v) {
+            *o += x;
+        }
+        Ok(())
+    };
+
+    acc_mat(&mut grads, "unembed", &matmul_tn(&dlogits, &hf))?;
+    let dhf = matmul(&dlogits, unembed);
+    let (mut dx, dgf) = rms_backward(&x_final, gf.as_slice(), &rf, &dhf);
+    acc_vec(&mut grads, "ln_f", &dgf)?;
+
+    for layer in (0..fam.n_layers).rev() {
+        let p = format!("layer{layer}.");
+        let tp = &tapes[layer];
+        // MLP block: x_out = x_mid + mid·Wdᵀ
+        let wdown = view.get(&format!("{p}wdown"))?;
+        acc_mat(&mut grads, &format!("{p}wdown"), &matmul_tn(&dx, &tp.mid))?;
+        let dmid = matmul(&dx, wdown);
+        let (dgate, dup) = glu_backward(&tp.gate, &tp.up, &dmid, geglu);
+        acc_mat(&mut grads, &format!("{p}wgate"), &matmul_tn(&dgate, &tp.h2))?;
+        acc_mat(&mut grads, &format!("{p}wup"), &matmul_tn(&dup, &tp.h2))?;
+        let mut dh2 = matmul(&dgate, view.get(&format!("{p}wgate"))?);
+        dh2.add_assign(&matmul(&dup, view.get(&format!("{p}wup"))?));
+        let g2 = view.get(&format!("{p}ln2"))?;
+        let (dxm_norm, dg2) = rms_backward(&tp.x_mid, g2.as_slice(), &tp.r2, &dh2);
+        acc_vec(&mut grads, &format!("{p}ln2"), &dg2)?;
+        let mut dx_mid = dx;
+        dx_mid.add_assign(&dxm_norm);
+
+        // Attention block: x_mid = x_in + ctx·Woᵀ
+        let wo = view.get(&format!("{p}wo"))?;
+        acc_mat(&mut grads, &format!("{p}wo"), &matmul_tn(&dx_mid, &tp.ctx))?;
+        let dctx = matmul(&dx_mid, wo);
+        let (mut dq, mut dk, dv) = attention_backward(fam, tp, &dctx, batch, s);
+        rope.apply(&mut dq, s, true);
+        rope.apply(&mut dk, s, true);
+        acc_mat(&mut grads, &format!("{p}wq"), &matmul_tn(&dq, &tp.h))?;
+        acc_mat(&mut grads, &format!("{p}wk"), &matmul_tn(&dk, &tp.h))?;
+        acc_mat(&mut grads, &format!("{p}wv"), &matmul_tn(&dv, &tp.h))?;
+        let mut dh = matmul(&dq, view.get(&format!("{p}wq"))?);
+        dh.add_assign(&matmul(&dk, view.get(&format!("{p}wk"))?));
+        dh.add_assign(&matmul(&dv, view.get(&format!("{p}wv"))?));
+        let g1 = view.get(&format!("{p}ln1"))?;
+        let (dxin_norm, dg1) = rms_backward(&tp.x_in, g1.as_slice(), &tp.r1, &dh);
+        acc_vec(&mut grads, &format!("{p}ln1"), &dg1)?;
+        dx = dx_mid;
+        dx.add_assign(&dxin_norm);
+    }
+
+    // Embedding gradient: scatter-add token rows.
+    let embed_idx = fam.param_index("embed")?;
+    for (i, &tok) in inp.iter().enumerate() {
+        let base = (tok as usize) * d;
+        let row = dx.row(i);
+        let eg = &mut grads[embed_idx];
+        for j in 0..d {
+            eg[base + j] += row[j];
+        }
+    }
+
+    Ok(TrainStepOut { loss, grads })
+}
+
+// ----------------------------------------------------------------- adamw
+
+const ADAM_LR: f32 = 3e-3;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.95;
+const ADAM_EPS: f32 = 1e-8;
+const ADAM_WD: f32 = 0.01;
+
+/// One AdamW update mirroring `model.train_step` exactly (`t = step+1`,
+/// bias-corrected moments, decoupled weight decay skipped on norms).
+pub(crate) fn adamw_update(
+    p: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    step: f32,
+    decay: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let t = step + 1.0;
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let mut np = Vec::with_capacity(p.len());
+    let mut nm = Vec::with_capacity(p.len());
+    let mut nv = Vec::with_capacity(p.len());
+    for j in 0..p.len() {
+        let m2 = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * g[j];
+        let v2 = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * g[j] * g[j];
+        let upd = (m2 / bc1) / ((v2 / bc2).sqrt() + ADAM_EPS);
+        np.push(p[j] - ADAM_LR * (upd + decay * p[j]));
+        nm.push(m2);
+        nv.push(v2);
+    }
+    (np, nm, nv)
+}
+
+// ------------------------------------------------------------------ exec
+
+/// Execute an artifact natively. Inputs are already validated against the
+/// manifest by [`super::Runtime::exec`].
+pub fn exec(manifest: &Manifest, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+    // Standalone kernels (identical semantics to the Pallas lowerings).
+    match name {
+        "kernel_quantize" => {
+            let w = inputs[0].to_matrix()?;
+            let deq = UniformQuantizer::new(4, 32).quantize(&w).deq;
+            return Ok(vec![Value::from_matrix(&deq)]);
+        }
+        "kernel_fused_qlr" => {
+            let q = inputs[0].to_matrix()?;
+            let l = inputs[1].to_matrix()?;
+            let r = inputs[2].to_matrix()?;
+            let x = inputs[3].to_matrix()?;
+            let y = crate::fused::qlr_matmul(&q, &l, &r, &x);
+            return Ok(vec![Value::from_matrix(&y)]);
+        }
+        "kernel_fwht" => {
+            let mut w = inputs[0].to_matrix()?;
+            crate::hadamard::fwht_rows(&mut w);
+            return Ok(vec![Value::from_matrix(&w)]);
+        }
+        _ => {}
+    }
+    let (batch, seq) = (manifest.batch, manifest.seq);
+    if let Some(fam_name) = name.strip_prefix("fwd_fused_") {
+        let fam = manifest.family(fam_name)?;
+        let n = fam.params.len();
+        let view = ParamView::from_values(fam, &inputs[..n])?;
+        let mut mats = BTreeMap::new();
+        let mut off = n;
+        for proj in &fam.projections {
+            let q = inputs[off].to_matrix()?;
+            let l = inputs[off + 1].to_matrix()?;
+            let r = inputs[off + 2].to_matrix()?;
+            mats.insert(proj.clone(), (q, l, r));
+            off += 3;
+        }
+        let tokens = inputs[off].i32_data()?;
+        let provider = QlrDenseProj { mats };
+        let logits = forward_with(fam, &view, &provider, tokens, batch, seq, None)?;
+        return Ok(vec![Value::F32 {
+            shape: vec![batch, seq, fam.vocab],
+            data: logits.into_vec(),
+        }]);
+    }
+    if let Some(fam_name) = name.strip_prefix("fwd_") {
+        let fam = manifest.family(fam_name)?;
+        let n = fam.params.len();
+        let view = ParamView::from_values(fam, &inputs[..n])?;
+        let tokens = inputs[n].i32_data()?;
+        let provider = DenseProj { view: &view };
+        let logits = forward_with(fam, &view, &provider, tokens, batch, seq, None)?;
+        return Ok(vec![Value::F32 {
+            shape: vec![batch, seq, fam.vocab],
+            data: logits.into_vec(),
+        }]);
+    }
+    if let Some(fam_name) = name.strip_prefix("capture_") {
+        let fam = manifest.family(fam_name)?;
+        let n = fam.params.len();
+        let view = ParamView::from_values(fam, &inputs[..n])?;
+        let tokens = inputs[n].i32_data()?;
+        let provider = DenseProj { view: &view };
+        let mut caps: Vec<Matrix> = Vec::with_capacity(4 * fam.n_layers);
+        forward_with(fam, &view, &provider, tokens, batch, seq, Some(&mut caps))?;
+        return Ok(caps
+            .into_iter()
+            .map(|m| {
+                let t = m.transpose(); // (in_dim, batch·seq), columns = samples
+                Value::F32 {
+                    shape: vec![t.rows(), t.cols()],
+                    data: t.into_vec(),
+                }
+            })
+            .collect());
+    }
+    if let Some(fam_name) = name.strip_prefix("train_") {
+        let fam = manifest.family(fam_name)?;
+        let n = fam.params.len();
+        let view = ParamView::from_values(fam, &inputs[..n])?;
+        let m_in = &inputs[n..2 * n];
+        let v_in = &inputs[2 * n..3 * n];
+        let step = inputs[3 * n].f32_data()?[0];
+        let tokens = inputs[3 * n + 1].i32_data()?;
+        let out = loss_and_grads(fam, &view, tokens, batch, seq + 1)?;
+        let mut new_p = Vec::with_capacity(n);
+        let mut new_m = Vec::with_capacity(n);
+        let mut new_v = Vec::with_capacity(n);
+        for (i, (pname, shape)) in fam.params.iter().enumerate() {
+            let decay = if FamilySpec::is_norm(pname) {
+                0.0
+            } else {
+                ADAM_WD
+            };
+            let (np, nm, nv) = adamw_update(
+                inputs[i].f32_data()?,
+                m_in[i].f32_data()?,
+                v_in[i].f32_data()?,
+                &out.grads[i],
+                step,
+                decay,
+            );
+            new_p.push(Value::from_vec_f32(shape.clone(), np));
+            new_m.push(Value::from_vec_f32(shape.clone(), nm));
+            new_v.push(Value::from_vec_f32(shape.clone(), nv));
+        }
+        let mut outs = new_p;
+        outs.extend(new_m);
+        outs.extend(new_v);
+        outs.push(Value::scalar_f32(out.loss));
+        return Ok(outs);
+    }
+    bail!("artifact '{name}' has no native implementation")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn micro_family() -> FamilySpec {
+        // GQA (2 query heads sharing 1 kv head) + SwiGLU, small enough for
+        // finite differences.
+        FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu")
+    }
+
+    fn micro_tokens(fam: &FamilySpec, batch: usize, len: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(seed, 77);
+        (0..batch * len)
+            .map(|_| rng.below(fam.vocab) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn rope_inverse_roundtrips() {
+        let mut rng = Pcg64::new(1, 1);
+        let mut m = Matrix::randn(12, 8, 1.0, &mut rng);
+        let orig = m.clone();
+        let rope = RopeTable::new(4, 4, 10000.0);
+        rope.apply(&mut m, 4, false);
+        assert!(m.max_abs_diff(&orig) > 1e-3, "rope must rotate something");
+        rope.apply(&mut m, 4, true);
+        assert!(m.max_abs_diff(&orig) < 1e-5);
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        // With g = 1 the output rows have RMS ≈ 1.
+        let mut rng = Pcg64::new(2, 1);
+        let x = Matrix::randn(5, 16, 3.0, &mut rng);
+        let g = vec![1.0f32; 16];
+        let (y, rs) = rms_norm(&x, &g);
+        for i in 0..5 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i}: ms={ms}");
+            assert!(rs[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        let fam = micro_family();
+        let mut rng = Pcg64::new(3, 1);
+        let (b, s) = (2usize, 5usize);
+        let q = Matrix::randn(b * s, fam.d_model, 1.0, &mut rng);
+        let k = Matrix::randn(b * s, fam.kv_dim(), 1.0, &mut rng);
+        let v = Matrix::randn(b * s, fam.kv_dim(), 1.0, &mut rng);
+        let mut att = Vec::new();
+        let ctx = attention(&fam, &q, &k, &v, b, s, Some(&mut att));
+        assert_eq!(ctx.shape(), (b * s, fam.d_model));
+        assert_eq!(att.len(), b * fam.n_heads);
+        for a in &att {
+            for i in 0..s {
+                let row = a.row(i);
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
+                // Causal: nothing attends to the future.
+                for j in i + 1..s {
+                    assert_eq!(row[j], 0.0);
+                }
+            }
+        }
+        // Position 0 attends only to itself: ctx row 0 = v row 0 per head.
+        let hd = fam.head_dim();
+        for h in 0..fam.n_heads {
+            let g = h / (fam.n_heads / fam.n_kv_heads);
+            for j in 0..hd {
+                let got = ctx.at(0, h * hd + j);
+                let want = v.at(0, g * hd + j);
+                assert!((got - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 5);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let (b, s) = (2usize, 6usize);
+        let tokens = micro_tokens(&fam, b, s, 1);
+        let mut caps = Vec::new();
+        let logits =
+            forward_with(&fam, &view, &proj, &tokens, b, s, Some(&mut caps)).unwrap();
+        assert_eq!(logits.shape(), (b * s, fam.vocab));
+        assert!(logits.is_finite());
+        assert_eq!(caps.len(), 4 * fam.n_layers);
+        assert_eq!(caps[0].shape(), (b * s, fam.d_model));
+        assert_eq!(caps[3].shape(), (b * s, fam.d_ff));
+    }
+
+    #[test]
+    fn fused_provider_matches_dense_forward() {
+        // Q = W − L·R with random small factors ⇒ identical logits.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 6);
+        let view = ParamView::from_params(&params).unwrap();
+        let mut rng = Pcg64::new(7, 7);
+        let rank = 3;
+        let mut mats = BTreeMap::new();
+        for proj in &fam.projections {
+            let w = params.get_matrix(proj).unwrap();
+            let l = Matrix::randn(w.rows(), rank, 0.1, &mut rng);
+            let r = Matrix::randn(rank, w.cols(), 0.1, &mut rng);
+            let q = w.sub(&l.dot(&r));
+            mats.insert(proj.clone(), (q, l, r));
+        }
+        let (b, s) = (2usize, 6usize);
+        let tokens = micro_tokens(&fam, b, s, 2);
+        let dense = forward_with(
+            &fam,
+            &view,
+            &DenseProj { view: &view },
+            &tokens,
+            b,
+            s,
+            None,
+        )
+        .unwrap();
+        let fused =
+            forward_with(&fam, &view, &QlrDenseProj { mats }, &tokens, b, s, None).unwrap();
+        assert!(
+            fused.rel_err(&dense) < 1e-4,
+            "fused vs dense rel err {}",
+            fused.rel_err(&dense)
+        );
+    }
+
+    fn loss_of(fam: &FamilySpec, params: &ModelParams, tokens: &[i32], b: usize, sp1: usize) -> f32 {
+        let view = ParamView::from_params(params).unwrap();
+        loss_and_grads(fam, &view, tokens, b, sp1).unwrap().loss
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 3);
+        let (b, sp1) = (2usize, 5usize);
+        let tokens = micro_tokens(&fam, b, sp1, 3);
+        let view = ParamView::from_params(&params).unwrap();
+        let out = loss_and_grads(&fam, &view, &tokens, b, sp1).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+
+        let mut rng = Pcg64::new(42, 42);
+        let mut checked = 0usize;
+        for (pi, (pname, shape)) in fam.params.iter().enumerate() {
+            let count: usize = shape.iter().product();
+            for _ in 0..4 {
+                let j = rng.below(count);
+                let eps = 1e-2f32;
+                let mut perturbed = params.clone();
+                if let Value::F32 { data, .. } = &mut perturbed.values[pi] {
+                    data[j] += eps;
+                }
+                let lp = loss_of(&fam, &perturbed, &tokens, b, sp1);
+                if let Value::F32 { data, .. } = &mut perturbed.values[pi] {
+                    data[j] -= 2.0 * eps;
+                }
+                let lm = loss_of(&fam, &perturbed, &tokens, b, sp1);
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = out.grads[pi][j];
+                let denom = fd.abs().max(an.abs());
+                if denom > 0.02 {
+                    assert!(
+                        (fd - an).abs() <= 0.25 * denom + 5e-3,
+                        "{pname}[{j}]: fd={fd} analytic={an}"
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked >= 5, "only {checked} gradient probes were large enough");
+    }
+
+    #[test]
+    fn micro_training_reduces_loss() {
+        let fam = micro_family();
+        let mut params = ModelParams::init(&fam, 9);
+        let (b, sp1) = (4usize, 9usize);
+        // A learnable pattern: strictly repeating token cycle.
+        let tokens: Vec<i32> = (0..b * sp1).map(|i| (i % 4) as i32).collect();
+        let n = fam.params.len();
+        let mut m: Vec<Vec<f32>> = fam
+            .params
+            .iter()
+            .map(|(_, sh)| vec![0f32; sh.iter().product()])
+            .collect();
+        let mut v = m.clone();
+        let mut first = None;
+        let mut last = 0f32;
+        for step in 0..150 {
+            let view = ParamView::from_params(&params).unwrap();
+            let out = loss_and_grads(&fam, &view, &tokens, b, sp1).unwrap();
+            if first.is_none() {
+                first = Some(out.loss);
+            }
+            last = out.loss;
+            for i in 0..n {
+                let decay = if FamilySpec::is_norm(&fam.params[i].0) {
+                    0.0
+                } else {
+                    ADAM_WD
+                };
+                let p = match &params.values[i] {
+                    Value::F32 { data, .. } => data.clone(),
+                    _ => unreachable!(),
+                };
+                let (np, nm, nv) =
+                    adamw_update(&p, &m[i], &v[i], &out.grads[i], step as f32, decay);
+                params.values[i] =
+                    Value::from_vec_f32(fam.params[i].1.clone(), np);
+                m[i] = nm;
+                v[i] = nv;
+            }
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first - 0.8,
+            "training did not reduce loss: {first} → {last}"
+        );
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn geglu_family_forward_and_grads_finite() {
+        let fam = FamilySpec::build("micro-g", 7, 8, 1, 2, 2, 10, "geglu");
+        let params = ModelParams::init(&fam, 4);
+        let view = ParamView::from_params(&params).unwrap();
+        let tokens = micro_tokens(&fam, 2, 4, 5);
+        let out = loss_and_grads(&fam, &view, &tokens, 2, 4).unwrap();
+        assert!(out.loss.is_finite());
+        for g in &out.grads {
+            assert!(g.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn native_exec_train_artifact_roundtrip() {
+        // One train step through the full exec interface on the smallest
+        // built-in family: arity and shape contract of the artifact.
+        let manifest = Manifest::native();
+        let fam = manifest.family("tg-2s").unwrap().clone();
+        let params = ModelParams::init(&fam, 11);
+        let n = params.values.len();
+        let zeros: Vec<Value> = params
+            .values
+            .iter()
+            .map(|v| {
+                Value::from_vec_f32(v.shape().to_vec(), vec![0.0; v.shape().iter().product()])
+            })
+            .collect();
+        let mut rng = Pcg64::new(13, 13);
+        let tokens: Vec<i32> = (0..manifest.batch * (manifest.seq + 1))
+            .map(|_| rng.below(fam.vocab) as i32)
+            .collect();
+        let mut inputs = Vec::with_capacity(3 * n + 2);
+        inputs.extend(params.values.iter().cloned());
+        inputs.extend(zeros.iter().cloned());
+        inputs.extend(zeros.iter().cloned());
+        inputs.push(Value::scalar_f32(0.0));
+        inputs.push(Value::from_vec_i32(
+            vec![manifest.batch, manifest.seq + 1],
+            tokens,
+        ));
+        let outs = exec(&manifest, "train_tg-2s", &inputs).unwrap();
+        assert_eq!(outs.len(), 3 * n + 1);
+        let loss = outs.last().unwrap().f32_data().unwrap()[0];
+        // Untrained on random bytes ⇒ near ln(vocab).
+        assert!(loss > 3.0 && loss < 8.0, "loss={loss}");
+        for (o, p) in outs[..n].iter().zip(&params.values) {
+            assert_eq!(o.shape(), p.shape());
+        }
+    }
+}

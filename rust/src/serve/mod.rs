@@ -1,0 +1,269 @@
+//! Threaded batch serving over any [`Forward`] path (dense runtime or the
+//! packed fused engine).
+//!
+//! Client threads submit single-sequence scoring requests; the leader
+//! batches them up to the forward's batch size (dynamic batching with a
+//! deadline, vLLM-router-style), executes one forward per batch, and
+//! answers each request with its mean next-token NLL. `examples/serve.rs`
+//! is a thin wrapper; the serving smoke test drives this loop directly on
+//! the artifact-free native fallback.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::corpus;
+use crate::eval::{nll_of, Forward};
+use crate::util::rng::Pcg64;
+
+/// Batch-server run configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Closed-loop client threads.
+    pub clients: usize,
+    /// Dynamic-batching deadline once a partial batch is pending.
+    pub deadline: Duration,
+    /// Corpus seed for request payloads.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            requests: 120,
+            clients: 4,
+            deadline: Duration::from_millis(10),
+            seed: 0,
+        }
+    }
+}
+
+/// Serving outcome: one score + latency per completed request.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Mean NLL of each served sequence (the response payload).
+    pub scores: Vec<f32>,
+    /// Per-request wall latency in seconds, completion order.
+    pub latencies_s: Vec<f64>,
+    /// Executed forward batches.
+    pub batches: usize,
+    pub wall_secs: f64,
+}
+
+impl ServeReport {
+    fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_s.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile(0.50) * 1e3
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.percentile(0.95) * 1e3
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            0.0
+        } else {
+            self.scores.len() as f64 / self.wall_secs
+        }
+    }
+}
+
+struct Request {
+    tokens: Vec<i32>, // length = seq
+    done: mpsc::Sender<f32>,
+    submitted: Instant,
+}
+
+/// Run the closed-loop batch server until every client request completes.
+pub fn run_batch_server(fwd: &dyn Forward, cfg: &ServeConfig) -> Result<ServeReport> {
+    let (batch, seq) = (fwd.batch(), fwd.seq());
+    let (tx, rx) = mpsc::channel::<Request>();
+    let mut scores = Vec::with_capacity(cfg.requests);
+    let mut latencies = Vec::with_capacity(cfg.requests);
+    let mut batches = 0usize;
+    let t_start = Instant::now();
+
+    std::thread::scope(|s| -> Result<()> {
+        // Client threads: each submits a burst of requests with jitter.
+        let clients = cfg.clients.max(1);
+        let per_client = cfg.requests / clients;
+        let remainder = cfg.requests - per_client * clients;
+        for c in 0..clients {
+            let tx = tx.clone();
+            let seed = cfg.seed;
+            let n = per_client + usize::from(c < remainder);
+            s.spawn(move || {
+                let mut rng = Pcg64::new(seed ^ c as u64, 77);
+                let data = corpus::generate(corpus::Split::C4Sim, 200_000, seed ^ c as u64);
+                for _ in 0..n {
+                    let start = rng.below(data.len() - seq - 1);
+                    let tokens: Vec<i32> =
+                        data[start..start + seq].iter().map(|&b| b as i32).collect();
+                    let (dtx, drx) = mpsc::channel();
+                    if tx
+                        .send(Request {
+                            tokens,
+                            done: dtx,
+                            submitted: Instant::now(),
+                        })
+                        .is_err()
+                    {
+                        return;
+                    }
+                    // Closed loop: wait for the score before the next send.
+                    let _score = drx.recv().ok();
+                    std::thread::sleep(Duration::from_millis(rng.below(5) as u64));
+                }
+            });
+        }
+        drop(tx);
+
+        // Leader: dynamic batcher. Collect up to `batch` requests or until
+        // the deadline passes, then execute one forward. On a forward
+        // error, drain the queue before propagating — dropping each queued
+        // `Request` drops its `done` sender, so blocked clients wake up and
+        // wind down instead of deadlocking the scope join.
+        let mut serve = || -> Result<()> {
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            let req = if pending.is_empty() {
+                match rx.recv() {
+                    Ok(r) => Some(r),
+                    Err(_) => break, // all clients done
+                }
+            } else {
+                match rx.recv_timeout(cfg.deadline) {
+                    Ok(r) => Some(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                }
+            };
+            if let Some(r) = req {
+                pending.push(r);
+                if pending.len() < batch {
+                    continue;
+                }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            // Build the batch (pad by repeating the first request).
+            let mut tokens = Vec::with_capacity(batch * seq);
+            for b in 0..batch {
+                let r = pending.get(b).unwrap_or(&pending[0]);
+                tokens.extend(&r.tokens);
+            }
+            let logits = fwd.logits(tokens)?;
+            batches += 1;
+            for (b, r) in pending.drain(..).enumerate() {
+                // Mean NLL over the sequence = the response payload.
+                let mut nll = 0f64;
+                for t in 0..seq - 1 {
+                    nll += nll_of(logits.row(b * seq + t), r.tokens[t + 1] as usize);
+                }
+                let score = (nll / (seq - 1) as f64) as f32;
+                latencies.push(r.submitted.elapsed().as_secs_f64());
+                scores.push(score);
+                r.done.send(score).ok();
+            }
+        }
+        Ok(())
+        };
+        let result = serve();
+        if result.is_err() {
+            // Unblock every client still waiting on a response, then keep
+            // draining until all senders hang up.
+            while rx.recv().is_ok() {}
+        }
+        result
+    })?;
+
+    Ok(ServeReport {
+        scores,
+        latencies_s: latencies,
+        batches,
+        wall_secs: t_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    /// Uniform-logits stand-in model: instant forward, exact expected score
+    /// (ln vocab), exercises the batching loop hermetically.
+    struct UniformForward {
+        vocab: usize,
+        batch: usize,
+        seq: usize,
+    }
+
+    impl Forward for UniformForward {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn logits(&self, tokens: Vec<i32>) -> Result<Matrix> {
+            assert_eq!(tokens.len(), self.batch * self.seq);
+            Ok(Matrix::zeros(self.batch * self.seq, self.vocab))
+        }
+    }
+
+    #[test]
+    fn serves_every_request_with_exact_uniform_score() {
+        let fwd = UniformForward {
+            vocab: 256,
+            batch: 4,
+            seq: 32,
+        };
+        let cfg = ServeConfig {
+            requests: 13,
+            clients: 3,
+            deadline: Duration::from_millis(2),
+            seed: 9,
+        };
+        let report = run_batch_server(&fwd, &cfg).unwrap();
+        assert_eq!(report.scores.len(), 13);
+        assert_eq!(report.latencies_s.len(), 13);
+        assert!(report.batches >= (13usize).div_ceil(4));
+        let want = (256f32).ln();
+        for s in &report.scores {
+            assert!((s - want).abs() < 1e-4, "score {s} != ln(256)");
+        }
+        assert!(report.p50_ms() >= 0.0 && report.p95_ms() >= report.p50_ms());
+        assert!(report.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn zero_clients_clamps_to_one() {
+        // vocab must cover the byte-level corpus (tokens up to 255).
+        let fwd = UniformForward {
+            vocab: 256,
+            batch: 2,
+            seq: 8,
+        };
+        let cfg = ServeConfig {
+            requests: 3,
+            clients: 0,
+            deadline: Duration::from_millis(1),
+            seed: 1,
+        };
+        let report = run_batch_server(&fwd, &cfg).unwrap();
+        assert_eq!(report.scores.len(), 3);
+    }
+}

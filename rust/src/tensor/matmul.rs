@@ -97,8 +97,9 @@ fn kernel_rows_out(a: &[f32], b: &[f32], c: &mut [f32], r0: usize, r1: usize, k:
 }
 
 /// crow += av * brow, 8-wide unrolled (autovectorizes to AVX on release).
+/// Public: the fused `(Q+LR)·x` kernels stream dequantized rows through it.
 #[inline]
-fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+pub fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     let n = brow.len();
     let chunks = n / 8;
     // Unrolled main loop.

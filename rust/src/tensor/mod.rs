@@ -7,7 +7,7 @@
 
 mod matmul;
 
-pub use matmul::{matmul, matmul_into, matmul_tn, matmul_nt, set_matmul_threads};
+pub use matmul::{axpy, dotp, matmul, matmul_into, matmul_nt, matmul_tn, set_matmul_threads};
 
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};

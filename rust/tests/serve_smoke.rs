@@ -1,0 +1,61 @@
+//! Serving smoke test: drives the dynamic-batching batch-server loop
+//! (the engine behind `examples/serve.rs`) end to end on the artifact-free
+//! native fallback, over both forward paths — dense runtime and the
+//! bit-packed fused `(Q+LR)·x` engine.
+
+use std::path::Path;
+use std::time::Duration;
+
+use odlri::eval::RuntimeForward;
+use odlri::fused::FusedModel;
+use odlri::model::ModelParams;
+use odlri::runtime::Runtime;
+use odlri::serve::{run_batch_server, ServeConfig};
+
+fn smoke_config(requests: usize) -> ServeConfig {
+    ServeConfig {
+        requests,
+        clients: 3,
+        deadline: Duration::from_millis(5),
+        seed: 11,
+    }
+}
+
+#[test]
+fn batch_server_completes_all_requests_on_native_dense_path() {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, 1);
+    let fwd = RuntimeForward {
+        rt: &rt,
+        params: &params,
+    };
+    let report = run_batch_server(&fwd, &smoke_config(12)).expect("serve");
+    assert_eq!(report.scores.len(), 12, "dropped requests");
+    assert_eq!(report.latencies_s.len(), 12);
+    assert!(report.batches >= 2, "batching never engaged");
+    for (i, s) in report.scores.iter().enumerate() {
+        assert!(s.is_finite(), "request {i} got non-finite score {s}");
+        // Mean NLL of a byte LM: positive, below uniform+slack.
+        assert!(*s > 0.0 && *s < 10.0, "request {i} score {s} implausible");
+    }
+    assert!(report.latencies_s.iter().all(|&l| l > 0.0));
+    assert!(report.p95_ms() >= report.p50_ms());
+}
+
+#[test]
+fn batch_server_completes_on_packed_fused_engine() {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, 2);
+    // Bit-packed projections, rank-0 factors: the serving hot path with no
+    // dense W anywhere.
+    let fm = FusedModel::pack_dense(&params, 8, 64).expect("pack");
+    let report = run_batch_server(&fm, &smoke_config(10)).expect("serve fused");
+    assert_eq!(report.scores.len(), 10, "dropped requests");
+    for (i, s) in report.scores.iter().enumerate() {
+        assert!(s.is_finite(), "request {i} got non-finite score {s}");
+        assert!(*s > 0.0 && *s < 10.0, "request {i} score {s} implausible");
+    }
+    assert!(report.requests_per_sec() > 0.0);
+}
