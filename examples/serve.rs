@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
     let report = if fused {
         // Pack the projections at 8 bits (near-lossless) and serve the
         // dequant-on-the-fly kernels — no dense W is ever materialized.
-        let fm = FusedModel::pack_dense(&params, 8, 64)?;
+        let fm = FusedModel::pack_dense(&params, "uniform", 8, 64)?;
         eprintln!(
             "[serve] fused engine: {:.2} bits/weight packed ({} total)",
             fm.avg_bits(),

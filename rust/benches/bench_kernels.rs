@@ -128,4 +128,35 @@ fn main() {
             println!("{}", s.line_throughput(flops, "flop"));
         }
     }
+
+    group("fused (Q+LR)·x scheme-native decode (e8 / mxint / rotated)");
+    // The v2 container serves every quantizer's own codes; these cases
+    // track the decode cost of the non-uniform layouts and of folding the
+    // Hadamard rotation into the activations.
+    let mut variants: Vec<(String, FusedQlrMatrix)> = Vec::new();
+    for scheme in ["e8", "mxint"] {
+        let quant = odlri::quant::make_quantizer(scheme, 2, 64).expect("quantizer");
+        let qout = quant.quantize(&wq);
+        let fm = FusedQlrMatrix::new(qout.packed, lr.clone()).expect("fused build");
+        variants.push((scheme.to_string(), fm));
+    }
+    {
+        let inc = odlri::hadamard::Incoherence::new(m, n, &mut rng);
+        let qout = UniformQuantizer::new(2, 64).quantize(&inc.apply(&wq));
+        let packed = qout
+            .packed
+            .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
+        let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
+        variants.push(("uniform_rot".to_string(), fm));
+    }
+    for (name, fm) in &variants {
+        for &batch in &[8usize, 96] {
+            let x = Matrix::randn(n, batch, 1.0, &mut rng);
+            let flops = 2.0 * (m * n * batch) as f64;
+            let s = Bencher::new(&format!("fused_{m}x{n}_{name}_x{batch}"))
+                .fast()
+                .run(|| fm.matmul(&x));
+            println!("{}", s.line_throughput(flops, "flop"));
+        }
+    }
 }

@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
 
     group("packed fused engine (bit-packed Q, dequant on the fly)");
     for bits in [2u32, 8] {
-        let fm = FusedModel::pack_dense(&params, bits, 64)?;
+        let fm = FusedModel::pack_dense(&params, "uniform", bits, 64)?;
         let stats = Bencher::new(&format!("fused_model_q{bits}b"))
             .iters(3, 20)
             .run(|| fm.forward(&toks, b, s).unwrap());

@@ -130,8 +130,9 @@ COMMANDS
   compress     Compress a trained model (CALDERA / +ODLRI)
                  --family tl-7s --init odlri|caldera|lr-first --rank 64
                  --lr-bits 4 --scheme e8|uniform|mxint --bits 2 --iters 15
-                 --fused (also write runs/<family>.odf, the packed container)
-                 --fused-out PATH --fused-bits N (packing width for Q)
+                 --fused (also write runs/<family>.odf: the packed container
+                 carrying the quantizer's native codes bit-exactly)
+                 --fused-out PATH
   eval         Perplexity + zero-shot proxy accuracy of a weight file
                  --family tl-7s --weights runs/tl-7s.odw
                  --fused (packed engine; default weights runs/<family>.odf)

@@ -191,6 +191,7 @@ impl CompressionPipeline {
                 name.clone(),
                 CompressedMatrix {
                     q: d.q,
+                    q_packed: d.q_packed,
                     lr: d.lr,
                     quant_scale: last.quant_scale,
                     final_act_err: last.act_err,
@@ -294,6 +295,12 @@ mod tests {
         for (name, cm) in &out.model.matrices {
             assert!(cm.final_act_err < 1.0, "{name}: err={}", cm.final_act_err);
             assert!(cm.reconstruct().is_finite());
+            // Deployment invariant: the packed codes are the pipeline's Q.
+            assert_eq!(
+                cm.q_packed.unpack().max_abs_diff(&cm.q),
+                0.0,
+                "{name}: packed Q is not the pipeline's Q"
+            );
         }
         // Reconstructions approximate the originals.
         let w = params.get_matrix("layer0.wq").unwrap();

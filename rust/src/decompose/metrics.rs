@@ -10,7 +10,6 @@
 //! trace is exact w.r.t. the calibration set without storing X.
 
 use crate::lowrank::LrPair;
-use crate::quant::QuantOut;
 use crate::tensor::Matrix;
 
 /// ‖A X‖_F via the Hessian: sqrt(tr(A H Aᵀ)).
@@ -63,17 +62,18 @@ impl DecompMetrics {
     pub fn record_iter(
         &mut self,
         w: &Matrix,
-        q: &QuantOut,
+        q_deq: &Matrix,
+        q_scale: f32,
         lr: &LrPair,
         h: &Matrix,
         wx_norm: f64,
     ) {
         let lr_prod = lr.product();
-        let resid = w.sub(&q.deq).sub(&lr_prod);
+        let resid = w.sub(q_deq).sub(&lr_prod);
         let e = h_norm(&resid, h);
-        self.quant_scale.push(q.scale);
+        self.quant_scale.push(q_scale);
         self.act_err.push((e / wx_norm.max(1e-30)).powi(2));
-        self.q_norm.push(h_norm(&q.deq, h) / wx_norm.max(1e-30));
+        self.q_norm.push(h_norm(q_deq, h) / wx_norm.max(1e-30));
         self.lr_norm.push(h_norm(&lr_prod, h) / wx_norm.max(1e-30));
     }
 
@@ -121,11 +121,7 @@ mod tests {
         // Zero init: act_err = 1 (nothing explained), lr_norm = 0.
         assert!((m.act_err[0] - 1.0).abs() < 1e-6);
         assert_eq!(m.lr_norm[0], 0.0);
-        let q = QuantOut {
-            deq: w.clone(),
-            scale: 0.5,
-        };
-        m.record_iter(&w, &q, &lr, &h, wx);
+        m.record_iter(&w, &w, 0.5, &lr, &h, wx);
         // Perfect Q: error 0, q_norm 1.
         assert!(m.act_err[1] < 1e-9);
         assert!((m.q_norm[1] - 1.0).abs() < 1e-5);

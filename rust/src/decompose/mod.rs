@@ -22,7 +22,7 @@ pub use metrics::{h_norm, DecompMetrics, IterationMetrics};
 use crate::hadamard::Incoherence;
 use crate::hessian::Hessian;
 use crate::lowrank::{lr_approx, LowRankConfig, LrPair};
-use crate::quant::{QuantOut, Quantizer};
+use crate::quant::{PackedMatrix, Quantizer};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
 
@@ -57,6 +57,11 @@ impl Default for JointConfig {
 pub struct Decomposition {
     /// Quantize-dequantized Q (original basis).
     pub q: Matrix,
+    /// The quantizer's native packed codes for the same `Q` — rotated-basis
+    /// grid codes plus the Hadamard sign metadata when incoherence
+    /// processing was on. `q_packed.unpack()` reproduces `q` bit-exactly,
+    /// so the fused deployment container serves exactly this decomposition.
+    pub q_packed: PackedMatrix,
     /// Low-rank factors (original basis).
     pub lr: LrPair,
     /// Per-iteration metric trace.
@@ -122,38 +127,57 @@ impl<'a> JointOptimizer<'a> {
         let wx_norm = metrics::h_norm(&wt, &h_reg);
         metrics.record_init(&wt, &lr, &h_reg, wx_norm);
 
-        let mut q: QuantOut = QuantOut {
-            deq: Matrix::zeros(w.rows(), w.cols()),
-            scale: 0.0,
-        };
-        for _t in 0..cfg.outer_iters {
-            // Q-step: quantize the residual left by LR.
+        let mut q_deq = Matrix::zeros(w.rows(), w.cols());
+        let mut q_packed: Option<PackedMatrix> = None;
+        for t in 0..cfg.outer_iters {
+            // Q-step: quantize the residual left by LR. Only the final
+            // iteration's Q ships — encode native codes just for it.
             let resid_q = wt.sub(&lr.product());
-            q = self.quantizer.quantize_with_hessian(&resid_q, &h_reg);
+            let q_scale;
+            if t + 1 == cfg.outer_iters {
+                let out = self.quantizer.quantize_with_hessian(&resid_q, &h_reg);
+                q_deq = out.deq;
+                q_scale = out.scale;
+                q_packed = Some(out.packed);
+            } else {
+                let (deq, scale) = self.quantizer.quantize_with_hessian_dense(&resid_q, &h_reg);
+                q_deq = deq;
+                q_scale = scale;
+            }
             // LR-step: re-fit the factors to what Q leaves behind.
             // rank 0 = quantization-only baseline (QuIP# row of Table 9):
             // LR stays identically zero and the loop is a fixed point after
             // the first iteration.
             if cfg.lowrank.rank > 0 {
-                let resid_lr = wt.sub(&q.deq);
+                let resid_lr = wt.sub(&q_deq);
                 lr = lr_approx(&resid_lr, &h_reg, &cfg.lowrank, &mut rng);
             }
-            metrics.record_iter(&wt, &q, &lr, &h_reg, wx_norm);
+            metrics.record_iter(&wt, &q_deq, q_scale, &lr, &h_reg, wx_norm);
         }
 
-        // Rotate back to the original basis.
-        let (q_out, lr_out) = match &inc {
+        // Degenerate outer_iters == 0: Q stays zero; an all-zero uniform
+        // pack decodes to exact zeros.
+        let q_packed =
+            q_packed.unwrap_or_else(|| PackedMatrix::pack(&q_deq, 8, w.cols().max(1)));
+
+        // Rotate back to the original basis. The packed codes stay in the
+        // working basis: when incoherence is on they carry the sign
+        // diagonals instead, so their decode replays this exact un-rotation
+        // bit-for-bit.
+        let (q_out, lr_out, q_packed) = match &inc {
             Some(inc) => (
-                inc.unapply(&q.deq),
+                inc.unapply(&q_deq),
                 LrPair {
                     l: inc.unapply_left(&lr.l),
                     r: inc.unapply_right(&lr.r),
                 },
+                q_packed.with_rotation(inc.left_signs.clone(), inc.right_signs.clone()),
             ),
-            None => (q.deq.clone(), lr),
+            None => (q_deq, lr, q_packed),
         };
         Decomposition {
             q: q_out,
+            q_packed,
             lr: lr_out,
             metrics,
         }
@@ -347,6 +371,35 @@ mod tests {
             }
         }
         assert!(wins >= 4, "ODLRI won only {wins}/{trials}");
+    }
+
+    /// The deployment contract: for every quantizer scheme, with and
+    /// without Hadamard incoherence (the LDLQ-rotated case), the native
+    /// packed codes decode to the pipeline's `Q` with **zero** error.
+    #[test]
+    fn packed_codes_reproduce_pipeline_q_bit_exactly() {
+        for scheme in ["uniform", "e8", "mxint"] {
+            for hadamard in [false, true] {
+                let (w, h, _x) = setup(24, 40, 2, 205);
+                let quant = crate::quant::make_quantizer(scheme, 2, 8).unwrap();
+                let cfg = JointConfig {
+                    outer_iters: 2,
+                    hadamard,
+                    lowrank: LowRankConfig {
+                        rank: 4,
+                        lr_bits: 16,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                };
+                let d = JointOptimizer::new(quant.as_ref(), cfg).run(&w, &h, &Initializer::Zero);
+                assert_eq!(d.q_packed.rows, 24);
+                assert_eq!(d.q_packed.cols, 40);
+                assert_eq!(d.q_packed.rotation.is_some(), hadamard);
+                let diff = d.q_packed.unpack().max_abs_diff(&d.q);
+                assert_eq!(diff, 0.0, "{scheme} hadamard={hadamard}: diff {diff}");
+            }
+        }
     }
 
     #[test]

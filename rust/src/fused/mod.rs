@@ -8,8 +8,8 @@
 //! and bandwidth win at inference time. This module keeps the structure on
 //! the hot path:
 //!
-//! * [`FusedQlrMatrix`] holds `Q` as a [`PackedMatrix`] (b-bit codes +
-//!   per-group scales) plus the `L`/`R` factors, and computes
+//! * [`FusedQlrMatrix`] holds `Q` as a [`PackedMatrix`] in the quantizer's
+//!   **native** code layout plus the `L`/`R` factors, and computes
 //!   `y = Q·x + L·(R·x)` with blocked, multithreaded kernels that
 //!   dequantize `Q` **on the fly**, one row/panel at a time — the full
 //!   dense `Q + L·R` is never materialized.
@@ -19,11 +19,39 @@
 //! * [`qlr_matmul`]/[`qlr_matmul_t`] are the dense-`Q` fused helpers used
 //!   by the `kernel_fused_qlr` and `fwd_fused_*` artifact semantics.
 //!
-//! Numerical contract (property-tested below, per quantizer): every fused
+//! ## Numerical contract (scheme-exact `Q`)
+//!
+//! The container stores each quantizer's native codes — uniform b-bit
+//! grid codes, E8 lattice coordinates + global scale, MXINT mantissas +
+//! shared block exponents — encoded under the *same frozen scales* the
+//! quantizer rounded with, so `fm.q.unpack()` reproduces the pipeline's
+//! `Q` **bit-exactly** (`max_abs_diff == 0`; property-tested per scheme
+//! below). There is no "repack at 8 bits with headroom" fallback: `--fused`
+//! eval measures the decomposition ODLRI actually optimized. When the
+//! pipeline ran with Hadamard incoherence processing (the default), the
+//! codes stay in the rotated basis and carry the sign diagonals; the
+//! kernels fold the rotation into the skinny activations
+//! (`Q·x = D_m H_m (Q̃ · (H_n D_n x))`) so decoding stays dense-free, while
+//! `unpack()`/`reconstruct()` replay the exact un-rotation. Every fused
 //! kernel matches the dense `reconstruct()`-then-matmul reference within
-//! 1e-4 relative error, and raw round-to-nearest uniform output round-trips
-//! the packed grid exactly. Pipeline `Q` (LDLQ + incoherence rotation) is
-//! not grid-aligned, so the deployment default repacks at 8 bits.
+//! 1e-4 relative error.
+//!
+//! ## Container format (v2)
+//!
+//! ```text
+//! .odf model container   magic ODF2 (reads ODF1)
+//!   family name, batch, seq
+//!   dense section: non-projection params only
+//!   packed section: name + fused matrix per projection
+//! fused matrix           magic ODQ2 (reads ODQ1)
+//!   PackedMatrix (ODP2/ODP1 — see `quant::packed` for the per-scheme
+//!   layouts), then L and R as dense f32 matrices
+//! ```
+//!
+//! Version bumps change the magic; readers stay backward compatible one
+//! version. Footprint reporting (`byte_size`/`bits_per_weight`/`avg_bits`)
+//! is derived from the actual serialized length, so it cannot drift from
+//! the on-disk format.
 //!
 //! Threading reuses [`crate::exec::parallel_map`] over output-row blocks
 //! and the panel/blocking idiom of [`crate::tensor::matmul`].
@@ -96,20 +124,6 @@ impl FusedQlrMatrix {
         })
     }
 
-    /// Pack a dense quantizer output `q_dense` at `bits`/`group` and attach
-    /// the factors. For *raw round-to-nearest* uniform-quantizer output at
-    /// matching bits/group the packing is exact (same absmax grid;
-    /// property-tested). `Q` that went through LDLQ error feedback or the
-    /// Hadamard incoherence rotation is no longer on that grid — pack it
-    /// with headroom (8 bits) or accept a Hessian-free re-quantization.
-    pub fn from_dense(q_dense: &Matrix, lr: &LrPair, bits: u32, group: usize) -> FusedQlrMatrix {
-        FusedQlrMatrix {
-            q: PackedMatrix::pack(q_dense, bits, group),
-            l: lr.l.clone(),
-            r: lr.r.clone(),
-        }
-    }
-
     pub fn out_dim(&self) -> usize {
         self.q.rows
     }
@@ -123,6 +137,8 @@ impl FusedQlrMatrix {
     }
 
     /// Dense `Q + L·R` (tests/debugging only — the kernels never call this).
+    /// `Q` decodes bit-exactly, so this matches the pipeline's
+    /// `CompressedMatrix::reconstruct()` with zero error.
     pub fn reconstruct(&self) -> Matrix {
         let mut w = self.q.unpack();
         if self.rank() > 0 {
@@ -131,9 +147,14 @@ impl FusedQlrMatrix {
         w
     }
 
-    /// Serialized footprint in bytes (packed codes + scales + factors).
+    /// Serialized footprint in bytes — measured by serializing into a
+    /// counting sink, so it is the on-disk size by construction and cannot
+    /// drift from the format.
     pub fn byte_size(&self) -> usize {
-        4 + self.q.byte_size() + 8 + (self.l.as_slice().len() + self.r.as_slice().len()) * 4 + 16
+        let mut count = crate::quant::ByteCount(0);
+        self.write_to(&mut count)
+            .expect("counting writer is infallible");
+        count.0
     }
 
     /// Effective bits per weight of the deployment form.
@@ -142,11 +163,21 @@ impl FusedQlrMatrix {
     }
 
     /// `y = (Q + L·R)·X` for `x` of shape (in, cols): blocked over output
-    /// rows, each block dequantizing its `Q` rows on the fly.
+    /// rows, each block dequantizing its `Q` rows on the fly. Rotated codes
+    /// fold the Hadamard transform into the skinny activations
+    /// (`Q·x = D_m H_m (Q̃ · (H_n D_n x))`) — never into a dense `Q`.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         let (m, n) = (self.q.rows, self.q.cols);
         assert_eq!(x.rows(), n, "fused matmul inner dims");
         let cols = x.cols();
+        let rotated_x;
+        let xq: &Matrix = match &self.q.rotation {
+            Some(rot) => {
+                rotated_x = rot.rotate_acts(x);
+                &rotated_x
+            }
+            None => x,
+        };
         let mut out = Matrix::zeros(m, cols);
         let nblocks = self.row_blocks(cols);
         let block = m.div_ceil(nblocks);
@@ -160,7 +191,7 @@ impl FusedQlrMatrix {
                 let orow = part.row_mut(i - r0);
                 for (j, &wv) in wrow.iter().enumerate() {
                     if wv != 0.0 {
-                        axpy(wv, x.row(j), orow);
+                        axpy(wv, xq.row(j), orow);
                     }
                 }
             }
@@ -171,8 +202,11 @@ impl FusedQlrMatrix {
                 out.row_mut(r0 + i).copy_from_slice(part.row(i));
             }
         }
+        if let Some(rot) = &self.q.rotation {
+            out = rot.unrotate_out(&out);
+        }
         if self.rank() > 0 {
-            let rx = self.r.dot(x); // (rank, cols)
+            let rx = self.r.dot(x); // (rank, cols) — factors live unrotated
             out.add_assign(&self.l.dot(&rx));
         }
         out
@@ -181,10 +215,19 @@ impl FusedQlrMatrix {
     /// `y = X·(Q + L·R)ᵀ` for activations `x` of shape (tokens, in) — the
     /// transformer layout. Blocked over output columns: each block decodes
     /// a panel of `Q` rows and reuses the cache-blocked [`matmul_nt`].
+    /// Rotated codes: `X·Qᵀ = ((X D_n) H_n · Q̃ᵀ) H_m D_m`.
     pub fn matmul_t(&self, x: &Matrix) -> Matrix {
         let (m, n) = (self.q.rows, self.q.cols);
         assert_eq!(x.cols(), n, "fused matmul_t inner dims");
         let t = x.rows();
+        let rotated_x;
+        let xq: &Matrix = match &self.q.rotation {
+            Some(rot) => {
+                rotated_x = rot.rotate_acts_t(x);
+                &rotated_x
+            }
+            None => x,
+        };
         let mut out = Matrix::zeros(t, m);
         let nblocks = self.row_blocks(t);
         let block = m.div_ceil(nblocks);
@@ -195,12 +238,15 @@ impl FusedQlrMatrix {
             for i in r0..r1 {
                 self.q.dequant_row_into(i, panel.row_mut(i - r0));
             }
-            (r0, matmul_nt(x, &panel)) // (t, r1-r0)
+            (r0, matmul_nt(xq, &panel)) // (t, r1-r0)
         });
         for (c0, part) in blocks {
             for i in 0..t {
                 out.row_mut(i)[c0..c0 + part.cols()].copy_from_slice(part.row(i));
             }
+        }
+        if let Some(rot) = &self.q.rotation {
+            out = rot.unrotate_out_t(&out);
         }
         if self.rank() > 0 {
             let xr = matmul_nt(x, &self.r); // (t, rank)
@@ -230,7 +276,7 @@ impl FusedQlrMatrix {
     // ---- serialization ----
 
     pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
-        w.write_all(b"ODQ1")?;
+        w.write_all(b"ODQ2")?;
         self.q.write_to(w)?;
         self.l.write_to(w)?;
         self.r.write_to(w)?;
@@ -240,7 +286,7 @@ impl FusedQlrMatrix {
     pub fn read_from(r: &mut impl Read) -> Result<FusedQlrMatrix> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
-        if &magic != b"ODQ1" {
+        if &magic != b"ODQ2" && &magic != b"ODQ1" {
             bail!("bad fused-matrix magic {magic:?}");
         }
         let q = PackedMatrix::read_from(r)?;
@@ -299,14 +345,10 @@ impl FusedModel {
         })
     }
 
-    /// Deployment form of a pipeline result: packs every projection's `Q`
-    /// at `bits`/`group` and keeps the factors skinny.
-    pub fn from_compressed(
-        model: &CompressedModel,
-        base: &ModelParams,
-        bits: u32,
-        group: usize,
-    ) -> Result<FusedModel> {
+    /// Deployment form of a pipeline result: every projection's `Q` carried
+    /// as the quantizer's native codes (scheme-exact — no re-quantization),
+    /// factors kept skinny.
+    pub fn from_compressed(model: &CompressedModel, base: &ModelParams) -> Result<FusedModel> {
         if base.family.name != model.family.name {
             bail!(
                 "compressed model family '{}' != params family '{}'",
@@ -316,21 +358,29 @@ impl FusedModel {
         }
         let mut mats = BTreeMap::new();
         for (name, cm) in &model.matrices {
-            mats.insert(name.clone(), cm.to_fused(bits, group));
+            mats.insert(name.clone(), cm.to_fused()?);
         }
         FusedModel::assemble(model.family.clone(), base, mats)
     }
 
-    /// Pack an *uncompressed* model's projections directly (rank-0 factors)
-    /// — near-lossless at 8 bits; used for fused serving without a
-    /// compression run.
-    pub fn pack_dense(base: &ModelParams, bits: u32, group: usize) -> Result<FusedModel> {
+    /// Quantize an *uncompressed* model's projections directly with any
+    /// scheme (`"uniform"`/`"e8"`/`"mxint"`, rank-0 factors) and pack the
+    /// native codes — fused serving without a compression run. Uniform at
+    /// 8 bits is near-lossless.
+    pub fn pack_dense(
+        base: &ModelParams,
+        scheme: &str,
+        bits: u32,
+        group: usize,
+    ) -> Result<FusedModel> {
+        let quant = crate::quant::make_quantizer(scheme, bits, group)?;
         let fam = base.family.clone();
         let mut mats = BTreeMap::new();
         for name in &fam.projections {
             let w = base.get_matrix(name)?;
+            let out = quant.quantize(&w);
             let lr = LrPair::zeros(w.rows(), w.cols(), 0);
-            mats.insert(name.clone(), FusedQlrMatrix::from_dense(&w, &lr, bits, group));
+            mats.insert(name.clone(), FusedQlrMatrix::new(out.packed, lr)?);
         }
         FusedModel::assemble(fam, base, mats)
     }
@@ -368,12 +418,25 @@ impl FusedModel {
         }
     }
 
+    /// Per-scheme projection counts for logs, e.g. `"e8+rot×7"`.
+    pub fn scheme_summary(&self) -> String {
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for m in self.mats.values() {
+            *counts.entry(m.q.scheme_name()).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(k, v)| format!("{k}×{v}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
     // ---- serialization (`.odf` container) ----
 
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(b"ODF1")?;
+        f.write_all(b"ODF2")?;
         let nb = self.family.name.as_bytes();
         f.write_all(&(nb.len() as u32).to_le_bytes())?;
         f.write_all(nb)?;
@@ -414,8 +477,8 @@ impl FusedModel {
             .with_context(|| format!("opening {}", path.display()))?;
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
-        if &magic != b"ODF1" {
-            bail!("bad fused-model magic");
+        if &magic != b"ODF2" && &magic != b"ODF1" {
+            bail!("bad fused-model magic {magic:?}");
         }
         let mut b4 = [0u8; 4];
         let mut next_u32 = |f: &mut std::fs::File| -> Result<u32> {
@@ -536,14 +599,18 @@ impl crate::eval::Forward for FusedModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lowrank::svd_lr;
+    use crate::decompose::{Initializer, JointConfig, JointOptimizer};
+    use crate::hadamard::Incoherence;
+    use crate::hessian::Hessian;
+    use crate::lowrank::{svd_lr, LowRankConfig};
     use crate::model::CompressedMatrix;
-    use crate::quant::{make_quantizer, UniformQuantizer, Quantizer as _};
+    use crate::quant::{make_quantizer, Quantizer as _, UniformQuantizer};
     use crate::testing;
     use crate::util::rng::Pcg64;
 
-    /// Quantize → factorize-residual → pack, returning both the pipeline's
-    /// dense `CompressedMatrix` and the packed fused form.
+    /// Quantize → factorize-residual → pack the quantizer's native codes,
+    /// returning both the pipeline's dense `CompressedMatrix` and the
+    /// scheme-exact packed fused form.
     fn random_compressed(
         rng: &mut Pcg64,
         scheme: &str,
@@ -564,13 +631,12 @@ mod tests {
         };
         let cm = CompressedMatrix {
             q: qout.deq,
+            q_packed: qout.packed,
             lr,
             quant_scale: qout.scale,
             final_act_err: 0.0,
         };
-        // Pack at 8 bits so every scheme's Q survives with headroom; the
-        // uniform-exact case is covered separately below.
-        let fm = cm.to_fused(8, group);
+        let fm = cm.to_fused().unwrap();
         (cm, fm)
     }
 
@@ -583,7 +649,19 @@ mod tests {
             let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
             let bits = 2 + rng.below(3) as u32;
             let group = [8usize, 16, 32][rng.below(3)];
-            let (_cm, fm) = random_compressed(rng, scheme, m, n, rank, bits, group);
+            let (cm, fm) = random_compressed(rng, scheme, m, n, rank, bits, group);
+            // Scheme-exact storage: the packed container decodes the
+            // pipeline's Q and reconstruction with ZERO error.
+            assert_eq!(
+                fm.q.unpack().max_abs_diff(&cm.q),
+                0.0,
+                "{scheme} packed Q not bit-exact"
+            );
+            assert_eq!(
+                fm.reconstruct().max_abs_diff(&cm.reconstruct()),
+                0.0,
+                "{scheme} fused reconstruct diverged from compressed"
+            );
             let dense = fm.reconstruct();
             let cols = 1 + rng.below(12);
             let x = testing::gen_matrix(rng, n, cols);
@@ -609,9 +687,10 @@ mod tests {
 
     #[test]
     fn uniform_packing_is_exact_end_to_end() {
-        // For the uniform quantizer at matching bits/group, pack(Q) lands on
-        // the identical grid: the fused path reproduces the pipeline's dense
-        // reconstruct()-then-matmul bit-for-bit (up to f32 summation order).
+        // For the uniform quantizer the packed container carries the
+        // quantizer's own codes and frozen scales: the fused path
+        // reproduces the pipeline's Q with zero error (no scale-recompute
+        // rounding — the old 1e-5 tolerance is gone for good).
         testing::quick("fused-uniform-exact", |rng| {
             let m = testing::gen_dim(rng, 4, 40);
             let n = testing::gen_dim(rng, 4, 40);
@@ -628,17 +707,16 @@ mod tests {
             };
             let cm = CompressedMatrix {
                 q: qout.deq,
+                q_packed: qout.packed,
                 lr,
                 quant_scale: qout.scale,
                 final_act_err: 0.0,
             };
-            let fm = cm.to_fused(bits, group);
-            // Exact up to one f32 scale-recompute rounding per group.
-            let tol = 1e-5 * cm.q.abs_max().max(1.0);
-            assert!(
-                fm.q.unpack().max_abs_diff(&cm.q) <= tol,
-                "uniform pack not exact: {} > {tol}",
-                fm.q.unpack().max_abs_diff(&cm.q)
+            let fm = cm.to_fused().unwrap();
+            assert_eq!(
+                fm.q.unpack().max_abs_diff(&cm.q),
+                0.0,
+                "uniform pack not bit-exact"
             );
             let x = testing::gen_matrix(rng, n, 1 + rng.below(8));
             let fused = fm.matmul(&x);
@@ -649,6 +727,94 @@ mod tests {
                 fused.rel_err(&reference)
             );
         });
+    }
+
+    #[test]
+    fn rotated_codes_kernels_match_dense() {
+        // Incoherence-rotated codes (the LDLQ + Hadamard deployment case):
+        // unpack is bit-exact against the pipeline's un-rotation, and both
+        // kernels fold the rotation into the activations correctly.
+        testing::quick("fused-rotated", |rng| {
+            let m = testing::gen_dim(rng, 4, 32);
+            let n = testing::gen_dim(rng, 4, 32);
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let rank = rng.below(4);
+            let w = testing::gen_matrix(rng, m, n);
+            let inc = Incoherence::new(m, n, rng);
+            let quant = make_quantizer(scheme, 3, 8).unwrap();
+            let qout = quant.quantize(&inc.apply(&w));
+            let q_orig = inc.unapply(&qout.deq);
+            let packed = qout
+                .packed
+                .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
+            let lr = if rank == 0 {
+                LrPair::zeros(m, n, 0)
+            } else {
+                svd_lr(&w.sub(&q_orig), rank.min(m).min(n), rng)
+            };
+            let fm = FusedQlrMatrix::new(packed, lr).unwrap();
+            assert_eq!(
+                fm.q.unpack().max_abs_diff(&q_orig),
+                0.0,
+                "{scheme} rotated decode not bit-exact"
+            );
+            let dense = fm.reconstruct();
+            let x = testing::gen_matrix(rng, n, 1 + rng.below(6));
+            assert!(
+                fm.matmul(&x).rel_err(&dense.dot(&x)) < 1e-4,
+                "{scheme} rotated matmul"
+            );
+            let xt = testing::gen_matrix(rng, 1 + rng.below(6), n);
+            assert!(
+                fm.matmul_t(&xt).rel_err(&matmul_nt(&xt, &dense)) < 1e-4,
+                "{scheme} rotated matmul_t"
+            );
+        });
+    }
+
+    #[test]
+    fn ldlq_rotated_pipeline_is_served_exactly() {
+        // Full-pipeline parity: run the joint optimizer (LDLQ + Hadamard
+        // incoherence) per scheme and assert the fused container serves the
+        // exact decomposition it produced — reconstruction error 0, kernel
+        // error < 1e-4.
+        let mut rng = Pcg64::new(40, 1);
+        for scheme in ["uniform", "e8", "mxint"] {
+            let w = Matrix::randn(20, 32, 1.0, &mut rng);
+            let acts = Matrix::randn(32, 48, 1.0, &mut rng);
+            let hess = Hessian::from_acts(&acts);
+            let quant = make_quantizer(scheme, 2, 8).unwrap();
+            let cfg = JointConfig {
+                outer_iters: 2,
+                hadamard: true,
+                lowrank: LowRankConfig {
+                    rank: 4,
+                    lr_bits: 16,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let d = JointOptimizer::new(quant.as_ref(), cfg).run(&w, &hess, &Initializer::Zero);
+            let cm = CompressedMatrix {
+                q: d.q.clone(),
+                q_packed: d.q_packed.clone(),
+                lr: d.lr.clone(),
+                quant_scale: 0.0,
+                final_act_err: 0.0,
+            };
+            let fm = cm.to_fused().unwrap();
+            assert!(fm.q.rotation.is_some(), "{scheme}: rotation metadata lost");
+            assert_eq!(
+                fm.reconstruct().max_abs_diff(&cm.reconstruct()),
+                0.0,
+                "{scheme}: fused serving is not the optimized decomposition"
+            );
+            let x = Matrix::randn(32, 5, 1.0, &mut rng);
+            assert!(
+                fm.matmul(&x).rel_err(&cm.reconstruct().dot(&x)) < 1e-4,
+                "{scheme}: rotated kernel diverged"
+            );
+        }
     }
 
     #[test]
@@ -685,7 +851,7 @@ mod tests {
     #[test]
     fn large_blocked_path_matches_reference() {
         // Big enough to cross the threading threshold so the parallel
-        // block assembly is exercised.
+        // block assembly is exercised — with and without rotation.
         let mut rng = Pcg64::new(32, 1);
         let (_cm, fm) = random_compressed(&mut rng, "uniform", 320, 256, 8, 4, 64);
         let x = Matrix::randn(256, 32, 1.0, &mut rng);
@@ -693,17 +859,53 @@ mod tests {
         assert!(fm.matmul(&x).rel_err(&dense.dot(&x)) < 1e-4);
         let xt = Matrix::randn(48, 256, 1.0, &mut rng);
         assert!(fm.matmul_t(&xt).rel_err(&matmul_nt(&xt, &dense)) < 1e-4);
+
+        let inc = Incoherence::new(320, 256, &mut rng);
+        let w = Matrix::randn(320, 256, 1.0, &mut rng);
+        let qout = UniformQuantizer::new(4, 64).quantize(&inc.apply(&w));
+        let packed = qout
+            .packed
+            .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
+        let fm = FusedQlrMatrix::new(packed, LrPair::zeros(320, 256, 0)).unwrap();
+        let dense = fm.reconstruct();
+        assert!(fm.matmul(&x).rel_err(&dense.dot(&x)) < 1e-4);
+        assert!(fm.matmul_t(&xt).rel_err(&matmul_nt(&xt, &dense)) < 1e-4);
     }
 
     #[test]
-    fn fused_matrix_serialization_roundtrip() {
+    fn fused_matrix_serialization_roundtrip_per_scheme() {
         let mut rng = Pcg64::new(33, 1);
-        let (_cm, fm) = random_compressed(&mut rng, "mxint", 20, 28, 4, 3, 16);
-        let mut buf = Vec::new();
-        fm.write_to(&mut buf).unwrap();
-        let back = FusedQlrMatrix::read_from(&mut buf.as_slice()).unwrap();
-        assert_eq!(fm, back);
-        assert!(fm.byte_size() > 0 && fm.bits_per_weight() > 0.0);
+        for (scheme, bits, group) in [("mxint", 3, 16), ("e8", 2, 8), ("uniform", 4, 16)] {
+            let (_cm, fm) = random_compressed(&mut rng, scheme, 20, 28, 4, bits, group);
+            let mut buf = Vec::new();
+            fm.write_to(&mut buf).unwrap();
+            assert_eq!(&buf[..4], b"ODQ2");
+            let back = FusedQlrMatrix::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(fm, back, "{scheme}");
+            assert_eq!(buf.len(), fm.byte_size(), "{scheme} byte_size drifted");
+            assert!(fm.bits_per_weight() > 0.0);
+        }
+    }
+
+    #[test]
+    fn reads_legacy_v1_fused_matrix() {
+        // A v1 stream (ODQ1 + ODP1 uniform payload) still loads into the
+        // identical matrix.
+        let mut rng = Pcg64::new(34, 1);
+        let w = Matrix::randn(12, 20, 1.0, &mut rng);
+        let packed = PackedMatrix::pack(&w, 4, 8);
+        let lr = LrPair {
+            l: Matrix::randn(12, 3, 0.1, &mut rng),
+            r: Matrix::randn(3, 20, 0.1, &mut rng),
+        };
+        let fm = FusedQlrMatrix::new(packed.clone(), lr.clone()).unwrap();
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(b"ODQ1");
+        packed.write_to_v1(&mut v1).unwrap();
+        fm.l.write_to(&mut v1).unwrap();
+        fm.r.write_to(&mut v1).unwrap();
+        let back = FusedQlrMatrix::read_from(&mut v1.as_slice()).unwrap();
+        assert_eq!(back, fm);
     }
 
     #[test]
@@ -713,7 +915,7 @@ mod tests {
         // different kernels.
         let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
         let params = ModelParams::init(&fam, 21);
-        let fm = FusedModel::pack_dense(&params, 8, 32).unwrap();
+        let fm = FusedModel::pack_dense(&params, "uniform", 8, 32).unwrap();
         let mut dense_params = params.clone();
         for name in &fam.projections {
             dense_params
@@ -743,13 +945,16 @@ mod tests {
         // 8-bit codes + scales + per-matrix headers (the micro matrices are
         // tiny, so header overhead is a large fraction).
         assert!(fm.avg_bits() > 8.0 && fm.avg_bits() < 40.0, "{}", fm.avg_bits());
+        assert_eq!(fm.scheme_summary(), "uniform×7");
     }
 
     #[test]
     fn fused_model_serialization_roundtrip() {
         let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
         let params = ModelParams::init(&fam, 23);
-        let fm = FusedModel::pack_dense(&params, 4, 16).unwrap().with_shape(2, 6);
+        let fm = FusedModel::pack_dense(&params, "mxint", 4, 16)
+            .unwrap()
+            .with_shape(2, 6);
         let dir = std::env::temp_dir().join("odlri_test_odf");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("micro.odf");
@@ -767,5 +972,24 @@ mod tests {
         let a = fm.forward(&tokens, 2, 6).unwrap();
         let b = back.forward(&tokens, 2, 6).unwrap();
         assert!(a.max_abs_diff(&b) == 0.0);
+    }
+
+    #[test]
+    fn loads_v1_magic_container() {
+        // ODF1 containers (whose inner matrices self-describe their own
+        // version) still load.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 25);
+        let fm = FusedModel::pack_dense(&params, "uniform", 4, 16).unwrap();
+        let dir = std::env::temp_dir().join("odlri_test_odf_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("micro_v1.odf");
+        fm.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[..4].copy_from_slice(b"ODF1");
+        std::fs::write(&path, &bytes).unwrap();
+        let back = FusedModel::load(&fam, &path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.mats.len(), fm.mats.len());
     }
 }

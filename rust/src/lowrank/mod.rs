@@ -108,8 +108,8 @@ pub fn lplr(a: &Matrix, h: &Matrix, init: LrPair, cfg: &LowRankConfig) -> LrPair
     // flip the Q-vs-LR error balance at this matrix scale (see
     // EXPERIMENTS.md §Deviations for the ablation).
     let quant = UniformQuantizer::new(cfg.lr_bits, 32);
-    let quant_l = |l: &Matrix| quant.quantize(l).deq;
-    let quant_r = |r: &Matrix| quant.quantize(r).deq;
+    let quant_l = |l: &Matrix| quant.quantize_dense(l).0;
+    let quant_r = |r: &Matrix| quant.quantize_dense(r).0;
     let (s, _lam) = cholesky_jittered(h, 1e-6).expect("lplr cholesky failed");
     let objective = |p: &LrPair| -> f64 {
         let resid = a.sub(&p.product());

@@ -211,16 +211,6 @@ fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
     })
 }
 
-/// Bits for packing `Q` into the fused container. Defaults to a
-/// near-lossless 8-bit repack for every scheme: the pipeline's `Q` is the
-/// LDLQ- and (by default) Hadamard-rotated result, so it does not sit on
-/// the packed format's absmax grid even for `--scheme uniform` — packing
-/// at `q_bits` would silently re-quantize it without the Hessian. Use
-/// `--fused-bits N` to trade size for fidelity explicitly.
-fn fused_pack_bits(args: &Args, _cfg: &PipelineConfig) -> Result<u32> {
-    Ok(args.usize("fused-bits", 8)? as u32)
-}
-
 fn cmd_compress(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
@@ -248,17 +238,19 @@ fn cmd_compress(args: &Args) -> Result<()> {
     ));
     applied.save(&path)?;
     println!("wrote {}", path.display());
-    // Deployment container for the fused serving path.
+    // Deployment container for the fused serving path. The container
+    // stores each projection's scheme-native codes exactly as the pipeline
+    // quantized them — no re-quantization at packing time.
     if args.switch("fused") || !args.str("fused-out", "").is_empty() {
-        let bits = fused_pack_bits(args, &cfg)?;
-        let fm = out.model.to_fused(&params, bits, cfg.q_group)?;
+        let fm = out.model.to_fused(&params)?;
         // Canonical serving artifact path — matches the default that
         // `eval --fused` / `serve-bench --fused` look for.
         let fpath = PathBuf::from(args.str("fused-out", &format!("runs/{family}.odf")));
         fm.save(&fpath)?;
         println!(
-            "wrote {} (packed Q at {bits} bits: {:.2} bits/weight, {} packed)",
+            "wrote {} (scheme-exact packed Q [{}]: {:.2} bits/weight, {} packed)",
             fpath.display(),
+            fm.scheme_summary(),
             fm.avg_bits(),
             odlri::util::human_bytes(fm.packed_bytes())
         );
@@ -275,9 +267,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let weights = args.str("weights", &format!("runs/{family}.odf"));
         let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
         eprintln!(
-            "[eval] fused engine: {:.2} bits/weight over {} packed projections",
+            "[eval] fused engine: {:.2} bits/weight over {} packed projections [{}]",
             fm.avg_bits(),
-            fm.mats.len()
+            fm.mats.len(),
+            fm.scheme_summary()
         );
         eval::evaluate_of(
             &fm,
@@ -392,8 +385,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         let weights = args.str("weights", &format!("runs/{family}.odf"));
         let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
         eprintln!(
-            "[serve-bench] fused engine ({:.2} bits/weight packed)",
-            fm.avg_bits()
+            "[serve-bench] fused engine ({:.2} bits/weight packed [{}])",
+            fm.avg_bits(),
+            fm.scheme_summary()
         );
         run_batch_server(&fm, &cfg)?
     } else {

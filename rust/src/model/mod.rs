@@ -216,9 +216,17 @@ pub fn inject_outliers(
 }
 
 /// A compressed projection: Ŵ = Q + L·R plus bookkeeping.
+///
+/// Invariant: `q == q_packed.unpack()` bit-for-bit — the packed codes are
+/// the quantizer's own output, not a re-quantization, so the fused serving
+/// path evaluates exactly the decomposition the pipeline optimized.
 #[derive(Clone, Debug)]
 pub struct CompressedMatrix {
+    /// Dense quantize-dequantized `Q` (original basis).
     pub q: Matrix,
+    /// The same `Q` as scheme-native packed codes (uniform / E8 / MXINT,
+    /// plus Hadamard rotation metadata for incoherence-processed runs).
+    pub q_packed: crate::quant::PackedMatrix,
     pub lr: LrPair,
     pub quant_scale: f32,
     pub final_act_err: f64,
@@ -231,11 +239,12 @@ impl CompressedMatrix {
         self.q.add(&self.lr.product())
     }
 
-    /// Deployment form: pack `Q` at `bits`/`group` (exact for the uniform
-    /// scheme at matching parameters) and keep the factors skinny. The
-    /// fused kernels then compute `Q·x + L·(R·x)` without densifying.
-    pub fn to_fused(&self, bits: u32, group: usize) -> crate::fused::FusedQlrMatrix {
-        crate::fused::FusedQlrMatrix::from_dense(&self.q, &self.lr, bits, group)
+    /// Deployment form: the quantizer's native packed codes plus the skinny
+    /// factors. No re-quantization happens here — the fused kernels decode
+    /// the exact `Q` this matrix was optimized with and compute
+    /// `Q·x + L·(R·x)` without densifying.
+    pub fn to_fused(&self) -> Result<crate::fused::FusedQlrMatrix> {
+        crate::fused::FusedQlrMatrix::new(self.q_packed.clone(), self.lr.clone())
     }
 }
 
@@ -250,15 +259,11 @@ pub struct CompressedModel {
 }
 
 impl CompressedModel {
-    /// Deployment form: every projection packed for the fused `(Q+LR)·x`
-    /// engine, dense params carried alongside for embed/norms/unembed.
-    pub fn to_fused(
-        &self,
-        base: &ModelParams,
-        bits: u32,
-        group: usize,
-    ) -> Result<crate::fused::FusedModel> {
-        crate::fused::FusedModel::from_compressed(self, base, bits, group)
+    /// Deployment form: every projection's native packed codes wired into
+    /// the fused `(Q+LR)·x` engine, dense params carried alongside for
+    /// embed/norms/unembed.
+    pub fn to_fused(&self, base: &ModelParams) -> Result<crate::fused::FusedModel> {
+        crate::fused::FusedModel::from_compressed(self, base)
     }
 
     /// Model parameters with every projection replaced by its
@@ -398,12 +403,15 @@ mod tests {
         let mut matrices = BTreeMap::new();
         for name in &fam.projections {
             let shape = fam.param_shape(name).unwrap();
-            let q = Matrix::randn(shape[0], shape[1], 0.1, &mut rng);
+            let w = Matrix::randn(shape[0], shape[1], 0.1, &mut rng);
+            use crate::quant::Quantizer as _;
+            let out = crate::quant::UniformQuantizer::new(8, 16).quantize(&w);
             let lr = LrPair::zeros(shape[0], shape[1], 4);
             matrices.insert(
                 name.clone(),
                 CompressedMatrix {
-                    q,
+                    q: out.deq,
+                    q_packed: out.packed,
                     lr,
                     quant_scale: 0.1,
                     final_act_err: 0.05,

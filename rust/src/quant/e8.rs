@@ -13,10 +13,18 @@
 //! ‖W − Q(W)‖_F on a subsample — this is what makes the Figure-2
 //! "quantization scale" respond when ODLRI smooths the residual.
 
-use super::{Prepared, QuantOut, Quantizer};
+use super::packed::{write_bits, PackedMatrix, PackedScheme};
+use super::{Prepared, Quantizer};
 use crate::tensor::Matrix;
 
 const COORD_LIMIT: f32 = 2.0;
+
+/// Coordinate clamp of the `bits`-bit operating point: 2-bit → ±2 (≈ E8P's
+/// ball), each extra bit doubles the radius. Shared with the packed-code
+/// decoder, which stores coordinates in half units of this limit.
+pub(crate) fn e8_coord_limit(bits: u32) -> f32 {
+    COORD_LIMIT * (1 << (bits - 2)) as f32
+}
 
 /// E8 lattice quantizer at a nominal `bits`/weight operating point (the
 /// paper always uses 2; the knob scales the coordinate clamp).
@@ -34,8 +42,7 @@ impl E8Lattice {
     }
 
     fn coord_limit(&self) -> f32 {
-        // 2-bit → ±2 (≈ E8P's ball), each extra bit doubles the radius.
-        COORD_LIMIT * (1 << (self.bits - 2)) as f32
+        e8_coord_limit(self.bits)
     }
 
     /// Pick the global scale by grid search on (a subsample of) W.
@@ -186,14 +193,6 @@ impl Quantizer for E8Lattice {
         self.bits as f64 + 32.0 / (rows * cols) as f64
     }
 
-    fn quantize(&self, w: &Matrix) -> QuantOut {
-        let s = self.search_scale(w);
-        QuantOut {
-            deq: self.quantize_with_scale(w, s),
-            scale: s,
-        }
-    }
-
     fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a> {
         let s = self.search_scale(w);
         Box::new(PreparedE8 { q: self.clone(), s })
@@ -216,6 +215,34 @@ impl Prepared for PreparedE8 {
 
     fn scale_metric(&self) -> f32 {
         self.s
+    }
+
+    fn encode(&self, deq: &Matrix) -> PackedMatrix {
+        let (m, n) = deq.shape();
+        let two_lim = (2.0 * self.q.coord_limit()) as i32;
+        let cb = self.q.bits + 2; // half-unit coordinates need 2 extra bits
+        let mut codes = vec![0u8; (m * n * cb as usize).div_ceil(8)];
+        let mut bitpos = 0usize;
+        for i in 0..m {
+            for &v in deq.row(i) {
+                // `v` is `q·s` for a half-integer lattice coordinate `q`
+                // within ±lim; `2v/s` recovers the integer `2q` exactly and
+                // decode recomputes the identical `(2q/2)·s` product.
+                let c = ((v * 2.0 / self.s).round() as i32).clamp(-two_lim, two_lim);
+                write_bits(&mut codes, bitpos, cb, (c + two_lim) as u32);
+                bitpos += cb as usize;
+            }
+        }
+        PackedMatrix {
+            rows: m,
+            cols: n,
+            scheme: PackedScheme::E8 {
+                bits: self.q.bits,
+                scale: self.s,
+                codes,
+            },
+            rotation: None,
+        }
     }
 }
 

@@ -16,8 +16,10 @@ mod uniform;
 pub use e8::E8Lattice;
 pub use ldlq::ldlq_quantize;
 pub use mxint::MxInt;
-pub use packed::PackedMatrix;
+pub use packed::{PackedMatrix, PackedScheme, Rotation, MX_ZERO_EXP};
 pub use uniform::UniformQuantizer;
+
+pub(crate) use packed::ByteCount;
 
 use crate::tensor::Matrix;
 
@@ -30,6 +32,12 @@ pub struct QuantOut {
     /// quantizer actually used (global scale for E8, mean row scale for
     /// uniform, mean 2^e for MXINT).
     pub scale: f32,
+    /// The scheme's native packed codes for `deq`, encoded under the same
+    /// frozen scales that produced it — `packed.unpack()` reproduces `deq`
+    /// **bit-exactly** (property-tested per quantizer). This is what the
+    /// fused deployment container stores; no re-quantization ever happens
+    /// downstream.
+    pub packed: PackedMatrix,
 }
 
 /// A weight quantizer. `quantize` is the direct (round-to-nearest) path;
@@ -45,8 +53,27 @@ pub trait Quantizer: Send + Sync {
     /// the given shape (used for the paper's Avg-Bits bookkeeping).
     fn bits_with_overhead(&self, rows: usize, cols: usize) -> f64;
 
-    /// Direct quantize-dequantize.
-    fn quantize(&self, w: &Matrix) -> QuantOut;
+    /// Direct quantize-dequantize, with the scheme's native packed codes
+    /// encoded under the same frozen scales that did the rounding.
+    fn quantize(&self, w: &Matrix) -> QuantOut {
+        let prep = self.prepare(w);
+        let deq = prep.round_columns(w, 0);
+        QuantOut {
+            scale: prep.scale_metric(),
+            packed: prep.encode(&deq),
+            deq,
+        }
+    }
+
+    /// Round-to-nearest without the native-code encode: `(deq, scale)`
+    /// only. For inner loops (LPLR factor rounding, non-final joint
+    /// iterations) whose output is consumed dense and immediately
+    /// discarded — encoding there would be pure waste.
+    fn quantize_dense(&self, w: &Matrix) -> (Matrix, f32) {
+        let prep = self.prepare(w);
+        let deq = prep.round_columns(w, 0);
+        (deq, prep.scale_metric())
+    }
 
     /// Activation-aware quantization with LDLQ error feedback against the
     /// (regularized) Hessian `h` (shape n×n for W m×n). The default
@@ -57,10 +84,23 @@ pub trait Quantizer: Send + Sync {
         let deq = ldlq_quantize(w, h, self.feedback_block(), |cols, c0| {
             prep.round_columns(cols, c0)
         });
+        let packed = prep.encode(&deq);
         QuantOut {
             deq,
             scale: prep.scale_metric(),
+            packed,
         }
+    }
+
+    /// The LDLQ path minus the encode — for joint-optimizer iterations
+    /// whose `Q` is superseded by the next outer iteration. Only the final
+    /// iteration needs [`Quantizer::quantize_with_hessian`]'s packed codes.
+    fn quantize_with_hessian_dense(&self, w: &Matrix, h: &Matrix) -> (Matrix, f32) {
+        let prep = self.prepare(w);
+        let deq = ldlq_quantize(w, h, self.feedback_block(), |cols, c0| {
+            prep.round_columns(cols, c0)
+        });
+        (deq, prep.scale_metric())
     }
 
     /// Precompute scales for `w`; the returned object rounds column blocks
@@ -84,6 +124,15 @@ pub trait Prepared: Send + Sync {
 
     /// The Figure-2 scale statistic.
     fn scale_metric(&self) -> f32;
+
+    /// Encode an already-rounded full-width output of [`round_columns`]
+    /// (`round_columns`-shaped values under *these* frozen scales) into the
+    /// scheme's native packed codes. Contract: `encode(q).unpack()` equals
+    /// `q` bit-for-bit — decode performs the exact f32 operation sequence
+    /// that produced each entry.
+    ///
+    /// [`round_columns`]: Prepared::round_columns
+    fn encode(&self, deq: &Matrix) -> PackedMatrix;
 }
 
 /// Build a quantizer from a config string (`"e8"`, `"uniform"`, `"mxint"`).
@@ -136,6 +185,28 @@ mod tests {
         };
         let via_h = hessian_error(&w, &q, &h);
         assert!((direct - via_h).abs() < 1e-2 * direct.max(1.0));
+    }
+
+    /// The LDLQ error-feedback path must also emit scheme-native codes
+    /// that decode bit-exactly — this is the `Q` the fused container
+    /// actually serves.
+    #[test]
+    fn ldlq_output_encodes_bit_exactly_per_scheme() {
+        testing::quick("ldlq-encode-exact", |rng| {
+            let m = testing::gen_dim(rng, 2, 16);
+            let n = testing::gen_dim(rng, 2, 24);
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let bits = 2 + rng.below(2) as u32;
+            let w = testing::gen_matrix(rng, m, n);
+            let h = testing::gen_spd(rng, n);
+            let quant = make_quantizer(scheme, bits, 8).unwrap();
+            let out = quant.quantize_with_hessian(&w, &h);
+            assert_eq!(
+                out.packed.unpack().max_abs_diff(&out.deq),
+                0.0,
+                "{scheme}@{bits}b LDLQ codes not bit-exact"
+            );
+        });
     }
 
     /// LDLQ must not be (much) worse than round-to-nearest in

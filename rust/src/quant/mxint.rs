@@ -6,7 +6,8 @@
 //! magnitude bits. The shared exponent is chosen so the block's absmax just
 //! fits.
 
-use super::{Prepared, QuantOut, Quantizer};
+use super::packed::{exp_pow2, pow2_exponent, write_bits, PackedMatrix, PackedScheme, MX_ZERO_EXP};
+use super::{Prepared, Quantizer};
 use crate::tensor::Matrix;
 
 #[derive(Clone, Debug)]
@@ -33,10 +34,13 @@ impl MxInt {
         if absmax <= 0.0 {
             return 0.0;
         }
-        // Smallest power-of-two step with absmax/step <= mmax.
+        // Smallest power-of-two step with absmax/step <= mmax. The step is
+        // built from its bit pattern (not `powf`) so it is an exact power
+        // of two for any libm — the packed container stores just the
+        // exponent and must rebuild the identical f32.
         let raw = absmax / self.mmax();
-        let e = raw.log2().ceil();
-        2f32.powf(e)
+        let e = (raw.log2().ceil() as i32).clamp(-149, 127) as i16;
+        exp_pow2(e)
     }
 
     fn compute_steps(&self, w: &Matrix) -> Vec<f32> {
@@ -68,15 +72,6 @@ impl Quantizer for MxInt {
     fn bits_with_overhead(&self, _rows: usize, _cols: usize) -> f64 {
         // 8-bit shared exponent per block.
         self.bits as f64 + 8.0 / self.block as f64
-    }
-
-    fn quantize(&self, w: &Matrix) -> QuantOut {
-        let prep = self.prepare(w);
-        let deq = prep.round_columns(w, 0);
-        QuantOut {
-            deq,
-            scale: prep.scale_metric(),
-        }
     }
 
     fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a> {
@@ -126,6 +121,49 @@ impl Prepared for PreparedMx {
             return 0.0;
         }
         (nz.iter().map(|&s| s as f64).sum::<f64>() / nz.len() as f64) as f32
+    }
+
+    fn encode(&self, deq: &Matrix) -> PackedMatrix {
+        let (m, n) = deq.shape();
+        assert_eq!(n, self.cols, "encode width mismatch");
+        let bpr = self.cols.div_ceil(self.q.block);
+        let mmax = self.q.mmax() as i32;
+        let bits = self.q.bits;
+        // Exponents come from the steps' own bit patterns, so the decoder
+        // rebuilds the identical f32 step (normal or denormal).
+        let mut exps = Vec::with_capacity(self.steps.len());
+        for &s in &self.steps {
+            exps.push(if s == 0.0 {
+                MX_ZERO_EXP
+            } else {
+                pow2_exponent(s).expect("mxint step is not a power of two")
+            });
+        }
+        let mut codes = vec![0u8; (m * n * bits as usize).div_ceil(8)];
+        let mut bitpos = 0usize;
+        for i in 0..m {
+            for (j, &v) in deq.row(i).iter().enumerate() {
+                let step = self.steps[i * bpr + (j / self.q.block).min(bpr.max(1) - 1)];
+                let q = if step == 0.0 {
+                    0
+                } else {
+                    ((v / step).round() as i32).clamp(-mmax, mmax)
+                };
+                write_bits(&mut codes, bitpos, bits, (q + mmax) as u32);
+                bitpos += bits as usize;
+            }
+        }
+        PackedMatrix {
+            rows: m,
+            cols: n,
+            scheme: PackedScheme::MxInt {
+                bits,
+                block: self.q.block,
+                codes,
+                exps,
+            },
+            rotation: None,
+        }
     }
 }
 

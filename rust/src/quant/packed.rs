@@ -1,28 +1,189 @@
-//! Bit-packed storage for quantized matrices.
+//! Scheme-exact bit-packed storage for quantized matrices (ODP v2).
 //!
-//! The compressed-model container stores `Q` as packed b-bit codes plus
-//! scales so the artifact on disk actually has the advertised footprint
-//! (avg-bits accounting is checked against the serialized size in tests).
+//! The deployment container stores each quantizer's **native** codes so the
+//! fused serving path decodes exactly the `Q` the pipeline optimized — no
+//! Hessian-free re-quantization onto a foreign grid at packing time. A
+//! [`PackedMatrix`] is one of three code layouts plus an optional Hadamard
+//! incoherence rotation:
+//!
+//! * [`PackedScheme::Uniform`] — offset-binary b-bit codes
+//!   (`code = q + qmax`) with per-row per-group f32 absmax scales. Decode:
+//!   `(code − qmax) · scale`.
+//! * [`PackedScheme::E8`] — E8-lattice coordinates in **half units**, one
+//!   global f32 scale. Each coordinate is stored as
+//!   `code = 2·q + 2·lim ∈ [0, 4·lim]` at `bits + 2` bits/coordinate
+//!   (`lim = 2^{bits−1}` is the coordinate clamp of the `bits`-bit
+//!   operating point). This is wider than the nominal budget — exactness
+//!   is the contract; `bits_per_weight()` reports the honest footprint.
+//!   Decode: `((code − 2·lim)/2) · scale`.
+//! * [`PackedScheme::MxInt`] — offset-binary b-bit mantissas with one
+//!   shared power-of-two exponent per block, stored as an `i16`
+//!   (`step = 2^e`, [`MX_ZERO_EXP`] marks an all-zero block). Decode:
+//!   `(code − mmax) · 2^e`.
+//!
+//! [`Rotation`] records the QuIP#-style randomized-Hadamard sign diagonals
+//! when the codes live in the incoherent basis (LDLQ + `hadamard` runs):
+//! `Q = D_m H_m Q̃ H_n D_n` with `Q̃` the stored grid. [`PackedMatrix::unpack`]
+//! applies the inverse transform with the exact same op sequence as
+//! [`crate::hadamard::Incoherence::unapply`], so the decode reproduces the
+//! pipeline's `Q` bit-for-bit; the fused kernels instead rotate the
+//! *activations* (`Q·x = D_m H_m (Q̃ · (H_n D_n x))`) and never densify.
+//!
+//! ## On-disk format (`ODP2`)
+//!
+//! ```text
+//! magic   b"ODP2"
+//! u32     scheme tag        (0 = uniform, 1 = e8, 2 = mxint)
+//! u32     rotated flag      (0 / 1)
+//! u32     rows, u32 cols
+//! scheme payload:
+//!   uniform: u32 bits, u32 group_size, u32 ncodes, codes,
+//!            u32 nscales, f32 scales
+//!   e8:      u32 bits, f32 scale, u32 ncodes, codes
+//!   mxint:   u32 bits, u32 block, u32 ncodes, codes, u32 nexps, i16 exps
+//! rotation payload (iff rotated):
+//!   ceil(rows/8) left sign bits, ceil(cols/8) right sign bits (1 = +1)
+//! ```
+//!
+//! All counts are validated against `rows`/`cols`/`bits`/`group` **before**
+//! any allocation, and payloads are read through bounded `take` readers, so
+//! a truncated or corrupt stream yields `Err` instead of unbounded
+//! allocations or out-of-bounds scale indexing. Legacy `ODP1` (uniform-only
+//! v1) streams are still readable; writes always emit v2.
 
+use crate::hadamard::{fwht_cols, fwht_rows};
 use crate::tensor::Matrix;
 use anyhow::{bail, Result};
 
-/// A b-bit signed-code matrix with per-row-group scales.
-/// Codes are stored offset-binary: `code = q + qmax` ∈ [0, 2^bits - 1].
+/// Largest accepted dimension on deserialization — a corrupt header must
+/// not translate into a multi-terabyte allocation attempt.
+const MAX_DIM: usize = 1 << 26;
+
+/// Shared-exponent sentinel for an all-zero MXINT block (step = 0).
+pub const MX_ZERO_EXP: i16 = i16::MIN;
+
+/// The native code layout of one quantizer family.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PackedScheme {
+    /// Offset-binary b-bit codes + per-row per-group absmax scales.
+    Uniform {
+        bits: u32,
+        group_size: usize,
+        codes: Vec<u8>,
+        scales: Vec<f32>,
+    },
+    /// E8 lattice coordinates in half units at `bits + 2` bits/coordinate
+    /// plus the single global scale.
+    E8 { bits: u32, scale: f32, codes: Vec<u8> },
+    /// b-bit mantissas + one shared power-of-two exponent per block.
+    MxInt {
+        bits: u32,
+        block: usize,
+        codes: Vec<u8>,
+        exps: Vec<i16>,
+    },
+}
+
+impl PackedScheme {
+    fn tag(&self) -> u32 {
+        match self {
+            PackedScheme::Uniform { .. } => 0,
+            PackedScheme::E8 { .. } => 1,
+            PackedScheme::MxInt { .. } => 2,
+        }
+    }
+
+    /// Stored code width in bits per weight (E8 pays 2 extra bits per
+    /// coordinate for exactness).
+    pub fn code_bits(&self) -> u32 {
+        match self {
+            PackedScheme::Uniform { bits, .. } => *bits,
+            PackedScheme::E8 { bits, .. } => bits + 2,
+            PackedScheme::MxInt { bits, .. } => *bits,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PackedScheme::Uniform { .. } => "uniform",
+            PackedScheme::E8 { .. } => "e8",
+            PackedScheme::MxInt { .. } => "mxint",
+        }
+    }
+}
+
+/// Randomized-Hadamard incoherence metadata: the codes are stored in the
+/// rotated basis and `Q = D_m H_m Q̃ H_n D_n` is recovered (or folded into
+/// the activations) at decode time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rotation {
+    /// `D_m` diagonal, ±1 per output row.
+    pub left_signs: Vec<f32>,
+    /// `D_n` diagonal, ±1 per input column.
+    pub right_signs: Vec<f32>,
+}
+
+impl Rotation {
+    /// Exact inverse rotation of the full stored matrix — the identical op
+    /// sequence as [`crate::hadamard::Incoherence::unapply`] (borrowing the sign diagonals
+    /// instead of cloning them), so decodes are bit-exact against the
+    /// pipeline's un-rotation.
+    pub fn unapply(&self, qt: &Matrix) -> Matrix {
+        let mut t = qt.clone();
+        fwht_cols(&mut t);
+        fwht_rows(&mut t);
+        t = t.mul_diag_left(&self.left_signs);
+        t.mul_diag_right(&self.right_signs)
+    }
+
+    /// `x̃ = H_n D_n x` for `(Q + LR)·x` kernels (x is `cols × b`) —
+    /// [`crate::hadamard::Incoherence::apply_acts`] on borrowed signs.
+    pub fn rotate_acts(&self, x: &Matrix) -> Matrix {
+        let mut t = x.mul_diag_left(&self.right_signs);
+        fwht_cols(&mut t);
+        t
+    }
+
+    /// `y = D_m H_m ỹ` — finish a matmul done in the stored basis
+    /// ([`crate::hadamard::Incoherence::unapply_left`]).
+    pub fn unrotate_out(&self, y: &Matrix) -> Matrix {
+        let mut t = y.clone();
+        fwht_cols(&mut t);
+        t.mul_diag_left(&self.left_signs)
+    }
+
+    /// `x̃ = x D_n H_n` for the activation-layout `X·(Q+LR)ᵀ` kernels
+    /// (x is `tokens × cols`; [`crate::hadamard::Incoherence::apply_right`]).
+    pub fn rotate_acts_t(&self, x: &Matrix) -> Matrix {
+        let mut t = x.mul_diag_right(&self.right_signs);
+        fwht_rows(&mut t);
+        t
+    }
+
+    /// `y = ỹ H_m D_m` — finish a transposed matmul done in the stored
+    /// basis (ỹ is `tokens × rows`).
+    pub fn unrotate_out_t(&self, y: &Matrix) -> Matrix {
+        let mut t = y.clone();
+        fwht_rows(&mut t);
+        t.mul_diag_right(&self.left_signs)
+    }
+}
+
+/// A quantized matrix in its scheme's native packed form, optionally in a
+/// rotated (incoherent) basis.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedMatrix {
     pub rows: usize,
     pub cols: usize,
-    pub bits: u32,
-    pub group_size: usize,
-    /// ceil(rows*cols*bits/8) bytes of packed codes, row-major.
-    pub codes: Vec<u8>,
-    /// Per-row per-group scales.
-    pub scales: Vec<f32>,
+    pub scheme: PackedScheme,
+    pub rotation: Option<Rotation>,
 }
 
 impl PackedMatrix {
-    /// Quantize `w` with symmetric per-group absmax scales and pack.
+    /// Quantize `w` with symmetric per-group absmax scales and pack as the
+    /// uniform scheme. Exact for weights already on that grid (raw
+    /// round-to-nearest uniform output); pipeline `Q` from other schemes
+    /// must come through the quantizer's own `Prepared::encode` instead.
     pub fn pack(w: &Matrix, bits: u32, group_size: usize) -> PackedMatrix {
         assert!((1..=8).contains(&bits));
         let (rows, cols) = w.shape();
@@ -51,43 +212,126 @@ impl PackedMatrix {
         PackedMatrix {
             rows,
             cols,
-            bits,
-            group_size: gw,
-            codes,
-            scales,
+            scheme: PackedScheme::Uniform {
+                bits,
+                group_size: gw,
+                codes,
+                scales,
+            },
+            rotation: None,
         }
     }
 
-    /// Dequantize to dense f32.
+    /// Attach incoherence-rotation metadata: the stored codes become the
+    /// rotated-basis `Q̃` and decodes recover `D_m H_m Q̃ H_n D_n`.
+    pub fn with_rotation(mut self, left_signs: Vec<f32>, right_signs: Vec<f32>) -> PackedMatrix {
+        assert!(self.rotation.is_none(), "packed matrix already rotated");
+        assert_eq!(left_signs.len(), self.rows, "left sign diagonal length");
+        assert_eq!(right_signs.len(), self.cols, "right sign diagonal length");
+        assert!(
+            left_signs.iter().chain(&right_signs).all(|&s| s == 1.0 || s == -1.0),
+            "rotation signs must be ±1"
+        );
+        self.rotation = Some(Rotation {
+            left_signs,
+            right_signs,
+        });
+        self
+    }
+
+    /// Nominal quantizer bits (the operating point, not the stored width).
+    pub fn bits(&self) -> u32 {
+        match &self.scheme {
+            PackedScheme::Uniform { bits, .. }
+            | PackedScheme::E8 { bits, .. }
+            | PackedScheme::MxInt { bits, .. } => *bits,
+        }
+    }
+
+    /// Human-readable scheme label (`"e8+rot"` when rotated).
+    pub fn scheme_name(&self) -> String {
+        match &self.rotation {
+            Some(_) => format!("{}+rot", self.scheme.name()),
+            None => self.scheme.name().to_string(),
+        }
+    }
+
+    /// Dequantize to dense f32 — **bit-exact** against the quantizer output
+    /// the codes were encoded from (including the inverse rotation).
     pub fn unpack(&self) -> Matrix {
         let mut m = Matrix::zeros(self.rows, self.cols);
         for i in 0..self.rows {
             self.dequant_row_into(i, m.row_mut(i));
         }
-        m
-    }
-
-    /// Dequantize row `i` into `out` (length = `cols`) without touching any
-    /// other row — the fused `(Q+LR)·x` kernels stream rows/panels through
-    /// this so the dense matrix is never materialized. Uses a sequential
-    /// bit-stream reader (one shift/mask per code instead of a per-bit
-    /// loop).
-    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
-        assert!(i < self.rows, "row {i} out of range");
-        assert_eq!(out.len(), self.cols, "dequant_row_into length");
-        let qmax = ((1i32 << (self.bits - 1)) - 1).max(1);
-        let gpr = self.cols.div_ceil(self.group_size);
-        let mut reader = BitReader::at(&self.codes, i * self.cols * self.bits as usize);
-        for (j, slot) in out.iter_mut().enumerate() {
-            let code = reader.take(self.bits) as i32;
-            let s = self.scales[i * gpr + (j / self.group_size).min(gpr - 1)];
-            *slot = (code - qmax) as f32 * s;
+        match &self.rotation {
+            Some(rot) => rot.unapply(&m),
+            None => m,
         }
     }
 
-    /// Serialized byte size (codes + scales + header).
+    /// Dequantize row `i` of the **stored basis** into `out` (length =
+    /// `cols`) without touching any other row — the fused `(Q+LR)·x`
+    /// kernels stream rows/panels through this so the dense matrix is
+    /// never materialized. For a rotated matrix this is a row of `Q̃`; the
+    /// kernels fold the rotation into the activations instead (see
+    /// [`Rotation`]). Uses a sequential bit-stream reader (one shift/mask
+    /// per code instead of a per-bit loop).
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        assert!(i < self.rows, "row {i} out of range");
+        assert_eq!(out.len(), self.cols, "dequant_row_into length");
+        match &self.scheme {
+            PackedScheme::Uniform {
+                bits,
+                group_size,
+                codes,
+                scales,
+            } => {
+                let qmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let gpr = self.cols.div_ceil(*group_size);
+                let mut reader = BitReader::at(codes, i * self.cols * *bits as usize);
+                for (j, slot) in out.iter_mut().enumerate() {
+                    let code = reader.take(*bits) as i32;
+                    let s = scales[i * gpr + (j / group_size).min(gpr - 1)];
+                    *slot = (code - qmax) as f32 * s;
+                }
+            }
+            PackedScheme::E8 { bits, scale, codes } => {
+                let cb = bits + 2;
+                let two_lim = 2 * super::e8::e8_coord_limit(*bits) as i32;
+                let mut reader = BitReader::at(codes, i * self.cols * cb as usize);
+                for slot in out.iter_mut() {
+                    let code = reader.take(cb) as i32;
+                    *slot = (code - two_lim) as f32 / 2.0 * scale;
+                }
+            }
+            PackedScheme::MxInt {
+                bits,
+                block,
+                codes,
+                exps,
+            } => {
+                let mmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let bpr = self.cols.div_ceil(*block);
+                let mut reader = BitReader::at(codes, i * self.cols * *bits as usize);
+                for (j, slot) in out.iter_mut().enumerate() {
+                    let code = reader.take(*bits) as i32;
+                    let e = exps[i * bpr + (j / block).min(bpr.max(1) - 1)];
+                    *slot = if e == MX_ZERO_EXP {
+                        0.0
+                    } else {
+                        (code - mmax) as f32 * exp_pow2(e)
+                    };
+                }
+            }
+        }
+    }
+
+    /// Serialized byte size — derived from the actual serialized length so
+    /// footprint reporting can never drift from the on-disk format.
     pub fn byte_size(&self) -> usize {
-        16 + self.codes.len() + self.scales.len() * 4
+        let mut count = ByteCount(0);
+        self.write_to(&mut count).expect("counting writer is infallible");
+        count.0
     }
 
     /// Effective bits per weight of the serialized form.
@@ -96,19 +340,81 @@ impl PackedMatrix {
     }
 
     pub fn write_to(&self, w: &mut impl std::io::Write) -> Result<()> {
-        w.write_all(b"ODP1")?;
+        w.write_all(b"ODP2")?;
         for v in [
+            self.scheme.tag(),
+            self.rotation.is_some() as u32,
             self.rows as u32,
             self.cols as u32,
-            self.bits,
-            self.group_size as u32,
         ] {
             w.write_all(&v.to_le_bytes())?;
         }
-        w.write_all(&(self.codes.len() as u32).to_le_bytes())?;
-        w.write_all(&self.codes)?;
-        w.write_all(&(self.scales.len() as u32).to_le_bytes())?;
-        for &s in &self.scales {
+        match &self.scheme {
+            PackedScheme::Uniform {
+                bits,
+                group_size,
+                codes,
+                scales,
+            } => {
+                w.write_all(&bits.to_le_bytes())?;
+                w.write_all(&(*group_size as u32).to_le_bytes())?;
+                w.write_all(&(codes.len() as u32).to_le_bytes())?;
+                w.write_all(codes)?;
+                w.write_all(&(scales.len() as u32).to_le_bytes())?;
+                for &s in scales {
+                    w.write_all(&s.to_le_bytes())?;
+                }
+            }
+            PackedScheme::E8 { bits, scale, codes } => {
+                w.write_all(&bits.to_le_bytes())?;
+                w.write_all(&scale.to_le_bytes())?;
+                w.write_all(&(codes.len() as u32).to_le_bytes())?;
+                w.write_all(codes)?;
+            }
+            PackedScheme::MxInt {
+                bits,
+                block,
+                codes,
+                exps,
+            } => {
+                w.write_all(&bits.to_le_bytes())?;
+                w.write_all(&(*block as u32).to_le_bytes())?;
+                w.write_all(&(codes.len() as u32).to_le_bytes())?;
+                w.write_all(codes)?;
+                w.write_all(&(exps.len() as u32).to_le_bytes())?;
+                for &e in exps {
+                    w.write_all(&e.to_le_bytes())?;
+                }
+            }
+        }
+        if let Some(rot) = &self.rotation {
+            write_signs(w, &rot.left_signs)?;
+            write_signs(w, &rot.right_signs)?;
+        }
+        Ok(())
+    }
+
+    /// Legacy v1 (uniform-only) writer, kept for back-compat tests.
+    #[cfg(test)]
+    pub(crate) fn write_to_v1(&self, w: &mut impl std::io::Write) -> Result<()> {
+        let PackedScheme::Uniform {
+            bits,
+            group_size,
+            codes,
+            scales,
+        } = &self.scheme
+        else {
+            bail!("v1 format is uniform-only");
+        };
+        assert!(self.rotation.is_none(), "v1 format has no rotation");
+        w.write_all(b"ODP1")?;
+        for v in [self.rows as u32, self.cols as u32, *bits, *group_size as u32] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&(codes.len() as u32).to_le_bytes())?;
+        w.write_all(codes)?;
+        w.write_all(&(scales.len() as u32).to_le_bytes())?;
+        for &s in scales {
             w.write_all(&s.to_le_bytes())?;
         }
         Ok(())
@@ -117,38 +423,246 @@ impl PackedMatrix {
     pub fn read_from(r: &mut impl std::io::Read) -> Result<PackedMatrix> {
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
-        if &magic != b"ODP1" {
-            bail!("bad packed-matrix magic");
+        match &magic {
+            b"ODP1" => Self::read_v1(r),
+            b"ODP2" => Self::read_v2(r),
+            other => bail!("bad packed-matrix magic {other:?}"),
         }
-        let mut u = [0u8; 4];
-        let mut next = || -> Result<u32> {
-            r.read_exact(&mut u)?;
-            Ok(u32::from_le_bytes(u))
-        };
-        let rows = next()? as usize;
-        let cols = next()? as usize;
-        let bits = next()?;
-        let group_size = next()? as usize;
-        let ncodes = next()? as usize;
-        let mut codes = vec![0u8; ncodes];
-        r.read_exact(&mut codes)?;
-        let mut u4 = [0u8; 4];
-        r.read_exact(&mut u4)?;
-        let nscales = u32::from_le_bytes(u4) as usize;
-        let mut scales = vec![0f32; nscales];
-        let mut buf = vec![0u8; nscales * 4];
-        r.read_exact(&mut buf)?;
-        for (i, c) in buf.chunks_exact(4).enumerate() {
-            scales[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
+    }
+
+    fn read_v1(r: &mut impl std::io::Read) -> Result<PackedMatrix> {
+        let rows = read_u32(r)? as usize;
+        let cols = read_u32(r)? as usize;
+        validate_dims(rows, cols)?;
         Ok(PackedMatrix {
             rows,
             cols,
-            bits,
-            group_size,
-            codes,
-            scales,
+            scheme: read_uniform_body(r, rows, cols)?,
+            rotation: None,
         })
+    }
+
+    fn read_v2(r: &mut impl std::io::Read) -> Result<PackedMatrix> {
+        let tag = read_u32(r)?;
+        let rotated = match read_u32(r)? {
+            0 => false,
+            1 => true,
+            other => bail!("packed matrix: bad rotation flag {other}"),
+        };
+        let rows = read_u32(r)? as usize;
+        let cols = read_u32(r)? as usize;
+        validate_dims(rows, cols)?;
+        let scheme = match tag {
+            0 => read_uniform_body(r, rows, cols)?,
+            1 => {
+                let bits = read_u32(r)?;
+                if !(2..=4).contains(&bits) {
+                    bail!("e8 packed matrix: bits {bits} out of range 2..=4");
+                }
+                let mut b4 = [0u8; 4];
+                r.read_exact(&mut b4)?;
+                let scale = f32::from_le_bytes(b4);
+                if !scale.is_finite() {
+                    bail!("e8 packed matrix: non-finite scale");
+                }
+                let ncodes = read_u32(r)? as usize;
+                let expect = (rows * cols * (bits + 2) as usize).div_ceil(8);
+                if ncodes != expect {
+                    bail!("e8 packed matrix: {ncodes} code bytes, want {expect}");
+                }
+                let codes = read_bytes(r, ncodes, "codes")?;
+                PackedScheme::E8 { bits, scale, codes }
+            }
+            2 => {
+                let bits = read_u32(r)?;
+                if !(2..=8).contains(&bits) {
+                    bail!("mxint packed matrix: bits {bits} out of range 2..=8");
+                }
+                let block = read_u32(r)? as usize;
+                if block < 1 {
+                    bail!("mxint packed matrix: zero block size");
+                }
+                let ncodes = read_u32(r)? as usize;
+                let expect = (rows * cols * bits as usize).div_ceil(8);
+                if ncodes != expect {
+                    bail!("mxint packed matrix: {ncodes} code bytes, want {expect}");
+                }
+                let codes = read_bytes(r, ncodes, "codes")?;
+                let nexps = read_u32(r)? as usize;
+                let expect = rows * cols.div_ceil(block);
+                if nexps != expect {
+                    bail!("mxint packed matrix: {nexps} exponents, want {expect}");
+                }
+                let raw = read_bytes(r, nexps * 2, "exponents")?;
+                let exps: Vec<i16> = raw
+                    .chunks_exact(2)
+                    .map(|c| i16::from_le_bytes([c[0], c[1]]))
+                    .collect();
+                for &e in &exps {
+                    if e != MX_ZERO_EXP && !(-149..=127).contains(&(e as i32)) {
+                        bail!("mxint packed matrix: exponent {e} outside f32 range");
+                    }
+                }
+                PackedScheme::MxInt {
+                    bits,
+                    block,
+                    codes,
+                    exps,
+                }
+            }
+            other => bail!("packed matrix: unknown scheme tag {other}"),
+        };
+        let rotation = if rotated {
+            Some(Rotation {
+                left_signs: read_signs(r, rows)?,
+                right_signs: read_signs(r, cols)?,
+            })
+        } else {
+            None
+        };
+        Ok(PackedMatrix {
+            rows,
+            cols,
+            scheme,
+            rotation,
+        })
+    }
+}
+
+/// A `Write` sink that only counts — backs `byte_size()` so the reported
+/// footprint is the serialized length by construction.
+pub(crate) struct ByteCount(pub usize);
+
+impl std::io::Write for ByteCount {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0 += buf.len();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn validate_dims(rows: usize, cols: usize) -> Result<()> {
+    if rows > MAX_DIM || cols > MAX_DIM {
+        bail!("packed matrix: implausible shape {rows}x{cols}");
+    }
+    Ok(())
+}
+
+/// Uniform-scheme payload (bits, group, codes, scales) with every count
+/// validated against the header dims — shared by the v1 stream body and
+/// the v2 `tag == 0` arm so the two paths cannot drift.
+fn read_uniform_body(r: &mut impl std::io::Read, rows: usize, cols: usize) -> Result<PackedScheme> {
+    let bits = read_u32(r)?;
+    if !(1..=8).contains(&bits) {
+        bail!("uniform packed matrix: bits {bits} out of range 1..=8");
+    }
+    let group_size = read_u32(r)? as usize;
+    if group_size < 1 || group_size > cols.max(1) {
+        bail!("uniform packed matrix: group size {group_size} invalid for {cols} cols");
+    }
+    let ncodes = read_u32(r)? as usize;
+    let expect = (rows * cols * bits as usize).div_ceil(8);
+    if ncodes != expect {
+        bail!("uniform packed matrix: {ncodes} code bytes, want {expect} for {rows}x{cols}@{bits}b");
+    }
+    let codes = read_bytes(r, ncodes, "codes")?;
+    let nscales = read_u32(r)? as usize;
+    let expect = rows * cols.div_ceil(group_size);
+    if nscales != expect {
+        bail!("uniform packed matrix: {nscales} scales, want {expect}");
+    }
+    let scales = read_f32s(r, nscales)?;
+    Ok(PackedScheme::Uniform {
+        bits,
+        group_size,
+        codes,
+        scales,
+    })
+}
+
+fn read_u32(r: &mut impl std::io::Read) -> Result<u32> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    Ok(u32::from_le_bytes(b4))
+}
+
+/// Read exactly `n` bytes through a bounded reader: a truncated stream
+/// errors out after consuming only what exists instead of pre-allocating
+/// `n` bytes on the word of a possibly-corrupt header.
+fn read_bytes(r: &mut impl std::io::Read, n: usize, what: &str) -> Result<Vec<u8>> {
+    use std::io::Read as _;
+    let mut buf = Vec::new();
+    r.by_ref().take(n as u64).read_to_end(&mut buf)?;
+    if buf.len() != n {
+        bail!("packed matrix truncated: {what} wants {n} bytes, got {}", buf.len());
+    }
+    Ok(buf)
+}
+
+fn read_f32s(r: &mut impl std::io::Read, n: usize) -> Result<Vec<f32>> {
+    let raw = read_bytes(r, n * 4, "scales")?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn write_signs(w: &mut impl std::io::Write, signs: &[f32]) -> Result<()> {
+    let mut bytes = vec![0u8; signs.len().div_ceil(8)];
+    for (i, &s) in signs.iter().enumerate() {
+        if s > 0.0 {
+            bytes[i / 8] |= 1 << (i % 8);
+        }
+    }
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_signs(r: &mut impl std::io::Read, n: usize) -> Result<Vec<f32>> {
+    let bytes = read_bytes(r, n.div_ceil(8), "rotation signs")?;
+    let mut signs = Vec::with_capacity(n);
+    for i in 0..n {
+        signs.push(if bytes[i / 8] & (1 << (i % 8)) != 0 { 1.0 } else { -1.0 });
+    }
+    Ok(signs)
+}
+
+/// Extract the power-of-two exponent of `step` from its bit pattern, so
+/// `exp_pow2(pow2_exponent(step)) == step` **bit-exactly** (normal and
+/// denormal). `None` when `step` is not a positive power of two.
+pub(crate) fn pow2_exponent(step: f32) -> Option<i16> {
+    if !(step > 0.0 && step.is_finite()) {
+        return None;
+    }
+    let bits = step.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mantissa = bits & 0x7f_ffff;
+    if exp == 0 {
+        // Denormal: step = 2^{trailing - 149}; a power of two has exactly
+        // one mantissa bit set.
+        if mantissa.count_ones() == 1 {
+            Some((mantissa.trailing_zeros() as i32 - 149) as i16)
+        } else {
+            None
+        }
+    } else if mantissa == 0 {
+        Some((exp - 127) as i16)
+    } else {
+        None
+    }
+}
+
+/// Exact `2^e` as f32 for `e ∈ [-149, 127]`, built from the bit pattern.
+pub(crate) fn exp_pow2(e: i16) -> f32 {
+    let e = e as i32;
+    debug_assert!((-149..=127).contains(&e), "exponent {e} out of f32 range");
+    if e >= -126 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        f32::from_bits(1u32 << (e + 149))
     }
 }
 
@@ -205,7 +719,7 @@ impl<'a> BitReader<'a> {
     }
 }
 
-fn write_bits(buf: &mut [u8], bitpos: usize, nbits: u32, value: u32) {
+pub(crate) fn write_bits(buf: &mut [u8], bitpos: usize, nbits: u32, value: u32) {
     for b in 0..nbits {
         let bit = (value >> b) & 1;
         let pos = bitpos + b as usize;
@@ -218,6 +732,8 @@ fn write_bits(buf: &mut [u8], bitpos: usize, nbits: u32, value: u32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hadamard::Incoherence;
+    use crate::quant::{make_quantizer, Quantizer as _};
     use crate::testing;
     use crate::util::rng::Pcg64;
 
@@ -248,6 +764,61 @@ mod tests {
             use crate::quant::Quantizer as _;
             let direct = q.quantize(&w).deq;
             assert!(deq.max_abs_diff(&direct) < 1e-5);
+        });
+    }
+
+    #[test]
+    fn native_codes_roundtrip_bit_exactly_per_scheme() {
+        // The tentpole contract: encode(quantizer output) decodes to the
+        // identical f32 matrix — zero error, any scheme, any shape.
+        testing::quick("native-codes-exact", |rng| {
+            let m = testing::gen_dim(rng, 1, 14);
+            let n = testing::gen_dim(rng, 1, 60);
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let bits = 2 + rng.below(3) as u32;
+            let group = [3usize, 8, 16, 32][rng.below(4)];
+            let w = testing::gen_matrix(rng, m, n);
+            let quant = make_quantizer(scheme, bits, group).unwrap();
+            let out = quant.quantize(&w);
+            assert_eq!(out.packed.rows, m);
+            assert_eq!(out.packed.cols, n);
+            assert_eq!(
+                out.packed.unpack().max_abs_diff(&out.deq),
+                0.0,
+                "{scheme}@{bits}b g{group} native codes not bit-exact"
+            );
+            // And the serialized form round-trips structurally + bitwise.
+            let mut buf = Vec::new();
+            out.packed.write_to(&mut buf).unwrap();
+            let back = PackedMatrix::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(out.packed, back);
+            assert_eq!(back.unpack().max_abs_diff(&out.deq), 0.0);
+            assert_eq!(buf.len(), out.packed.byte_size(), "byte_size drifted");
+        });
+    }
+
+    #[test]
+    fn rotated_codes_decode_bit_exactly() {
+        // Uniform/e8/mxint codes in the incoherent basis: unpack() must
+        // reproduce Incoherence::unapply(Q̃) with zero error.
+        testing::quick("rotated-codes-exact", |rng| {
+            let m = testing::gen_dim(rng, 2, 20);
+            let n = testing::gen_dim(rng, 2, 40);
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let w = testing::gen_matrix(rng, m, n);
+            let inc = Incoherence::new(m, n, rng);
+            let quant = make_quantizer(scheme, 3, 8).unwrap();
+            let out = quant.quantize(&inc.apply(&w));
+            let reference = inc.unapply(&out.deq);
+            let packed = out
+                .packed
+                .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
+            assert_eq!(packed.unpack().max_abs_diff(&reference), 0.0, "{scheme}");
+            let mut buf = Vec::new();
+            packed.write_to(&mut buf).unwrap();
+            let back = PackedMatrix::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(packed, back);
+            assert_eq!(back.unpack().max_abs_diff(&reference), 0.0);
         });
     }
 
@@ -351,18 +922,33 @@ mod tests {
         });
     }
 
-    /// Golden-bytes check: the on-disk format must not silently drift.
+    #[test]
+    fn pow2_exponent_roundtrips_full_f32_range() {
+        for e in -149i16..=127 {
+            let step = exp_pow2(e);
+            assert!(step > 0.0 && step.is_finite());
+            assert_eq!(pow2_exponent(step), Some(e), "e={e}");
+        }
+        assert_eq!(pow2_exponent(0.0), None);
+        assert_eq!(pow2_exponent(3.0), None);
+        assert_eq!(pow2_exponent(f32::INFINITY), None);
+        assert_eq!(pow2_exponent(-2.0), None);
+    }
+
+    /// Golden-bytes check: the v2 uniform layout must not silently drift.
     /// Hand-assembled: W = [3, -1, 2, 0] at 3 bits, group 4 ⇒ scale
     /// = absmax/qmax = 3/3 = 1.0, codes (q+3) = [6, 2, 5, 3], packed
     /// LSB-first into 0x56, 0x07.
     #[test]
-    fn serialized_golden_bytes() {
+    fn serialized_golden_bytes_uniform_v2() {
         let w = Matrix::from_vec(1, 4, vec![3.0, -1.0, 2.0, 0.0]);
         let p = PackedMatrix::pack(&w, 3, 4);
         let mut buf = Vec::new();
         p.write_to(&mut buf).unwrap();
         let expect: Vec<u8> = [
-            &b"ODP1"[..],              // magic
+            &b"ODP2"[..],              // magic
+            &0u32.to_le_bytes()[..],   // scheme tag: uniform
+            &0u32.to_le_bytes()[..],   // not rotated
             &1u32.to_le_bytes()[..],   // rows
             &4u32.to_le_bytes()[..],   // cols
             &3u32.to_le_bytes()[..],   // bits
@@ -376,5 +962,167 @@ mod tests {
         assert_eq!(buf, expect, "packed on-disk format drifted");
         // And it decodes back to the exact input (all values on-grid).
         assert_eq!(p.unpack(), w);
+    }
+
+    /// E8 golden bytes: 2-bit operating point ⇒ lim 2, 4 bits/coordinate,
+    /// codes = 2q + 4. Q̃ = [1, -0.5, 2, 0.5, 0, -2, 1.5, -1] at scale 0.5
+    /// ⇒ codes [6, 3, 8, 5, 4, 0, 7, 2] → bytes 0x36, 0x58, 0x04, 0x27.
+    #[test]
+    fn serialized_golden_bytes_e8() {
+        let vals = [1.0f32, -0.5, 2.0, 0.5, 0.0, -2.0, 1.5, -1.0];
+        let mut codes = vec![0u8; 4];
+        for (i, &q) in vals.iter().enumerate() {
+            write_bits(&mut codes, i * 4, 4, ((2.0 * q) as i32 + 4) as u32);
+        }
+        let p = PackedMatrix {
+            rows: 1,
+            cols: 8,
+            scheme: PackedScheme::E8 {
+                bits: 2,
+                scale: 0.5,
+                codes,
+            },
+            rotation: None,
+        };
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let expect: Vec<u8> = [
+            &b"ODP2"[..],
+            &1u32.to_le_bytes()[..], // scheme tag: e8
+            &0u32.to_le_bytes()[..], // not rotated
+            &1u32.to_le_bytes()[..], // rows
+            &8u32.to_le_bytes()[..], // cols
+            &2u32.to_le_bytes()[..], // bits
+            &0.5f32.to_le_bytes()[..],
+            &4u32.to_le_bytes()[..], // ncodes
+            &[0x36u8, 0x58, 0x04, 0x27][..],
+        ]
+        .concat();
+        assert_eq!(buf, expect, "e8 on-disk format drifted");
+        let deq = p.unpack();
+        for (j, &q) in vals.iter().enumerate() {
+            assert_eq!(deq.at(0, j), q * 0.5, "coord {j}");
+        }
+    }
+
+    /// MXINT golden bytes: 3-bit mantissas (mmax 3), block 4. One block
+    /// with step 2^-1: Q = [1.5, -0.5, 0, 1.0] ⇒ mantissas [3, -1, 0, 2]
+    /// ⇒ codes (m+3) = [6, 2, 3, 5] packed LSB-first → bytes 0xD6, 0x0A.
+    #[test]
+    fn serialized_golden_bytes_mxint() {
+        let mut codes = vec![0u8; 2];
+        for (i, &m) in [3i32, -1, 0, 2].iter().enumerate() {
+            write_bits(&mut codes, i * 3, 3, (m + 3) as u32);
+        }
+        let p = PackedMatrix {
+            rows: 1,
+            cols: 4,
+            scheme: PackedScheme::MxInt {
+                bits: 3,
+                block: 4,
+                codes,
+                exps: vec![-1],
+            },
+            rotation: None,
+        };
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        let expect: Vec<u8> = [
+            &b"ODP2"[..],
+            &2u32.to_le_bytes()[..], // scheme tag: mxint
+            &0u32.to_le_bytes()[..], // not rotated
+            &1u32.to_le_bytes()[..], // rows
+            &4u32.to_le_bytes()[..], // cols
+            &3u32.to_le_bytes()[..], // bits
+            &4u32.to_le_bytes()[..], // block
+            &2u32.to_le_bytes()[..], // ncodes
+            &[0xD6u8, 0x0A][..],
+            &1u32.to_le_bytes()[..], // nexps
+            &(-1i16).to_le_bytes()[..],
+        ]
+        .concat();
+        assert_eq!(buf, expect, "mxint on-disk format drifted");
+        assert_eq!(
+            p.unpack(),
+            Matrix::from_vec(1, 4, vec![1.5, -0.5, 0.0, 1.0])
+        );
+    }
+
+    /// Rotation golden bytes: sign diagonals append as LSB-first bitmaps.
+    #[test]
+    fn serialized_golden_bytes_rotation() {
+        let w = Matrix::from_vec(2, 4, vec![3.0, -1.0, 2.0, 0.0, 1.0, 1.0, -3.0, 2.0]);
+        let p = PackedMatrix::pack(&w, 3, 4)
+            .with_rotation(vec![1.0, -1.0], vec![-1.0, 1.0, 1.0, -1.0]);
+        let mut buf = Vec::new();
+        p.write_to(&mut buf).unwrap();
+        // Header now flags rotation and the payload gains two sign bytes.
+        assert_eq!(&buf[4..8], &0u32.to_le_bytes()); // uniform tag
+        assert_eq!(&buf[8..12], &1u32.to_le_bytes()); // rotated
+        let tail = &buf[buf.len() - 2..];
+        assert_eq!(tail, &[0b01u8, 0b0110]);
+        let back = PackedMatrix::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    /// v1 → v2 back-compat: legacy `ODP1` streams (uniform-only) still read
+    /// into the identical matrix.
+    #[test]
+    fn reads_legacy_v1_stream() {
+        let mut rng = Pcg64::new(133, 1);
+        let w = Matrix::randn(7, 29, 1.0, &mut rng);
+        let p = PackedMatrix::pack(&w, 4, 8);
+        let mut v1 = Vec::new();
+        p.write_to_v1(&mut v1).unwrap();
+        // The golden v1 prefix: magic + rows + cols + bits + group.
+        assert_eq!(&v1[..4], b"ODP1");
+        let back = PackedMatrix::read_from(&mut v1.as_slice()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.unpack().max_abs_diff(&p.unpack()), 0.0);
+    }
+
+    /// A corrupt or truncated stream must error out instead of allocating
+    /// unbounded buffers or panicking later in `dequant_row_into`.
+    #[test]
+    fn corrupt_streams_are_rejected() {
+        let mut rng = Pcg64::new(134, 1);
+        let w = Matrix::randn(5, 17, 1.0, &mut rng);
+        let p = PackedMatrix::pack(&w, 3, 8);
+        let mut good = Vec::new();
+        p.write_to(&mut good).unwrap();
+
+        // Truncation at every prefix length fails cleanly.
+        for cut in 0..good.len() {
+            assert!(
+                PackedMatrix::read_from(&mut &good[..cut]).is_err(),
+                "truncated at {cut} bytes did not error"
+            );
+        }
+
+        // ncodes lying about its length (huge claim, tiny stream).
+        let ncodes_off = 4 + 4 * 6; // magic + tag,rot,rows,cols,bits,group
+        let mut bad = good.clone();
+        bad[ncodes_off..ncodes_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(PackedMatrix::read_from(&mut bad.as_slice()).is_err());
+
+        // Absurd dims are rejected before any payload read.
+        let mut bad = good.clone();
+        bad[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(PackedMatrix::read_from(&mut bad.as_slice()).is_err());
+
+        // Unknown scheme tag.
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&9u32.to_le_bytes());
+        assert!(PackedMatrix::read_from(&mut bad.as_slice()).is_err());
+
+        // Same lie in a v1 header: ncodes mismatch must error.
+        let mut v1 = Vec::new();
+        p.write_to_v1(&mut v1).unwrap();
+        let mut bad = v1.clone();
+        bad[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(PackedMatrix::read_from(&mut bad.as_slice()).is_err());
+        for cut in 0..v1.len() {
+            assert!(PackedMatrix::read_from(&mut &v1[..cut]).is_err());
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! Symmetric uniform b-bit quantizer with per-(row-)group absmax scales.
 
-use super::{Prepared, QuantOut, Quantizer};
+use super::packed::{write_bits, PackedMatrix, PackedScheme};
+use super::{Prepared, Quantizer};
 use crate::tensor::Matrix;
 
 /// Symmetric uniform quantizer: values in a group are mapped to
@@ -82,15 +83,6 @@ impl Quantizer for UniformQuantizer {
         self.bits as f64 + (rows * gpr * 16) as f64 / (rows * cols) as f64
     }
 
-    fn quantize(&self, w: &Matrix) -> QuantOut {
-        let prep = self.prepare(w);
-        let deq = prep.round_columns(w, 0);
-        QuantOut {
-            deq,
-            scale: prep.scale_metric(),
-        }
-    }
-
     fn prepare<'a>(&'a self, w: &Matrix) -> Box<dyn Prepared + 'a> {
         let scales = self.compute_scales(w);
         Box::new(PreparedUniform {
@@ -130,6 +122,39 @@ impl Prepared for PreparedUniform {
     fn scale_metric(&self) -> f32 {
         let n = self.scales.len().max(1);
         (self.scales.iter().map(|&s| s as f64).sum::<f64>() / n as f64) as f32
+    }
+
+    fn encode(&self, deq: &Matrix) -> PackedMatrix {
+        let (m, n) = deq.shape();
+        assert_eq!(n, self.cols, "encode width mismatch");
+        let gw = self.q.group_width(n);
+        let gpr = self.q.groups_per_row(n);
+        let qmax = self.q.qmax() as i32;
+        let bits = self.q.bits;
+        let mut codes = vec![0u8; (m * n * bits as usize).div_ceil(8)];
+        let mut bitpos = 0usize;
+        for i in 0..m {
+            for (j, &v) in deq.row(i).iter().enumerate() {
+                let s = self.scales[i * gpr + (j / gw).min(gpr - 1)];
+                // `v` is `q·s` for an integral `q` in range, so the divide
+                // recovers `q` to well under half an ulp — decode recomputes
+                // the identical `q·s` product and is therefore bit-exact.
+                let q = ((v / s).round() as i32).clamp(-qmax, qmax);
+                write_bits(&mut codes, bitpos, bits, (q + qmax) as u32);
+                bitpos += bits as usize;
+            }
+        }
+        PackedMatrix {
+            rows: m,
+            cols: n,
+            scheme: PackedScheme::Uniform {
+                bits,
+                group_size: gw,
+                codes,
+                scales: self.scales.clone(),
+            },
+            rotation: None,
+        }
     }
 }
 

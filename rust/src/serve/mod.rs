@@ -59,7 +59,16 @@ impl ServeReport {
             return 0.0;
         }
         let mut sorted = self.latencies_s.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // A stray NaN sample (clock anomaly, poisoned math) must not panic
+        // the whole batch-server report. NaNs of either sign sort to the
+        // END (total_cmp alone would put -NaN first and shift every
+        // percentile), so they only distort the tail slot they land in.
+        sorted.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => a.total_cmp(b),
+        });
         sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
     }
 
@@ -247,6 +256,24 @@ mod tests {
         }
         assert!(report.p50_ms() >= 0.0 && report.p95_ms() >= report.p50_ms());
         assert!(report.requests_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn percentiles_survive_nan_latency_samples() {
+        // One poisoned sample must not crash the report; finite percentiles
+        // still come from the sorted finite prefix. The negative NaN (what
+        // 0.0/0.0 actually produces on x86-64) is the regression case: it
+        // must sort last, not first.
+        let report = ServeReport {
+            scores: vec![0.0; 5],
+            latencies_s: vec![0.004, -f64::NAN, 0.001, 0.003, 0.002],
+            batches: 2,
+            wall_secs: 0.1,
+        };
+        let p50 = report.p50_ms();
+        assert!((p50 - 3.0).abs() < 1e-9, "p50 = {p50}");
+        // p95 indexes the NaN slot — it must simply report it, not panic.
+        assert!(report.p95_ms().is_nan());
     }
 
     #[test]

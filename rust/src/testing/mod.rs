@@ -17,7 +17,14 @@ pub struct PropConfig {
 
 impl Default for PropConfig {
     fn default() -> Self {
-        PropConfig { cases: 32, seed: 0xD15EA5E }
+        // `ODLRI_PROP_SEED` reseeds every property run — CI exercises the
+        // suite under a second seed so bit-format/kernel regressions can't
+        // hide behind one lucky stream.
+        let seed = std::env::var("ODLRI_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD15EA5E);
+        PropConfig { cases: 32, seed }
     }
 }
 

@@ -260,7 +260,7 @@ fn packed_fused_model_tracks_dense_eval() {
     let fam = rt.manifest.family("tl-7s").unwrap();
     let params = ModelParams::init(fam, 17);
     let ppl_dense = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 4, 42).unwrap();
-    let fm = FusedModel::pack_dense(&params, 8, 64).unwrap();
+    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64).unwrap();
     let ppl_fused = eval::perplexity_of(&fm, corpus::Split::WikiSim, 4, 42).unwrap();
     let ratio = ppl_fused / ppl_dense;
     assert!(
@@ -308,9 +308,17 @@ fn compress_then_eval_beats_random_and_tracks_fp32() {
         "compression destroyed the model: {ppl_q} vs random {ppl_rand}"
     );
 
-    // The packed fused serving form of the same compression result stays
-    // close to its own dense reconstruction (8-bit packed Q).
-    let fm = out.model.to_fused(&params, 8, 64).unwrap();
+    // The packed fused serving form carries the pipeline's Q bit-exactly
+    // (scheme-native codes), so it tracks the dense reconstruction's
+    // perplexity up to kernel summation order.
+    let fm = out.model.to_fused(&params).unwrap();
+    for (name, cm) in &out.model.matrices {
+        assert_eq!(
+            fm.mats[name].q.unpack().max_abs_diff(&cm.q),
+            0.0,
+            "{name}: deployed Q differs from the optimized Q"
+        );
+    }
     let ppl_fused = eval::perplexity_of(&fm, corpus::Split::WikiSim, 6, 42).unwrap();
     assert!(
         ppl_fused < ppl_q * 1.1 + 1.0,

@@ -50,7 +50,7 @@ fn batch_server_completes_on_packed_fused_engine() {
     let params = ModelParams::init(&fam, 2);
     // Bit-packed projections, rank-0 factors: the serving hot path with no
     // dense W anywhere.
-    let fm = FusedModel::pack_dense(&params, 8, 64).expect("pack");
+    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64).expect("pack");
     let report = run_batch_server(&fm, &smoke_config(10)).expect("serve fused");
     assert_eq!(report.scores.len(), 10, "dropped requests");
     for (i, s) in report.scores.iter().enumerate() {
