@@ -20,6 +20,7 @@ use std::path::Path;
 
 use odlri::calib::{calibrate, CalibConfig};
 use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::engine::NativeEngine;
 use odlri::eval::evaluate;
 use odlri::model::inject_outliers;
 use odlri::report::Table;
@@ -80,7 +81,8 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     eprintln!("[e2e] evaluating FP32 baseline…");
-    let base = evaluate(&rt, &params, 30, 64, 1000)?;
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let base = evaluate(&NativeEngine::new(&params, batch, seq)?, 30, 64, 1000)?;
     let taskfmt = |r: &odlri::eval::EvalReport| -> Vec<String> {
         r.tasks.iter().map(|t| format!("{:.1}", t.accuracy * 100.0)).collect()
     };
@@ -107,7 +109,7 @@ fn main() -> anyhow::Result<()> {
         };
         let out = CompressionPipeline::new(cfg).run(&params, &hessians)?;
         let applied = out.model.apply_to(&params)?;
-        let rep = evaluate(&rt, &applied, 30, 64, 1000)?;
+        let rep = evaluate(&NativeEngine::new(&applied, batch, seq)?, 30, 64, 1000)?;
         let label = match init {
             InitKind::Caldera => "CALDERA",
             _ => "+ODLRI",

@@ -1,22 +1,24 @@
-//! Serving example: the threaded dynamic-batching server from
-//! [`odlri::serve`] over either forward path.
+//! Serving example: the continuous-batching server from [`odlri::serve`]
+//! over either engine.
 //!
-//! Client threads submit single-sequence scoring requests; the leader
-//! batches them up to the model's batch size (deadline-based dynamic
-//! batching, vLLM-router-style) and executes one forward per batch.
-//! Runs artifact-free on the native engine; add `--fused` to serve the
-//! bit-packed `(Q+LR)·x` engine instead of dense weights.
+//! Client threads submit typed requests; the leader admits them FIFO,
+//! groups equal-length scoring requests into variable-size batches, and
+//! advances every in-flight generation session one token per step against
+//! its KV cache (vLLM-style continuous batching). Runs artifact-free on
+//! the native engine; add `--fused` to serve the bit-packed `(Q+LR)·x`
+//! engine, `--generate` for the incremental-decoding workload.
 //!
 //! ```bash
-//! cargo run --release --example serve -- 200           # dense, 200 requests
-//! cargo run --release --example serve -- 200 --fused   # packed fused engine
+//! cargo run --release --example serve -- 200              # score, dense
+//! cargo run --release --example serve -- 200 --fused      # packed engine
+//! cargo run --release --example serve -- 60 --fused --generate
 //! ```
 
-use odlri::eval::RuntimeForward;
+use odlri::engine::{Engine, NativeEngine};
 use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
 use odlri::runtime::Runtime;
-use odlri::serve::{run_batch_server, ServeConfig};
+use odlri::serve::{run_server, ServeConfig, Workload};
 
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -25,12 +27,14 @@ fn main() -> anyhow::Result<()> {
         .find_map(|a| a.parse().ok())
         .unwrap_or(120);
     let fused = argv.iter().any(|a| a == "--fused");
+    let generate = argv.iter().any(|a| a == "--generate");
 
     let rt = Runtime::open(&odlri::runtime::default_artifact_dir())?;
     if rt.is_native() {
         eprintln!("[serve] native engine (no XLA artifacts needed)");
     }
     let fam = rt.manifest.family("tl-7s")?.clone();
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
 
     // Use trained weights if the e2e run produced them, else random init
     // (the serving path is identical either way).
@@ -39,45 +43,57 @@ fn main() -> anyhow::Result<()> {
         .and_then(|_| ModelParams::load(&fam, std::path::Path::new("runs/tl-7s.odw")).ok())
         .unwrap_or_else(|| ModelParams::init(&fam, 1));
 
-    let cfg = ServeConfig {
-        requests: n_requests,
-        clients: 4,
-        ..Default::default()
-    };
-    let report = if fused {
+    let engine: Box<dyn Engine> = if fused {
         // Pack the projections at 8 bits (near-lossless) and serve the
         // dequant-on-the-fly kernels — no dense W is ever materialized.
-        let fm = FusedModel::pack_dense(&params, "uniform", 8, 64)?;
+        let fm = FusedModel::pack_dense(&params, "uniform", 8, 64)?.with_shape(batch, seq);
         eprintln!(
             "[serve] fused engine: {:.2} bits/weight packed ({} total)",
             fm.avg_bits(),
             odlri::util::human_bytes(fm.packed_bytes())
         );
-        run_batch_server(&fm, &cfg)?
+        Box::new(fm)
     } else {
-        rt.warm("fwd_tl-7s")?;
-        let fwd = RuntimeForward {
-            rt: &rt,
-            params: &params,
-        };
-        run_batch_server(&fwd, &cfg)?
+        Box::new(NativeEngine::new(&params, batch, seq)?)
     };
 
-    let n = report.scores.len();
-    let seq = rt.manifest.seq;
+    let cfg = ServeConfig {
+        requests: n_requests,
+        clients: 4,
+        workload: if generate {
+            Workload::Generate { max_new_tokens: 16 }
+        } else {
+            Workload::Score
+        },
+        prompt_len: if generate { 32 } else { 0 },
+        ..Default::default()
+    };
+    let report = run_server(engine.as_ref(), &cfg)?;
+
+    let n = report.completed.len();
     println!(
-        "served {n} requests in {:.2}s  ({:.0} req/s, {:.0} tok/s)",
+        "served {n} requests in {:.2}s  ({:.0} req/s; {} forwards + {} decode steps)",
         report.wall_secs,
         report.requests_per_sec(),
-        report.requests_per_sec() * seq as f64
+        report.batches,
+        report.decode_steps
     );
     println!(
-        "latency p50 = {:.1} ms   p95 = {:.1} ms   batches = {}",
+        "request latency p50 = {:.1} ms   p95 = {:.1} ms",
         report.p50_ms(),
-        report.p95_ms(),
-        report.batches
+        report.p95_ms()
     );
-    let finite = report.scores.iter().filter(|s| s.is_finite()).count();
-    println!("finite scores: {finite}/{n}");
+    if generate {
+        println!(
+            "generated {} tokens ({} via KV-cached decode at {:.0} tok/s; per-step p50 {:.2} ms)",
+            report.generated_tokens,
+            report.decoded_tokens,
+            report.decode_tokens_per_sec(),
+            report.decode_p50_ms()
+        );
+    } else {
+        let finite = report.scores.iter().filter(|s| s.is_finite()).count();
+        println!("finite scores: {finite}/{n}");
+    }
     Ok(())
 }

@@ -1,10 +1,12 @@
 //! Runtime benches: artifact dispatch latency, dense vs fused-kernel
-//! forward, packed-engine forward, train-step throughput. Runs on the XLA
-//! backend when artifacts are present (and the `xla` feature is on),
-//! otherwise on the native engine — no setup required.
+//! forward, packed-engine forward, KV-cached incremental decode vs the
+//! quadratic full re-forward it replaces, train-step throughput. Runs on
+//! the XLA backend when artifacts are present (and the `xla` feature is
+//! on), otherwise on the native engine — no setup required.
 
 use odlri::benchkit::{group, Bencher};
 use odlri::corpus;
+use odlri::engine::{argmax, Engine, NativeEngine};
 use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
 use odlri::runtime::{Runtime, Value};
@@ -86,6 +88,47 @@ fn main() -> anyhow::Result<()> {
             stats.line_throughput((b * s) as f64, "tok"),
             fm.avg_bits()
         );
+    }
+
+    group("incremental decode vs full re-forward (per-token cost by context length)");
+    // KV-cached decode cost per token should stay roughly FLAT in the
+    // generated length; re-running the full sequence per token (what the
+    // old fixed-shape Forward API forced) grows linearly per token —
+    // quadratic over a whole generation.
+    let prompt: Vec<i32> = toks[..16].to_vec();
+    for engine_kind in ["dense", "fused-2b"] {
+        let engine: Box<dyn Engine> = match engine_kind {
+            "dense" => Box::new(NativeEngine::new(&params, b, s)?.with_max_context(512)),
+            _ => Box::new(
+                FusedModel::pack_dense(&params, "uniform", 2, 64)?.with_shape(b, 512),
+            ),
+        };
+        for target_len in [48usize, 96, 192] {
+            let (mut session, logits) = engine.prefill(&prompt)?;
+            let mut next = argmax(logits.row(logits.rows() - 1)) as i32;
+            // Steady-state decode: mean of the last 8 steps at this length.
+            let mut tail_s = 0f64;
+            let mut tail_n = 0usize;
+            while session.tokens.len() < target_len {
+                let t0 = std::time::Instant::now();
+                let lg = engine.decode_step(&mut [&mut session], &[next])?;
+                let dt = t0.elapsed().as_secs_f64();
+                if session.tokens.len() + 8 >= target_len {
+                    tail_s += dt;
+                    tail_n += 1;
+                }
+                next = argmax(lg.row(0)) as i32;
+            }
+            let t0 = std::time::Instant::now();
+            let _ = engine.forward_batch(&session.tokens, 1, session.tokens.len())?;
+            let reforward_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "{engine_kind:>8} ctx {target_len:>4}: kv-decode {:.3} ms/tok   \
+                 full re-forward {:.3} ms/tok",
+                tail_s * 1e3 / tail_n.max(1) as f64,
+                reforward_ms
+            );
+        }
     }
 
     group("train step (B=8, S=97)");

@@ -1,10 +1,98 @@
 //! Hand-rolled argument parsing (clap is not in the offline vendor set).
 //!
 //! Grammar: `odlri <command> [positional] [--flag value]... [--switch]`.
+//!
+//! Each command registers its grammar in [`COMMANDS`]; [`Args::from_env`]
+//! parses against it, so a known **switch never consumes a following
+//! positional as its value** (the historical `--switch positional`
+//! footgun), a known **flag always takes a value** — including negative
+//! numbers and other leading-dash values — and unknown `--options` are
+//! rejected up front with the command name. Unregistered commands fall
+//! back to the heuristic parse ([`Args::parse`]).
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
+
+/// One command's option grammar: value-taking flags and boolean switches.
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub flags: &'static [&'static str],
+    pub switches: &'static [&'static str],
+}
+
+/// The command registry — shared by the parser and `reject_unknown`.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "train",
+        flags: &[
+            "family", "steps", "corpus-tokens", "seed", "log-every", "out", "outliers",
+            "artifacts",
+        ],
+        switches: &[],
+    },
+    CommandSpec {
+        name: "calibrate",
+        flags: &["family", "weights", "batches", "seed", "out", "artifacts"],
+        switches: &[],
+    },
+    CommandSpec {
+        name: "compress",
+        flags: &[
+            "family", "weights", "hessians", "init", "rank", "lr-bits", "scheme", "bits",
+            "group", "iters", "lplr-iters", "workers", "seed", "out", "fused-out", "artifacts",
+        ],
+        switches: &["no-hadamard", "verbose", "fused"],
+    },
+    CommandSpec {
+        name: "eval",
+        flags: &["family", "weights", "windows", "task-items", "seed", "artifacts"],
+        switches: &["fused", "pack-dense"],
+    },
+    CommandSpec {
+        name: "pipeline",
+        flags: &[
+            "family", "steps", "seed", "init", "rank", "lr-bits", "scheme", "bits", "group",
+            "iters", "lplr-iters", "workers", "artifacts",
+        ],
+        switches: &["no-hadamard", "verbose"],
+    },
+    CommandSpec {
+        name: "exp",
+        flags: &["results", "runs", "seed", "artifacts"],
+        switches: &["quick", "trained"],
+    },
+    CommandSpec {
+        name: "serve-bench",
+        flags: &[
+            "family", "weights", "requests", "clients", "deadline-ms", "seed",
+            "max-new-tokens", "prompt-len", "artifacts",
+        ],
+        switches: &["fused", "pack-dense"],
+    },
+    CommandSpec {
+        name: "generate",
+        flags: &[
+            "family", "weights", "prompt", "prompt-len", "max-new-tokens", "top-k",
+            "temperature", "seed", "artifacts",
+        ],
+        switches: &["fused", "pack-dense"],
+    },
+    CommandSpec {
+        name: "artifacts",
+        flags: &["artifacts"],
+        switches: &[],
+    },
+    CommandSpec {
+        name: "help",
+        flags: &[],
+        switches: &[],
+    },
+];
+
+pub fn command_spec(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -16,6 +104,10 @@ pub struct Args {
 }
 
 impl Args {
+    /// Heuristic parse for commands without a registered grammar: `--k v`
+    /// binds `v` unless it starts with `--`, so a switch directly before a
+    /// positional would swallow it — registered commands use
+    /// [`Args::parse_with`] instead, which cannot misbind.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
@@ -45,6 +137,50 @@ impl Args {
         Ok(out)
     }
 
+    /// Grammar-aware parse: switches never take values, flags always do
+    /// (accepting leading-dash values such as negative numbers), unknown
+    /// options error immediately.
+    pub fn parse_with(argv: &[String], spec: &CommandSpec) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter();
+        out.command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| anyhow!("missing command; try `odlri help`"))?;
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    if spec.switches.contains(&k) {
+                        bail!("--{k} is a switch for `{}` and takes no value", out.command);
+                    }
+                    if !spec.flags.contains(&k) {
+                        bail!("unknown flag --{k} for `{}`; try `odlri help`", out.command);
+                    }
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if spec.switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if spec.flags.contains(&name) {
+                    match it.next() {
+                        // A value may start with a single dash (negative
+                        // numbers); only another `--option` is refused.
+                        Some(v) if !v.starts_with("--") => {
+                            out.flags.insert(name.to_string(), v.clone());
+                        }
+                        _ => bail!("--{name} wants a value for `{}`", out.command),
+                    }
+                } else {
+                    bail!(
+                        "unknown option --{name} for `{}`; try `odlri help`",
+                        out.command
+                    );
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
     pub fn from_env() -> Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         if argv.is_empty() {
@@ -53,7 +189,10 @@ impl Args {
                 ..Default::default()
             });
         }
-        Args::parse(&argv)
+        match command_spec(&argv[0]) {
+            Some(spec) => Args::parse_with(&argv, spec),
+            None => Args::parse(&argv),
+        }
     }
 
     pub fn str(&self, key: &str, default: &str) -> String {
@@ -133,7 +272,7 @@ COMMANDS
                  --fused (also write runs/<family>.odf: the packed container
                  carrying the quantizer's native codes bit-exactly)
                  --fused-out PATH
-  eval         Perplexity + zero-shot proxy accuracy of a weight file
+  eval         Perplexity + zero-shot proxy accuracy through the Engine API
                  --family tl-7s --weights runs/tl-7s.odw
                  --fused (packed engine; default weights runs/<family>.odf)
   pipeline     train → calibrate → compress → eval, end to end
@@ -141,9 +280,17 @@ COMMANDS
   exp <id>     Regenerate a paper table/figure into results/
                  ids: table1 fig2 fig3 fig4 fig5 table2 table3 table4
                       table5 table8 table9 table10 table11 t1norms all
-  serve-bench  Dynamic-batching serving latency/throughput
+  generate     KV-cached incremental decoding with a per-token latency
+               report
+                 --prompt \"text\" (or --prompt-len N from the corpus)
+                 --max-new-tokens 64 --top-k 0 (greedy) --temperature 1.0
+                 --fused (packed engine) --pack-dense (pack weights at
+                 8-bit on the fly — no .odf needed)
+  serve-bench  Continuous-batching serving latency/throughput
                  --requests 32 --clients 4 --deadline-ms 10
-                 --fused --weights runs/<family>.odf (packed (Q+LR)·x engine)
+                 --max-new-tokens N (generation workload; 0 = scoring)
+                 --prompt-len N --fused --pack-dense
+                 --weights runs/<family>.odf (packed (Q+LR)·x engine)
   artifacts    List available artifact entry points
   help         This message
 
@@ -160,10 +307,14 @@ mod tests {
         Args::parse(&argv).unwrap()
     }
 
+    fn parse_reg(s: &str) -> Result<Args> {
+        let argv: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        let spec = command_spec(&argv[0]).expect("registered command");
+        Args::parse_with(&argv, spec)
+    }
+
     #[test]
     fn parses_flags_and_switches() {
-        // Note: switches go last (or use --k=v); `--switch positional`
-        // would bind the positional as the switch's value.
         let a = parse("compress pos1 --family tl-7s --rank=128 --verbose");
         assert_eq!(a.command, "compress");
         assert_eq!(a.str("family", ""), "tl-7s");
@@ -193,5 +344,61 @@ mod tests {
         let a = parse("exp table2 --quick");
         assert_eq!(a.positional_at(0, "experiment id").unwrap(), "table2");
         assert!(a.switch("quick"));
+    }
+
+    #[test]
+    fn registry_switch_never_consumes_a_positional() {
+        // The historical footgun: the heuristic parse would bind `table2`
+        // as --quick's value. The grammar-aware parse cannot.
+        let a = parse_reg("exp --quick table2").unwrap();
+        assert!(a.switch("quick"));
+        assert_eq!(a.positional_at(0, "experiment id").unwrap(), "table2");
+        assert_eq!(a.str("quick", "unset"), "unset");
+
+        let b = parse_reg("compress --fused out.odw --rank 8").unwrap();
+        assert!(b.switch("fused"));
+        assert_eq!(b.positional, vec!["out.odw"]);
+        assert_eq!(b.usize("rank", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn registry_flag_accepts_negative_number_values() {
+        let a = parse_reg("generate --temperature -0.75 --max-new-tokens 4").unwrap();
+        assert!((a.f64("temperature", 0.0).unwrap() + 0.75).abs() < 1e-12);
+        assert_eq!(a.usize("max-new-tokens", 0).unwrap(), 4);
+        // `--k=v` spelling too.
+        let b = parse_reg("generate --temperature=-1.5").unwrap();
+        assert!((b.f64("temperature", 0.0).unwrap() + 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registry_rejects_malformed_options() {
+        // Unknown option.
+        assert!(parse_reg("eval --bogus 3").is_err());
+        // Flag at end of line without a value.
+        assert!(parse_reg("eval --weights").is_err());
+        // Flag whose "value" is another option.
+        assert!(parse_reg("eval --weights --fused").is_err());
+        // Switch given a value.
+        assert!(parse_reg("eval --fused=1").is_err());
+    }
+
+    #[test]
+    fn every_builtin_command_is_registered() {
+        for name in [
+            "train",
+            "calibrate",
+            "compress",
+            "eval",
+            "pipeline",
+            "exp",
+            "serve-bench",
+            "generate",
+            "artifacts",
+            "help",
+        ] {
+            assert!(command_spec(name).is_some(), "missing registry entry: {name}");
+        }
+        assert!(command_spec("nope").is_none());
     }
 }

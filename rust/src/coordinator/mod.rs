@@ -182,10 +182,18 @@ impl CompressionPipeline {
 
         let mut matrices = BTreeMap::new();
         let mut traces = BTreeMap::new();
-        let mut q_bits_overhead = 0.0;
+        // Per-quantizer bit overhead depends on the matrix shape (scales
+        // amortize over more or fewer weights), and projections differ in
+        // shape (attention vs MLP). The reported model overhead is the
+        // parameter-weighted mean over ALL projections — not whichever
+        // matrix happened to be processed last.
+        let mut overhead_weighted = 0.0f64;
+        let mut overhead_params = 0.0f64;
         for (name, d) in results {
             let shape = fam.param_shape(&name)?;
-            q_bits_overhead = quantizer.bits_with_overhead(shape[0], shape[1]);
+            let count = (shape[0] * shape[1]) as f64;
+            overhead_weighted += quantizer.bits_with_overhead(shape[0], shape[1]) * count;
+            overhead_params += count;
             let last = d.metrics.last().unwrap();
             matrices.insert(
                 name.clone(),
@@ -199,6 +207,12 @@ impl CompressionPipeline {
             );
             traces.insert(name, d.metrics);
         }
+
+        let q_bits_overhead = if overhead_params == 0.0 {
+            quantizer.bits()
+        } else {
+            overhead_weighted / overhead_params
+        };
 
         Ok(PipelineResult {
             model: CompressedModel {
@@ -326,6 +340,49 @@ mod tests {
                 "{name} L differs"
             );
         }
+    }
+
+    #[test]
+    fn q_bits_overhead_is_parameter_weighted_over_all_projections() {
+        // The toy family mixes 24×24 attention and 40×24 / 24×40 MLP
+        // projections; the default E8 quantizer's overhead (one 32-bit
+        // scale per matrix) therefore differs per shape. The model-level
+        // value must be the parameter-weighted mean over ALL projections —
+        // the old code reported whichever matrix sorted last.
+        let (params, hessians) = toy_setup();
+        let cfg = quick_cfg(InitKind::Caldera, 2);
+        let out = CompressionPipeline::new(cfg.clone())
+            .run(&params, &hessians)
+            .unwrap();
+        let quantizer = make_quantizer(&cfg.q_scheme, cfg.q_bits, cfg.q_group).unwrap();
+        let fam = &params.family;
+        let mut want_num = 0.0f64;
+        let mut want_den = 0.0f64;
+        let mut per_matrix: Vec<f64> = Vec::new();
+        for name in &fam.projections {
+            let s = fam.param_shape(name).unwrap();
+            let b = quantizer.bits_with_overhead(s[0], s[1]);
+            per_matrix.push(b);
+            want_num += b * (s[0] * s[1]) as f64;
+            want_den += (s[0] * s[1]) as f64;
+        }
+        let want = want_num / want_den;
+        assert!(
+            (out.model.q_bits_overhead - want).abs() < 1e-12,
+            "got {} want {want}",
+            out.model.q_bits_overhead
+        );
+        // The family genuinely has differently-shaped projections, so the
+        // weighted mean sits strictly between the extremes — the old
+        // "last one wins" value (an extreme) cannot equal it.
+        let lo = per_matrix.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = per_matrix
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < hi, "test family needs projections with different shapes");
+        assert!(out.model.q_bits_overhead > lo && out.model.q_bits_overhead < hi);
+        assert!(out.model.avg_bits().is_finite() && out.model.avg_bits() > 0.0);
     }
 
     #[test]

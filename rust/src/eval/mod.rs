@@ -1,109 +1,44 @@
 //! Evaluation: perplexity over the synthetic splits and the five zero-shot
-//! proxy tasks, driven through any [`Forward`] implementation — the
-//! runtime's `fwd_<family>` artifact (XLA or native engine) or the packed
-//! fused model ([`crate::fused::FusedModel`]), which never densifies `Q`.
+//! proxy tasks, driven through any [`Engine`] — the dense native engine
+//! ([`crate::engine::NativeEngine`]) or the packed fused model
+//! ([`crate::fused::FusedModel`]), which never densifies `Q`.
 //!
 //! Scoring mirrors lm-eval-harness: PPL = exp(mean NLL of next-token
 //! targets); multiple-choice accuracy scores each choice continuation by
-//! summed log-prob and takes the argmax.
+//! summed log-prob and takes the argmax. Sequences are scored at their
+//! natural lengths through [`crate::engine::score_many`], which batches
+//! equal-length sequences together — no row is ever padded by repeating
+//! another request (causal attention makes the trailing-pad scores of the
+//! old fixed-shape path identical to these).
 
 use anyhow::{bail, Result};
 
 use crate::corpus::{self, Split, Task};
-use crate::model::ModelParams;
-use crate::runtime::{Runtime, Value};
-use crate::tensor::Matrix;
+use crate::engine::{self, Engine};
 
-/// Anything that can turn a row-major (batch, seq) token block into logits
-/// of shape (batch·seq, vocab).
-pub trait Forward {
-    fn batch(&self) -> usize;
-    fn seq(&self) -> usize;
-    fn logits(&self, tokens: Vec<i32>) -> Result<Matrix>;
-}
+pub use crate::engine::nll_of;
 
-/// The runtime-backed forward: dense params through `fwd_<family>`.
-pub struct RuntimeForward<'a> {
-    pub rt: &'a Runtime,
-    pub params: &'a ModelParams,
-}
-
-impl Forward for RuntimeForward<'_> {
-    fn batch(&self) -> usize {
-        self.rt.manifest.batch
-    }
-
-    fn seq(&self) -> usize {
-        self.rt.manifest.seq
-    }
-
-    fn logits(&self, tokens: Vec<i32>) -> Result<Matrix> {
-        let (batch, seq) = (self.batch(), self.seq());
-        if tokens.len() != batch * seq {
-            bail!("forward expects {}x{} tokens", batch, seq);
-        }
-        let artifact = format!("fwd_{}", self.params.family.name);
-        let mut inputs = self.params.values.clone();
-        inputs.push(Value::from_vec_i32(vec![batch, seq], tokens));
-        let outs = self.rt.exec(&artifact, &inputs)?;
-        outs[0].to_matrix_2d()
-    }
-}
-
-/// Log-softmax NLL of `target` under a logits row (f64 for stability).
-/// Public: the batch server scores requests with the same computation.
-pub fn nll_of(logits_row: &[f32], target: usize) -> f64 {
-    let mx = logits_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
-    let lse: f64 = logits_row
-        .iter()
-        .map(|&v| ((v as f64) - mx).exp())
-        .sum::<f64>()
-        .ln()
-        + mx;
-    lse - logits_row[target] as f64
-}
-
-/// Perplexity of a forward path on a split, over `windows` sequential
-/// windows of its sequence length.
-pub fn perplexity_of(fwd: &dyn Forward, split: Split, windows: usize, seed: u64) -> Result<f64> {
-    let (batch, seq) = (fwd.batch(), fwd.seq());
+/// Perplexity of an engine on a split, over `windows` sequential windows
+/// of the engine's natural sequence length.
+pub fn perplexity(engine: &dyn Engine, split: Split, windows: usize, seed: u64) -> Result<f64> {
+    let seq = engine.spec().seq;
     let data = corpus::generate(split, (windows + 2) * (seq + 1) + 1024, seed);
     let wins = corpus::eval_windows(&data, seq, windows);
     if wins.is_empty() {
         bail!("not enough data for eval windows");
     }
+    let seqs: Vec<Vec<i32>> = wins.iter().map(|w| w[..seq].to_vec()).collect();
+    let nlls = engine::score_many(engine, &seqs)?;
     let mut total_nll = 0f64;
     let mut total_tok = 0usize;
-    for group in wins.chunks(batch) {
-        // Pack up to `batch` windows; pad the group by repeating the first.
-        let mut tokens = Vec::with_capacity(batch * seq);
-        for b in 0..batch {
-            let w = group.get(b).unwrap_or(&group[0]);
-            tokens.extend(&w[..seq]);
-        }
-        let logits = fwd.logits(tokens)?;
-        let vocab = logits.cols();
-        for (b, w) in group.iter().enumerate() {
-            for t in 0..seq - 1 {
-                let row = logits.row(b * seq + t);
-                debug_assert_eq!(row.len(), vocab);
-                total_nll += nll_of(row, w[t + 1] as usize);
-                total_tok += 1;
-            }
-        }
+    for n in &nlls {
+        total_nll += n.iter().sum::<f64>();
+        total_tok += n.len();
+    }
+    if total_tok == 0 {
+        bail!("no scored positions");
     }
     Ok((total_nll / total_tok as f64).exp())
-}
-
-/// Runtime-path convenience wrapper (historical signature).
-pub fn perplexity(
-    rt: &Runtime,
-    params: &ModelParams,
-    split: Split,
-    windows: usize,
-    seed: u64,
-) -> Result<f64> {
-    perplexity_of(&RuntimeForward { rt, params }, split, windows, seed)
 }
 
 /// Result of one task evaluation.
@@ -114,57 +49,46 @@ pub struct TaskScore {
     pub items: usize,
 }
 
-/// Score a two-choice task: each (prompt ++ choice) is packed into one row
-/// of the forward batch, NLL summed over the choice's token positions only.
-pub fn task_accuracy_of(
-    fwd: &dyn Forward,
+/// Score a two-choice task: each (prompt ++ choice) is scored at its
+/// natural length; the choice's summed log-prob (over the choice's token
+/// positions only) picks the answer.
+pub fn task_accuracy(
+    engine: &dyn Engine,
     task: Task,
     n_items: usize,
     seed: u64,
 ) -> Result<TaskScore> {
-    let (batch, seq) = (fwd.batch(), fwd.seq());
+    let spec = engine.spec();
     let items = corpus::task_items(task, n_items, seed);
-    // Two rows per item (choice 0 / choice 1).
-    let mut rows: Vec<(usize, usize, Vec<i32>, usize, usize)> = Vec::new();
+    // Two sequences per item (choice 0 / choice 1).
+    let mut seqs: Vec<Vec<i32>> = Vec::with_capacity(2 * items.len());
+    let mut meta: Vec<(usize, usize, usize, usize)> = Vec::with_capacity(2 * items.len());
     for (i, it) in items.iter().enumerate() {
         for (c, choice) in it.choices.iter().enumerate() {
             let full = format!("{}{}", it.prompt, choice);
-            let bytes = full.as_bytes();
-            if bytes.len() + 1 > seq {
-                bail!(
-                    "task item too long ({} bytes) for seq {}",
-                    bytes.len(),
-                    seq
-                );
+            let toks: Vec<i32> = full.as_bytes().iter().map(|&b| b as i32).collect();
+            if toks.len() > spec.seq {
+                bail!("task item too long ({} tokens) for seq {}", toks.len(), spec.seq);
             }
-            let mut toks: Vec<i32> = bytes.iter().map(|&b| b as i32).collect();
-            let choice_start = it.prompt.len(); // first choice byte index
-            let choice_end = toks.len();
-            toks.resize(seq, b' ' as i32);
-            rows.push((i, c, toks, choice_start, choice_end));
+            // P(choice | prompt): first choice byte starts at prompt end.
+            let start = it.prompt.len().max(1);
+            let end = toks.len();
+            meta.push((i, c, start, end));
+            seqs.push(toks);
         }
     }
+    let nlls = engine::score_many(engine, &seqs)?;
     let mut scores = vec![[0f64; 2]; items.len()];
-    for group in rows.chunks(batch) {
-        let mut tokens = Vec::with_capacity(batch * seq);
-        for b in 0..batch {
-            let r = group.get(b).unwrap_or(&group[0]);
-            tokens.extend(&r.2);
+    for ((item, choice, start, end), n) in meta.iter().zip(&nlls) {
+        let mut lp = 0f64;
+        // Position t is predicted from position t-1's logits → nlls[t-1].
+        for t in *start..*end {
+            lp -= n[t - 1];
         }
-        let logits = fwd.logits(tokens)?;
-        for (b, (item, choice, toks, start, end)) in group.iter().enumerate() {
-            let mut lp = 0f64;
-            // P(choice | prompt): positions start..end predicted from
-            // position-1 logits.
-            for t in *start..*end {
-                let row = logits.row(b * seq + t - 1);
-                lp -= nll_of(row, toks[t] as usize);
-            }
-            // Length-normalize (lm-eval `acc_norm`): choices differ in byte
-            // length, and raw summed log-prob systematically favors the
-            // shorter one.
-            scores[*item][*choice] = lp / (*end - *start).max(1) as f64;
-        }
+        // Length-normalize (lm-eval `acc_norm`): choices differ in byte
+        // length, and raw summed log-prob systematically favors the
+        // shorter one.
+        scores[*item][*choice] = lp / (*end - *start).max(1) as f64;
     }
     let correct = items
         .iter()
@@ -181,17 +105,6 @@ pub fn task_accuracy_of(
     })
 }
 
-/// Runtime-path convenience wrapper (historical signature).
-pub fn task_accuracy(
-    rt: &Runtime,
-    params: &ModelParams,
-    task: Task,
-    n_items: usize,
-    seed: u64,
-) -> Result<TaskScore> {
-    task_accuracy_of(&RuntimeForward { rt, params }, task, n_items, seed)
-}
-
 /// Full evaluation bundle (the paper's metric columns for one model).
 #[derive(Clone, Debug)]
 pub struct EvalReport {
@@ -200,17 +113,17 @@ pub struct EvalReport {
     pub tasks: Vec<TaskScore>,
 }
 
-pub fn evaluate_of(
-    fwd: &dyn Forward,
+pub fn evaluate(
+    engine: &dyn Engine,
     ppl_windows: usize,
     task_items: usize,
     seed: u64,
 ) -> Result<EvalReport> {
-    let ppl_wiki = perplexity_of(fwd, Split::WikiSim, ppl_windows, seed)?;
-    let ppl_c4 = perplexity_of(fwd, Split::C4Sim, ppl_windows, seed)?;
+    let ppl_wiki = perplexity(engine, Split::WikiSim, ppl_windows, seed)?;
+    let ppl_c4 = perplexity(engine, Split::C4Sim, ppl_windows, seed)?;
     let tasks = corpus::ALL_TASKS
         .iter()
-        .map(|&t| task_accuracy_of(fwd, t, task_items, seed))
+        .map(|&t| task_accuracy(engine, t, task_items, seed))
         .collect::<Result<Vec<_>>>()?;
     Ok(EvalReport {
         ppl_wiki,
@@ -219,20 +132,12 @@ pub fn evaluate_of(
     })
 }
 
-/// Runtime-path convenience wrapper (historical signature).
-pub fn evaluate(
-    rt: &Runtime,
-    params: &ModelParams,
-    ppl_windows: usize,
-    task_items: usize,
-    seed: u64,
-) -> Result<EvalReport> {
-    evaluate_of(&RuntimeForward { rt, params }, ppl_windows, task_items, seed)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{EngineSpec, Session};
+    use crate::runtime::native::KvCache;
+    use crate::tensor::Matrix;
 
     #[test]
     fn nll_matches_hand_computation() {
@@ -251,53 +156,85 @@ mod tests {
         assert!(nll > 0.0 && nll < 1.0 && nll.is_finite());
     }
 
-    /// A deterministic toy forward: uniform logits except token 0 is always
+    /// A deterministic toy engine: uniform logits except token 0 is always
     /// twice as likely. Lets the eval loops be exercised hermetically.
-    struct ToyForward {
+    struct ToyEngine {
         vocab: usize,
-        batch: usize,
+        max_batch: usize,
         seq: usize,
     }
 
-    impl Forward for ToyForward {
-        fn batch(&self) -> usize {
-            self.batch
-        }
-        fn seq(&self) -> usize {
-            self.seq
-        }
-        fn logits(&self, tokens: Vec<i32>) -> Result<Matrix> {
-            assert_eq!(tokens.len(), self.batch * self.seq);
-            let mut m = Matrix::zeros(self.batch * self.seq, self.vocab);
-            for i in 0..m.rows() {
+    impl ToyEngine {
+        fn logits_rows(&self, rows: usize) -> Matrix {
+            let mut m = Matrix::zeros(rows, self.vocab);
+            for i in 0..rows {
                 m.row_mut(i)[0] = (2f32).ln();
             }
-            Ok(m)
+            m
+        }
+    }
+
+    impl Engine for ToyEngine {
+        fn spec(&self) -> EngineSpec {
+            EngineSpec {
+                vocab: self.vocab,
+                max_batch: self.max_batch,
+                seq: self.seq,
+                max_context: 4 * self.seq,
+            }
+        }
+
+        fn forward_batch(
+            &self,
+            tokens: &[i32],
+            batch: usize,
+            seq: usize,
+        ) -> anyhow::Result<Matrix> {
+            assert_eq!(tokens.len(), batch * seq);
+            Ok(self.logits_rows(batch * seq))
+        }
+
+        fn prefill(&self, tokens: &[i32]) -> anyhow::Result<(Session, Matrix)> {
+            Ok((
+                Session::new(tokens.to_vec(), KvCache::new(0, 1)),
+                self.logits_rows(tokens.len()),
+            ))
+        }
+
+        fn decode_step(
+            &self,
+            sessions: &mut [&mut Session],
+            tokens: &[i32],
+        ) -> anyhow::Result<Matrix> {
+            for (s, &t) in sessions.iter_mut().zip(tokens) {
+                s.tokens.push(t);
+            }
+            Ok(self.logits_rows(tokens.len()))
         }
     }
 
     #[test]
     fn perplexity_of_uniformish_model_is_near_vocab() {
-        let fwd = ToyForward {
+        let engine = ToyEngine {
             vocab: 256,
-            batch: 2,
+            max_batch: 2,
             seq: 64,
         };
-        let ppl = perplexity_of(&fwd, Split::WikiSim, 4, 7).unwrap();
+        let ppl = perplexity(&engine, Split::WikiSim, 4, 7).unwrap();
         // Nearly-uniform over 256 tokens (token 0 = NUL never occurs in the
         // corpus, so its extra mass only hurts): ppl slightly above 256.
         assert!(ppl > 200.0 && ppl < 300.0, "ppl={ppl}");
     }
 
     #[test]
-    fn task_accuracy_of_runs_on_toy_forward() {
-        let fwd = ToyForward {
+    fn task_accuracy_runs_on_toy_engine() {
+        let engine = ToyEngine {
             vocab: 256,
-            batch: 4,
+            max_batch: 4,
             seq: 96,
         };
         for task in corpus::ALL_TASKS {
-            let score = task_accuracy_of(&fwd, task, 8, 3).unwrap();
+            let score = task_accuracy(&engine, task, 8, 3).unwrap();
             assert_eq!(score.items, 8);
             assert!((0.0..=1.0).contains(&score.accuracy));
         }

@@ -16,6 +16,7 @@ use anyhow::Result;
 use super::ExpContext;
 use crate::calib::{calibrate, CalibConfig};
 use crate::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use crate::engine::NativeEngine;
 use crate::eval::{evaluate, EvalReport};
 use crate::hessian::Hessian;
 use crate::model::{inject_outliers, ModelParams};
@@ -25,6 +26,12 @@ use crate::train::{train, TrainConfig};
 
 /// Paper rank → our rank for d=128-scale families.
 pub const RANK_MAP: [(usize, usize); 3] = [(64, 8), (128, 16), (256, 32)];
+
+/// Dense-weight engine at the runtime's block shape (all table cells are
+/// scored through the Engine API).
+fn dense_engine(rt: &XlaRuntime, params: &ModelParams) -> Result<NativeEngine> {
+    NativeEngine::new(params, rt.manifest.batch, rt.manifest.seq)
+}
 
 /// Train + outlier-inject + calibrate a family once; cache under runs/.
 pub fn ensure_model(
@@ -119,7 +126,7 @@ pub fn run_cell(
     let out = CompressionPipeline::new(cfg).run(params, hessians)?;
     let applied = out.model.apply_to(params)?;
     let (wins, items) = if ctx.quick { (12, 32) } else { (30, 64) };
-    let rep = evaluate(rt, &applied, wins, items, 1000)?;
+    let rep = evaluate(&dense_engine(rt, &applied)?, wins, items, 1000)?;
     Ok((out.model.avg_bits(), rep))
 }
 
@@ -161,7 +168,7 @@ fn ppl_table(
         let (params, hessians) = ensure_model(ctx, &rt, family)?;
         // FP32 reference row.
         let (wins, items) = if ctx.quick { (12, 32) } else { (30, 64) };
-        let base = evaluate(&rt, &params, wins, items, 1000)?;
+        let base = evaluate(&dense_engine(&rt, &params)?, wins, items, 1000)?;
         let mut row = vec![
             family.to_string(),
             "uncompressed".into(),
@@ -373,7 +380,7 @@ pub fn table11(ctx: &ExpContext) -> Result<()> {
     for family in ["tl-7s", "tg-2s"] {
         let (params, hessians) = ensure_model(ctx, &rt, family)?;
         let (wins, items) = if ctx.quick { (12, 16) } else { (30, 32) };
-        let base = evaluate(&rt, &params, wins, items, 1000)?;
+        let base = evaluate(&dense_engine(&rt, &params)?, wins, items, 1000)?;
         t.row(vec![
             family.into(),
             "FP32".into(),

@@ -26,14 +26,18 @@
 //! **Serving hot path:** [`fused::FusedQlrMatrix`] keeps `Q` bit-packed
 //! (dequant-on-the-fly, blocked + multithreaded) and applies the low-rank
 //! correction as two skinny matmuls — `CompressedMatrix::reconstruct()` is
-//! never called at inference time. [`serve`] runs a dynamic-batching
-//! threaded server over either path.
+//! never called at inference time. All inference flows through the
+//! [`engine::Engine`] API: scoring forwards plus KV-cached incremental
+//! generation over per-request [`engine::Session`]s; [`serve`] runs a
+//! continuous-batching threaded server (FIFO admission, variable batch
+//! assembly) over any engine.
 //!
 //! Entry points: [`decompose::JointOptimizer`] (the algorithm),
 //! [`coordinator::CompressionPipeline`] (whole-model compression),
-//! [`fused::FusedModel`] (deployment form), [`eval`] (metrics),
-//! `odlri exp <id>` (paper reproductions), `odlri serve-bench --fused`
-//! (packed serving).
+//! [`fused::FusedModel`] (deployment form), [`engine`] (serving API),
+//! [`eval`] (metrics), `odlri exp <id>` (paper reproductions),
+//! `odlri serve-bench --fused` / `odlri generate --fused` (packed serving
+//! and generation).
 
 pub mod benchkit;
 pub mod calib;
@@ -41,6 +45,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod corpus;
 pub mod decompose;
+pub mod engine;
 pub mod eval;
 pub mod exec;
 pub mod exp;

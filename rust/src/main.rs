@@ -1,8 +1,12 @@
-//! `odlri` — leader binary: train / calibrate / compress / eval / serve / exp.
+//! `odlri` — leader binary: train / calibrate / compress / eval / generate
+//! / serve-bench / exp.
 //!
-//! Runs artifact-free on the native engine by default; with `--features
-//! xla` and an `artifacts/` directory the same commands execute the AOT
-//! HLO artifacts through PJRT.
+//! All inference commands run through the [`odlri::engine::Engine`] API
+//! (dense native engine or the packed fused `(Q+LR)·x` engine); `generate`
+//! and `serve-bench --max-new-tokens` exercise KV-cached incremental
+//! decoding. Runs artifact-free on the native engine by default; with
+//! `--features xla` and an `artifacts/` directory the training/calibration
+//! commands execute the AOT HLO artifacts through PJRT.
 
 use std::path::PathBuf;
 
@@ -10,12 +14,13 @@ use anyhow::{bail, Result};
 
 use odlri::cli::{Args, HELP};
 use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::engine::{self, Engine, NativeEngine, Sampling};
 use odlri::eval;
 use odlri::exp;
 use odlri::fused::FusedModel;
 use odlri::model::{inject_outliers, ModelParams};
 use odlri::runtime::Runtime;
-use odlri::serve::{run_batch_server, ServeConfig};
+use odlri::serve::{nearest_rank, run_server, sort_nan_last, ServeConfig, Workload};
 use odlri::train::{train, TrainConfig};
 
 fn main() {
@@ -78,6 +83,7 @@ fn dispatch(args: &Args) -> Result<()> {
             exp::run(&id, args)
         }
         "serve-bench" => cmd_serve_bench(args),
+        "generate" => cmd_generate(args),
         other => bail!("unknown command '{other}'; try `odlri help`"),
     }
 }
@@ -119,6 +125,55 @@ fn load_model(rt: &Runtime, args: &Args, family: &str) -> Result<ModelParams> {
     let fam = rt.manifest.family(family)?;
     let weights = args.str("weights", &format!("runs/{family}.odw"));
     ModelParams::load(fam, &PathBuf::from(weights))
+}
+
+/// Like [`load_model`], but falls back to random-init weights when no
+/// weight file exists (smoke paths: `--pack-dense` serving/generation needs
+/// no prior training run).
+fn load_model_or_init(rt: &Runtime, args: &Args, family: &str) -> Result<ModelParams> {
+    let fam = rt.manifest.family(family)?;
+    let weights = args.str("weights", &format!("runs/{family}.odw"));
+    let path = PathBuf::from(&weights);
+    if path.exists() {
+        ModelParams::load(fam, &path)
+    } else {
+        eprintln!("[engine] no weights at {weights}; using random-init params");
+        Ok(ModelParams::init(fam, args.u64("seed", 0)?))
+    }
+}
+
+/// Build the inference engine every serving command runs through: the
+/// packed fused `(Q+LR)·x` engine (`--fused`, optionally packed on the fly
+/// from dense weights with `--pack-dense`) or the dense native engine.
+fn build_engine(rt: &Runtime, args: &Args, family: &str) -> Result<Box<dyn Engine>> {
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    if args.switch("fused") {
+        let fam = rt.manifest.family(family)?;
+        let fm = if args.switch("pack-dense") {
+            let params = load_model_or_init(rt, args, family)?;
+            FusedModel::pack_dense(&params, "uniform", 8, 64)?.with_shape(batch, seq)
+        } else {
+            let weights = args.str("weights", &format!("runs/{family}.odf"));
+            // Normalize the container's stored shape to the runtime
+            // manifest's so fused and dense runs score identical windows
+            // under the same scheduler batch cap.
+            FusedModel::load(fam, &PathBuf::from(weights))?.with_shape(batch, seq)
+        };
+        eprintln!(
+            "[engine] fused: {:.2} bits/weight over {} packed projections [{}]",
+            fm.avg_bits(),
+            fm.mats.len(),
+            fm.scheme_summary()
+        );
+        Ok(Box::new(fm))
+    } else {
+        let params = if args.switch("pack-dense") {
+            load_model_or_init(rt, args, family)?
+        } else {
+            load_model(rt, args, family)?
+        };
+        Ok(Box::new(NativeEngine::new(&params, batch, seq)?))
+    }
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
@@ -261,33 +316,13 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
-    let report = if args.switch("fused") {
-        // Packed fused engine: weights point at a `.odf` container.
-        let fam = rt.manifest.family(&family)?;
-        let weights = args.str("weights", &format!("runs/{family}.odf"));
-        let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
-        eprintln!(
-            "[eval] fused engine: {:.2} bits/weight over {} packed projections [{}]",
-            fm.avg_bits(),
-            fm.mats.len(),
-            fm.scheme_summary()
-        );
-        eval::evaluate_of(
-            &fm,
-            args.usize("windows", 40)?,
-            args.usize("task-items", 64)?,
-            args.u64("seed", 1000)?,
-        )?
-    } else {
-        let params = load_model(&rt, args, &family)?;
-        eval::evaluate(
-            &rt,
-            &params,
-            args.usize("windows", 40)?,
-            args.usize("task-items", 64)?,
-            args.u64("seed", 1000)?,
-        )?
-    };
+    let engine = build_engine(&rt, args, &family)?;
+    let report = eval::evaluate(
+        engine.as_ref(),
+        args.usize("windows", 40)?,
+        args.usize("task-items", 64)?,
+        args.u64("seed", 1000)?,
+    )?;
     println!("ppl wiki-sim = {:.4}", report.ppl_wiki);
     println!("ppl c4-sim   = {:.4}", report.ppl_c4);
     for t in &report.tasks {
@@ -325,7 +360,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     )?;
 
     eprintln!("[3/5] evaluating FP32 baseline…");
-    let base = eval::evaluate(&rt, &params, 30, 48, 1000)?;
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let base_engine = NativeEngine::new(&params, batch, seq)?;
+    let base = eval::evaluate(&base_engine, 30, 48, 1000)?;
 
     let mut cfg = pipeline_config(args)?;
     let mut rows = Vec::new();
@@ -334,7 +371,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         cfg.init = init.clone();
         let out = CompressionPipeline::new(cfg.clone()).run(&params, &hessians)?;
         let applied = out.model.apply_to(&params)?;
-        let rep = eval::evaluate(&rt, &applied, 30, 48, 1000)?;
+        let applied_engine = NativeEngine::new(&applied, batch, seq)?;
+        let rep = eval::evaluate(&applied_engine, 30, 48, 1000)?;
         rows.push((init.name(), out.model.avg_bits(), rep));
     }
 
@@ -374,46 +412,120 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
+    let max_new = args.usize("max-new-tokens", 0)?;
     let cfg = ServeConfig {
         requests: args.usize("requests", 32)?,
         clients: args.usize("clients", 4)?,
         deadline: std::time::Duration::from_millis(args.u64("deadline-ms", 10)?),
         seed: args.u64("seed", 9)?,
+        workload: if max_new == 0 {
+            Workload::Score
+        } else {
+            Workload::Generate {
+                max_new_tokens: max_new,
+            }
+        },
+        prompt_len: args.usize("prompt-len", 0)?,
     };
-    let report = if args.switch("fused") {
-        let fam = rt.manifest.family(&family)?;
-        let weights = args.str("weights", &format!("runs/{family}.odf"));
-        let fm = FusedModel::load(fam, &PathBuf::from(weights))?;
-        eprintln!(
-            "[serve-bench] fused engine ({:.2} bits/weight packed [{}])",
-            fm.avg_bits(),
-            fm.scheme_summary()
-        );
-        run_batch_server(&fm, &cfg)?
+    let engine = build_engine(&rt, args, &family)?;
+    let report = run_server(engine.as_ref(), &cfg)?;
+    let seq = if cfg.prompt_len == 0 {
+        engine.spec().seq
     } else {
-        let params = load_model(&rt, args, &family)?;
-        rt.warm(&format!("fwd_{family}"))?;
-        let fwd = eval::RuntimeForward {
-            rt: &rt,
-            params: &params,
-        };
-        run_batch_server(&fwd, &cfg)?
+        cfg.prompt_len
     };
-    let seq = rt.manifest.seq;
     println!(
-        "served {} requests in {} batches over {:.2}s  ({:.0} req/s, {:.0} tok/s)",
-        report.scores.len(),
+        "served {} requests in {} forwards + {} decode steps over {:.2}s  ({:.0} req/s)",
+        report.completed.len(),
         report.batches,
+        report.decode_steps,
         report.wall_secs,
         report.requests_per_sec(),
-        report.requests_per_sec() * seq as f64
     );
     println!(
-        "latency p50 = {:.1} ms   p95 = {:.1} ms",
+        "request latency p50 = {:.1} ms   p95 = {:.1} ms",
         report.p50_ms(),
         report.p95_ms()
     );
-    let finite = report.scores.iter().filter(|s| s.is_finite()).count();
-    println!("finite scores: {finite}/{}", report.scores.len());
+    if max_new > 0 {
+        println!(
+            "generated {} tokens ({} via KV-cached decode at {:.0} tok/s; per-step p50 = {:.2} ms)",
+            report.generated_tokens,
+            report.decoded_tokens,
+            report.decode_tokens_per_sec(),
+            report.decode_p50_ms()
+        );
+    } else {
+        println!(
+            "scored {:.0} tok/s",
+            report.requests_per_sec() * seq as f64
+        );
+        let finite = report.scores.iter().filter(|s| s.is_finite()).count();
+        println!("finite scores: {finite}/{}", report.scores.len());
+    }
     Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let rt = open_runtime(args)?;
+    let family = args.str("family", "tl-7s");
+    let engine = build_engine(&rt, args, &family)?;
+    let seed = args.u64("seed", 0)?;
+    let prompt_text = args.str("prompt", "");
+    let prompt: Vec<i32> = if prompt_text.is_empty() {
+        let n = args.usize("prompt-len", 32)?.max(1);
+        let data = odlri::corpus::generate(odlri::corpus::Split::WikiSim, n + 1024, seed);
+        data[..n].iter().map(|&b| b as i32).collect()
+    } else {
+        prompt_text.as_bytes().iter().map(|&b| b as i32).collect()
+    };
+    let sampling = match args.usize("top-k", 0)? {
+        0 => Sampling::Greedy,
+        k => Sampling::TopK {
+            k,
+            temperature: args.f64("temperature", 1.0)? as f32,
+            seed,
+        },
+    };
+    let max_new = args.usize("max-new-tokens", 64)?;
+    let out = engine::generate(engine.as_ref(), &prompt, max_new, sampling)?;
+    println!("prompt ({} tokens): {:?}", out.prompt_len, tokens_to_text(&prompt));
+    println!(
+        "generated {} tokens: {:?}",
+        out.tokens.len(),
+        tokens_to_text(&out.tokens)
+    );
+    // Per-token latency report: the whole point of KV-cached decoding.
+    // Same NaN-last ordering + nearest-rank formula as the serve report.
+    let sorted = sort_nan_last(&out.step_latencies_s);
+    let pick = |p: f64| -> f64 { nearest_rank(&sorted, p) };
+    let total: f64 = out.step_latencies_s.iter().sum();
+    let mean_ms = if out.step_latencies_s.is_empty() {
+        0.0
+    } else {
+        total * 1e3 / out.step_latencies_s.len() as f64
+    };
+    println!(
+        "prefill {:.2} ms   decode mean {:.2} ms/tok  p50 {:.2}  p95 {:.2}   ({:.0} tok/s)",
+        out.prefill_s * 1e3,
+        mean_ms,
+        pick(0.50) * 1e3,
+        pick(0.95) * 1e3,
+        if total > 0.0 {
+            out.step_latencies_s.len() as f64 / total
+        } else {
+            0.0
+        }
+    );
+    Ok(())
+}
+
+/// Render byte-level tokens as text (tokens ≥ 256 from wide-vocab families
+/// become '?').
+fn tokens_to_text(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .map(|&t| if (0..256).contains(&t) { t as u8 } else { b'?' })
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
 }

@@ -12,6 +12,27 @@
 //! * bit-packed `Q` plus factors ([`crate::fused::FusedModel`], the
 //!   serving hot path — dequantizes on the fly).
 //!
+//! ## Incremental decoding ([`KvCache`], [`fwd_prefill`], [`fwd_decode`])
+//!
+//! Generation serving never re-runs the full sequence per emitted token.
+//! [`fwd_prefill`] is the ordinary causal forward over a prompt that
+//! additionally stores each layer's post-RoPE `K` and raw `V` rows in a
+//! per-session [`KvCache`]; [`fwd_decode`] then advances a *batch* of
+//! sessions by one token each: embed the new tokens, project through the
+//! same [`ProjectionOps`], rotate at each session's own position offset,
+//! append one `K`/`V` row per layer, and attend over the cached rows only
+//! — O(len) per step instead of the O(len²) full re-forward.
+//!
+//! Bit-exactness contract: every per-token operation (RMSNorm, projection
+//! dot products, RoPE table entries, the scaled-softmax loop, the
+//! attention-value accumulation, the MLP) is row-local with the identical
+//! f32 operation order as [`forward_with`], so prefill logits equal the
+//! full-sequence forward's logits **bit-for-bit**, and a decoded step's
+//! logits equal the last row of a full forward over the extended sequence
+//! bit-for-bit (tested below). Decode results are independent of which
+//! other sessions share the step, which is what makes continuous batching
+//! in `serve` sound.
+//!
 //! `train_*` is a full hand-derived reverse pass (RMSNorm, RoPE, causal
 //! GQA attention, SwiGLU/GeGLU) plus the exact AdamW update from
 //! `model.train_step`; gradients are checked against finite differences in
@@ -219,6 +240,100 @@ impl RopeTable {
     }
 }
 
+/// Rotate one flattened activation row's heads at absolute position `pos`,
+/// computing the table entries on the fly with the **exact arithmetic** of
+/// [`RopeTable::new`]/[`RopeTable::apply`] — decode stays bit-identical to
+/// the table-driven forward while paying O(head_dim) trig per row instead
+/// of rebuilding an O(context · head_dim) table every step.
+fn rope_rotate_row(row: &mut [f32], head_dim: usize, pos: usize, theta: f32) {
+    assert!(head_dim % 2 == 0, "rope needs even head_dim");
+    let half = head_dim / 2;
+    debug_assert_eq!(row.len() % head_dim, 0, "rope width");
+    let nh = row.len() / head_dim;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let c = ang.cos();
+        let s = ang.sin();
+        for h in 0..nh {
+            let base = h * head_dim;
+            let x1 = row[base + i];
+            let x2 = row[base + half + i];
+            row[base + i] = x1 * c - x2 * s;
+            row[base + half + i] = x1 * s + x2 * c;
+        }
+    }
+}
+
+// --------------------------------------------------------------- kv cache
+
+/// Per-session key/value cache for incremental decoding: one growable
+/// (len × kv_dim) `K` and `V` buffer per layer. `K` rows are stored
+/// post-RoPE (rotated at their absolute position), `V` rows raw — exactly
+/// the values the full-sequence attention would recompute, so attending
+/// over the cache reproduces the causal forward bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    kv_dim: usize,
+    /// Per layer: (flat K rows, flat V rows), row-major (len × kv_dim).
+    layers: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, kv_dim: usize) -> KvCache {
+        KvCache {
+            kv_dim: kv_dim.max(1),
+            layers: vec![(Vec::new(), Vec::new()); n_layers],
+        }
+    }
+
+    pub fn for_family(fam: &FamilySpec) -> KvCache {
+        KvCache::new(fam.n_layers, fam.kv_dim())
+    }
+
+    /// Number of cached positions (tokens whose K/V rows are stored).
+    pub fn len(&self) -> usize {
+        self.layers
+            .first()
+            .map(|(k, _)| k.len() / self.kv_dim)
+            .unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialized size of the cached activations (capacity planning).
+    pub fn byte_size(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|(k, v)| 4 * (k.len() + v.len()))
+            .sum()
+    }
+
+    /// Append whole rows (multiples of kv_dim) for one layer.
+    fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len() % self.kv_dim, 0, "kv row width");
+        debug_assert_eq!(k.len(), v.len(), "k/v row count");
+        self.layers[layer].0.extend_from_slice(k);
+        self.layers[layer].1.extend_from_slice(v);
+    }
+
+    /// Copy one kv-head's cached panels: (K, V), each (len, head_dim).
+    fn head(&self, layer: usize, g: usize, hd: usize) -> (Matrix, Matrix) {
+        let (kbuf, vbuf) = &self.layers[layer];
+        let len = kbuf.len() / self.kv_dim;
+        let mut k = Matrix::zeros(len, hd);
+        let mut v = Matrix::zeros(len, hd);
+        for i in 0..len {
+            let o = i * self.kv_dim + g * hd;
+            k.row_mut(i).copy_from_slice(&kbuf[o..o + hd]);
+            v.row_mut(i).copy_from_slice(&vbuf[o..o + hd]);
+        }
+        (k, v)
+    }
+}
+
 #[inline]
 fn silu_and_grad(x: f32) -> (f32, f32) {
     let s = 1.0 / (1.0 + (-x).exp());
@@ -346,10 +461,27 @@ pub fn forward_with(
     tokens: &[i32],
     batch: usize,
     seq: usize,
+    capture: Option<&mut Vec<Matrix>>,
+) -> Result<Matrix> {
+    forward_impl(fam, view, proj, tokens, batch, seq, capture, None)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_impl(
+    fam: &FamilySpec,
+    view: &ParamView,
+    proj: &dyn ProjectionOps,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
     mut capture: Option<&mut Vec<Matrix>>,
+    mut kv: Option<&mut KvCache>,
 ) -> Result<Matrix> {
     if tokens.len() != batch * seq {
         bail!("forward expects {}x{} tokens", batch, seq);
+    }
+    if kv.is_some() && batch != 1 {
+        bail!("KV prefill is per-session (batch 1), got batch {batch}");
     }
     let d = fam.d_model;
     let embed = view.get("embed")?;
@@ -374,6 +506,12 @@ pub fn forward_with(
         let v = proj.project(&format!("{p}wv"), &h)?;
         rope.apply(&mut q, seq, false);
         rope.apply(&mut k, seq, false);
+        if let Some(cache) = kv.as_deref_mut() {
+            // Prefill: stash the exact post-RoPE K / raw V rows the causal
+            // attention below consumes, so later decode steps attend over
+            // bit-identical history.
+            cache.append(layer, k.as_slice(), v.as_slice());
+        }
         let ctx = attention(fam, &q, &k, &v, batch, seq, None);
         if let Some(cap) = capture.as_mut() {
             cap.push(ctx.clone()); // attn_ctx
@@ -392,6 +530,129 @@ pub fn forward_with(
         if let Some(cap) = capture.as_mut() {
             cap.push(mid.clone()); // mlp_mid
         }
+        let down = proj.project(&format!("{p}wdown"), &mid)?;
+        x.add_assign(&down);
+    }
+    let gf = view.get("ln_f")?;
+    let (hf, _rf) = rms_norm(&x, gf.as_slice());
+    Ok(matmul_nt(&hf, view.get("unembed")?))
+}
+
+/// Session prefill: the ordinary causal forward over a prompt (batch 1)
+/// that additionally fills `cache` with each layer's K/V rows. Returns the
+/// full (prompt_len, vocab) logits — the caller scores the prompt or
+/// samples from the last row. The logits are bit-identical to
+/// [`forward_with`] over the same tokens.
+pub fn fwd_prefill(
+    fam: &FamilySpec,
+    view: &ParamView,
+    proj: &dyn ProjectionOps,
+    tokens: &[i32],
+    cache: &mut KvCache,
+) -> Result<Matrix> {
+    if tokens.is_empty() {
+        bail!("prefill needs at least one token");
+    }
+    if !cache.is_empty() {
+        bail!("prefill expects an empty KV cache (got {} cached positions)", cache.len());
+    }
+    forward_impl(fam, view, proj, tokens, 1, tokens.len(), None, Some(cache))
+}
+
+/// One incremental decode step for a batch of sessions: `tokens[i]` is
+/// appended to the session behind `caches[i]` and its next-token logits are
+/// returned in row `i` of the (n_sessions, vocab) output.
+///
+/// Sessions may sit at different lengths — each attends over its own cache
+/// at its own RoPE offset, so the scheduler can assemble any batch without
+/// padding. Per-session results are independent of the batch composition
+/// (all cross-row operations are row-local), and bit-identical to the last
+/// row of a full-sequence forward over that session's token history.
+pub fn fwd_decode(
+    fam: &FamilySpec,
+    view: &ParamView,
+    proj: &dyn ProjectionOps,
+    tokens: &[i32],
+    caches: &mut [&mut KvCache],
+) -> Result<Matrix> {
+    let n = tokens.len();
+    if n == 0 {
+        bail!("decode step needs at least one session");
+    }
+    if caches.len() != n {
+        bail!("decode step: {} tokens for {} sessions", n, caches.len());
+    }
+    let d = fam.d_model;
+    let embed = view.get("embed")?;
+    let mut x = Matrix::zeros(n, d);
+    let mut positions = Vec::with_capacity(n);
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= fam.vocab {
+            bail!("token {tok} out of range for vocab {}", fam.vocab);
+        }
+        x.row_mut(i).copy_from_slice(embed.row(tok));
+        positions.push(caches[i].len());
+    }
+    let hd = fam.head_dim();
+    let nh = fam.n_heads;
+    let rep = nh / fam.n_kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for layer in 0..fam.n_layers {
+        let p = format!("layer{layer}.");
+        let g1 = view.get(&format!("{p}ln1"))?;
+        let (h, _r1) = rms_norm(&x, g1.as_slice());
+        let mut q = proj.project(&format!("{p}wq"), &h)?;
+        let mut k = proj.project(&format!("{p}wk"), &h)?;
+        let v = proj.project(&format!("{p}wv"), &h)?;
+        for i in 0..n {
+            rope_rotate_row(q.row_mut(i), hd, positions[i], fam.rope_theta);
+            rope_rotate_row(k.row_mut(i), hd, positions[i], fam.rope_theta);
+        }
+        let mut ctx = Matrix::zeros(n, d);
+        for i in 0..n {
+            caches[i].append(layer, k.row(i), v.row(i));
+            let len = positions[i] + 1;
+            // One cached-panel copy per kv group; under GQA all `rep`
+            // query heads of the group share it.
+            for g in 0..fam.n_kv_heads {
+                let (kh, vh) = caches[i].head(layer, g, hd);
+                debug_assert_eq!(kh.rows(), len, "cache length drift");
+                for r in 0..rep {
+                    let hh = g * rep + r;
+                    let qh = q.slice(i, i + 1, hh * hd, (hh + 1) * hd);
+                    let mut scores = matmul_nt(&qh, &kh); // (1, len)
+                    // Exact op order of the full-sequence causal softmax
+                    // for row i = len-1 (see `attention`): scale+max,
+                    // exp+sum, normalize — bit-identical history ⇒
+                    // bit-identical row.
+                    let row = scores.row_mut(0);
+                    let mut mx = f32::NEG_INFINITY;
+                    for cell in row.iter_mut().take(len) {
+                        *cell *= scale;
+                        mx = mx.max(*cell);
+                    }
+                    let mut sum = 0f32;
+                    for cell in row.iter_mut().take(len) {
+                        *cell = (*cell - mx).exp();
+                        sum += *cell;
+                    }
+                    let inv = 1.0 / sum;
+                    for cell in row.iter_mut().take(len) {
+                        *cell *= inv;
+                    }
+                    let ctx_h = matmul(&scores, &vh); // (1, hd)
+                    ctx.row_mut(i)[hh * hd..(hh + 1) * hd].copy_from_slice(ctx_h.row(0));
+                }
+            }
+        }
+        let attn_out = proj.project(&format!("{p}wo"), &ctx)?;
+        x.add_assign(&attn_out);
+        let g2 = view.get(&format!("{p}ln2"))?;
+        let (h2, _r2) = rms_norm(&x, g2.as_slice());
+        let gate = proj.project(&format!("{p}wgate"), &h2)?;
+        let up = proj.project(&format!("{p}wup"), &h2)?;
+        let mid = glu_mid(&gate, &up, fam.is_geglu());
         let down = proj.project(&format!("{p}wdown"), &mid)?;
         x.add_assign(&down);
     }
@@ -865,6 +1126,23 @@ mod tests {
     }
 
     #[test]
+    fn rope_rotate_row_matches_table_bit_exactly() {
+        // The decode path computes table entries on the fly; its arithmetic
+        // must reproduce RopeTable::apply exactly or the bit-identity
+        // contract between decode and the full forward breaks.
+        let mut rng = Pcg64::new(6, 1);
+        let (seq, hd) = (6usize, 4usize);
+        let mut via_table = Matrix::randn(seq, 2 * hd, 1.0, &mut rng); // 2 heads
+        let mut via_row = via_table.clone();
+        let rope = RopeTable::new(seq, hd, 10000.0);
+        rope.apply(&mut via_table, seq, false);
+        for i in 0..seq {
+            rope_rotate_row(via_row.row_mut(i), hd, i, 10000.0);
+        }
+        assert_eq!(via_table.max_abs_diff(&via_row), 0.0);
+    }
+
+    #[test]
     fn rms_norm_unit_rows() {
         // With g = 1 the output rows have RMS ≈ 1.
         let mut rng = Pcg64::new(2, 1);
@@ -966,6 +1244,109 @@ mod tests {
             "fused vs dense rel err {}",
             fused.rel_err(&dense)
         );
+    }
+
+    #[test]
+    fn prefill_logits_match_full_forward_bit_exactly() {
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 31);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 7, 9);
+        let full = forward_with(&fam, &view, &proj, &tokens, 1, 7, None).unwrap();
+        let mut cache = KvCache::for_family(&fam);
+        let pre = fwd_prefill(&fam, &view, &proj, &tokens, &mut cache).unwrap();
+        assert_eq!(pre.shape(), full.shape());
+        assert_eq!(pre.max_abs_diff(&full), 0.0, "prefill diverged from forward");
+        assert_eq!(cache.len(), 7);
+        assert!(cache.byte_size() > 0);
+        // Prefill refuses a dirty cache.
+        assert!(fwd_prefill(&fam, &view, &proj, &tokens, &mut cache).is_err());
+    }
+
+    #[test]
+    fn incremental_decode_is_bit_identical_to_full_forward() {
+        // Prefill a prompt, then feed tokens one at a time: at every step
+        // the decode logits must equal the last row of a full-sequence
+        // forward over the same history, bit-for-bit (GQA family).
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 32);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 10, 11);
+        let prompt_len = 4usize;
+        let mut cache = KvCache::for_family(&fam);
+        fwd_prefill(&fam, &view, &proj, &tokens[..prompt_len], &mut cache).unwrap();
+        for t in prompt_len..tokens.len() {
+            let mut caches = [&mut cache];
+            let step =
+                fwd_decode(&fam, &view, &proj, &tokens[t..t + 1], &mut caches).unwrap();
+            let full =
+                forward_with(&fam, &view, &proj, &tokens[..t + 1], 1, t + 1, None).unwrap();
+            assert_eq!(step.shape(), (1, fam.vocab));
+            let mut max_diff = 0f32;
+            for j in 0..fam.vocab {
+                max_diff = max_diff.max((step.at(0, j) - full.at(t, j)).abs());
+            }
+            assert_eq!(max_diff, 0.0, "decode step {t} diverged from full forward");
+        }
+        assert_eq!(cache.len(), tokens.len());
+    }
+
+    #[test]
+    fn batched_decode_matches_solo_decode_per_session() {
+        // Sessions at different lengths decoded in one batch must produce
+        // exactly the logits each would produce decoded alone — the
+        // invariant continuous batching relies on. GeGLU family for MLP
+        // coverage.
+        let fam = FamilySpec::build("micro-g", 13, 8, 2, 2, 1, 10, "geglu");
+        let params = ModelParams::init(&fam, 33);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let a_toks = micro_tokens(&fam, 1, 6, 21);
+        let b_toks = micro_tokens(&fam, 1, 3, 22);
+        let mut a_solo = KvCache::for_family(&fam);
+        let mut b_solo = KvCache::for_family(&fam);
+        fwd_prefill(&fam, &view, &proj, &a_toks, &mut a_solo).unwrap();
+        fwd_prefill(&fam, &view, &proj, &b_toks, &mut b_solo).unwrap();
+        let mut a_bat = a_solo.clone();
+        let mut b_bat = b_solo.clone();
+        let next = [1i32, 2];
+        let solo_a = {
+            let mut caches = [&mut a_solo];
+            fwd_decode(&fam, &view, &proj, &next[..1], &mut caches).unwrap()
+        };
+        let solo_b = {
+            let mut caches = [&mut b_solo];
+            fwd_decode(&fam, &view, &proj, &next[1..], &mut caches).unwrap()
+        };
+        let both = {
+            let mut caches = [&mut a_bat, &mut b_bat];
+            fwd_decode(&fam, &view, &proj, &next, &mut caches).unwrap()
+        };
+        assert_eq!(both.shape(), (2, fam.vocab));
+        for j in 0..fam.vocab {
+            assert_eq!(both.at(0, j), solo_a.at(0, j), "session A col {j}");
+            assert_eq!(both.at(1, j), solo_b.at(0, j), "session B col {j}");
+        }
+        assert_eq!(a_bat.len(), 7);
+        assert_eq!(b_bat.len(), 4);
+    }
+
+    #[test]
+    fn decode_validates_inputs() {
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 34);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let mut cache = KvCache::for_family(&fam);
+        fwd_prefill(&fam, &view, &proj, &[1, 2, 3], &mut cache).unwrap();
+        let mut caches = [&mut cache];
+        assert!(fwd_decode(&fam, &view, &proj, &[], &mut []).is_err());
+        assert!(fwd_decode(&fam, &view, &proj, &[1, 2], &mut caches).is_err());
+        let big = fam.vocab as i32;
+        assert!(fwd_decode(&fam, &view, &proj, &[big], &mut caches).is_err());
+        assert!(fwd_prefill(&fam, &view, &proj, &[], &mut KvCache::for_family(&fam)).is_err());
     }
 
     fn loss_of(fam: &FamilySpec, params: &ModelParams, tokens: &[i32], b: usize, sp1: usize) -> f32 {

@@ -1,21 +1,62 @@
-//! Threaded batch serving over any [`Forward`] path (dense runtime or the
-//! packed fused engine).
+//! Continuous-batching serving over any [`Engine`] — the serving API spec.
 //!
-//! Client threads submit single-sequence scoring requests; the leader
-//! batches them up to the forward's batch size (dynamic batching with a
-//! deadline, vLLM-router-style), executes one forward per batch, and
-//! answers each request with its mean next-token NLL. `examples/serve.rs`
-//! is a thin wrapper; the serving smoke test drives this loop directly on
-//! the artifact-free native fallback.
+//! ## Request lifecycle
+//!
+//! Client threads submit typed [`Request`]s over a channel; a single
+//! leader thread runs the [`Scheduler`]. Every arrival is stamped with a
+//! monotonically increasing id and appended to one FIFO queue. On each
+//! scheduler iteration:
+//!
+//! 1. **Admission (strict FIFO).** Requests are admitted from the queue
+//!    *front only*: a `Score` joins the current scoring batch (up to the
+//!    engine's `max_batch` rows), a `Generate` is prefilled into the
+//!    in-flight decode pool when a slot is free. If the head of the queue
+//!    cannot be admitted, nothing behind it is — **no request ever
+//!    overtakes an earlier arrival at admission time**. That is the
+//!    fairness guarantee: admission order = arrival order, so equal-work
+//!    generate requests also *complete* in arrival order.
+//! 2. **Scoring (variable batch assembly).** Admitted score requests are
+//!    grouped by exact sequence length and each group runs as one
+//!    variable-size forward — the PR-1 "pad the batch by repeating request
+//!    0" hack is gone; no wasted rows, no fixed shape.
+//! 3. **Decode (continuous batching, vLLM-style).** All in-flight
+//!    sessions — whatever their lengths — advance by one token in a single
+//!    [`Engine::decode_step`] against their KV caches. Finished sessions
+//!    retire immediately and their slots are refilled by admission on the
+//!    *next* iteration, so new sessions join a decode batch that is still
+//!    in flight rather than waiting for a full drain.
+//!
+//! ## Batching policy
+//!
+//! The only time the leader waits is when it is fully idle (no in-flight
+//! sessions): it then holds a partial scoring batch up to
+//! [`ServeConfig::deadline`] hoping to fill it (dynamic batching). With
+//! decode work in flight the loop never sleeps — arrivals are drained
+//! non-blockingly each iteration and admitted continuously.
+//!
+//! Per-session decode results are independent of batch composition (the
+//! engine contract), so a request's output does not depend on who it
+//! shared a batch with — property-tested below via solo-vs-concurrent
+//! equality.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::corpus;
-use crate::eval::{nll_of, Forward};
+use crate::engine::{Engine, Request, Response, Sampler, Sampling, Session};
 use crate::util::rng::Pcg64;
+
+/// What the closed-loop bench clients submit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Full-sequence NLL scoring (the PR-1 workload).
+    Score,
+    /// KV-cached greedy generation of `max_new_tokens` per request.
+    Generate { max_new_tokens: usize },
+}
 
 /// Batch-server run configuration.
 #[derive(Clone, Debug)]
@@ -24,10 +65,13 @@ pub struct ServeConfig {
     pub requests: usize,
     /// Closed-loop client threads.
     pub clients: usize,
-    /// Dynamic-batching deadline once a partial batch is pending.
+    /// Idle-only dynamic-batching deadline for partial scoring batches.
     pub deadline: Duration,
     /// Corpus seed for request payloads.
     pub seed: u64,
+    pub workload: Workload,
+    /// Sequence length (score) / prompt length (generate); 0 = engine seq.
+    pub prompt_len: usize,
 }
 
 impl Default for ServeConfig {
@@ -37,39 +81,68 @@ impl Default for ServeConfig {
             clients: 4,
             deadline: Duration::from_millis(10),
             seed: 0,
+            workload: Workload::Score,
+            prompt_len: 0,
         }
     }
 }
 
-/// Serving outcome: one score + latency per completed request.
+/// Serving outcome: per-request scores/latencies plus decode telemetry.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// Mean NLL of each served sequence (the response payload).
+    /// Mean next-token NLL per scored request, completion order.
     pub scores: Vec<f32>,
-    /// Per-request wall latency in seconds, completion order.
+    /// Per-request wall latency (submit → response), completion order.
     pub latencies_s: Vec<f64>,
-    /// Executed forward batches.
+    /// Arrival ids (0-based intake order) in completion order — the
+    /// fairness audit trail.
+    pub completed: Vec<u64>,
+    /// Executed scoring/prefill forwards.
     pub batches: usize,
+    /// Executed incremental decode steps.
+    pub decode_steps: usize,
+    /// Tokens produced by generate requests (the first token of each
+    /// request comes from its prefill; the rest from decode steps).
+    pub generated_tokens: usize,
+    /// Tokens produced by incremental decode steps specifically.
+    pub decoded_tokens: usize,
+    /// Wall time of each decode step (per-token latency samples).
+    pub decode_step_latencies_s: Vec<f64>,
     pub wall_secs: f64,
+    /// `latencies_s` sorted once at construction (NaN-last), so percentile
+    /// queries are O(1) instead of clone+sort per call.
+    sorted_latencies_s: Vec<f64>,
+}
+
+/// Sort latency samples with NaNs of either sign at the END: a stray NaN
+/// (clock anomaly, poisoned math) must not panic the report or shift every
+/// percentile down (`total_cmp` alone would order -NaN first). Public: the
+/// CLI's per-token latency report uses the same ordering.
+pub fn sort_nan_last(xs: &[f64]) -> Vec<f64> {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    });
+    sorted
+}
+
+/// Nearest-rank percentile over a pre-sorted slice: the smallest element
+/// whose rank fraction is ≥ p, i.e. index ⌈p·n⌉ − 1 (clamped).
+pub fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = (p * n as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(n - 1)]
 }
 
 impl ServeReport {
     fn percentile(&self, p: f64) -> f64 {
-        if self.latencies_s.is_empty() {
-            return 0.0;
-        }
-        let mut sorted = self.latencies_s.clone();
-        // A stray NaN sample (clock anomaly, poisoned math) must not panic
-        // the whole batch-server report. NaNs of either sign sort to the
-        // END (total_cmp alone would put -NaN first and shift every
-        // percentile), so they only distort the tail slot they land in.
-        sorted.sort_by(|a, b| match (a.is_nan(), b.is_nan()) {
-            (true, true) => std::cmp::Ordering::Equal,
-            (true, false) => std::cmp::Ordering::Greater,
-            (false, true) => std::cmp::Ordering::Less,
-            (false, false) => a.total_cmp(b),
-        });
-        sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+        nearest_rank(&self.sorted_latencies_s, p)
     }
 
     pub fn p50_ms(&self) -> f64 {
@@ -84,25 +157,344 @@ impl ServeReport {
         if self.wall_secs == 0.0 {
             0.0
         } else {
-            self.scores.len() as f64 / self.wall_secs
+            self.completed.len() as f64 / self.wall_secs
+        }
+    }
+
+    /// Median per-step decode latency (≈ per-token latency at the served
+    /// batch size).
+    pub fn decode_p50_ms(&self) -> f64 {
+        nearest_rank(&sort_nan_last(&self.decode_step_latencies_s), 0.50) * 1e3
+    }
+
+    /// Decode-step throughput: tokens produced by decode steps over decode
+    /// wall time (each request's first token comes from prefill and is
+    /// deliberately excluded from both numerator and denominator).
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let total: f64 = self.decode_step_latencies_s.iter().sum();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.decoded_tokens as f64 / total
         }
     }
 }
 
-struct Request {
-    tokens: Vec<i32>, // length = seq
-    done: mpsc::Sender<f32>,
+/// Accumulating counters the scheduler fills; sealed into a [`ServeReport`]
+/// (sorting the latency samples exactly once) when serving ends.
+#[derive(Default)]
+struct Stats {
+    scores: Vec<f32>,
+    latencies_s: Vec<f64>,
+    completed: Vec<u64>,
+    batches: usize,
+    decode_steps: usize,
+    generated_tokens: usize,
+    decoded_tokens: usize,
+    decode_step_latencies_s: Vec<f64>,
+}
+
+impl Stats {
+    fn into_report(self, wall_secs: f64) -> ServeReport {
+        let sorted_latencies_s = sort_nan_last(&self.latencies_s);
+        ServeReport {
+            scores: self.scores,
+            latencies_s: self.latencies_s,
+            completed: self.completed,
+            batches: self.batches,
+            decode_steps: self.decode_steps,
+            generated_tokens: self.generated_tokens,
+            decoded_tokens: self.decoded_tokens,
+            decode_step_latencies_s: self.decode_step_latencies_s,
+            wall_secs,
+            sorted_latencies_s,
+        }
+    }
+}
+
+/// One submitted request awaiting service.
+struct Incoming {
+    req: Request,
+    done: mpsc::Sender<Response>,
     submitted: Instant,
 }
 
-/// Run the closed-loop batch server until every client request completes.
-pub fn run_batch_server(fwd: &dyn Forward, cfg: &ServeConfig) -> Result<ServeReport> {
-    let (batch, seq) = (fwd.batch(), fwd.seq());
-    let (tx, rx) = mpsc::channel::<Request>();
-    let mut scores = Vec::with_capacity(cfg.requests);
-    let mut latencies = Vec::with_capacity(cfg.requests);
-    let mut batches = 0usize;
+struct Arrived {
+    id: u64,
+    inc: Incoming,
+}
+
+/// An in-flight generation session in the decode pool.
+struct ActiveGen {
+    id: u64,
+    session: Session,
+    sampler: Sampler,
+    /// Last sampled token, not yet fed back.
+    next: i32,
+    produced: Vec<i32>,
+    /// Wall time of each decode step this session took part in.
+    step_latencies_s: Vec<f64>,
+    budget: usize,
+    prompt_len: usize,
+    done: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
+/// Continuous-batching scheduler state (single leader thread).
+struct Scheduler<'a> {
+    engine: &'a dyn Engine,
+    max_batch: usize,
+    queue: VecDeque<Arrived>,
+    active: Vec<ActiveGen>,
+    stats: Stats,
+    next_id: u64,
+}
+
+impl<'a> Scheduler<'a> {
+    fn new(engine: &'a dyn Engine) -> Scheduler<'a> {
+        Scheduler {
+            engine,
+            max_batch: engine.spec().max_batch.max(1),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            stats: Stats::default(),
+            next_id: 0,
+        }
+    }
+
+    fn enqueue(&mut self, inc: Incoming) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Arrived { id, inc });
+    }
+
+    fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// One scheduler iteration: FIFO admission, one scoring pass, one
+    /// decode step. Always makes progress when `has_work()`.
+    fn step(&mut self) -> Result<()> {
+        // Admission from the queue front only — the head never yields its
+        // turn to later arrivals (the FIFO fairness guarantee).
+        let mut score_batch: Vec<Arrived> = Vec::new();
+        loop {
+            let admissible = match self.queue.front().map(|a| &a.inc.req) {
+                Some(Request::Score { .. }) => score_batch.len() < self.max_batch,
+                Some(Request::Generate { .. }) => self.active.len() < self.max_batch,
+                None => false,
+            };
+            if !admissible {
+                break;
+            }
+            let arrived = self.queue.pop_front().unwrap();
+            let is_score = matches!(arrived.inc.req, Request::Score { .. });
+            if is_score {
+                score_batch.push(arrived);
+            } else {
+                self.admit_generate(arrived)?;
+            }
+        }
+        if !score_batch.is_empty() {
+            self.run_scores(score_batch)?;
+        }
+        if !self.active.is_empty() {
+            self.decode_once()?;
+        }
+        Ok(())
+    }
+
+    /// Prefill a generate request into the decode pool and sample its
+    /// first token.
+    fn admit_generate(&mut self, arrived: Arrived) -> Result<()> {
+        let Arrived { id, inc } = arrived;
+        let Request::Generate {
+            prompt,
+            max_new_tokens,
+            sampling,
+        } = inc.req
+        else {
+            unreachable!("admit_generate on a non-generate request");
+        };
+        let spec = self.engine.spec();
+        let prompt_len = prompt.len();
+        let budget = max_new_tokens.min(spec.max_context.saturating_sub(prompt_len));
+        let (session, logits) = self.engine.prefill(&prompt)?;
+        self.stats.batches += 1;
+        let mut sampler = Sampler::new(sampling);
+        if budget == 0 {
+            self.finish(
+                id,
+                inc.submitted,
+                &inc.done,
+                Response::Generated {
+                    prompt_len,
+                    tokens: Vec::new(),
+                    step_latencies_s: Vec::new(),
+                },
+            );
+            return Ok(());
+        }
+        let next = sampler.sample(logits.row(logits.rows() - 1));
+        let ag = ActiveGen {
+            id,
+            session,
+            sampler,
+            next,
+            produced: vec![next],
+            step_latencies_s: Vec::new(),
+            budget,
+            prompt_len,
+            done: inc.done,
+            submitted: inc.submitted,
+        };
+        if ag.produced.len() >= ag.budget {
+            self.retire(ag);
+        } else {
+            self.active.push(ag);
+        }
+        Ok(())
+    }
+
+    /// Score the admitted requests through [`crate::engine::score_many`]
+    /// (the single variable-batch-assembly implementation: equal-length
+    /// grouping, no padding rows), then answer each request in arrival
+    /// order.
+    fn run_scores(&mut self, batch: Vec<Arrived>) -> Result<()> {
+        let seqs: Vec<Vec<i32>> = batch
+            .iter()
+            .map(|a| match &a.inc.req {
+                Request::Score { tokens } => tokens.clone(),
+                Request::Generate { .. } => unreachable!("non-score request in score batch"),
+            })
+            .collect();
+        let all_nlls = crate::engine::score_many(self.engine, &seqs)?;
+        // Forward-count telemetry mirrors score_many's grouping: one
+        // forward per (length, max_batch chunk); len < 2 runs none.
+        let mut group_sizes: BTreeMap<usize, usize> = BTreeMap::new();
+        for s in &seqs {
+            if s.len() > 1 {
+                *group_sizes.entry(s.len()).or_insert(0) += 1;
+            }
+        }
+        self.stats.batches += group_sizes
+            .values()
+            .map(|&c| c.div_ceil(self.max_batch))
+            .sum::<usize>();
+        for (a, nlls) in batch.iter().zip(all_nlls) {
+            let mean = if nlls.is_empty() {
+                0.0
+            } else {
+                (nlls.iter().sum::<f64>() / nlls.len() as f64) as f32
+            };
+            self.stats.scores.push(mean);
+            self.finish(a.id, a.inc.submitted, &a.inc.done, Response::Score { nlls });
+        }
+        Ok(())
+    }
+
+    /// Advance every in-flight session by one token in a single engine
+    /// call, then retire the ones that hit their budget.
+    fn decode_once(&mut self) -> Result<()> {
+        let engine = self.engine;
+        let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
+        let t0 = Instant::now();
+        let logits = {
+            let mut sessions: Vec<&mut Session> =
+                self.active.iter_mut().map(|a| &mut a.session).collect();
+            engine.decode_step(&mut sessions, &tokens)?
+        };
+        let step_s = t0.elapsed().as_secs_f64();
+        self.stats.decode_steps += 1;
+        self.stats.decode_step_latencies_s.push(step_s);
+        self.stats.decoded_tokens += self.active.len();
+        for (row, ag) in self.active.iter_mut().enumerate() {
+            let next = ag.sampler.sample(logits.row(row));
+            ag.next = next;
+            ag.produced.push(next);
+            ag.step_latencies_s.push(step_s);
+        }
+        let drained: Vec<ActiveGen> = self.active.drain(..).collect();
+        for ag in drained {
+            if ag.produced.len() >= ag.budget {
+                self.retire(ag);
+            } else {
+                self.active.push(ag);
+            }
+        }
+        Ok(())
+    }
+
+    fn retire(&mut self, ag: ActiveGen) {
+        self.stats.generated_tokens += ag.produced.len();
+        self.finish(
+            ag.id,
+            ag.submitted,
+            &ag.done,
+            Response::Generated {
+                prompt_len: ag.prompt_len,
+                tokens: ag.produced,
+                step_latencies_s: ag.step_latencies_s,
+            },
+        );
+    }
+
+    fn finish(&mut self, id: u64, submitted: Instant, done: &mpsc::Sender<Response>, resp: Response) {
+        self.stats.latencies_s.push(submitted.elapsed().as_secs_f64());
+        self.stats.completed.push(id);
+        done.send(resp).ok();
+    }
+}
+
+/// Run the scheduler over a pre-queued request list without client
+/// threads: everything is enqueued up front (FIFO by list order) and the
+/// scheduler steps until drained. Deterministic — the continuous-batching
+/// and fairness tests (and benches) drive this directly. Returns the
+/// responses in request order plus the report.
+pub fn serve_oneshot(
+    engine: &dyn Engine,
+    reqs: Vec<Request>,
+) -> Result<(Vec<Response>, ServeReport)> {
+    let t0 = Instant::now();
+    let mut sched = Scheduler::new(engine);
+    let mut rxs = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let (dtx, drx) = mpsc::channel();
+        sched.enqueue(Incoming {
+            req,
+            done: dtx,
+            submitted: Instant::now(),
+        });
+        rxs.push(drx);
+    }
+    while sched.has_work() {
+        sched.step()?;
+    }
+    let mut out = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        out.push(
+            rx.recv()
+                .map_err(|_| anyhow!("request dropped without a response"))?,
+        );
+    }
+    let report = sched.stats.into_report(t0.elapsed().as_secs_f64());
+    Ok((out, report))
+}
+
+/// Run the closed-loop threaded server until every client request
+/// completes: `cfg.clients` threads submit `cfg.requests` total requests of
+/// `cfg.workload`, the leader thread runs the continuous-batching
+/// scheduler.
+pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport> {
+    let spec = engine.spec();
+    let prompt_len = if cfg.prompt_len == 0 {
+        spec.seq
+    } else {
+        cfg.prompt_len
+    };
+    let (tx, rx) = mpsc::channel::<Incoming>();
     let t_start = Instant::now();
+    let mut sched = Scheduler::new(engine);
 
     std::thread::scope(|s| -> Result<()> {
         // Client threads: each submits a burst of requests with jitter.
@@ -112,18 +504,29 @@ pub fn run_batch_server(fwd: &dyn Forward, cfg: &ServeConfig) -> Result<ServeRep
         for c in 0..clients {
             let tx = tx.clone();
             let seed = cfg.seed;
+            let workload = cfg.workload;
             let n = per_client + usize::from(c < remainder);
             s.spawn(move || {
                 let mut rng = Pcg64::new(seed ^ c as u64, 77);
                 let data = corpus::generate(corpus::Split::C4Sim, 200_000, seed ^ c as u64);
                 for _ in 0..n {
-                    let start = rng.below(data.len() - seq - 1);
-                    let tokens: Vec<i32> =
-                        data[start..start + seq].iter().map(|&b| b as i32).collect();
+                    let start = rng.below(data.len() - prompt_len - 1);
+                    let tokens: Vec<i32> = data[start..start + prompt_len]
+                        .iter()
+                        .map(|&b| b as i32)
+                        .collect();
+                    let req = match workload {
+                        Workload::Score => Request::Score { tokens },
+                        Workload::Generate { max_new_tokens } => Request::Generate {
+                            prompt: tokens,
+                            max_new_tokens,
+                            sampling: Sampling::Greedy,
+                        },
+                    };
                     let (dtx, drx) = mpsc::channel();
                     if tx
-                        .send(Request {
-                            tokens,
+                        .send(Incoming {
+                            req,
                             done: dtx,
                             submitted: Instant::now(),
                         })
@@ -131,124 +534,141 @@ pub fn run_batch_server(fwd: &dyn Forward, cfg: &ServeConfig) -> Result<ServeRep
                     {
                         return;
                     }
-                    // Closed loop: wait for the score before the next send.
-                    let _score = drx.recv().ok();
+                    // Closed loop: wait for the response before the next send.
+                    let _resp = drx.recv().ok();
                     std::thread::sleep(Duration::from_millis(rng.below(5) as u64));
                 }
             });
         }
         drop(tx);
 
-        // Leader: dynamic batcher. Collect up to `batch` requests or until
-        // the deadline passes, then execute one forward. On a forward
-        // error, drain the queue before propagating — dropping each queued
-        // `Request` drops its `done` sender, so blocked clients wake up and
-        // wind down instead of deadlocking the scope join.
+        // Leader: continuous-batching loop. On an engine error, drain the
+        // queue before propagating — dropping each queued `Incoming` drops
+        // its `done` sender, so blocked clients wake up and wind down
+        // instead of deadlocking the scope join.
         let mut serve = || -> Result<()> {
-        let mut pending: Vec<Request> = Vec::new();
-        loop {
-            let req = if pending.is_empty() {
-                match rx.recv() {
-                    Ok(r) => Some(r),
-                    Err(_) => break, // all clients done
+            loop {
+                if !sched.has_work() {
+                    match rx.recv() {
+                        Ok(inc) => sched.enqueue(inc),
+                        Err(_) => break, // all clients done
+                    }
                 }
-            } else {
-                match rx.recv_timeout(cfg.deadline) {
-                    Ok(r) => Some(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                while let Ok(inc) = rx.try_recv() {
+                    sched.enqueue(inc);
                 }
-            };
-            if let Some(r) = req {
-                pending.push(r);
-                if pending.len() < batch {
-                    continue;
+                // Idle-only dynamic batching: nothing in flight → hold a
+                // partial scoring batch briefly to let it fill.
+                if sched.active.is_empty() && sched.queue.len() < sched.max_batch {
+                    let t0 = Instant::now();
+                    while sched.queue.len() < sched.max_batch {
+                        let left = cfg.deadline.saturating_sub(t0.elapsed());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match rx.recv_timeout(left) {
+                            Ok(inc) => sched.enqueue(inc),
+                            Err(_) => break,
+                        }
+                    }
                 }
+                sched.step()?;
             }
-            if pending.is_empty() {
-                break;
-            }
-            // Build the batch (pad by repeating the first request).
-            let mut tokens = Vec::with_capacity(batch * seq);
-            for b in 0..batch {
-                let r = pending.get(b).unwrap_or(&pending[0]);
-                tokens.extend(&r.tokens);
-            }
-            let logits = fwd.logits(tokens)?;
-            batches += 1;
-            for (b, r) in pending.drain(..).enumerate() {
-                // Mean NLL over the sequence = the response payload.
-                let mut nll = 0f64;
-                for t in 0..seq - 1 {
-                    nll += nll_of(logits.row(b * seq + t), r.tokens[t + 1] as usize);
-                }
-                let score = (nll / (seq - 1) as f64) as f32;
-                latencies.push(r.submitted.elapsed().as_secs_f64());
-                scores.push(score);
-                r.done.send(score).ok();
-            }
-        }
-        Ok(())
+            Ok(())
         };
         let result = serve();
         if result.is_err() {
-            // Unblock every client still waiting on a response, then keep
-            // draining until all senders hang up.
+            // Queued and in-flight requests still hold their responders:
+            // drop them so every client blocked on a response wakes up,
+            // then drain until all submitters hang up.
+            sched.queue.clear();
+            sched.active.clear();
             while rx.recv().is_ok() {}
         }
         result
     })?;
 
-    Ok(ServeReport {
-        scores,
-        latencies_s: latencies,
-        batches,
-        wall_secs: t_start.elapsed().as_secs_f64(),
-    })
+    let stats = std::mem::take(&mut sched.stats);
+    Ok(stats.into_report(t_start.elapsed().as_secs_f64()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::{EngineSpec, NativeEngine};
+    use crate::model::ModelParams;
+    use crate::runtime::native::KvCache;
+    use crate::runtime::FamilySpec;
     use crate::tensor::Matrix;
+    use std::sync::Mutex;
 
-    /// Uniform-logits stand-in model: instant forward, exact expected score
-    /// (ln vocab), exercises the batching loop hermetically.
-    struct UniformForward {
+    /// Uniform-logits stand-in engine: instant forwards, exact expected
+    /// score (ln vocab), records decode batch sizes so the tests can audit
+    /// continuous batching.
+    struct ToyEngine {
         vocab: usize,
-        batch: usize,
+        max_batch: usize,
         seq: usize,
+        decode_sizes: Mutex<Vec<usize>>,
     }
 
-    impl Forward for UniformForward {
-        fn batch(&self) -> usize {
-            self.batch
+    impl ToyEngine {
+        fn new(vocab: usize, max_batch: usize, seq: usize) -> ToyEngine {
+            ToyEngine {
+                vocab,
+                max_batch,
+                seq,
+                decode_sizes: Mutex::new(Vec::new()),
+            }
         }
-        fn seq(&self) -> usize {
-            self.seq
+    }
+
+    impl Engine for ToyEngine {
+        fn spec(&self) -> EngineSpec {
+            EngineSpec {
+                vocab: self.vocab,
+                max_batch: self.max_batch,
+                seq: self.seq,
+                max_context: 1024,
+            }
         }
-        fn logits(&self, tokens: Vec<i32>) -> Result<Matrix> {
-            assert_eq!(tokens.len(), self.batch * self.seq);
-            Ok(Matrix::zeros(self.batch * self.seq, self.vocab))
+
+        fn forward_batch(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<Matrix> {
+            assert_eq!(tokens.len(), batch * seq);
+            Ok(Matrix::zeros(batch * seq, self.vocab))
+        }
+
+        fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)> {
+            Ok((
+                Session::new(tokens.to_vec(), KvCache::new(0, 1)),
+                Matrix::zeros(tokens.len(), self.vocab),
+            ))
+        }
+
+        fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix> {
+            self.decode_sizes.lock().unwrap().push(sessions.len());
+            for (s, &t) in sessions.iter_mut().zip(tokens) {
+                s.tokens.push(t);
+            }
+            Ok(Matrix::zeros(sessions.len(), self.vocab))
         }
     }
 
     #[test]
-    fn serves_every_request_with_exact_uniform_score() {
-        let fwd = UniformForward {
-            vocab: 256,
-            batch: 4,
-            seq: 32,
-        };
+    fn serves_every_score_request_with_exact_uniform_score() {
+        let engine = ToyEngine::new(256, 4, 32);
         let cfg = ServeConfig {
             requests: 13,
             clients: 3,
             deadline: Duration::from_millis(2),
             seed: 9,
+            workload: Workload::Score,
+            prompt_len: 0,
         };
-        let report = run_batch_server(&fwd, &cfg).unwrap();
+        let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 13);
         assert_eq!(report.latencies_s.len(), 13);
+        assert_eq!(report.completed.len(), 13);
         assert!(report.batches >= (13usize).div_ceil(4));
         let want = (256f32).ln();
         for s in &report.scores {
@@ -259,17 +679,189 @@ mod tests {
     }
 
     #[test]
+    fn generation_workload_completes_every_request() {
+        let engine = ToyEngine::new(64, 4, 16);
+        let cfg = ServeConfig {
+            requests: 9,
+            clients: 3,
+            deadline: Duration::from_millis(1),
+            seed: 4,
+            workload: Workload::Generate { max_new_tokens: 5 },
+            prompt_len: 8,
+        };
+        let report = run_server(&engine, &cfg).unwrap();
+        assert_eq!(report.completed.len(), 9);
+        assert_eq!(report.generated_tokens, 9 * 5);
+        // One token per request comes from prefill; the rest from decode.
+        assert_eq!(report.decoded_tokens, 9 * 4);
+        assert!(report.decode_steps >= 4, "decode never engaged");
+        assert_eq!(
+            report.decode_steps,
+            report.decode_step_latencies_s.len()
+        );
+        assert!(report.decode_tokens_per_sec() > 0.0);
+        assert!(report.decode_p50_ms() >= 0.0);
+    }
+
+    #[test]
+    fn fifo_admission_completes_equal_work_in_arrival_order() {
+        // 6 equal-budget generates through a 2-slot engine: strict FIFO
+        // admission ⇒ completion order is exactly arrival order.
+        let engine = ToyEngine::new(16, 2, 8);
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request::Generate {
+                prompt: vec![1 + (i % 8), 2, 3],
+                max_new_tokens: 3,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert_eq!(report.completed, vec![0, 1, 2, 3, 4, 5]);
+        for r in &resps {
+            match r {
+                Response::Generated { tokens, .. } => assert_eq!(tokens.len(), 3),
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn new_sessions_join_in_flight_decode_batches() {
+        // One long session plus short ones through a 2-slot engine: each
+        // short session retires and the next is admitted while the long
+        // one is still decoding — the decode batch stays at width 2
+        // (continuous batching), and the long request finishes last.
+        let engine = ToyEngine::new(16, 2, 8);
+        let mut reqs = vec![Request::Generate {
+            prompt: vec![1, 2],
+            max_new_tokens: 7,
+            sampling: Sampling::Greedy,
+        }];
+        for _ in 0..3 {
+            reqs.push(Request::Generate {
+                prompt: vec![3, 4],
+                max_new_tokens: 2,
+                sampling: Sampling::Greedy,
+            });
+        }
+        let (_resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert_eq!(report.completed, vec![1, 2, 3, 0], "short ones first, FIFO");
+        let sizes = engine.decode_sizes.lock().unwrap().clone();
+        // Short sessions keep slotting in beside the long one: at least
+        // the first few steps run at full width 2 even though no two
+        // short sessions overlap in admission.
+        assert!(
+            sizes.iter().filter(|&&n| n == 2).count() >= 3,
+            "decode batches never stayed full: {sizes:?}"
+        );
+        assert_eq!(report.generated_tokens, 7 + 3 * 2);
+        assert_eq!(report.decoded_tokens, 6 + 3);
+    }
+
+    #[test]
+    fn mixed_workload_head_of_queue_blocks_later_arrivals() {
+        // Queue: [gen, gen, gen (blocked: 2 slots), score]. The score
+        // arrives last and must NOT overtake the blocked generate.
+        let engine = ToyEngine::new(16, 2, 8);
+        let reqs = vec![
+            Request::Generate {
+                prompt: vec![1, 2],
+                max_new_tokens: 4,
+                sampling: Sampling::Greedy,
+            },
+            Request::Generate {
+                prompt: vec![1, 2],
+                max_new_tokens: 4,
+                sampling: Sampling::Greedy,
+            },
+            Request::Generate {
+                prompt: vec![1, 2],
+                max_new_tokens: 2,
+                sampling: Sampling::Greedy,
+            },
+            Request::Score {
+                tokens: vec![1, 2, 3, 4],
+            },
+        ];
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        // While the head generate (id 2) is blocked on a slot, the score
+        // queued behind it is NOT admitted: it completes only after both
+        // running generates retired and id 2 was admitted ahead of it —
+        // an unfair scheduler would answer the instant score first.
+        assert_eq!(
+            report.completed,
+            vec![0, 1, 3, 2],
+            "FIFO admission order violated"
+        );
+        assert_eq!(resps.len(), 4);
+    }
+
+    #[test]
+    fn generation_output_is_independent_of_batch_composition() {
+        // Real model: a request served concurrently produces exactly the
+        // tokens it produces served alone (the engine's row-local decode
+        // contract) — solo vs continuous-batched greedy streams are equal.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 17);
+        let engine = NativeEngine::new(&params, 3, 8).unwrap();
+        let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9]];
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .map(|p| Request::Generate {
+                prompt: p.clone(),
+                max_new_tokens: 6,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let (resps, _report) = serve_oneshot(&engine, reqs).unwrap();
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&engine, p, 6, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "batched stream diverged from solo");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank_over_a_single_sort() {
+        let stats = Stats {
+            latencies_s: vec![0.04, 0.01, 0.03, 0.02],
+            ..Default::default()
+        };
+        let report = stats.into_report(0.1);
+        // n=4: p50 → ⌈2⌉−1 = idx 1 → 20 ms (the truncating formula said
+        // 30 ms); p95 → ⌈3.8⌉−1 = idx 3 → 40 ms; p100 stays in range.
+        assert!((report.p50_ms() - 20.0).abs() < 1e-9, "p50={}", report.p50_ms());
+        assert!((report.p95_ms() - 40.0).abs() < 1e-9);
+        assert!((report.percentile(1.0) * 1e3 - 40.0).abs() < 1e-9);
+        // Single sample: every percentile is that sample.
+        let one = Stats {
+            latencies_s: vec![0.005],
+            ..Default::default()
+        }
+        .into_report(0.1);
+        assert!((one.p50_ms() - 5.0).abs() < 1e-9);
+        assert!((one.p95_ms() - 5.0).abs() < 1e-9);
+        // Empty: zeros, no panic.
+        let empty = Stats::default().into_report(0.0);
+        assert_eq!(empty.p50_ms(), 0.0);
+    }
+
+    #[test]
     fn percentiles_survive_nan_latency_samples() {
         // One poisoned sample must not crash the report; finite percentiles
         // still come from the sorted finite prefix. The negative NaN (what
         // 0.0/0.0 actually produces on x86-64) is the regression case: it
         // must sort last, not first.
-        let report = ServeReport {
+        let stats = Stats {
             scores: vec![0.0; 5],
             latencies_s: vec![0.004, -f64::NAN, 0.001, 0.003, 0.002],
-            batches: 2,
-            wall_secs: 0.1,
+            ..Default::default()
         };
+        let report = stats.into_report(0.1);
         let p50 = report.p50_ms();
         assert!((p50 - 3.0).abs() < 1e-9, "p50 = {p50}");
         // p95 indexes the NaN slot — it must simply report it, not panic.
@@ -279,18 +871,16 @@ mod tests {
     #[test]
     fn zero_clients_clamps_to_one() {
         // vocab must cover the byte-level corpus (tokens up to 255).
-        let fwd = UniformForward {
-            vocab: 256,
-            batch: 2,
-            seq: 8,
-        };
+        let engine = ToyEngine::new(256, 2, 8);
         let cfg = ServeConfig {
             requests: 3,
             clients: 0,
             deadline: Duration::from_millis(1),
             seed: 1,
+            workload: Workload::Score,
+            prompt_len: 0,
         };
-        let report = run_batch_server(&fwd, &cfg).unwrap();
+        let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 3);
     }
 }

@@ -13,6 +13,7 @@ use std::path::Path;
 use odlri::calib::{calibrate, CalibConfig};
 use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
 use odlri::corpus;
+use odlri::engine::NativeEngine;
 use odlri::eval;
 use odlri::fused::FusedModel;
 use odlri::model::{inject_outliers, ModelParams};
@@ -150,7 +151,8 @@ fn untrained_ppl_near_uniform() {
     let rt = runtime();
     let fam = rt.manifest.family("tl-7s").unwrap();
     let params = ModelParams::init(fam, 6);
-    let ppl = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 6, 42).unwrap();
+    let engine = NativeEngine::new(&params, rt.manifest.batch, rt.manifest.seq).unwrap();
+    let ppl = eval::perplexity(&engine, corpus::Split::WikiSim, 6, 42).unwrap();
     // Byte-uniform would be 256; random init is close (the corpus is
     // lowercase ASCII, so logits are uninformative).
     assert!(ppl > 60.0 && ppl < 600.0, "ppl={ppl}");
@@ -259,9 +261,12 @@ fn packed_fused_model_tracks_dense_eval() {
     let rt = runtime();
     let fam = rt.manifest.family("tl-7s").unwrap();
     let params = ModelParams::init(fam, 17);
-    let ppl_dense = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 4, 42).unwrap();
-    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64).unwrap();
-    let ppl_fused = eval::perplexity_of(&fm, corpus::Split::WikiSim, 4, 42).unwrap();
+    let engine = NativeEngine::new(&params, rt.manifest.batch, rt.manifest.seq).unwrap();
+    let ppl_dense = eval::perplexity(&engine, corpus::Split::WikiSim, 4, 42).unwrap();
+    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64)
+        .unwrap()
+        .with_shape(rt.manifest.batch, rt.manifest.seq);
+    let ppl_fused = eval::perplexity(&fm, corpus::Split::WikiSim, 4, 42).unwrap();
     let ratio = ppl_fused / ppl_dense;
     assert!(
         (0.95..1.05).contains(&ratio),
@@ -296,12 +301,16 @@ fn compress_then_eval_beats_random_and_tracks_fp32() {
     let out = CompressionPipeline::new(cfg).run(&params, &hessians).unwrap();
     let applied = out.model.apply_to(&params).unwrap();
 
-    let ppl_fp = eval::perplexity(&rt, &params, corpus::Split::WikiSim, 6, 42).unwrap();
-    let ppl_q = eval::perplexity(&rt, &applied, corpus::Split::WikiSim, 6, 42).unwrap();
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let fp_engine = NativeEngine::new(&params, batch, seq).unwrap();
+    let ppl_fp = eval::perplexity(&fp_engine, corpus::Split::WikiSim, 6, 42).unwrap();
+    let q_engine = NativeEngine::new(&applied, batch, seq).unwrap();
+    let ppl_q = eval::perplexity(&q_engine, corpus::Split::WikiSim, 6, 42).unwrap();
     // Compressed is worse than FP32 but far better than an untrained model.
     let fam = rt.manifest.family("tl-7s").unwrap();
     let random = ModelParams::init(fam, 99);
-    let ppl_rand = eval::perplexity(&rt, &random, corpus::Split::WikiSim, 6, 42).unwrap();
+    let rand_engine = NativeEngine::new(&random, batch, seq).unwrap();
+    let ppl_rand = eval::perplexity(&rand_engine, corpus::Split::WikiSim, 6, 42).unwrap();
     assert!(ppl_q >= ppl_fp * 0.99, "ppl_q={ppl_q} ppl_fp={ppl_fp}");
     assert!(
         ppl_q < ppl_rand * 0.7,
@@ -319,7 +328,7 @@ fn compress_then_eval_beats_random_and_tracks_fp32() {
             "{name}: deployed Q differs from the optimized Q"
         );
     }
-    let ppl_fused = eval::perplexity_of(&fm, corpus::Split::WikiSim, 6, 42).unwrap();
+    let ppl_fused = eval::perplexity(&fm, corpus::Split::WikiSim, 6, 42).unwrap();
     assert!(
         ppl_fused < ppl_q * 1.1 + 1.0,
         "fused serving diverged: {ppl_fused} vs {ppl_q}"
@@ -330,8 +339,9 @@ fn compress_then_eval_beats_random_and_tracks_fp32() {
 fn task_scoring_pipeline_runs() {
     let rt = runtime();
     let params = quick_train(&rt, 15);
+    let engine = NativeEngine::new(&params, rt.manifest.batch, rt.manifest.seq).unwrap();
     for task in corpus::ALL_TASKS {
-        let score = eval::task_accuracy(&rt, &params, task, 16, 5).unwrap();
+        let score = eval::task_accuracy(&engine, task, 16, 5).unwrap();
         assert_eq!(score.items, 16);
         assert!((0.0..=1.0).contains(&score.accuracy), "{task:?}");
     }

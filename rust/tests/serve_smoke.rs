@@ -1,36 +1,51 @@
-//! Serving smoke test: drives the dynamic-batching batch-server loop
-//! (the engine behind `examples/serve.rs`) end to end on the artifact-free
-//! native fallback, over both forward paths — dense runtime and the
-//! bit-packed fused `(Q+LR)·x` engine.
+//! Serving smoke tests: drive the continuous-batching server (the engine
+//! behind `examples/serve.rs` and `odlri serve-bench`) end to end on the
+//! artifact-free native fallback, over both engines — dense native and the
+//! bit-packed fused `(Q+LR)·x` engine — for both workloads: full-sequence
+//! scoring and KV-cached incremental generation.
 
 use std::path::Path;
 use std::time::Duration;
 
-use odlri::eval::RuntimeForward;
+use odlri::engine::{self, Engine, NativeEngine, Sampling};
 use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
 use odlri::runtime::Runtime;
-use odlri::serve::{run_batch_server, ServeConfig};
+use odlri::serve::{run_server, ServeConfig, Workload};
 
-fn smoke_config(requests: usize) -> ServeConfig {
+fn smoke_config(requests: usize, workload: Workload) -> ServeConfig {
     ServeConfig {
         requests,
         clients: 3,
         deadline: Duration::from_millis(5),
         seed: 11,
+        workload,
+        prompt_len: 0,
     }
+}
+
+fn native_engine(seed: u64) -> NativeEngine {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, seed);
+    NativeEngine::new(&params, rt.manifest.batch, rt.manifest.seq).expect("engine")
+}
+
+fn fused_engine(seed: u64) -> FusedModel {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, seed);
+    // Bit-packed projections, rank-0 factors: the serving hot path with no
+    // dense W anywhere.
+    FusedModel::pack_dense(&params, "uniform", 8, 64)
+        .expect("pack")
+        .with_shape(rt.manifest.batch, rt.manifest.seq)
 }
 
 #[test]
 fn batch_server_completes_all_requests_on_native_dense_path() {
-    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
-    let fam = rt.manifest.family("tl-7s").unwrap().clone();
-    let params = ModelParams::init(&fam, 1);
-    let fwd = RuntimeForward {
-        rt: &rt,
-        params: &params,
-    };
-    let report = run_batch_server(&fwd, &smoke_config(12)).expect("serve");
+    let engine = native_engine(1);
+    let report = run_server(&engine, &smoke_config(12, Workload::Score)).expect("serve");
     assert_eq!(report.scores.len(), 12, "dropped requests");
     assert_eq!(report.latencies_s.len(), 12);
     assert!(report.batches >= 2, "batching never engaged");
@@ -45,17 +60,67 @@ fn batch_server_completes_all_requests_on_native_dense_path() {
 
 #[test]
 fn batch_server_completes_on_packed_fused_engine() {
-    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
-    let fam = rt.manifest.family("tl-7s").unwrap().clone();
-    let params = ModelParams::init(&fam, 2);
-    // Bit-packed projections, rank-0 factors: the serving hot path with no
-    // dense W anywhere.
-    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64).expect("pack");
-    let report = run_batch_server(&fm, &smoke_config(10)).expect("serve fused");
+    let fm = fused_engine(2);
+    let report = run_server(&fm, &smoke_config(10, Workload::Score)).expect("serve fused");
     assert_eq!(report.scores.len(), 10, "dropped requests");
     for (i, s) in report.scores.iter().enumerate() {
         assert!(s.is_finite(), "request {i} got non-finite score {s}");
         assert!(*s > 0.0 && *s < 10.0, "request {i} score {s} implausible");
     }
     assert!(report.requests_per_sec() > 0.0);
+}
+
+#[test]
+fn generation_workload_serves_kv_cached_decoding_on_fused_engine() {
+    let fm = fused_engine(3);
+    let mut cfg = smoke_config(6, Workload::Generate { max_new_tokens: 8 });
+    cfg.prompt_len = 24;
+    let report = run_server(&fm, &cfg).expect("serve generation");
+    assert_eq!(report.completed.len(), 6, "dropped requests");
+    assert_eq!(report.generated_tokens, 6 * 8, "short generations");
+    assert!(report.decode_steps >= 7, "decode batching never engaged");
+    assert_eq!(report.decode_steps, report.decode_step_latencies_s.len());
+    assert!(report.decode_tokens_per_sec() > 0.0);
+}
+
+#[test]
+fn greedy_decode_is_deterministic_across_worker_counts() {
+    // The packed kernels block/thread over weight rows, the dense matmuls
+    // over output rows — per-element accumulation order never changes, so
+    // greedy generation must be bit-deterministic across thread budgets.
+    let engine = native_engine(4);
+    let prompt: Vec<i32> = (0..24).map(|i| (i * 7 % 200) as i32).collect();
+    odlri::tensor::set_matmul_threads(1);
+    let a = engine::generate(&engine, &prompt, 12, Sampling::Greedy).expect("gen t1");
+    odlri::tensor::set_matmul_threads(4);
+    let b = engine::generate(&engine, &prompt, 12, Sampling::Greedy).expect("gen t4");
+    odlri::tensor::set_matmul_threads(0);
+    assert_eq!(a.tokens, b.tokens, "thread count changed greedy decode");
+
+    let fm = fused_engine(4);
+    odlri::tensor::set_matmul_threads(1);
+    let fa = engine::generate(&fm, &prompt, 12, Sampling::Greedy).expect("fused t1");
+    odlri::tensor::set_matmul_threads(4);
+    let fb = engine::generate(&fm, &prompt, 12, Sampling::Greedy).expect("fused t4");
+    odlri::tensor::set_matmul_threads(0);
+    assert_eq!(fa.tokens, fb.tokens, "thread count changed fused greedy decode");
+}
+
+#[test]
+fn prefill_plus_decode_matches_full_forward_on_native_engine() {
+    // The generation acceptance contract at the engine level: scoring a
+    // generated continuation with a full-sequence forward reproduces the
+    // incremental logits bit-for-bit.
+    let engine = native_engine(5);
+    let prompt: Vec<i32> = (0..16).map(|i| (i * 13 % 250) as i32).collect();
+    let out = engine::generate(&engine, &prompt, 6, Sampling::Greedy).expect("gen");
+    let mut history = prompt.clone();
+    for &tok in &out.tokens {
+        let logits = engine
+            .forward_batch(&history, 1, history.len())
+            .expect("forward");
+        let want = engine::argmax(logits.row(history.len() - 1)) as i32;
+        assert_eq!(tok, want, "KV decode diverged from full forward");
+        history.push(tok);
+    }
 }
