@@ -19,7 +19,9 @@
 use std::path::Path;
 
 use odlri::calib::{calibrate, CalibConfig};
-use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::coordinator::{
+    BudgetPlanner, CompressionPipeline, InitKind, PipelineConfig, Planner,
+};
 use odlri::engine::NativeEngine;
 use odlri::eval::evaluate;
 use odlri::model::inject_outliers;
@@ -124,6 +126,34 @@ fn main() -> anyhow::Result<()> {
         row.push(format!("{:.1}", out.wall_secs));
         table.row(row);
     }
+
+    // Per-projection budget plan: same base recipe, but the planner's
+    // Hessian-diagonal probe decides which projections get the rank/bits.
+    let budget = 2.5;
+    eprintln!("[e2e] compressing with a budget-{budget} per-projection plan…");
+    let base = PipelineConfig {
+        init: InitKind::Odlri,
+        rank: 16,
+        lr_bits: 4,
+        outer_iters: 15,
+        lplr_iters: 10,
+        verbose: true,
+        ..Default::default()
+    };
+    let plan = BudgetPlanner::new(budget, base.clone()).plan(&params, &hessians)?;
+    plan.table(&params.family)?.print();
+    let out = CompressionPipeline::new(base).run_plan(&params, &hessians, &plan)?;
+    let applied = out.model.apply_to(&params)?;
+    let rep = evaluate(&NativeEngine::new(&applied, batch, seq)?, 30, 64, 1000)?;
+    let mut row = vec![
+        format!("+ODLRI@{budget}b"),
+        format!("{:.2}", out.model.avg_bits()),
+        format!("{:.3}", rep.ppl_wiki),
+        format!("{:.3}", rep.ppl_c4),
+    ];
+    row.extend(taskfmt(&rep));
+    row.push(format!("{:.1}", out.wall_secs));
+    table.row(row);
 
     table.print();
     table.save(Path::new("results"), "e2e")?;

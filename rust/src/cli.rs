@@ -40,7 +40,8 @@ pub const COMMANDS: &[CommandSpec] = &[
         name: "compress",
         flags: &[
             "family", "weights", "hessians", "init", "rank", "lr-bits", "scheme", "bits",
-            "group", "iters", "lplr-iters", "workers", "seed", "out", "fused-out", "artifacts",
+            "group", "iters", "lplr-iters", "workers", "seed", "out", "fused-out", "budget",
+            "plan", "artifacts",
         ],
         switches: &["no-hadamard", "verbose", "fused"],
     },
@@ -269,8 +270,14 @@ COMMANDS
   compress     Compress a trained model (CALDERA / +ODLRI)
                  --family tl-7s --init odlri|caldera|lr-first --rank 64
                  --lr-bits 4 --scheme e8|uniform|mxint --bits 2 --iters 15
-                 --fused (also write runs/<family>.odf: the packed container
-                 carrying the quantizer's native codes bit-exactly)
+                 --budget B (per-projection plan: outlier-sensitive
+                 projections get more rank/bits under a model-wide
+                 avg-bits ceiling B)
+                 --plan FILE (explicit per-projection plan; key=value with
+                 [projection] sections overriding the CLI recipe)
+                 --fused (also write runs/<family>.odf: the packed ODF3
+                 container carrying the quantizer's native codes
+                 bit-exactly plus the per-projection plan)
                  --fused-out PATH
   eval         Perplexity + zero-shot proxy accuracy through the Engine API
                  --family tl-7s --weights runs/tl-7s.odw
@@ -279,7 +286,8 @@ COMMANDS
                  --family tl-7s --steps 300 --rank 64
   exp <id>     Regenerate a paper table/figure into results/
                  ids: table1 fig2 fig3 fig4 fig5 table2 table3 table4
-                      table5 table8 table9 table10 table11 t1norms all
+                      table5 table8 table9 table10 table11 t1norms
+                      budget (uniform vs per-projection plans) all
   generate     KV-cached incremental decoding with a per-token latency
                report
                  --prompt \"text\" (or --prompt-len N from the corpus)

@@ -1,22 +1,66 @@
-//! The Layer-3 coordinator: whole-model compression pipeline.
+//! The Layer-3 coordinator: the **planning API** for whole-model
+//! compression.
 //!
-//! Builds one `DecompositionJob` per projection matrix, schedules them over
-//! a deterministic worker pool ([`crate::exec`]), and assembles the
-//! [`CompressedModel`]. Per-job RNG streams are derived from the matrix
-//! name, so the result is bit-identical regardless of worker count
-//! (property-tested below).
+//! The paper's thesis is role assignment — low-rank capacity should go
+//! where activation outliers are — and projections differ sharply in shape
+//! and outlier sensitivity. The coordinator therefore compresses a model
+//! under a per-projection [`CompressionPlan`] rather than one global
+//! recipe:
+//!
+//! * [`MatrixPlan`] — one projection's recipe (init, rank, lr_bits,
+//!   quantizer scheme/bits/group, hadamard).
+//! * [`CompressionPlan`] — a validated map covering every projection.
+//! * [`Planner`] — produces a plan from `ModelParams` + Hessians:
+//!   [`UniformPlanner`] (one recipe everywhere) and [`BudgetPlanner`]
+//!   (Hessian-diagonal outlier-mass probe + greedy rank/bit allocation
+//!   under a model-wide average-bits ceiling).
+//!
+//! ## Plan resolution order
+//!
+//! 1. `--plan FILE` (per-projection section > top-level default > base
+//!    CLI recipe — see [`CompressionPlan::parse`]);
+//! 2. else `--budget B` → [`BudgetPlanner`] over the CLI recipe;
+//! 3. else the uniform plan of the CLI recipe.
+//!
+//! ## Budget semantics
+//!
+//! `BudgetPlanner`'s budget is a **hard ceiling** on the parameter-weighted
+//! model average bits/weight ([`crate::decompose::avg_bits`] per
+//! projection, the same cost model the compressed model reports). Every
+//! projection starts at a floor recipe; upgrades are granted greedily, most
+//! outlier-sensitive projection first, while the plan stays ≤ budget. A
+//! budget below the floor cost is an error, never a silent overshoot.
+//!
+//! ## Uniform-plan back-compat invariant
+//!
+//! [`CompressionPlan::uniform`] over a [`PipelineConfig`] reproduces the
+//! historical global-config pipeline **bit-identically** (same Q, L, R per
+//! projection — property-tested below): per-job streams are seeded from the
+//! matrix name and run seed only, so results are independent of worker
+//! count and of how the plan was produced.
+//!
+//! Jobs are scheduled over a deterministic worker pool ([`crate::exec`]);
+//! while the pool is active, per-job matmuls are capped to one thread by a
+//! counted RAII scope ([`crate::tensor::MatmulSingleThreadScope`]) that
+//! releases even on early error returns and never clobbers the configured
+//! thread budget.
+
+mod plan;
+
+pub use plan::{
+    outlier_mass, BudgetPlanner, CompressionPlan, MatrixPlan, Planner, UniformPlanner,
+};
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::decompose::{DecompMetrics, Initializer, JointConfig, JointOptimizer};
 use crate::exec;
 use crate::hessian::Hessian;
 use crate::lowrank::LowRankConfig;
 use crate::model::{CompressedMatrix, CompressedModel, ModelParams};
-use crate::quant::{make_quantizer, Quantizer};
 use crate::tensor;
 use crate::util::fnv1a;
 
@@ -43,6 +87,25 @@ impl InitKind {
         }
     }
 
+    /// Parse the CLI/plan-file spelling. Round-trips with
+    /// [`InitKind::name`] (property-tested below); also accepts the
+    /// historical aliases `zero` (= caldera) and `lrapprox` (= lr-first).
+    pub fn parse(s: &str) -> Result<InitKind> {
+        Ok(match s {
+            "odlri" => InitKind::Odlri,
+            "caldera" | "zero" => InitKind::Caldera,
+            "lr-first" | "lrapprox" => InitKind::LrFirst,
+            other => match other.strip_prefix("odlri-k") {
+                Some(k) => InitKind::OdlriK(k.parse().map_err(|_| {
+                    anyhow!("bad ODLRI k in init '{other}' (want odlri-kN)")
+                })?),
+                None => bail!(
+                    "unknown init '{other}' (odlri | caldera | lr-first | odlri-kN)"
+                ),
+            },
+        })
+    }
+
     fn initializer(&self, rank: usize, n: usize) -> Initializer {
         match self {
             InitKind::Caldera => Initializer::Zero,
@@ -55,7 +118,12 @@ impl InitKind {
     }
 }
 
-/// Pipeline configuration (one compression run over a model).
+/// One compression run's configuration: the run-level execution knobs
+/// (`outer_iters`, `lplr_iters`, `workers`, `seed`, `verbose`) plus the
+/// **uniform recipe template** the per-projection fields describe. Pass it
+/// straight to [`CompressionPipeline::run`] for the historical
+/// one-recipe-everywhere behavior, or anchor a [`Planner`] /
+/// [`CompressionPlan::parse`] on it for per-projection plans.
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
     pub init: InitKind,
@@ -94,9 +162,11 @@ impl Default for PipelineConfig {
     }
 }
 
-/// Pipeline output: the compressed model plus per-matrix metric traces.
+/// Pipeline output: the compressed model, the plan it ran under, and
+/// per-matrix metric traces.
 pub struct PipelineResult {
     pub model: CompressedModel,
+    pub plan: CompressionPlan,
     pub traces: BTreeMap<String, DecompMetrics>,
     pub wall_secs: f64,
 }
@@ -111,44 +181,59 @@ impl CompressionPipeline {
         CompressionPipeline { config }
     }
 
-    fn joint_config(&self, seed: u64) -> JointConfig {
+    fn joint_config(&self, mp: &MatrixPlan, seed: u64) -> JointConfig {
         JointConfig {
             outer_iters: self.config.outer_iters,
             lowrank: LowRankConfig {
-                rank: self.config.rank,
-                lr_bits: self.config.lr_bits,
+                rank: mp.rank,
+                lr_bits: mp.lr_bits,
                 lplr_iters: self.config.lplr_iters,
                 reg: 1e-4,
             },
-            hadamard: self.config.hadamard,
+            hadamard: mp.hadamard,
             reg: 1e-4,
             seed,
         }
     }
 
-    /// Compress every projection of `params` given per-projection Hessians.
+    /// Compress every projection under the uniform plan of `config` — the
+    /// historical `PipelineConfig` behavior, bit-identically.
     pub fn run(
         &self,
         params: &ModelParams,
         hessians: &BTreeMap<String, Hessian>,
     ) -> Result<PipelineResult> {
+        let plan = CompressionPlan::uniform(&params.family, &self.config);
+        self.run_plan(params, hessians, &plan)
+    }
+
+    /// Compress every projection of `params` under a per-projection plan,
+    /// given per-projection Hessians. Each job gets its own quantizer and
+    /// joint-optimizer configuration from its [`MatrixPlan`]; per-job RNG
+    /// streams are derived from the matrix name and run seed only, so the
+    /// result is bit-identical regardless of worker count.
+    pub fn run_plan(
+        &self,
+        params: &ModelParams,
+        hessians: &BTreeMap<String, Hessian>,
+        plan: &CompressionPlan,
+    ) -> Result<PipelineResult> {
         let t0 = Instant::now();
         let cfg = &self.config;
         let fam = params.family.clone();
+        plan.validate(&fam)?;
         let names: Vec<String> = fam.projections.clone();
         for name in &names {
             if !hessians.contains_key(name) {
                 return Err(anyhow!("missing Hessian for projection '{name}'"));
             }
         }
-        let quantizer: Box<dyn Quantizer> =
-            make_quantizer(&cfg.q_scheme, cfg.q_bits, cfg.q_group)?;
 
         // When the pool is wide, keep per-job matmuls single-threaded to
-        // avoid oversubscription; restore afterwards.
-        if cfg.workers > 1 {
-            tensor::set_matmul_threads(1);
-        }
+        // avoid oversubscription. The counted RAII scope releases on drop
+        // (normal exit AND every `?` below) and composes with concurrent
+        // pipelines without ever touching the configured thread budget.
+        let _thread_cap = (cfg.workers > 1).then(tensor::MatmulSingleThreadScope::enter);
         let jobs: Vec<(String, crate::tensor::Matrix, &Hessian)> = names
             .iter()
             .map(|name| {
@@ -162,38 +247,40 @@ impl CompressionPipeline {
 
         let results = exec::parallel_map(jobs.len(), cfg.workers, |i| {
             let (name, w, hess) = &jobs[i];
+            let mp = plan.get(name).expect("plan validated against family");
+            // Quantizers are stateless value objects: building one per job
+            // from the plan is deterministic and cheap.
+            let quantizer = mp.quantizer().expect("plan validated");
             // Deterministic per-job stream: depends on the matrix name and
-            // the run seed only — NOT on scheduling.
+            // the run seed only — NOT on scheduling or the plan's shape.
             let job_seed = cfg.seed ^ fnv1a(name.as_bytes());
-            let jc = self.joint_config(job_seed);
-            let init = cfg.init.initializer(cfg.rank, w.cols());
+            let jc = self.joint_config(mp, job_seed);
+            let init = mp.init.initializer(mp.rank, w.cols());
             let opt = JointOptimizer::new(quantizer.as_ref(), jc);
             let d = opt.run(w, hess, &init);
             if cfg.verbose {
                 let last = d.metrics.last().unwrap();
                 eprintln!(
-                    "  [compress] {name:<16} err={:.4e} scale={:.4}",
-                    last.act_err, last.quant_scale
+                    "  [compress] {name:<16} err={:.4e} scale={:.4} [{}]",
+                    last.act_err,
+                    last.quant_scale,
+                    mp.summary()
                 );
             }
             (name.clone(), d)
         });
-        tensor::set_matmul_threads(0);
+        drop(_thread_cap);
 
         let mut matrices = BTreeMap::new();
         let mut traces = BTreeMap::new();
-        // Per-quantizer bit overhead depends on the matrix shape (scales
-        // amortize over more or fewer weights), and projections differ in
-        // shape (attention vs MLP). The reported model overhead is the
-        // parameter-weighted mean over ALL projections — not whichever
-        // matrix happened to be processed last.
-        let mut overhead_weighted = 0.0f64;
-        let mut overhead_params = 0.0f64;
         for (name, d) in results {
+            let mp = plan.get(&name).unwrap();
             let shape = fam.param_shape(&name)?;
-            let count = (shape[0] * shape[1]) as f64;
-            overhead_weighted += quantizer.bits_with_overhead(shape[0], shape[1]) * count;
-            overhead_params += count;
+            // Per-quantizer bit overhead depends on the matrix shape
+            // (scales amortize over more or fewer weights) and now on the
+            // projection's own scheme: each matrix carries its own value;
+            // model-level numbers are parameter-weighted aggregates.
+            let q_bits_overhead = mp.quantizer()?.bits_with_overhead(shape[0], shape[1]);
             let last = d.metrics.last().unwrap();
             matrices.insert(
                 name.clone(),
@@ -203,25 +290,19 @@ impl CompressionPipeline {
                     lr: d.lr,
                     quant_scale: last.quant_scale,
                     final_act_err: last.act_err,
+                    plan: mp.clone(),
+                    q_bits_overhead,
                 },
             );
             traces.insert(name, d.metrics);
         }
 
-        let q_bits_overhead = if overhead_params == 0.0 {
-            quantizer.bits()
-        } else {
-            overhead_weighted / overhead_params
-        };
-
         Ok(PipelineResult {
             model: CompressedModel {
                 family: fam,
                 matrices,
-                rank: cfg.rank,
-                q_bits_overhead,
-                lr_bits: cfg.lr_bits,
             },
+            plan: plan.clone(),
             traces,
             wall_secs: t0.elapsed().as_secs_f64(),
         })
@@ -232,12 +313,13 @@ impl CompressionPipeline {
 mod tests {
     use super::*;
     use crate::calib::{synthetic_calib, synthetic_weight};
+    use crate::quant::make_quantizer;
     use crate::runtime::FamilySpec;
     use crate::runtime::Value;
+    use crate::testing;
 
-    fn toy_setup() -> (ModelParams, BTreeMap<String, Hessian>) {
-        // A small single-layer family with planted outliers.
-        let fam = FamilySpec {
+    fn toy_family() -> FamilySpec {
+        FamilySpec {
             name: "toy".into(),
             params: vec![
                 ("embed".into(), vec![32, 24]),
@@ -270,7 +352,12 @@ mod tests {
             n_kv_heads: 4,
             mlp: "swiglu".into(),
             rope_theta: 10000.0,
-        };
+        }
+    }
+
+    fn toy_setup() -> (ModelParams, BTreeMap<String, Hessian>) {
+        // A small single-layer family with planted outliers.
+        let fam = toy_family();
         let mut params = ModelParams::init(&fam, 7);
         let mut hessians = BTreeMap::new();
         for name in fam.projections.clone() {
@@ -284,6 +371,32 @@ mod tests {
         }
         // keep embed/norms as initialized
         let _ = &params.values[0] as &Value;
+        (params, hessians)
+    }
+
+    /// Like [`toy_setup`], but the planted outlier mass differs sharply per
+    /// projection — the structure a sensitivity-driven planner must key on.
+    fn skewed_setup() -> (ModelParams, BTreeMap<String, Hessian>) {
+        let fam = toy_family();
+        let mut params = ModelParams::init(&fam, 7);
+        let mut hessians = BTreeMap::new();
+        let counts: &[(&str, usize)] = &[
+            ("layer0.wq", 6),
+            ("layer0.wk", 0),
+            ("layer0.wv", 0),
+            ("layer0.wo", 0),
+            ("layer0.wgate", 4),
+            ("layer0.wup", 0),
+            ("layer0.wdown", 0),
+        ];
+        for &(name, n_out) in counts {
+            let shape = fam.param_shape(name).unwrap().to_vec();
+            let calib =
+                synthetic_calib(shape[1], 3 * shape[1], n_out, 25.0, fnv1a(name.as_bytes()));
+            let w = synthetic_weight(shape[0], shape[1], &calib.outlier_channels, 3);
+            params.set_matrix(name, &w).unwrap();
+            hessians.insert(name.to_string(), calib.hessian);
+        }
         (params, hessians)
     }
 
@@ -306,6 +419,7 @@ mod tests {
         let out = pipe.run(&params, &hessians).unwrap();
         assert_eq!(out.model.matrices.len(), 7);
         assert_eq!(out.traces.len(), 7);
+        assert!(out.plan.is_uniform());
         for (name, cm) in &out.model.matrices {
             assert!(cm.final_act_err < 1.0, "{name}: err={}", cm.final_act_err);
             assert!(cm.reconstruct().is_finite());
@@ -315,11 +429,59 @@ mod tests {
                 0.0,
                 "{name}: packed Q is not the pipeline's Q"
             );
+            // Per-matrix bookkeeping rides along.
+            assert_eq!(cm.plan.rank, 6);
+            assert!(cm.q_bits_overhead > 2.0 && cm.avg_bits() > cm.q_bits_overhead);
         }
         // Reconstructions approximate the originals.
         let w = params.get_matrix("layer0.wq").unwrap();
         let rec = out.model.matrices["layer0.wq"].reconstruct();
         assert!(rec.rel_err(&w) < 0.8);
+    }
+
+    /// The back-compat invariant: a uniform plan through the plan-aware
+    /// pipeline is bit-identical to the pre-redesign behavior — one shared
+    /// quantizer, the global `JointConfig`, and per-name seeds. Same Q, L,
+    /// R per projection, exactly.
+    #[test]
+    fn uniform_plan_matches_pre_redesign_pipeline_bit_exactly() {
+        let (params, hessians) = toy_setup();
+        let cfg = quick_cfg(InitKind::Odlri, 3);
+        let out = CompressionPipeline::new(cfg.clone())
+            .run(&params, &hessians)
+            .unwrap();
+        // Reference: the historical construction, spelled out.
+        let quantizer = make_quantizer(&cfg.q_scheme, cfg.q_bits, cfg.q_group).unwrap();
+        for name in &params.family.projections {
+            let w = params.get_matrix(name).unwrap();
+            let jc = JointConfig {
+                outer_iters: cfg.outer_iters,
+                lowrank: LowRankConfig {
+                    rank: cfg.rank,
+                    lr_bits: cfg.lr_bits,
+                    lplr_iters: cfg.lplr_iters,
+                    reg: 1e-4,
+                },
+                hadamard: cfg.hadamard,
+                reg: 1e-4,
+                seed: cfg.seed ^ fnv1a(name.as_bytes()),
+            };
+            let init = cfg.init.initializer(cfg.rank, w.cols());
+            let d = JointOptimizer::new(quantizer.as_ref(), jc).run(
+                &w,
+                &hessians[name],
+                &init,
+            );
+            let cm = &out.model.matrices[name];
+            assert_eq!(d.q, cm.q, "{name}: Q differs from pre-redesign run");
+            assert_eq!(d.lr.l, cm.lr.l, "{name}: L differs");
+            assert_eq!(d.lr.r, cm.lr.r, "{name}: R differs");
+            assert_eq!(
+                d.q_packed.unpack().max_abs_diff(&cm.q_packed.unpack()),
+                0.0,
+                "{name}: packed codes differ"
+            );
+        }
     }
 
     #[test]
@@ -347,8 +509,7 @@ mod tests {
         // The toy family mixes 24×24 attention and 40×24 / 24×40 MLP
         // projections; the default E8 quantizer's overhead (one 32-bit
         // scale per matrix) therefore differs per shape. The model-level
-        // value must be the parameter-weighted mean over ALL projections —
-        // the old code reported whichever matrix sorted last.
+        // value must be the parameter-weighted mean over ALL projections.
         let (params, hessians) = toy_setup();
         let cfg = quick_cfg(InitKind::Caldera, 2);
         let out = CompressionPipeline::new(cfg.clone())
@@ -368,20 +529,19 @@ mod tests {
         }
         let want = want_num / want_den;
         assert!(
-            (out.model.q_bits_overhead - want).abs() < 1e-12,
+            (out.model.q_bits_overhead() - want).abs() < 1e-12,
             "got {} want {want}",
-            out.model.q_bits_overhead
+            out.model.q_bits_overhead()
         );
         // The family genuinely has differently-shaped projections, so the
-        // weighted mean sits strictly between the extremes — the old
-        // "last one wins" value (an extreme) cannot equal it.
+        // weighted mean sits strictly between the extremes.
         let lo = per_matrix.iter().cloned().fold(f64::INFINITY, f64::min);
         let hi = per_matrix
             .iter()
             .cloned()
             .fold(f64::NEG_INFINITY, f64::max);
         assert!(lo < hi, "test family needs projections with different shapes");
-        assert!(out.model.q_bits_overhead > lo && out.model.q_bits_overhead < hi);
+        assert!(out.model.q_bits_overhead() > lo && out.model.q_bits_overhead() < hi);
         assert!(out.model.avg_bits().is_finite() && out.model.avg_bits() > 0.0);
     }
 
@@ -415,6 +575,113 @@ mod tests {
         );
     }
 
+    /// A heterogeneous plan flows through the whole pipeline: every matrix
+    /// is compressed under its own recipe and carries its own bookkeeping.
+    #[test]
+    fn heterogeneous_plan_runs_end_to_end() {
+        let (params, hessians) = toy_setup();
+        let fam = &params.family;
+        let cfg = quick_cfg(InitKind::Caldera, 2);
+        let mut map = std::collections::BTreeMap::new();
+        for name in &fam.projections {
+            map.insert(name.clone(), MatrixPlan::from_config(&cfg));
+        }
+        map.get_mut("layer0.wq").unwrap().rank = 12;
+        map.get_mut("layer0.wq").unwrap().init = InitKind::OdlriK(2);
+        map.get_mut("layer0.wk").unwrap().rank = 0;
+        map.get_mut("layer0.wup").unwrap().q_scheme = "uniform".into();
+        map.get_mut("layer0.wup").unwrap().q_bits = 4;
+        map.get_mut("layer0.wup").unwrap().q_group = 8;
+        let plan = CompressionPlan::new(map, fam).unwrap();
+        assert!(!plan.is_uniform());
+        let out = CompressionPipeline::new(cfg)
+            .run_plan(&params, &hessians, &plan)
+            .unwrap();
+        let wq = &out.model.matrices["layer0.wq"];
+        let wk = &out.model.matrices["layer0.wk"];
+        let wup = &out.model.matrices["layer0.wup"];
+        assert_eq!(wq.rank(), 12);
+        assert_eq!(wk.rank(), 0);
+        assert_eq!(wup.q_packed.scheme.name(), "uniform");
+        assert_eq!(wq.q_packed.scheme.name(), "e8");
+        // Packed exactness holds per scheme.
+        for (name, cm) in &out.model.matrices {
+            assert_eq!(
+                cm.q_packed.unpack().max_abs_diff(&cm.q),
+                0.0,
+                "{name}: packed Q not bit-exact under heterogeneous plan"
+            );
+        }
+        // Model aggregates reflect the mix: wq (more rank) is costlier than
+        // wk (rank 0).
+        assert!(wq.avg_bits() > wk.avg_bits());
+        assert!(out.model.avg_bits().is_finite());
+    }
+
+    /// The budget planner must (a) respect the ceiling, (b) discriminate —
+    /// outlier-heavy projections get the capacity — and (c) produce a model
+    /// whose *reported* avg_bits also respects the ceiling.
+    #[test]
+    fn budget_planner_allocates_capacity_to_outlier_projections() {
+        let (params, hessians) = skewed_setup();
+        let fam = &params.family;
+        let base = PipelineConfig {
+            rank: 8,
+            lr_bits: 4,
+            outer_iters: 2,
+            lplr_iters: 2,
+            workers: 2,
+            ..Default::default()
+        };
+        // Pick a budget strictly between the floor plan (rank 2) and the
+        // full uniform plan (rank 8): enough to fund both outlier-heavy
+        // projections' rank upgrades, not enough to reach the flat ones.
+        let floor_cfg = PipelineConfig {
+            rank: 2,
+            ..base.clone()
+        };
+        let lo = CompressionPlan::uniform(fam, &floor_cfg)
+            .avg_bits(fam)
+            .unwrap();
+        let hi = CompressionPlan::uniform(fam, &base).avg_bits(fam).unwrap();
+        assert!(lo < hi);
+        let budget = lo + 0.7 * (hi - lo);
+        let plan = BudgetPlanner::new(budget, base.clone())
+            .plan(&params, &hessians)
+            .unwrap();
+        assert!(
+            plan.avg_bits(fam).unwrap() <= budget + 1e-9,
+            "plan {:.4} over budget {budget:.4}",
+            plan.avg_bits(fam).unwrap()
+        );
+        // Heterogeneous: ranks/bits are NOT all equal.
+        let (rlo, rhi) = plan.rank_spread();
+        assert!(rlo < rhi, "budget plan degenerated to uniform ranks");
+        // Capacity follows outliers: the heaviest projection beats the
+        // outlier-free ones.
+        let r_wq = plan.get("layer0.wq").unwrap().rank;
+        let r_wk = plan.get("layer0.wk").unwrap().rank;
+        let r_wo = plan.get("layer0.wo").unwrap().rank;
+        assert!(
+            r_wq > r_wk && r_wq > r_wo,
+            "outlier-heavy wq (r={r_wq}) must out-rank outlier-free wk (r={r_wk}) / wo (r={r_wo})"
+        );
+        // End to end: the compressed model's reported bits stay ≤ budget.
+        let out = CompressionPipeline::new(base)
+            .run_plan(&params, &hessians, &plan)
+            .unwrap();
+        assert!(
+            out.model.avg_bits() <= budget + 1e-9,
+            "reported {:.4} over budget {budget:.4}",
+            out.model.avg_bits()
+        );
+        // And the realized per-matrix ranks mirror the plan's skew.
+        assert!(
+            out.model.matrices["layer0.wq"].rank()
+                > out.model.matrices["layer0.wk"].rank()
+        );
+    }
+
     #[test]
     fn init_kind_k_schedule() {
         let i = InitKind::Odlri.initializer(256, 4096);
@@ -422,5 +689,26 @@ mod tests {
         let i = InitKind::OdlriK(3).initializer(256, 4096);
         assert_eq!(i, Initializer::Odlri { k: 3 });
         assert_eq!(InitKind::Caldera.initializer(8, 8), Initializer::Zero);
+    }
+
+    #[test]
+    fn init_kind_parse_roundtrips_with_name() {
+        testing::quick("initkind-roundtrip", |rng| {
+            let k = 1 + rng.below(512);
+            for kind in [
+                InitKind::Caldera,
+                InitKind::LrFirst,
+                InitKind::Odlri,
+                InitKind::OdlriK(k),
+            ] {
+                assert_eq!(InitKind::parse(&kind.name()).unwrap(), kind, "{kind:?}");
+            }
+        });
+        // Aliases and rejects.
+        assert_eq!(InitKind::parse("zero").unwrap(), InitKind::Caldera);
+        assert_eq!(InitKind::parse("lrapprox").unwrap(), InitKind::LrFirst);
+        assert!(InitKind::parse("bogus").is_err());
+        assert!(InitKind::parse("odlri-kx").is_err());
+        assert!(InitKind::parse("").is_err());
     }
 }

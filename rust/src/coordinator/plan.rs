@@ -1,0 +1,915 @@
+//! Per-projection compression plans and the planners that produce them.
+//!
+//! A [`MatrixPlan`] is the complete recipe for ONE projection (initializer,
+//! low-rank budget, quantizer); a [`CompressionPlan`] is a validated map
+//! from every projection name to its `MatrixPlan`. [`Planner`]s turn model
+//! parameters + calibration Hessians into plans:
+//!
+//! * [`UniformPlanner`] — every projection gets the same recipe (the
+//!   historical `PipelineConfig` behavior, bit-identically).
+//! * [`BudgetPlanner`] — ranks projections by a cheap Hessian-diagonal
+//!   outlier-mass probe ([`outlier_mass`]) and greedily allocates rank and
+//!   quantizer bits to the most outlier-sensitive projections until the
+//!   parameter-weighted model average bits reaches the target budget.
+//!
+//! ## Plan files
+//!
+//! `CompressionPlan::parse` reads the small key=value format of
+//! [`crate::util::config`]: top-level keys override the base (CLI) recipe
+//! for every projection, and a `[projection.name]` section overrides
+//! individual projections:
+//!
+//! ```text
+//! # defaults for every projection
+//! rank = 4
+//! bits = 2
+//!
+//! [layer0.wq]        # this projection gets more capacity
+//! rank = 16
+//! bits = 3
+//! init = odlri-k8
+//! ```
+//!
+//! Recognized keys: `init`, `rank`, `lr_bits`, `scheme`, `bits`, `group`,
+//! `hadamard`. Unknown keys and unknown projection names are errors.
+//! Resolution order: per-projection section > top-level default > base
+//! config.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{InitKind, PipelineConfig};
+use crate::decompose::avg_bits;
+use crate::hessian::Hessian;
+use crate::model::ModelParams;
+use crate::quant::{make_quantizer, Quantizer};
+use crate::report::Table;
+use crate::runtime::FamilySpec;
+use crate::util::config::{Config, Value as CfgValue};
+
+/// Upper bound for plan integers on deserialization — corrupt metadata must
+/// not masquerade as a plausible plan.
+const MAX_PLAN_DIM: usize = 1 << 26;
+
+/// The complete compression recipe for one projection matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixPlan {
+    /// Low-rank initializer (the paper's role-assignment lever).
+    pub init: InitKind,
+    /// Requested factor rank (clamped to the matrix dimensions downstream).
+    pub rank: usize,
+    /// Factor precision; 16 keeps L/R in full precision.
+    pub lr_bits: u32,
+    /// Quantizer scheme: `"uniform"`, `"e8"`, or `"mxint"`.
+    pub q_scheme: String,
+    /// Quantizer bits for `Q`.
+    pub q_bits: u32,
+    /// Quantizer group/block size (uniform groups, MXINT blocks).
+    pub q_group: usize,
+    /// Randomized-Hadamard incoherence preprocessing.
+    pub hadamard: bool,
+}
+
+/// Valid `q_bits` range per scheme (the quantizer constructors assert these;
+/// validating here turns a bad plan into an error instead of a panic).
+fn scheme_bits_range(scheme: &str) -> Result<(u32, u32)> {
+    match scheme {
+        "uniform" => Ok((1, 8)),
+        "e8" => Ok((2, 4)),
+        "mxint" => Ok((2, 8)),
+        other => bail!("unknown quantizer scheme '{other}' (uniform | e8 | mxint)"),
+    }
+}
+
+impl MatrixPlan {
+    /// The uniform recipe a [`PipelineConfig`] describes.
+    pub fn from_config(cfg: &PipelineConfig) -> MatrixPlan {
+        MatrixPlan {
+            init: cfg.init.clone(),
+            rank: cfg.rank,
+            lr_bits: cfg.lr_bits,
+            q_scheme: cfg.q_scheme.clone(),
+            q_bits: cfg.q_bits,
+            q_group: cfg.q_group,
+            hadamard: cfg.hadamard,
+        }
+    }
+
+    /// Bounds-check the recipe (scheme known, bits in the scheme's range,
+    /// group ≥ 1, sane magnitudes).
+    pub fn validate(&self) -> Result<()> {
+        let (lo, hi) = scheme_bits_range(&self.q_scheme)?;
+        if !(lo..=hi).contains(&self.q_bits) {
+            bail!(
+                "{} quantizer wants {lo}..={hi} bits, plan asks for {}",
+                self.q_scheme,
+                self.q_bits
+            );
+        }
+        if self.q_group == 0 {
+            bail!("plan group must be >= 1");
+        }
+        if !(1..=32).contains(&self.lr_bits) {
+            bail!("plan lr_bits must be 1..=32, got {}", self.lr_bits);
+        }
+        if self.rank > MAX_PLAN_DIM || self.q_group > MAX_PLAN_DIM {
+            bail!("plan rank/group out of range");
+        }
+        Ok(())
+    }
+
+    /// Build this plan's quantizer (validates first).
+    pub fn quantizer(&self) -> Result<Box<dyn Quantizer>> {
+        self.validate()?;
+        make_quantizer(&self.q_scheme, self.q_bits, self.q_group)
+    }
+
+    /// Paper-style average bits/weight this recipe costs on an m×n matrix
+    /// (Q bits with scale overhead + factor storage) — the
+    /// [`BudgetPlanner`] cost model, shared with
+    /// [`crate::model::CompressedMatrix::avg_bits`].
+    pub fn avg_bits(&self, rows: usize, cols: usize) -> Result<f64> {
+        let q = self.quantizer()?;
+        Ok(avg_bits(
+            rows,
+            cols,
+            self.rank,
+            q.bits_with_overhead(rows, cols),
+            self.lr_bits,
+        ))
+    }
+
+    /// Compact human-readable recipe, e.g. `odlri r16 e8x2b/g64+rot lr4b`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} r{} {}x{}b/g{}{} lr{}b",
+            self.init.name(),
+            self.rank,
+            self.q_scheme,
+            self.q_bits,
+            self.q_group,
+            if self.hadamard { "+rot" } else { "" },
+            self.lr_bits
+        )
+    }
+
+    // ---- serialization (ODF3 per-matrix plan metadata) ----
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        write_str(w, &self.init.name())?;
+        w.write_all(&(self.rank as u32).to_le_bytes())?;
+        w.write_all(&self.lr_bits.to_le_bytes())?;
+        write_str(w, &self.q_scheme)?;
+        w.write_all(&self.q_bits.to_le_bytes())?;
+        w.write_all(&(self.q_group as u32).to_le_bytes())?;
+        w.write_all(&[self.hadamard as u8])?;
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<MatrixPlan> {
+        let init = InitKind::parse(&read_str(r)?)?;
+        let rank = read_u32(r)? as usize;
+        let lr_bits = read_u32(r)?;
+        let q_scheme = read_str(r)?;
+        let q_bits = read_u32(r)?;
+        let q_group = read_u32(r)? as usize;
+        let mut flag = [0u8; 1];
+        r.read_exact(&mut flag)?;
+        let hadamard = match flag[0] {
+            0 => false,
+            1 => true,
+            other => bail!("bad plan hadamard flag {other}"),
+        };
+        let plan = MatrixPlan {
+            init,
+            rank,
+            lr_bits,
+            q_scheme,
+            q_bits,
+            q_group,
+            hadamard,
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+}
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    w.write_all(&(b.len() as u32).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    Ok(u32::from_le_bytes(b4))
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 4096 {
+        bail!("plan string length {len} out of range");
+    }
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+/// A validated whole-model plan: exactly one [`MatrixPlan`] per projection.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressionPlan {
+    matrices: BTreeMap<String, MatrixPlan>,
+}
+
+impl CompressionPlan {
+    /// Wrap a per-projection map, checking it covers the family's
+    /// projections exactly (no missing, no unknown) and every recipe is
+    /// in-bounds.
+    pub fn new(
+        matrices: BTreeMap<String, MatrixPlan>,
+        family: &FamilySpec,
+    ) -> Result<CompressionPlan> {
+        for name in &family.projections {
+            if !matrices.contains_key(name) {
+                bail!("plan is missing projection '{name}'");
+            }
+        }
+        for (name, mp) in &matrices {
+            if !family.projections.contains(name) {
+                bail!("plan names unknown projection '{name}'");
+            }
+            mp.validate()
+                .map_err(|e| anyhow!("plan for '{name}': {e}"))?;
+        }
+        Ok(CompressionPlan { matrices })
+    }
+
+    /// The uniform plan a [`PipelineConfig`] historically meant: every
+    /// projection gets the identical recipe. Running this plan is
+    /// bit-identical to the pre-plan pipeline (tested in `coordinator`).
+    pub fn uniform(family: &FamilySpec, cfg: &PipelineConfig) -> CompressionPlan {
+        let mp = MatrixPlan::from_config(cfg);
+        CompressionPlan {
+            matrices: family
+                .projections
+                .iter()
+                .map(|n| (n.clone(), mp.clone()))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MatrixPlan> {
+        self.matrices.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &MatrixPlan)> {
+        self.matrices.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.matrices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.matrices.is_empty()
+    }
+
+    /// True when every projection shares one recipe.
+    pub fn is_uniform(&self) -> bool {
+        let mut it = self.matrices.values();
+        match it.next() {
+            None => true,
+            Some(first) => it.all(|mp| mp == first),
+        }
+    }
+
+    /// (min, max) requested rank across projections.
+    pub fn rank_spread(&self) -> (usize, usize) {
+        let ranks = self.matrices.values().map(|mp| mp.rank);
+        (
+            ranks.clone().min().unwrap_or(0),
+            ranks.max().unwrap_or(0),
+        )
+    }
+
+    /// (min, max) quantizer bits across projections.
+    pub fn bits_spread(&self) -> (u32, u32) {
+        let bits = self.matrices.values().map(|mp| mp.q_bits);
+        (bits.clone().min().unwrap_or(0), bits.max().unwrap_or(0))
+    }
+
+    /// (min, max) factor precision across projections.
+    pub fn lr_bits_spread(&self) -> (u32, u32) {
+        let bits = self.matrices.values().map(|mp| mp.lr_bits);
+        (bits.clone().min().unwrap_or(0), bits.max().unwrap_or(0))
+    }
+
+    /// Display form of the rank spread: `"8"` when uniform, `"4-16"` when
+    /// not — shared by the CLI summary, output paths, and report tables.
+    pub fn rank_label(&self) -> String {
+        let (lo, hi) = self.rank_spread();
+        spread_label(lo, hi)
+    }
+
+    /// Display form of the quantizer-bits spread.
+    pub fn bits_label(&self) -> String {
+        let (lo, hi) = self.bits_spread();
+        spread_label(lo, hi)
+    }
+
+    /// Display form of the factor-precision spread.
+    pub fn lr_bits_label(&self) -> String {
+        let (lo, hi) = self.lr_bits_spread();
+        spread_label(lo, hi)
+    }
+
+    /// Re-validate against a family (used when a plan arrives from a
+    /// container or file rather than [`CompressionPlan::new`]).
+    pub fn validate(&self, family: &FamilySpec) -> Result<()> {
+        CompressionPlan::new(self.matrices.clone(), family).map(|_| ())
+    }
+
+    /// The plan's parameter-weighted model average bits/weight — the budget
+    /// cost model, and exactly what the compressed model will report.
+    pub fn avg_bits(&self, family: &FamilySpec) -> Result<f64> {
+        let mut weighted = 0.0;
+        let mut total = 0.0;
+        for (name, mp) in &self.matrices {
+            let shape = family.param_shape(name)?;
+            let count = (shape[0] * shape[1]) as f64;
+            weighted += mp.avg_bits(shape[0], shape[1])? * count;
+            total += count;
+        }
+        Ok(if total == 0.0 { 0.0 } else { weighted / total })
+    }
+
+    /// Per-projection plan table for reports and the CLI.
+    pub fn table(&self, family: &FamilySpec) -> Result<Table> {
+        let mut t = Table::new(
+            "Compression plan (per projection)",
+            &[
+                "Projection", "Shape", "Init", "Rank", "LR bits", "Scheme", "Q bits",
+                "Group", "Had", "AvgBits",
+            ],
+        );
+        for (name, mp) in &self.matrices {
+            let shape = family.param_shape(name)?;
+            t.row(vec![
+                name.clone(),
+                format!("{}x{}", shape[0], shape[1]),
+                mp.init.name(),
+                mp.rank.to_string(),
+                mp.lr_bits.to_string(),
+                mp.q_scheme.clone(),
+                mp.q_bits.to_string(),
+                mp.q_group.to_string(),
+                if mp.hadamard { "yes" } else { "no" }.to_string(),
+                format!("{:.3}", mp.avg_bits(shape[0], shape[1])?),
+            ]);
+        }
+        Ok(t)
+    }
+
+    /// Emit the plan-file form ([`CompressionPlan::parse`] round-trips it).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("# odlri compression plan (one section per projection)\n");
+        for (name, mp) in &self.matrices {
+            let _ = writeln!(out, "\n[{name}]");
+            let _ = writeln!(out, "init = {}", mp.init.name());
+            let _ = writeln!(out, "rank = {}", mp.rank);
+            let _ = writeln!(out, "lr_bits = {}", mp.lr_bits);
+            let _ = writeln!(out, "scheme = {}", mp.q_scheme);
+            let _ = writeln!(out, "bits = {}", mp.q_bits);
+            let _ = writeln!(out, "group = {}", mp.q_group);
+            let _ = writeln!(out, "hadamard = {}", mp.hadamard);
+        }
+        out
+    }
+
+    /// Parse a plan file (see the module header for the format). `base`
+    /// supplies every field not set by the file.
+    pub fn parse(
+        text: &str,
+        family: &FamilySpec,
+        base: &PipelineConfig,
+    ) -> Result<CompressionPlan> {
+        let cfg = Config::parse(text)?;
+        const FIELDS: [&str; 7] =
+            ["init", "rank", "lr_bits", "scheme", "bits", "group", "hadamard"];
+        // Reject typos up front: every key must be a bare field (default
+        // recipe) or `<projection>.<field>` for a known projection.
+        for key in cfg.keys() {
+            let ok = FIELDS.contains(&key.as_str())
+                || key.rsplit_once('.').is_some_and(|(proj, field)| {
+                    FIELDS.contains(&field)
+                        && family.projections.iter().any(|p| p == proj)
+                });
+            if !ok {
+                bail!(
+                    "plan file: unknown key '{key}' (fields: {}; sections must name a \
+                     projection of family {})",
+                    FIELDS.join(", "),
+                    family.name
+                );
+            }
+        }
+        let default = apply_overrides(&cfg, "", &MatrixPlan::from_config(base))?;
+        let mut matrices = BTreeMap::new();
+        for name in &family.projections {
+            matrices.insert(
+                name.clone(),
+                apply_overrides(&cfg, &format!("{name}."), &default)?,
+            );
+        }
+        CompressionPlan::new(matrices, family)
+    }
+}
+
+fn spread_label<T: PartialEq + std::fmt::Display>(lo: T, hi: T) -> String {
+    if lo == hi {
+        lo.to_string()
+    } else {
+        format!("{lo}-{hi}")
+    }
+}
+
+/// Overlay `prefix`-scoped plan keys from a parsed config onto `base`.
+fn apply_overrides(cfg: &Config, prefix: &str, base: &MatrixPlan) -> Result<MatrixPlan> {
+    let mut mp = base.clone();
+    let key = |field: &str| format!("{prefix}{field}");
+    if let Some(v) = cfg.get(&key("init")) {
+        mp.init = InitKind::parse(&want_str(v, &key("init"))?)?;
+    }
+    if let Some(v) = cfg.get(&key("rank")) {
+        mp.rank = want_int(v, &key("rank"), MAX_PLAN_DIM as i64)? as usize;
+    }
+    if let Some(v) = cfg.get(&key("lr_bits")) {
+        mp.lr_bits = want_int(v, &key("lr_bits"), 32)? as u32;
+    }
+    if let Some(v) = cfg.get(&key("scheme")) {
+        mp.q_scheme = want_str(v, &key("scheme"))?;
+    }
+    if let Some(v) = cfg.get(&key("bits")) {
+        mp.q_bits = want_int(v, &key("bits"), 8)? as u32;
+    }
+    if let Some(v) = cfg.get(&key("group")) {
+        mp.q_group = want_int(v, &key("group"), MAX_PLAN_DIM as i64)? as usize;
+    }
+    if let Some(v) = cfg.get(&key("hadamard")) {
+        mp.hadamard = match v {
+            CfgValue::Bool(b) => *b,
+            other => bail!("plan key '{}' wants true/false, got {other:?}", key("hadamard")),
+        };
+    }
+    Ok(mp)
+}
+
+/// Extract an integer in `0..=max` — the bound is checked BEFORE any
+/// narrowing cast, so out-of-range values error instead of wrapping into
+/// valid-looking recipes.
+fn want_int(v: &CfgValue, key: &str, max: i64) -> Result<i64> {
+    match v {
+        CfgValue::Int(i) if (0..=max).contains(i) => Ok(*i),
+        other => bail!("plan key '{key}' wants an integer in 0..={max}, got {other:?}"),
+    }
+}
+
+fn want_str(v: &CfgValue, key: &str) -> Result<String> {
+    match v {
+        CfgValue::Str(s) => Ok(s.clone()),
+        other => bail!("plan key '{key}' wants a string, got {other:?}"),
+    }
+}
+
+/// Produces a [`CompressionPlan`] from model parameters and calibration
+/// Hessians.
+pub trait Planner {
+    fn name(&self) -> String;
+
+    fn plan(
+        &self,
+        params: &ModelParams,
+        hessians: &BTreeMap<String, Hessian>,
+    ) -> Result<CompressionPlan>;
+}
+
+/// One recipe for every projection — exactly the historical
+/// `PipelineConfig` behavior.
+pub struct UniformPlanner {
+    pub config: PipelineConfig,
+}
+
+impl Planner for UniformPlanner {
+    fn name(&self) -> String {
+        "uniform".into()
+    }
+
+    fn plan(
+        &self,
+        params: &ModelParams,
+        _hessians: &BTreeMap<String, Hessian>,
+    ) -> Result<CompressionPlan> {
+        Ok(CompressionPlan::uniform(&params.family, &self.config))
+    }
+}
+
+/// Outlier threshold of the mass probe: a channel counts as an outlier
+/// when its Hessian-diagonal energy exceeds `PROBE_TAU ×` the median
+/// channel's. LLM activation outliers sit 10–100× above the bulk (SpQR,
+/// AWQ), so 4× cleanly separates them from ordinary spread.
+const PROBE_TAU: f64 = 4.0;
+
+/// Cheap outlier-sensitivity probe: the fraction of total Hessian-diagonal
+/// energy carried by channels whose diagonal exceeds `tau ×` the median
+/// diagonal. `H = X Xᵀ`, so `H_ii` is channel `i`'s activation energy — a
+/// few dominant diagonal entries are exactly the activation-outlier
+/// structure ODLRI keys on, and the projections where low-rank capacity
+/// pays off most. Scale-free (thresholds against the projection's own
+/// median) and monotone in how much outlier structure a projection
+/// carries; ≈ 0 for an outlier-free projection.
+pub fn outlier_mass(h: &Hessian, tau: f64) -> f64 {
+    let n = h.dim();
+    if n == 0 {
+        return 0.0;
+    }
+    let diag: Vec<f64> = (0..n).map(|i| h.matrix().at(i, i) as f64).collect();
+    let total: f64 = diag.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut sorted = diag.clone();
+    sorted.sort_by(f64::total_cmp);
+    let median = sorted[n / 2];
+    let cut = tau * median;
+    diag.iter().filter(|&&d| d > cut).sum::<f64>() / total
+}
+
+/// One upgrade step the budget allocator can spend on a projection.
+#[derive(Clone, Copy, Debug)]
+enum Upgrade {
+    /// Set the factor rank to this absolute value.
+    Rank(usize),
+    /// Set the quantizer bits to this absolute value.
+    Bits(u32),
+}
+
+/// Sensitivity-driven budget allocation: every projection starts at a floor
+/// recipe (quarter rank, base bits); rank and bit upgrades are then granted
+/// greedily, most outlier-sensitive projection first, while the plan's
+/// parameter-weighted average bits stays ≤ `budget`. The budget is a hard
+/// ceiling: the returned plan (and therefore the compressed model's
+/// reported `avg_bits`) never exceeds it, and a budget below the floor
+/// plan's cost is an error.
+pub struct BudgetPlanner {
+    /// Target model average bits/weight (hard ceiling).
+    pub budget: f64,
+    /// Base recipe: scheme/group/lr_bits/init/hadamard come from here; its
+    /// `rank`/`q_bits` anchor the upgrade ladders.
+    pub base: PipelineConfig,
+}
+
+impl BudgetPlanner {
+    pub fn new(budget: f64, base: PipelineConfig) -> BudgetPlanner {
+        BudgetPlanner { budget, base }
+    }
+
+    /// Upgrade ladder anchored at the base recipe: rank r/4 → r/2 → r →
+    /// bits+1 → 2r (rank is the paper's preferred lever, so it is granted
+    /// first; the extra quantizer bit slots in before the final doubling).
+    fn upgrades(base: &MatrixPlan, max_bits: u32) -> (MatrixPlan, Vec<Upgrade>) {
+        let mut floor = base.clone();
+        let mut steps = Vec::new();
+        if base.rank > 0 {
+            floor.rank = (base.rank / 4).max(1);
+            for r in [(base.rank / 2).max(1), base.rank] {
+                let dup = steps
+                    .iter()
+                    .any(|u| matches!(*u, Upgrade::Rank(x) if x == r));
+                if r > floor.rank && !dup {
+                    steps.push(Upgrade::Rank(r));
+                }
+            }
+        }
+        if base.q_bits < max_bits {
+            steps.push(Upgrade::Bits(base.q_bits + 1));
+        }
+        if base.rank > 0 {
+            steps.push(Upgrade::Rank(base.rank * 2));
+        }
+        (floor, steps)
+    }
+}
+
+impl Planner for BudgetPlanner {
+    fn name(&self) -> String {
+        format!("budget{:.2}", self.budget)
+    }
+
+    fn plan(
+        &self,
+        params: &ModelParams,
+        hessians: &BTreeMap<String, Hessian>,
+    ) -> Result<CompressionPlan> {
+        let fam = &params.family;
+        let base = MatrixPlan::from_config(&self.base);
+        base.validate()?;
+        let (_, max_bits) = scheme_bits_range(&base.q_scheme)?;
+        let (floor, steps) = BudgetPlanner::upgrades(&base, max_bits);
+
+        // Rank projections by outlier sensitivity (name-tiebroken so the
+        // allocation is deterministic).
+        let mut scored: Vec<(String, f64)> = Vec::with_capacity(fam.projections.len());
+        for name in &fam.projections {
+            let h = hessians
+                .get(name)
+                .ok_or_else(|| anyhow!("missing Hessian for projection '{name}'"))?;
+            scored.push((name.clone(), outlier_mass(h, PROBE_TAU)));
+        }
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+
+        let mut matrices: BTreeMap<String, MatrixPlan> = fam
+            .projections
+            .iter()
+            .map(|n| (n.clone(), floor.clone()))
+            .collect();
+        // Cost bookkeeping: per-projection weighted contribution
+        // `avg_bits(shape) · param_count`, so each candidate upgrade costs
+        // one quantizer build instead of re-pricing the whole plan. The sum
+        // is re-added in BTreeMap order every trial — the exact arithmetic
+        // [`CompressionPlan::avg_bits`] performs — so the ceiling the
+        // greedy enforces is precisely the value the model will report.
+        let mut shapes: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+        let mut contrib: BTreeMap<String, f64> = BTreeMap::new();
+        let mut total = 0.0f64;
+        for (name, mp) in &matrices {
+            let shape = fam.param_shape(name)?;
+            let count = (shape[0] * shape[1]) as f64;
+            shapes.insert(name.clone(), (shape[0], shape[1]));
+            contrib.insert(name.clone(), mp.avg_bits(shape[0], shape[1])? * count);
+            total += count;
+        }
+        let cost_with = |contrib: &BTreeMap<String, f64>, name: &str, new_c: f64| -> f64 {
+            if total == 0.0 {
+                return 0.0;
+            }
+            contrib
+                .iter()
+                .map(|(k, v)| if k == name { new_c } else { *v })
+                .sum::<f64>()
+                / total
+        };
+        // No projection is named "", so this sums the floor contributions.
+        let floor_cost = cost_with(&contrib, "", 0.0);
+        if floor_cost > self.budget {
+            bail!(
+                "budget {:.3} is below the floor plan's {:.3} avg bits \
+                 ({}); lower --rank/--bits or raise the budget",
+                self.budget,
+                floor_cost,
+                floor.summary()
+            );
+        }
+
+        // Greedy allocation: repeatedly grant the most sensitive
+        // projection its next upgrade if the model stays within budget.
+        // Cursors only advance, so the loop terminates; a skipped upgrade
+        // (over budget) simply moves on to the projection's cheaper
+        // remaining steps.
+        let mut cursor: BTreeMap<&str, usize> =
+            scored.iter().map(|(n, _)| (n.as_str(), 0usize)).collect();
+        loop {
+            let mut granted = false;
+            for (name, _) in &scored {
+                let c = cursor.get_mut(name.as_str()).unwrap();
+                while *c < steps.len() {
+                    let step = steps[*c];
+                    *c += 1;
+                    let mut candidate = matrices[name].clone();
+                    match step {
+                        Upgrade::Rank(r) => candidate.rank = r,
+                        Upgrade::Bits(b) => candidate.q_bits = b,
+                    }
+                    let (rows, cols) = shapes[name];
+                    let new_c = candidate.avg_bits(rows, cols)? * (rows * cols) as f64;
+                    if cost_with(&contrib, name, new_c) <= self.budget {
+                        contrib.insert(name.clone(), new_c);
+                        matrices.insert(name.clone(), candidate);
+                        granted = true;
+                        break;
+                    }
+                }
+                if granted {
+                    break;
+                }
+            }
+            if !granted {
+                break;
+            }
+        }
+        CompressionPlan::new(matrices, fam)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use crate::testing;
+    use crate::util::rng::Pcg64;
+
+    fn toy_family() -> FamilySpec {
+        crate::runtime::FamilySpec::build("toyplan", 16, 8, 1, 2, 2, 12, "swiglu")
+    }
+
+    fn base_cfg() -> PipelineConfig {
+        PipelineConfig {
+            rank: 8,
+            lr_bits: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn uniform_plan_covers_and_is_uniform() {
+        let fam = toy_family();
+        let plan = CompressionPlan::uniform(&fam, &base_cfg());
+        assert_eq!(plan.len(), fam.projections.len());
+        assert!(plan.is_uniform());
+        for name in &fam.projections {
+            assert_eq!(plan.get(name).unwrap().rank, 8);
+        }
+        assert_eq!(plan.rank_spread(), (8, 8));
+        assert!(plan.validate(&fam).is_ok());
+        let bits = plan.avg_bits(&fam).unwrap();
+        assert!(bits > 2.0 && bits.is_finite(), "bits={bits}");
+    }
+
+    #[test]
+    fn plan_validation_catches_missing_and_unknown() {
+        let fam = toy_family();
+        let plan = CompressionPlan::uniform(&fam, &base_cfg());
+        let mut missing = plan.matrices.clone();
+        missing.remove("layer0.wq");
+        assert!(CompressionPlan::new(missing, &fam).is_err());
+        let mut unknown = plan.matrices.clone();
+        unknown.insert("layer0.bogus".into(), MatrixPlan::from_config(&base_cfg()));
+        assert!(CompressionPlan::new(unknown, &fam).is_err());
+        // Out-of-range bits for the scheme error instead of panicking.
+        let mut bad = plan.matrices.clone();
+        bad.get_mut("layer0.wq").unwrap().q_bits = 7; // e8 supports 2..=4
+        assert!(CompressionPlan::new(bad, &fam).is_err());
+    }
+
+    #[test]
+    fn plan_file_parse_applies_resolution_order() {
+        let fam = toy_family();
+        let base = base_cfg(); // rank 8, e8 2-bit
+        let text = "
+            rank = 4            # default for every projection
+            [layer0.wq]
+            rank = 16
+            bits = 3
+            init = odlri-k2
+        ";
+        let plan = CompressionPlan::parse(text, &fam, &base).unwrap();
+        assert_eq!(plan.get("layer0.wq").unwrap().rank, 16);
+        assert_eq!(plan.get("layer0.wq").unwrap().q_bits, 3);
+        assert_eq!(
+            plan.get("layer0.wq").unwrap().init,
+            InitKind::OdlriK(2)
+        );
+        // Unmentioned projections: top-level default overrides base rank,
+        // everything else stays base.
+        assert_eq!(plan.get("layer0.wk").unwrap().rank, 4);
+        assert_eq!(plan.get("layer0.wk").unwrap().q_bits, 2);
+        assert!(!plan.is_uniform());
+        assert_eq!(plan.rank_spread(), (4, 16));
+        assert_eq!(plan.bits_spread(), (2, 3));
+    }
+
+    #[test]
+    fn plan_file_rejects_unknown_keys_and_projections() {
+        let fam = toy_family();
+        let base = base_cfg();
+        assert!(CompressionPlan::parse("bogus = 4", &fam, &base).is_err());
+        assert!(
+            CompressionPlan::parse("[layer0.nope]\nrank = 4", &fam, &base).is_err()
+        );
+        assert!(
+            CompressionPlan::parse("[layer0.wq]\nbogus = 4", &fam, &base).is_err()
+        );
+        // Type errors are errors, not silent defaults.
+        assert!(CompressionPlan::parse("rank = \"four\"", &fam, &base).is_err());
+        assert!(
+            CompressionPlan::parse("[layer0.wq]\nhadamard = 3", &fam, &base).is_err()
+        );
+        // Out-of-range integers error instead of wrapping through a
+        // narrowing cast (4294967298 would truncate to a "valid" 2 bits).
+        assert!(CompressionPlan::parse("bits = 4294967298", &fam, &base).is_err());
+        assert!(CompressionPlan::parse("lr_bits = 4294967297", &fam, &base).is_err());
+        assert!(CompressionPlan::parse("rank = -1", &fam, &base).is_err());
+    }
+
+    #[test]
+    fn plan_text_roundtrip() {
+        let fam = toy_family();
+        let mut map = CompressionPlan::uniform(&fam, &base_cfg()).matrices;
+        map.get_mut("layer0.wq").unwrap().rank = 16;
+        map.get_mut("layer0.wq").unwrap().init = InitKind::OdlriK(3);
+        map.get_mut("layer0.wup").unwrap().q_scheme = "uniform".into();
+        map.get_mut("layer0.wup").unwrap().q_bits = 5;
+        map.get_mut("layer0.wup").unwrap().hadamard = false;
+        let plan = CompressionPlan::new(map, &fam).unwrap();
+        let back = CompressionPlan::parse(&plan.to_text(), &fam, &base_cfg()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn matrix_plan_serialization_roundtrip() {
+        testing::quick("matrix-plan-io", |rng| {
+            let mp = MatrixPlan {
+                init: [
+                    InitKind::Caldera,
+                    InitKind::LrFirst,
+                    InitKind::Odlri,
+                    InitKind::OdlriK(1 + rng.below(64)),
+                ][rng.below(4)]
+                .clone(),
+                rank: rng.below(256),
+                lr_bits: 1 + rng.below(16) as u32,
+                q_scheme: "uniform".into(),
+                q_bits: 1 + rng.below(8) as u32,
+                q_group: 1 + rng.below(128),
+                hadamard: rng.below(2) == 1,
+            };
+            let mut buf = Vec::new();
+            mp.write_to(&mut buf).unwrap();
+            let back = MatrixPlan::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, mp);
+            // Truncated streams error instead of producing garbage.
+            let cut = buf.len() / 2;
+            assert!(MatrixPlan::read_from(&mut &buf[..cut]).is_err());
+        });
+    }
+
+    #[test]
+    fn outlier_mass_ranks_planted_outliers() {
+        let mut rng = Pcg64::new(71, 1);
+        let flat = Hessian::from_acts(&Matrix::randn(32, 96, 1.0, &mut rng));
+        let (x1, _) = testing::gen_outlier_acts(&mut rng, 32, 96, 1);
+        let (x4, _) = testing::gen_outlier_acts(&mut rng, 32, 96, 4);
+        let m_flat = outlier_mass(&flat, PROBE_TAU);
+        let m_one = outlier_mass(&Hessian::from_acts(&x1), PROBE_TAU);
+        let m_four = outlier_mass(&Hessian::from_acts(&x4), PROBE_TAU);
+        // Planted outliers dominate the energy; a flat spectrum does not.
+        assert!(m_one > 0.5, "single planted outlier barely registered: {m_one}");
+        assert!(m_four > 0.5, "planted outliers barely registered: {m_four}");
+        assert!(
+            m_flat < 0.25,
+            "outlier-free Hessian scored as outlier-heavy: {m_flat}"
+        );
+        assert!(m_flat < m_one && m_flat < m_four);
+        assert!(outlier_mass(&Hessian::zeros(8), PROBE_TAU) == 0.0);
+        // Monotone in outlier count at fixed magnitude (hand-built diag:
+        // k channels at 100× the unit bulk).
+        let mass_k = |k: usize| {
+            let n = 32;
+            let m = Matrix::from_fn(n, n, |i, j| {
+                if i != j {
+                    0.0
+                } else if i < k {
+                    100.0
+                } else {
+                    1.0
+                }
+            });
+            outlier_mass(&Hessian::from_matrix(m, n).unwrap(), PROBE_TAU)
+        };
+        assert!(mass_k(0) == 0.0);
+        assert!(mass_k(1) < mass_k(2) && mass_k(2) < mass_k(6));
+    }
+
+    #[test]
+    fn budget_below_floor_is_an_error() {
+        let fam = toy_family();
+        let params = ModelParams::init(&fam, 3);
+        let mut hessians = BTreeMap::new();
+        let mut rng = Pcg64::new(72, 1);
+        for name in &fam.projections {
+            let n = fam.param_shape(name).unwrap()[1];
+            hessians.insert(
+                name.clone(),
+                Hessian::from_acts(&Matrix::randn(n, 2 * n, 1.0, &mut rng)),
+            );
+        }
+        let err = BudgetPlanner::new(0.5, base_cfg())
+            .plan(&params, &hessians)
+            .unwrap_err();
+        assert!(err.to_string().contains("floor"), "{err}");
+    }
+}

@@ -80,11 +80,12 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table9" => model_level::table9(&ctx),
         "table10" => model_level::table10(&ctx),
         "table11" => model_level::table11(&ctx),
+        "budget" => model_level::budget(&ctx),
         "all" => {
             for id in [
                 "table1", "t1norms", "fig2", "fig3", "fig4", "fig5", "table8",
                 "table2", "table3", "table4", "table5", "table9", "table10",
-                "table11",
+                "table11", "budget",
             ] {
                 eprintln!("\n===== exp {id} =====");
                 run(id, args)?;
@@ -94,7 +95,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         other => bail!(
             "unknown experiment '{other}'; known: table1 t1norms fig2 fig3 \
              fig4 fig5 table2 table3 table4 table5 table8 table9 table10 \
-             table11 all"
+             table11 budget all"
         ),
     }
 }

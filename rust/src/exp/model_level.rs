@@ -15,7 +15,9 @@ use anyhow::Result;
 
 use super::ExpContext;
 use crate::calib::{calibrate, CalibConfig};
-use crate::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use crate::coordinator::{
+    BudgetPlanner, CompressionPipeline, CompressionPlan, InitKind, PipelineConfig, Planner,
+};
 use crate::engine::NativeEngine;
 use crate::eval::{evaluate, EvalReport};
 use crate::hessian::Hessian;
@@ -123,7 +125,20 @@ pub fn run_cell(
     hessians: &BTreeMap<String, Hessian>,
     cfg: PipelineConfig,
 ) -> Result<(f64, EvalReport)> {
-    let out = CompressionPipeline::new(cfg).run(params, hessians)?;
+    let plan = CompressionPlan::uniform(&params.family, &cfg);
+    run_cell_plan(ctx, rt, params, hessians, cfg, &plan)
+}
+
+/// One table cell under an explicit per-projection plan.
+pub fn run_cell_plan(
+    ctx: &ExpContext,
+    rt: &XlaRuntime,
+    params: &ModelParams,
+    hessians: &BTreeMap<String, Hessian>,
+    cfg: PipelineConfig,
+    plan: &CompressionPlan,
+) -> Result<(f64, EvalReport)> {
+    let out = CompressionPipeline::new(cfg).run_plan(params, hessians, plan)?;
     let applied = out.model.apply_to(params)?;
     let (wins, items) = if ctx.quick { (12, 32) } else { (30, 64) };
     let rep = evaluate(&dense_engine(rt, &applied)?, wins, items, 1000)?;
@@ -412,6 +427,63 @@ pub fn table11(ctx: &ExpContext) -> Result<()> {
     }
     t.print();
     t.save(&ctx.results, "table11")?;
+    Ok(())
+}
+
+/// Plan-API experiment (ours, beyond the paper): uniform recipes vs the
+/// sensitivity-driven [`BudgetPlanner`] at matched average bits on tl-7s.
+/// The budget rows reuse the uniform rows' measured avg-bits as their
+/// ceilings, so each pair compares equal-size models where only the
+/// per-projection allocation differs.
+pub fn budget(ctx: &ExpContext) -> Result<()> {
+    let rt = ctx.open_runtime()?;
+    let (params, hessians) = ensure_model(ctx, &rt, "tl-7s")?;
+    let fam = params.family.clone();
+    let base = {
+        let mut c = base_cfg(ctx);
+        c.rank = 16;
+        c.lr_bits = 4;
+        c
+    };
+    let mut t = Table::new(
+        "Budget planning — uniform vs per-projection plans (tl-7s, Q e8 + LR 4-bit)",
+        &["Plan", "AvgBits", "Ranks", "QBits", "Wiki-sim", "C4-sim"],
+    );
+    let mut budgets = Vec::new();
+    let uniform_ranks: &[usize] = if ctx.quick { &[16] } else { &[8, 16] };
+    for &rank in uniform_ranks {
+        let mut cfg = base.clone();
+        cfg.rank = rank;
+        let plan = CompressionPlan::uniform(&fam, &cfg);
+        let (bits, rep) = run_cell_plan(ctx, &rt, &params, &hessians, cfg, &plan)?;
+        t.row(vec![
+            format!("uniform r{rank}"),
+            format!("{bits:.3}"),
+            plan.rank_label(),
+            plan.bits_label(),
+            format!("{:.3}", rep.ppl_wiki),
+            format!("{:.3}", rep.ppl_c4),
+        ]);
+        budgets.push(bits);
+        eprintln!("  [cell] uniform r{rank} done ({bits:.3} bits)");
+    }
+    for budget in budgets {
+        let planner = BudgetPlanner::new(budget, base.clone());
+        let plan = planner.plan(&params, &hessians)?;
+        let (ranks, qbits) = (plan.rank_label(), plan.bits_label());
+        let (bits, rep) = run_cell_plan(ctx, &rt, &params, &hessians, base.clone(), &plan)?;
+        t.row(vec![
+            planner.name(),
+            format!("{bits:.3}"),
+            ranks,
+            qbits,
+            format!("{:.3}", rep.ppl_wiki),
+            format!("{:.3}", rep.ppl_c4),
+        ]);
+        eprintln!("  [cell] {} done ({bits:.3} bits)", planner.name());
+    }
+    t.print();
+    t.save(&ctx.results, "budget")?;
     Ok(())
 }
 

@@ -13,7 +13,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use odlri::cli::{Args, HELP};
-use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::coordinator::{
+    BudgetPlanner, CompressionPipeline, CompressionPlan, InitKind, PipelineConfig, Planner,
+};
 use odlri::engine::{self, Engine, NativeEngine, Sampling};
 use odlri::eval;
 use odlri::exp;
@@ -142,30 +144,37 @@ fn load_model_or_init(rt: &Runtime, args: &Args, family: &str) -> Result<ModelPa
     }
 }
 
+/// Load (or pack on the fly) the fused deployment model for `--fused`
+/// commands.
+fn build_fused(rt: &Runtime, args: &Args, family: &str) -> Result<FusedModel> {
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let fam = rt.manifest.family(family)?;
+    let fm = if args.switch("pack-dense") {
+        let params = load_model_or_init(rt, args, family)?;
+        FusedModel::pack_dense(&params, "uniform", 8, 64)?.with_shape(batch, seq)
+    } else {
+        let weights = args.str("weights", &format!("runs/{family}.odf"));
+        // Normalize the container's stored shape to the runtime
+        // manifest's so fused and dense runs score identical windows
+        // under the same scheduler batch cap.
+        FusedModel::load(fam, &PathBuf::from(weights))?.with_shape(batch, seq)
+    };
+    eprintln!(
+        "[engine] fused: {:.2} bits/weight over {} packed projections [{}]",
+        fm.avg_bits(),
+        fm.mats.len(),
+        fm.scheme_summary()
+    );
+    Ok(fm)
+}
+
 /// Build the inference engine every serving command runs through: the
 /// packed fused `(Q+LR)·x` engine (`--fused`, optionally packed on the fly
 /// from dense weights with `--pack-dense`) or the dense native engine.
 fn build_engine(rt: &Runtime, args: &Args, family: &str) -> Result<Box<dyn Engine>> {
     let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
     if args.switch("fused") {
-        let fam = rt.manifest.family(family)?;
-        let fm = if args.switch("pack-dense") {
-            let params = load_model_or_init(rt, args, family)?;
-            FusedModel::pack_dense(&params, "uniform", 8, 64)?.with_shape(batch, seq)
-        } else {
-            let weights = args.str("weights", &format!("runs/{family}.odf"));
-            // Normalize the container's stored shape to the runtime
-            // manifest's so fused and dense runs score identical windows
-            // under the same scheduler batch cap.
-            FusedModel::load(fam, &PathBuf::from(weights))?.with_shape(batch, seq)
-        };
-        eprintln!(
-            "[engine] fused: {:.2} bits/weight over {} packed projections [{}]",
-            fm.avg_bits(),
-            fm.mats.len(),
-            fm.scheme_summary()
-        );
-        Ok(Box::new(fm))
+        Ok(Box::new(build_fused(rt, args, family)?))
     } else {
         let params = if args.switch("pack-dense") {
             load_model_or_init(rt, args, family)?
@@ -228,18 +237,7 @@ fn load_hessians(
 }
 
 fn pipeline_config(args: &Args) -> Result<PipelineConfig> {
-    let init = match args.str("init", "odlri").as_str() {
-        "odlri" => InitKind::Odlri,
-        "caldera" | "zero" => InitKind::Caldera,
-        "lr-first" | "lrapprox" => InitKind::LrFirst,
-        other => {
-            if let Some(k) = other.strip_prefix("odlri-k") {
-                InitKind::OdlriK(k.parse()?)
-            } else {
-                bail!("unknown --init '{other}'")
-            }
-        }
-    };
+    let init = InitKind::parse(&args.str("init", "odlri"))?;
     let workers = {
         let w = args.usize("workers", 0)?;
         if w == 0 {
@@ -274,13 +272,45 @@ fn cmd_compress(args: &Args) -> Result<()> {
         args.str("hessians", &format!("runs/{family}.hess")),
     ))?;
     let cfg = pipeline_config(args)?;
+    let fam = rt.manifest.family(&family)?;
+    // Plan resolution order: --plan file > --budget planner > uniform
+    // recipe from the CLI flags. `label` names the recipe in the summary
+    // line and the default output path, so budget/plan runs do not
+    // masquerade as (or overwrite) uniform ones.
+    let plan_file = args.str("plan", "");
+    let budget = args.f64("budget", 0.0)?;
+    // `!(budget > 0.0)` also catches NaN, which `<= 0.0` would let slip
+    // into the silent uniform fallback.
+    if !args.str("budget", "").is_empty() && !(budget > 0.0 && budget.is_finite()) {
+        bail!("--budget wants a positive finite avg-bits target, got {budget}");
+    }
+    let (plan, label) = if !plan_file.is_empty() {
+        let text = std::fs::read_to_string(&plan_file)
+            .map_err(|e| anyhow::anyhow!("reading plan file {plan_file}: {e}"))?;
+        let plan = CompressionPlan::parse(&text, fam, &cfg)?;
+        eprintln!("[plan] {plan_file}: per-projection plan loaded");
+        (plan, "plan".to_string())
+    } else if budget > 0.0 {
+        let planner = BudgetPlanner::new(budget, cfg.clone());
+        let plan = planner.plan(&params, &hessians)?;
+        eprintln!(
+            "[plan] {}: planned {:.3} avg bits under budget {budget:.3}",
+            planner.name(),
+            plan.avg_bits(fam)?
+        );
+        (plan, planner.name())
+    } else {
+        (CompressionPlan::uniform(fam, &cfg), cfg.init.name())
+    };
+    let rank_label = plan.rank_label();
     let pipe = CompressionPipeline::new(cfg.clone());
-    let out = pipe.run(&params, &hessians)?;
+    let out = pipe.run_plan(&params, &hessians, &plan)?;
+    if !plan.is_uniform() || args.switch("verbose") {
+        out.plan.table(fam)?.print();
+    }
     println!(
-        "compressed {family} [{}] rank={} lr_bits={}: avg_bits={:.3} mean_err={:.4e} in {:.1}s",
-        cfg.init.name(),
-        cfg.rank,
-        cfg.lr_bits,
+        "compressed {family} [{label}] rank={rank_label} lr_bits={}: avg_bits={:.3} mean_err={:.4e} in {:.1}s",
+        plan.lr_bits_label(),
         out.model.avg_bits(),
         out.model.mean_act_err(),
         out.wall_secs
@@ -289,7 +319,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let applied = out.model.apply_to(&params)?;
     let path = PathBuf::from(args.str(
         "out",
-        &format!("runs/{family}.{}.r{}.odw", cfg.init.name(), cfg.rank),
+        &format!("runs/{family}.{label}.r{rank_label}.odw"),
     ));
     applied.save(&path)?;
     println!("wrote {}", path.display());
@@ -316,7 +346,16 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = open_runtime(args)?;
     let family = args.str("family", "tl-7s");
-    let engine = build_engine(&rt, args, &family)?;
+    let engine: Box<dyn Engine> = if args.switch("fused") {
+        // The deployed container documents its (possibly heterogeneous)
+        // per-projection plan; surface it next to the quality numbers.
+        let fm = build_fused(&rt, args, &family)?;
+        let fam = rt.manifest.family(&family)?;
+        CompressionPlan::new(fm.plans.clone(), fam)?.table(fam)?.print();
+        Box::new(fm)
+    } else {
+        build_engine(&rt, args, &family)?
+    };
     let report = eval::evaluate(
         engine.as_ref(),
         args.usize("windows", 40)?,

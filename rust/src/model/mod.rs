@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::MatrixPlan;
 use crate::decompose::avg_bits;
 use crate::lowrank::LrPair;
 use crate::runtime::{FamilySpec, Value};
@@ -220,6 +221,11 @@ pub fn inject_outliers(
 /// Invariant: `q == q_packed.unpack()` bit-for-bit — the packed codes are
 /// the quantizer's own output, not a re-quantization, so the fused serving
 /// path evaluates exactly the decomposition the pipeline optimized.
+///
+/// Every matrix carries its own per-projection recipe and bit bookkeeping
+/// ([`MatrixPlan`], realized rank, Q bits with overhead): model-level
+/// numbers are parameter-weighted aggregates over these, never globals —
+/// plans may differ per projection.
 #[derive(Clone, Debug)]
 pub struct CompressedMatrix {
     /// Dense quantize-dequantized `Q` (original basis).
@@ -230,6 +236,13 @@ pub struct CompressedMatrix {
     pub lr: LrPair,
     pub quant_scale: f32,
     pub final_act_err: f64,
+    /// The recipe this projection was compressed under. `plan.rank` is the
+    /// *requested* rank; [`CompressedMatrix::rank`] reports the realized
+    /// factor width (clamped to the matrix dimensions).
+    pub plan: MatrixPlan,
+    /// This projection's Q bits/weight including scale-metadata overhead
+    /// for its shape and scheme.
+    pub q_bits_overhead: f64,
 }
 
 impl CompressedMatrix {
@@ -237,6 +250,28 @@ impl CompressedMatrix {
     /// [`CompressedMatrix::to_fused`] and never materializes this.
     pub fn reconstruct(&self) -> Matrix {
         self.q.add(&self.lr.product())
+    }
+
+    /// Realized factor rank.
+    pub fn rank(&self) -> usize {
+        self.lr.rank()
+    }
+
+    /// Factor precision this matrix was optimized with.
+    pub fn lr_bits(&self) -> u32 {
+        self.plan.lr_bits
+    }
+
+    /// Paper-style average bits/weight of this projection (realized rank,
+    /// own quantizer overhead).
+    pub fn avg_bits(&self) -> f64 {
+        avg_bits(
+            self.q_packed.rows,
+            self.q_packed.cols,
+            self.rank(),
+            self.q_bits_overhead,
+            self.plan.lr_bits,
+        )
     }
 
     /// Deployment form: the quantizer's native packed codes plus the skinny
@@ -248,14 +283,13 @@ impl CompressedMatrix {
     }
 }
 
-/// Whole-model compression result.
+/// Whole-model compression result. Rank/bit bookkeeping lives on each
+/// [`CompressedMatrix`]; the model only derives parameter-weighted
+/// aggregates.
 #[derive(Clone, Debug)]
 pub struct CompressedModel {
     pub family: FamilySpec,
     pub matrices: BTreeMap<String, CompressedMatrix>,
-    pub rank: usize,
-    pub q_bits_overhead: f64,
-    pub lr_bits: u32,
 }
 
 impl CompressedModel {
@@ -278,22 +312,33 @@ impl CompressedModel {
         Ok(out)
     }
 
-    /// Paper-style average bits/weight over the compressed projections.
-    pub fn avg_bits(&self) -> f64 {
+    /// Parameter-weighted mean over `f` of the compressed projections.
+    fn weighted_mean(&self, f: impl Fn(&CompressedMatrix) -> f64) -> f64 {
         let mut weighted = 0.0;
         let mut total = 0.0;
-        for (name, _) in &self.matrices {
-            let shape = self.family.param_shape(name).expect("projection shape");
-            let (m, n) = (shape[0], shape[1]);
-            let b = avg_bits(m, n, self.rank, self.q_bits_overhead, self.lr_bits);
-            weighted += b * (m * n) as f64;
-            total += (m * n) as f64;
+        for cm in self.matrices.values() {
+            let count = (cm.q_packed.rows * cm.q_packed.cols) as f64;
+            weighted += f(cm) * count;
+            total += count;
         }
         if total == 0.0 {
             0.0
         } else {
             weighted / total
         }
+    }
+
+    /// Paper-style average bits/weight over the compressed projections —
+    /// the parameter-weighted mean of each matrix's own
+    /// [`CompressedMatrix::avg_bits`] (plans may differ per projection).
+    pub fn avg_bits(&self) -> f64 {
+        self.weighted_mean(CompressedMatrix::avg_bits)
+    }
+
+    /// Parameter-weighted mean Q bits/weight including per-scheme scale
+    /// overhead.
+    pub fn q_bits_overhead(&self) -> f64 {
+        self.weighted_mean(|cm| cm.q_bits_overhead)
     }
 
     /// Mean final activation-aware error across matrices.
@@ -401,6 +446,15 @@ mod tests {
         let base = ModelParams::init(&fam, 4);
         let mut rng = Pcg64::new(5, 5);
         let mut matrices = BTreeMap::new();
+        let plan = MatrixPlan {
+            init: crate::coordinator::InitKind::Caldera,
+            rank: 4,
+            lr_bits: 4,
+            q_scheme: "uniform".into(),
+            q_bits: 8,
+            q_group: 16,
+            hadamard: false,
+        };
         for name in &fam.projections {
             let shape = fam.param_shape(name).unwrap();
             let w = Matrix::randn(shape[0], shape[1], 0.1, &mut rng);
@@ -415,15 +469,14 @@ mod tests {
                     lr,
                     quant_scale: 0.1,
                     final_act_err: 0.05,
+                    plan: plan.clone(),
+                    q_bits_overhead: 2.0,
                 },
             );
         }
         let cm = CompressedModel {
             family: fam.clone(),
             matrices,
-            rank: 4,
-            q_bits_overhead: 2.0,
-            lr_bits: 4,
         };
         let applied = cm.apply_to(&base).unwrap();
         // Projections changed, embed untouched.

@@ -12,13 +12,53 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// Global thread budget for matmul (0 = auto from available_parallelism).
 static MATMUL_THREADS: AtomicUsize = AtomicUsize::new(0);
 
-/// Override the matmul thread count (used by benches and the coordinator so
-/// per-matrix jobs don't oversubscribe when the worker pool is already wide).
+/// Count of live [`MatmulSingleThreadScope`]s. While any scope is alive,
+/// matmuls run single-threaded regardless of the configured budget.
+static MATMUL_SINGLE_SCOPES: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the matmul thread count (used by benches and the serving setup).
 pub fn set_matmul_threads(n: usize) {
     MATMUL_THREADS.store(n, Ordering::Relaxed);
 }
 
+/// The configured matmul thread budget (0 = auto). Scoped caps
+/// ([`MatmulSingleThreadScope`]) do NOT show up here — they never touch the
+/// configured value.
+pub fn matmul_threads() -> usize {
+    MATMUL_THREADS.load(Ordering::Relaxed)
+}
+
+/// RAII single-threaded-matmul scope: while any instance is alive, matmuls
+/// skip the thread fan-out. Used by the coordinator so per-matrix jobs do
+/// not oversubscribe when its worker pool is already wide. Counted rather
+/// than save/restore, so overlapping scopes on different threads and early
+/// error returns compose correctly and the configured
+/// [`set_matmul_threads`] value is never clobbered.
+pub struct MatmulSingleThreadScope(());
+
+impl MatmulSingleThreadScope {
+    pub fn enter() -> MatmulSingleThreadScope {
+        MATMUL_SINGLE_SCOPES.fetch_add(1, Ordering::Relaxed);
+        MatmulSingleThreadScope(())
+    }
+}
+
+impl Drop for MatmulSingleThreadScope {
+    fn drop(&mut self) {
+        MATMUL_SINGLE_SCOPES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Number of live single-thread scopes (0 = multithreading available).
+/// Exposed so tests can assert that error paths release their cap.
+pub fn matmul_single_scopes() -> usize {
+    MATMUL_SINGLE_SCOPES.load(Ordering::Relaxed)
+}
+
 fn threads_for(work: usize) -> usize {
+    if MATMUL_SINGLE_SCOPES.load(Ordering::Relaxed) > 0 {
+        return 1;
+    }
     let cap = match MATMUL_THREADS.load(Ordering::Relaxed) {
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         n => n,
@@ -274,6 +314,26 @@ mod tests {
         set_matmul_threads(0);
         assert!(c.max_abs_diff(&c1) < 1e-4);
         assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn single_thread_scopes_count_and_release() {
+        // Lower-bound assertions only: other tests in this binary may hold
+        // their own scopes concurrently, but ours are always included.
+        let a = MatmulSingleThreadScope::enter();
+        assert!(matmul_single_scopes() >= 1);
+        let b = MatmulSingleThreadScope::enter();
+        assert!(matmul_single_scopes() >= 2);
+        drop(b);
+        assert!(matmul_single_scopes() >= 1);
+        drop(a);
+        // A capped matmul still computes the right answer.
+        let _scope = MatmulSingleThreadScope::enter();
+        let mut rng = Pcg64::new(9, 1);
+        let x = Matrix::randn(300, 260, 1.0, &mut rng);
+        let y = Matrix::randn(260, 310, 1.0, &mut rng);
+        let c = matmul(&x, &y);
+        assert!(c.max_abs_diff(&naive(&x, &y)) < 1e-2);
     }
 
     #[test]

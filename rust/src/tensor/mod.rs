@@ -7,7 +7,10 @@
 
 mod matmul;
 
-pub use matmul::{axpy, dotp, matmul, matmul_into, matmul_nt, matmul_tn, set_matmul_threads};
+pub use matmul::{
+    axpy, dotp, matmul, matmul_into, matmul_nt, matmul_single_scopes, matmul_threads,
+    matmul_tn, set_matmul_threads, MatmulSingleThreadScope,
+};
 
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};

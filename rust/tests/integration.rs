@@ -11,7 +11,9 @@
 use std::path::Path;
 
 use odlri::calib::{calibrate, CalibConfig};
-use odlri::coordinator::{CompressionPipeline, InitKind, PipelineConfig};
+use odlri::coordinator::{
+    BudgetPlanner, CompressionPipeline, CompressionPlan, InitKind, PipelineConfig, Planner,
+};
 use odlri::corpus;
 use odlri::engine::NativeEngine;
 use odlri::eval;
@@ -332,6 +334,138 @@ fn compress_then_eval_beats_random_and_tracks_fp32() {
     assert!(
         ppl_fused < ppl_q * 1.1 + 1.0,
         "fused serving diverged: {ppl_fused} vs {ppl_q}"
+    );
+}
+
+#[test]
+fn budget_plan_compress_serves_odf3_end_to_end() {
+    // The full heterogeneous path: train → calibrate → budget-plan →
+    // compress → ODF3 container → fused serving. The budget is a hard
+    // ceiling the reported model bits must respect.
+    let rt = runtime();
+    let mut params = quick_train(&rt, 15);
+    inject_outliers(&mut params, 4, 16.0, 3).unwrap();
+    let hessians = calibrate(
+        &rt,
+        &params,
+        &CalibConfig {
+            batches: 2,
+            seed: 2,
+        },
+    )
+    .unwrap();
+    let base = PipelineConfig {
+        init: InitKind::Odlri,
+        rank: 8,
+        lr_bits: 4,
+        outer_iters: 2,
+        lplr_iters: 2,
+        workers: 4,
+        ..Default::default()
+    };
+    let fam = rt.manifest.family("tl-7s").unwrap();
+    // Budget strictly between the planner's floor (rank 2) and the full
+    // uniform plan (rank 8), so the allocation must discriminate.
+    let lo = CompressionPlan::uniform(
+        fam,
+        &PipelineConfig {
+            rank: 2,
+            ..base.clone()
+        },
+    )
+    .avg_bits(fam)
+    .unwrap();
+    let hi = CompressionPlan::uniform(fam, &base).avg_bits(fam).unwrap();
+    assert!(lo < hi);
+    let budget = 0.5 * (lo + hi);
+    let plan = BudgetPlanner::new(budget, base.clone())
+        .plan(&params, &hessians)
+        .unwrap();
+    assert!(plan.avg_bits(fam).unwrap() <= budget + 1e-9);
+    let (rlo, rhi) = plan.rank_spread();
+    assert!(rlo < rhi, "budget plan should be heterogeneous, got r{rlo}..r{rhi}");
+
+    let out = CompressionPipeline::new(base)
+        .run_plan(&params, &hessians, &plan)
+        .unwrap();
+    assert!(
+        out.model.avg_bits() <= budget + 1e-9,
+        "reported {:.4} bits over budget {budget:.4}",
+        out.model.avg_bits()
+    );
+    let fm = out.model.to_fused(&params).unwrap();
+    let dir = std::env::temp_dir().join("odlri_test_budget_odf");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tl-7s.budget.odf");
+    fm.save(&path).unwrap();
+    let loaded = odlri::fused::FusedModel::load(fam, &path).unwrap();
+    std::fs::remove_file(&path).ok();
+    // Plan metadata survives deployment, heterogeneity intact.
+    assert_eq!(loaded.plans, fm.plans);
+    let ranks: Vec<usize> = loaded.plans.values().map(|p| p.rank).collect();
+    assert!(ranks.iter().any(|r| *r != ranks[0]));
+    // Mixed-precision decode actually serves: perplexity is finite and
+    // tracks the dense reconstruction.
+    let applied = out.model.apply_to(&params).unwrap();
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let dense = NativeEngine::new(&applied, batch, seq).unwrap();
+    let ppl_dense = eval::perplexity(&dense, corpus::Split::WikiSim, 4, 42).unwrap();
+    let ppl_fused = eval::perplexity(&loaded, corpus::Split::WikiSim, 4, 42).unwrap();
+    assert!(ppl_fused.is_finite() && ppl_dense.is_finite());
+    assert!(
+        ppl_fused < ppl_dense * 1.1 + 1.0,
+        "fused heterogeneous serving diverged: {ppl_fused} vs {ppl_dense}"
+    );
+}
+
+#[test]
+fn pipeline_error_restores_matmul_thread_cap() {
+    // The coordinator caps matmuls to one thread while its worker pool is
+    // wide, via a counted RAII scope that never touches the configured
+    // thread budget. An early error return (here: a projection the params
+    // cannot deliver) must release the cap and leave the configured value
+    // untouched — the historical leak left the whole process pinned
+    // single-threaded.
+    let rt = runtime();
+    let mut fam = rt.manifest.family("tl-7s").unwrap().clone();
+    fam.projections.push("layer0.missing".into());
+    let params = ModelParams::init(&fam, 11);
+    let mut hessians = std::collections::BTreeMap::new();
+    for name in &fam.projections {
+        let n = fam
+            .param_shape(name)
+            .map(|s| s[1])
+            .unwrap_or(fam.d_model);
+        hessians.insert(name.clone(), odlri::hessian::Hessian::zeros(n));
+    }
+    odlri::tensor::set_matmul_threads(5);
+    let scopes_before = odlri::tensor::matmul_single_scopes();
+    let pipe = CompressionPipeline::new(PipelineConfig {
+        rank: 2,
+        outer_iters: 1,
+        lplr_iters: 1,
+        workers: 4,
+        ..Default::default()
+    });
+    assert!(pipe.run(&params, &hessians).is_err());
+    assert_eq!(
+        odlri::tensor::matmul_threads(),
+        5,
+        "the pipeline clobbered the configured matmul thread budget"
+    );
+    odlri::tensor::set_matmul_threads(0);
+    // The errored run's scope must have been released. Other tests in this
+    // binary may hold their own scopes concurrently, so poll (bounded)
+    // until the count returns to the baseline; a genuine leak never drains.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while odlri::tensor::matmul_single_scopes() > scopes_before
+        && std::time::Instant::now() < deadline
+    {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert!(
+        odlri::tensor::matmul_single_scopes() <= scopes_before,
+        "early pipeline error leaked a single-thread matmul scope"
     );
 }
 
