@@ -1,162 +1,272 @@
 //! Micro-benchmarks of the Rust compute substrate (the L3 hot paths the
-//! profiler pointed at: matmul, SVD, LDLQ, E8 rounding, FWHT, LPLR) plus
-//! the fused packed `(Q+LR)·x` serving kernels vs the historical
-//! reconstruct-then-matmul path. Output format feeds EXPERIMENTS.md §Perf.
+//! profiler pointed at: matmul, SVD, LDLQ, E8 rounding, FWHT, LPLR), the
+//! fused packed `(Q+LR)·x` serving kernels vs the historical
+//! reconstruct-then-matmul path, and the `decode` group — the word-level
+//! specialized unpackers vs the scalar `BitReader` reference, plus the
+//! fused dequant-dot decode-step kernel vs the blocked panel kernel.
+//!
+//! Usage: `cargo bench --bench bench_kernels -- [--fast] [group-filter]...`
+//! (`--fast` is the CI budget; e.g. `-- --fast decode` runs only the
+//! decode group). Output: human-readable lines for EXPERIMENTS.md §Perf
+//! plus machine-readable `BENCH_kernels.json` (uploaded by CI).
 
-use odlri::benchkit::{group, Bencher};
+use odlri::benchkit::{group, BenchArgs, JsonReport};
 use odlri::fused::FusedQlrMatrix;
 use odlri::hessian::Hessian;
 use odlri::linalg::{svd_jacobi, truncated_svd};
 use odlri::lowrank::{lplr, whitened_svd_lr, LowRankConfig, LrPair};
-use odlri::quant::{E8Lattice, PackedMatrix, Quantizer, UniformQuantizer};
+use odlri::quant::{make_quantizer, E8Lattice, PackedMatrix, Quantizer, UniformQuantizer};
 use odlri::tensor::{matmul, set_matmul_threads, Matrix};
 use odlri::util::rng::Pcg64;
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let mut json = JsonReport::new("kernels");
     let mut rng = Pcg64::new(1, 1);
 
-    group("matmul");
-    for &(m, k, n) in &[(128usize, 128usize, 128usize), (352, 128, 512), (512, 512, 512)] {
-        let a = Matrix::randn(m, k, 1.0, &mut rng);
-        let b = Matrix::randn(k, n, 1.0, &mut rng);
-        set_matmul_threads(1);
-        let s = Bencher::new(&format!("matmul_{m}x{k}x{n}_1t")).fast().run(|| matmul(&a, &b));
-        println!("{}", s.line_throughput(2.0 * (m * k * n) as f64, "flop"));
-        set_matmul_threads(0);
-        let s = Bencher::new(&format!("matmul_{m}x{k}x{n}_mt")).fast().run(|| matmul(&a, &b));
-        println!("{}", s.line_throughput(2.0 * (m * k * n) as f64, "flop"));
-    }
-
-    group("svd");
-    for &(m, n, r) in &[(128usize, 128usize, 16usize), (352, 128, 16), (512, 512, 32)] {
-        let a = Matrix::randn(m, n, 1.0, &mut rng);
-        if m.min(n) <= 128 {
-            let s = Bencher::new(&format!("svd_jacobi_{m}x{n}")).fast().run(|| svd_jacobi(&a));
-            println!("{}", s.line());
+    if args.want("matmul") {
+        group("matmul");
+        for &(m, k, n) in &[(128usize, 128usize, 128usize), (352, 128, 512), (512, 512, 512)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let flops = 2.0 * (m * k * n) as f64;
+            set_matmul_threads(1);
+            let s = args.bencher(&format!("matmul_{m}x{k}x{n}_1t")).run(|| matmul(&a, &b));
+            println!("{}", s.line_throughput(flops, "flop"));
+            json.record_with(&s, Some((flops, "flop")));
+            set_matmul_threads(0);
+            let s = args.bencher(&format!("matmul_{m}x{k}x{n}_mt")).run(|| matmul(&a, &b));
+            println!("{}", s.line_throughput(flops, "flop"));
+            json.record_with(&s, Some((flops, "flop")));
         }
-        let mut r1 = Pcg64::new(2, 2);
-        let s = Bencher::new(&format!("truncated_svd_{m}x{n}_r{r}"))
-            .fast()
-            .run(|| truncated_svd(&a, r, &mut r1));
-        println!("{}", s.line());
     }
 
-    group("quantizers");
+    if args.want("svd") {
+        group("svd");
+        for &(m, n, r) in &[(128usize, 128usize, 16usize), (352, 128, 16), (512, 512, 32)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            if m.min(n) <= 128 {
+                let s = args.bencher(&format!("svd_jacobi_{m}x{n}")).run(|| svd_jacobi(&a));
+                println!("{}", s.line());
+                json.record(&s);
+            }
+            let mut r1 = Pcg64::new(2, 2);
+            let b = args.bencher(&format!("truncated_svd_{m}x{n}_r{r}"));
+            let s = b.run(|| truncated_svd(&a, r, &mut r1));
+            println!("{}", s.line());
+            json.record(&s);
+        }
+    }
+
     let w = Matrix::randn(352, 128, 1.0, &mut rng);
     let e8 = E8Lattice::new(2);
-    let s = Bencher::new("e8_quantize_352x128").fast().run(|| e8.quantize(&w));
-    println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
     let uq = UniformQuantizer::new(2, usize::MAX);
-    let s = Bencher::new("uniform2_quantize_352x128").fast().run(|| uq.quantize(&w));
-    println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
+    if args.want("quantizers") {
+        group("quantizers");
+        let s = args.bencher("e8_quantize_352x128").run(|| e8.quantize(&w));
+        println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
+        json.record_with(&s, Some(((352 * 128) as f64, "weights")));
+        let s = args.bencher("uniform2_quantize_352x128").run(|| uq.quantize(&w));
+        println!("{}", s.line_throughput((352 * 128) as f64, "weights"));
+        json.record_with(&s, Some(((352 * 128) as f64, "weights")));
+    }
 
-    group("ldlq");
     let x = Matrix::randn(128, 512, 1.0, &mut rng);
-    let h = Hessian::from_acts(&x).regularized(1e-4);
-    let s = Bencher::new("ldlq_e8_352x128").fast().run(|| e8.quantize_with_hessian(&w, &h));
-    println!("{}", s.line());
-    let s = Bencher::new("ldlq_uniform_352x128").fast().run(|| uq.quantize_with_hessian(&w, &h));
-    println!("{}", s.line());
+    if args.want("ldlq") {
+        group("ldlq");
+        let h = Hessian::from_acts(&x).regularized(1e-4);
+        let s = args.bencher("ldlq_e8_352x128").run(|| e8.quantize_with_hessian(&w, &h));
+        println!("{}", s.line());
+        json.record(&s);
+        let s = args.bencher("ldlq_uniform_352x128").run(|| uq.quantize_with_hessian(&w, &h));
+        println!("{}", s.line());
+        json.record(&s);
+    }
 
-    group("fwht");
-    let mut wt = Matrix::randn(352, 128, 1.0, &mut rng);
-    let s = Bencher::new("fwht_rows_352x128").fast().run(|| {
-        odlri::hadamard::fwht_rows(&mut wt);
-    });
-    println!("{}", s.line_throughput((352 * 128) as f64, "elem"));
+    if args.want("fwht") {
+        group("fwht");
+        let mut wt = Matrix::randn(352, 128, 1.0, &mut rng);
+        let s = args.bencher("fwht_rows_352x128").run(|| {
+            odlri::hadamard::fwht_rows(&mut wt);
+        });
+        println!("{}", s.line_throughput((352 * 128) as f64, "elem"));
+        json.record_with(&s, Some(((352 * 128) as f64, "elem")));
+    }
 
-    group("lowrank");
-    let mut r2 = Pcg64::new(3, 3);
-    let s = Bencher::new("whitened_svd_352x128_r16")
-        .fast()
-        .run(|| whitened_svd_lr(&w, &h, 16, &mut r2));
-    println!("{}", s.line());
-    let cfg = LowRankConfig {
+    let lr_cfg = LowRankConfig {
         rank: 16,
         lr_bits: 4,
         lplr_iters: 10,
         reg: 1e-4,
     };
-    let mut r3 = Pcg64::new(4, 4);
-    let init = whitened_svd_lr(&w, &h, 16, &mut r3);
-    let s = Bencher::new("lplr10_352x128_r16")
-        .fast()
-        .run(|| lplr(&w, &h, init.clone(), &cfg));
-    println!("{}", s.line());
+    if args.want("lowrank") {
+        group("lowrank");
+        let h = Hessian::from_acts(&x).regularized(1e-4);
+        let mut r2 = Pcg64::new(3, 3);
+        let b = args.bencher("whitened_svd_352x128_r16");
+        let s = b.run(|| whitened_svd_lr(&w, &h, 16, &mut r2));
+        println!("{}", s.line());
+        json.record(&s);
+        let mut r3 = Pcg64::new(4, 4);
+        let init = whitened_svd_lr(&w, &h, 16, &mut r3);
+        let b = args.bencher("lplr10_352x128_r16");
+        let s = b.run(|| lplr(&w, &h, init.clone(), &lr_cfg));
+        println!("{}", s.line());
+        json.record(&s);
+    }
 
-    group("joint-iteration (1 outer iter, 352x128)");
-    let hess = Hessian::from_acts(&x);
-    let quant = E8Lattice::new(2);
-    let jc = odlri::decompose::JointConfig {
-        outer_iters: 1,
-        lowrank: cfg,
-        ..Default::default()
-    };
-    let opt = odlri::decompose::JointOptimizer::new(&quant, jc);
-    let s = Bencher::new("joint_1iter_odlri").fast().run(|| {
-        opt.run(&w, &hess, &odlri::decompose::Initializer::Odlri { k: 4 })
-    });
-    println!("{}", s.line());
+    if args.want("joint") {
+        group("joint-iteration (1 outer iter, 352x128)");
+        let hess = Hessian::from_acts(&x);
+        let quant = E8Lattice::new(2);
+        let jc = odlri::decompose::JointConfig {
+            outer_iters: 1,
+            lowrank: lr_cfg,
+            ..Default::default()
+        };
+        let opt = odlri::decompose::JointOptimizer::new(&quant, jc);
+        let s = args.bencher("joint_1iter_odlri").run(|| {
+            opt.run(&w, &hess, &odlri::decompose::Initializer::Odlri { k: 4 })
+        });
+        println!("{}", s.line());
+        json.record(&s);
+    }
 
-    group("fused (Q+LR)·x vs reconstruct-then-matmul");
-    // Serving-shaped problem: a 512×256 projection, rank-16 correction,
-    // X = (in_dim, batch) activations. The fused kernel dequantizes Q on
-    // the fly and applies L·R as two skinny matmuls; the reconstruct path
-    // (what the eval stack used to do per matrix) densifies Q + L·R first.
+    // Serving-shaped problem shared by the fused groups: a 512×256
+    // projection, rank-16 correction.
     let (m, n, rank) = (512usize, 256usize, 16usize);
     let wq = Matrix::randn(m, n, 1.0, &mut rng);
     let lr = LrPair {
         l: Matrix::randn(m, rank, 0.05, &mut rng),
         r: Matrix::randn(rank, n, 0.05, &mut rng),
     };
-    for &bits in &[2u32, 4] {
-        let packed = PackedMatrix::pack(&wq, bits, 64);
-        let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
-        for &batch in &[1usize, 8, 32, 96] {
-            let x = Matrix::randn(n, batch, 1.0, &mut rng);
-            let flops = 2.0 * (m * n * batch) as f64;
-            let s = Bencher::new(&format!("reconstruct_{m}x{n}_q{bits}b_x{batch}"))
-                .fast()
-                .run(|| {
+
+    if args.want("fused") {
+        group("fused (Q+LR)·x vs reconstruct-then-matmul");
+        // The fused kernel dequantizes Q on the fly and applies L·R as two
+        // skinny matmuls; the reconstruct path (what the eval stack used to
+        // do per matrix) densifies Q + L·R first.
+        for &bits in &[2u32, 4] {
+            let packed = PackedMatrix::pack(&wq, bits, 64);
+            let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
+            for &batch in &[1usize, 8, 32, 96] {
+                let x = Matrix::randn(n, batch, 1.0, &mut rng);
+                let flops = 2.0 * (m * n * batch) as f64;
+                let b = args.bencher(&format!("reconstruct_{m}x{n}_q{bits}b_x{batch}"));
+                let s = b.run(|| {
                     let dense = fm.q.unpack().add(&fm.l.dot(&fm.r));
                     dense.dot(&x)
                 });
-            println!("{}", s.line_throughput(flops, "flop"));
-            let s = Bencher::new(&format!("fused_{m}x{n}_q{bits}b_x{batch}"))
-                .fast()
-                .run(|| fm.matmul(&x));
-            println!("{}", s.line_throughput(flops, "flop"));
+                println!("{}", s.line_throughput(flops, "flop"));
+                json.record_with(&s, Some((flops, "flop")));
+                let b = args.bencher(&format!("fused_{m}x{n}_q{bits}b_x{batch}"));
+                let s = b.run(|| fm.matmul(&x));
+                println!("{}", s.line_throughput(flops, "flop"));
+                json.record_with(&s, Some((flops, "flop")));
+            }
+        }
+
+        group("fused (Q+LR)·x scheme-native decode (e8 / mxint / rotated)");
+        // The v2 container serves every quantizer's own codes; these cases
+        // track the decode cost of the non-uniform layouts and of folding
+        // the Hadamard rotation into the activations.
+        let mut variants: Vec<(String, FusedQlrMatrix)> = Vec::new();
+        for scheme in ["e8", "mxint"] {
+            let quant = make_quantizer(scheme, 2, 64).expect("quantizer");
+            let qout = quant.quantize(&wq);
+            let fm = FusedQlrMatrix::new(qout.packed, lr.clone()).expect("fused build");
+            variants.push((scheme.to_string(), fm));
+        }
+        {
+            let inc = odlri::hadamard::Incoherence::new(m, n, &mut rng);
+            let qout = UniformQuantizer::new(2, 64).quantize(&inc.apply(&wq));
+            let packed = qout
+                .packed
+                .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
+            let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
+            variants.push(("uniform_rot".to_string(), fm));
+        }
+        for (name, fm) in &variants {
+            for &batch in &[8usize, 96] {
+                let x = Matrix::randn(n, batch, 1.0, &mut rng);
+                let flops = 2.0 * (m * n * batch) as f64;
+                let b = args.bencher(&format!("fused_{m}x{n}_{name}_x{batch}"));
+                let s = b.run(|| fm.matmul(&x));
+                println!("{}", s.line_throughput(flops, "flop"));
+                json.record_with(&s, Some((flops, "flop")));
+            }
         }
     }
 
-    group("fused (Q+LR)·x scheme-native decode (e8 / mxint / rotated)");
-    // The v2 container serves every quantizer's own codes; these cases
-    // track the decode cost of the non-uniform layouts and of folding the
-    // Hadamard rotation into the activations.
-    let mut variants: Vec<(String, FusedQlrMatrix)> = Vec::new();
-    for scheme in ["e8", "mxint"] {
-        let quant = odlri::quant::make_quantizer(scheme, 2, 64).expect("quantizer");
-        let qout = quant.quantize(&wq);
-        let fm = FusedQlrMatrix::new(qout.packed, lr.clone()).expect("fused build");
-        variants.push((scheme.to_string(), fm));
-    }
-    {
-        let inc = odlri::hadamard::Incoherence::new(m, n, &mut rng);
-        let qout = UniformQuantizer::new(2, 64).quantize(&inc.apply(&wq));
-        let packed = qout
-            .packed
-            .with_rotation(inc.left_signs.clone(), inc.right_signs.clone());
-        let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
-        variants.push(("uniform_rot".to_string(), fm));
-    }
-    for (name, fm) in &variants {
-        for &batch in &[8usize, 96] {
-            let x = Matrix::randn(n, batch, 1.0, &mut rng);
-            let flops = 2.0 * (m * n * batch) as f64;
-            let s = Bencher::new(&format!("fused_{m}x{n}_{name}_x{batch}"))
-                .fast()
-                .run(|| fm.matmul(&x));
-            println!("{}", s.line_throughput(flops, "flop"));
+    if args.want("decode") {
+        group("decode: specialized word-level unpackers vs scalar BitReader reference (1 thread)");
+        // Full-matrix row decode per scheme × stored bit-width. Both sides
+        // produce bit-identical f32 rows (property-tested); the benchmark
+        // is rows/s and packed GB/s over the serialized Q payload.
+        let (dm, dn) = (512usize, 1024usize);
+        let wd = Matrix::randn(dm, dn, 1.0, &mut rng);
+        let mut cases: Vec<(String, PackedMatrix)> = Vec::new();
+        for &bits in &[2u32, 3, 4, 8] {
+            cases.push((format!("uniform{bits}b"), PackedMatrix::pack(&wd, bits, 64)));
         }
+        for &bits in &[2u32, 4] {
+            // E8 stores bits+2 wide codes: 4- and 6-bit stored widths.
+            let quant = make_quantizer("e8", bits, 64).expect("quantizer");
+            cases.push((format!("e8_{bits}b"), quant.quantize(&wd).packed));
+        }
+        let quant = make_quantizer("mxint", 4, 32).expect("quantizer");
+        cases.push(("mxint4b".to_string(), quant.quantize(&wd).packed));
+        let mut row = vec![0f32; dn];
+        let mut codes: Vec<i32> = Vec::new();
+        for (name, p) in &cases {
+            let bytes = p.byte_size() as f64;
+            for kind in ["ref", "fast"] {
+                let specialized = kind == "fast";
+                let s = args.bencher(&format!("decode_{kind}_{name}_{dm}x{dn}")).run(|| {
+                    let mut acc = 0f32;
+                    for i in 0..dm {
+                        if specialized {
+                            p.dequant_row_fast_into(i, &mut codes, &mut row);
+                        } else {
+                            p.dequant_row_into(i, &mut row);
+                        }
+                        acc += row[0] + row[dn - 1];
+                    }
+                    acc
+                });
+                println!(
+                    "{}  [{:.2} GB/s packed]",
+                    s.line_throughput(dm as f64, "rows"),
+                    bytes / s.median_s / 1e9
+                );
+                json.record_with(&s, Some((dm as f64, "rows")));
+            }
+        }
+
+        group("decode-step kernel: fused dequant-dot vs panel (t activation rows)");
+        // The per-token generation hot path: decode_matmul_t (group-hoisted
+        // fused dequant-dot, no panel) vs matmul_t (decode panel +
+        // matmul_nt) at decode-regime row counts.
+        for &bits in &[2u32, 4] {
+            let packed = PackedMatrix::pack(&wq, bits, 64);
+            let fm = FusedQlrMatrix::new(packed, lr.clone()).expect("fused build");
+            for &t in &[1usize, 4] {
+                let x = Matrix::randn(t, n, 1.0, &mut rng);
+                let flops = 2.0 * (m * n * t) as f64;
+                let b = args.bencher(&format!("decode_step_panel_q{bits}b_t{t}"));
+                let s = b.run(|| fm.matmul_t(&x));
+                println!("{}", s.line_throughput(flops, "flop"));
+                json.record_with(&s, Some((flops, "flop")));
+                let b = args.bencher(&format!("decode_step_fused_q{bits}b_t{t}"));
+                let s = b.run(|| fm.decode_matmul_t(&x));
+                println!("{}", s.line_throughput(flops, "flop"));
+                json.record_with(&s, Some((flops, "flop")));
+            }
+        }
+    }
+
+    if !json.is_empty() {
+        let path = json.write(std::path::Path::new(".")).expect("write BENCH_kernels.json");
+        println!("\nwrote {}", path.display());
     }
 }

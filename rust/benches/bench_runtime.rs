@@ -1,10 +1,16 @@
 //! Runtime benches: artifact dispatch latency, dense vs fused-kernel
 //! forward, packed-engine forward, KV-cached incremental decode vs the
-//! quadratic full re-forward it replaces, train-step throughput. Runs on
-//! the XLA backend when artifacts are present (and the `xla` feature is
-//! on), otherwise on the native engine — no setup required.
+//! quadratic full re-forward it replaces (with decode weight GB/s for the
+//! packed engine), train-step throughput. Runs on the XLA backend when
+//! artifacts are present (and the `xla` feature is on), otherwise on the
+//! native engine — no setup required.
+//!
+//! Usage: `cargo bench --bench bench_runtime -- [--fast] [group-filter]...`
+//! (`--fast` is the CI budget; filters select groups by substring:
+//! dispatch / forward / fused / packed / decode / train). Results also
+//! land in machine-readable `BENCH_runtime.json`.
 
-use odlri::benchkit::{group, Bencher};
+use odlri::benchkit::{group, BenchArgs, Bencher, JsonReport};
 use odlri::corpus;
 use odlri::engine::{argmax, Engine, NativeEngine};
 use odlri::fused::FusedModel;
@@ -13,7 +19,19 @@ use odlri::runtime::{Runtime, Value};
 use odlri::tensor::Matrix;
 use odlri::util::rng::Pcg64;
 
+/// `--fast` (CI) caps every case at a small budget; otherwise keep the
+/// historical per-group iteration shapes (default 1s target).
+fn bencher(args: &BenchArgs, name: &str, min_iters: usize, max_iters: usize) -> Bencher {
+    if args.fast {
+        Bencher::new(name).iters(2, 4).budget(0.08)
+    } else {
+        Bencher::new(name).iters(min_iters, max_iters)
+    }
+}
+
 fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let mut json = JsonReport::new("runtime");
     let dir = odlri::runtime::default_artifact_dir();
     let rt = Runtime::open(&dir)?;
     println!(
@@ -23,137 +41,176 @@ fn main() -> anyhow::Result<()> {
     let fam = rt.manifest.family("tl-7s")?.clone();
     let (b, s) = (rt.manifest.batch, rt.manifest.seq);
     let mut rng = Pcg64::new(1, 1);
-
-    group("kernel dispatch");
-    rt.warm("kernel_fused_qlr")?;
-    let q = Matrix::randn(128, 128, 1.0, &mut rng);
-    let l = Matrix::randn(128, 32, 1.0, &mut rng);
-    let r = Matrix::randn(32, 128, 1.0, &mut rng);
-    let x = Matrix::randn(128, 16, 1.0, &mut rng);
-    let stats = Bencher::new("kernel_fused_qlr_128").fast().run(|| {
-        rt.exec(
-            "kernel_fused_qlr",
-            &[
-                Value::from_matrix(&q),
-                Value::from_matrix(&l),
-                Value::from_matrix(&r),
-                Value::from_matrix(&x),
-            ],
-        )
-        .unwrap()
-    });
-    println!("{}", stats.line());
-    // Direct call without the Value boundary (dispatch overhead view).
-    let stats = Bencher::new("rust_fused_equivalent")
-        .fast()
-        .run(|| odlri::fused::qlr_matmul(&q, &l, &r, &x));
-    println!("{}", stats.line());
-
-    group("model forward (B=8, S=96)");
+    // Shared fixtures (cheap to build; used by several groups).
     let params = ModelParams::init(&fam, 2);
     let data = corpus::generate(corpus::Split::WikiSim, 100_000, 1);
-    rt.warm("fwd_tl-7s")?;
     let toks = corpus::sample_batch(&data, b, s, &mut rng);
-    let stats = Bencher::new("fwd_tl-7s").iters(3, 20).run(|| {
-        let mut inputs = params.values.clone();
-        inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
-        rt.exec("fwd_tl-7s", &inputs).unwrap()
-    });
-    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
 
-    group("fused deploy forward (every projection via the fused kernel)");
-    rt.warm("fwd_fused_tl-7s")?;
-    let rank = rt.manifest.fused_rank;
-    let mut fused_inputs = params.values.clone();
-    for name in &fam.projections {
-        let w = params.get_matrix(name)?;
-        fused_inputs.push(Value::from_matrix(&w));
-        fused_inputs.push(Value::from_matrix(&Matrix::zeros(w.rows(), rank)));
-        fused_inputs.push(Value::from_matrix(&Matrix::zeros(rank, w.cols())));
-    }
-    fused_inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
-    let stats = Bencher::new("fwd_fused_tl-7s").iters(3, 20).run(|| {
-        rt.exec("fwd_fused_tl-7s", &fused_inputs).unwrap()
-    });
-    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
-
-    group("packed fused engine (bit-packed Q, dequant on the fly)");
-    for bits in [2u32, 8] {
-        let fm = FusedModel::pack_dense(&params, "uniform", bits, 64)?;
-        let stats = Bencher::new(&format!("fused_model_q{bits}b"))
-            .iters(3, 20)
-            .run(|| fm.forward(&toks, b, s).unwrap());
-        println!(
-            "{}  [{:.2} bits/weight]",
-            stats.line_throughput((b * s) as f64, "tok"),
-            fm.avg_bits()
-        );
+    if args.want("dispatch") {
+        group("kernel dispatch");
+        rt.warm("kernel_fused_qlr")?;
+        let q = Matrix::randn(128, 128, 1.0, &mut rng);
+        let l = Matrix::randn(128, 32, 1.0, &mut rng);
+        let r = Matrix::randn(32, 128, 1.0, &mut rng);
+        let x = Matrix::randn(128, 16, 1.0, &mut rng);
+        let stats = args.bencher("kernel_fused_qlr_128").run(|| {
+            rt.exec(
+                "kernel_fused_qlr",
+                &[
+                    Value::from_matrix(&q),
+                    Value::from_matrix(&l),
+                    Value::from_matrix(&r),
+                    Value::from_matrix(&x),
+                ],
+            )
+            .unwrap()
+        });
+        println!("{}", stats.line());
+        json.record(&stats);
+        // Direct call without the Value boundary (dispatch overhead view).
+        let bench = args.bencher("rust_fused_equivalent");
+        let stats = bench.run(|| odlri::fused::qlr_matmul(&q, &l, &r, &x));
+        println!("{}", stats.line());
+        json.record(&stats);
     }
 
-    group("incremental decode vs full re-forward (per-token cost by context length)");
-    // KV-cached decode cost per token should stay roughly FLAT in the
-    // generated length; re-running the full sequence per token (what the
-    // old fixed-shape Forward API forced) grows linearly per token —
-    // quadratic over a whole generation.
-    let prompt: Vec<i32> = toks[..16].to_vec();
-    for engine_kind in ["dense", "fused-2b"] {
-        let engine: Box<dyn Engine> = match engine_kind {
-            "dense" => Box::new(NativeEngine::new(&params, b, s)?.with_max_context(512)),
-            _ => Box::new(
-                FusedModel::pack_dense(&params, "uniform", 2, 64)?.with_shape(b, 512),
-            ),
-        };
-        for target_len in [48usize, 96, 192] {
-            let (mut session, logits) = engine.prefill(&prompt)?;
-            let mut next = argmax(logits.row(logits.rows() - 1)) as i32;
-            // Steady-state decode: mean of the last 8 steps at this length.
-            let mut tail_s = 0f64;
-            let mut tail_n = 0usize;
-            while session.tokens.len() < target_len {
-                let t0 = std::time::Instant::now();
-                let lg = engine.decode_step(&mut [&mut session], &[next])?;
-                let dt = t0.elapsed().as_secs_f64();
-                if session.tokens.len() + 8 >= target_len {
-                    tail_s += dt;
-                    tail_n += 1;
-                }
-                next = argmax(lg.row(0)) as i32;
-            }
-            let t0 = std::time::Instant::now();
-            let _ = engine.forward_batch(&session.tokens, 1, session.tokens.len())?;
-            let reforward_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if args.want("forward") {
+        group("model forward (B=8, S=96)");
+        rt.warm("fwd_tl-7s")?;
+        let stats = bencher(&args, "fwd_tl-7s", 3, 20).run(|| {
+            let mut inputs = params.values.clone();
+            inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+            rt.exec("fwd_tl-7s", &inputs).unwrap()
+        });
+        println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+        json.record_with(&stats, Some(((b * s) as f64, "tok")));
+    }
+
+    if args.want("fused") {
+        group("fused deploy forward (every projection via the fused kernel)");
+        rt.warm("fwd_fused_tl-7s")?;
+        let rank = rt.manifest.fused_rank;
+        let mut fused_inputs = params.values.clone();
+        for name in &fam.projections {
+            let w = params.get_matrix(name)?;
+            fused_inputs.push(Value::from_matrix(&w));
+            fused_inputs.push(Value::from_matrix(&Matrix::zeros(w.rows(), rank)));
+            fused_inputs.push(Value::from_matrix(&Matrix::zeros(rank, w.cols())));
+        }
+        fused_inputs.push(Value::from_vec_i32(vec![b, s], toks.clone()));
+        let stats = bencher(&args, "fwd_fused_tl-7s", 3, 20).run(|| {
+            rt.exec("fwd_fused_tl-7s", &fused_inputs).unwrap()
+        });
+        println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+        json.record_with(&stats, Some(((b * s) as f64, "tok")));
+    }
+
+    if args.want("packed") {
+        group("packed fused engine (bit-packed Q, dequant on the fly)");
+        for bits in [2u32, 8] {
+            let fm = FusedModel::pack_dense(&params, "uniform", bits, 64)?;
+            let stats = bencher(&args, &format!("fused_model_q{bits}b"), 3, 20)
+                .run(|| fm.forward(&toks, b, s).unwrap());
             println!(
-                "{engine_kind:>8} ctx {target_len:>4}: kv-decode {:.3} ms/tok   \
-                 full re-forward {:.3} ms/tok",
-                tail_s * 1e3 / tail_n.max(1) as f64,
-                reforward_ms
+                "{}  [{:.2} bits/weight]",
+                stats.line_throughput((b * s) as f64, "tok"),
+                fm.avg_bits()
             );
+            json.record_with(&stats, Some(((b * s) as f64, "tok")));
         }
     }
 
-    group("train step (B=8, S=97)");
-    rt.warm("train_tl-7s")?;
-    let n = params.values.len();
-    let zeros: Vec<Value> = params
-        .values
-        .iter()
-        .map(|v| {
-            Value::from_vec_f32(
-                v.shape().to_vec(),
-                vec![0.0; v.shape().iter().product()],
-            )
-        })
-        .collect();
-    let ttoks = corpus::sample_batch(&data, b, s + 1, &mut rng);
-    let stats = Bencher::new("train_step_tl-7s").iters(3, 10).run(|| {
-        let mut inputs = Vec::with_capacity(3 * n + 2);
-        inputs.extend(params.values.iter().cloned());
-        inputs.extend(zeros.iter().cloned());
-        inputs.extend(zeros.iter().cloned());
-        inputs.push(Value::scalar_f32(0.0));
-        inputs.push(Value::from_vec_i32(vec![b, s + 1], ttoks.clone()));
-        rt.exec("train_tl-7s", &inputs).unwrap()
-    });
-    println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+    if args.want("decode") {
+        group("incremental decode vs full re-forward (per-token cost by context length)");
+        // KV-cached decode cost per token should stay roughly FLAT in the
+        // generated length; re-running the full sequence per token (what
+        // the old fixed-shape Forward API forced) grows linearly per token
+        // — quadratic over a whole generation.
+        let prompt: Vec<i32> = toks[..16].to_vec();
+        let target_lens: &[usize] = if args.fast { &[48, 96] } else { &[48, 96, 192] };
+        for engine_kind in ["dense", "fused-2b"] {
+            let engine: Box<dyn Engine> = match engine_kind {
+                "dense" => Box::new(NativeEngine::new(&params, b, s)?.with_max_context(512)),
+                _ => Box::new(
+                    FusedModel::pack_dense(&params, "uniform", 2, 64)?.with_shape(b, 512),
+                ),
+            };
+            for &target_len in target_lens {
+                let (mut session, logits) = engine.prefill(&prompt)?;
+                let mut next = argmax(logits.row(logits.rows() - 1)) as i32;
+                // Steady-state decode: mean of the last 8 steps at this
+                // length.
+                let mut tail_s = 0f64;
+                let mut tail_n = 0usize;
+                while session.tokens.len() < target_len {
+                    let t0 = std::time::Instant::now();
+                    let lg = engine.decode_step(&mut [&mut session], &[next])?;
+                    let dt = t0.elapsed().as_secs_f64();
+                    if session.tokens.len() + 8 >= target_len {
+                        tail_s += dt;
+                        tail_n += 1;
+                    }
+                    next = argmax(lg.row(0)) as i32;
+                }
+                let t0 = std::time::Instant::now();
+                let _ = engine.forward_batch(&session.tokens, 1, session.tokens.len())?;
+                let reforward_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let tok_s = tail_s / tail_n.max(1) as f64;
+                // Packed engines also report decode weight throughput: the
+                // whole packed Q payload is re-decoded every step, so GB/s
+                // = q_bytes / step_seconds — the number kernel wins move.
+                let gbs = match engine.decode_weight_bytes() {
+                    Some(qb) if tok_s > 0.0 => {
+                        format!("   [{:.2} GB/s packed Q]", qb as f64 / tok_s / 1e9)
+                    }
+                    _ => String::new(),
+                };
+                println!(
+                    "{engine_kind:>8} ctx {target_len:>4}: kv-decode {:.3} ms/tok   \
+                     full re-forward {:.3} ms/tok{gbs}",
+                    tok_s * 1e3,
+                    reforward_ms
+                );
+                // One decode step = one token, so throughput derives from
+                // the per-iteration time.
+                let thr = if tok_s > 0.0 { Some((1.0, "tok")) } else { None };
+                let bench_name = format!("kvdecode_{engine_kind}_ctx{target_len}");
+                json.record_value(&bench_name, tok_s * 1e9, thr);
+            }
+        }
+    }
+
+    if args.want("train") {
+        group("train step (B=8, S=97)");
+        rt.warm("train_tl-7s")?;
+        let n = params.values.len();
+        let zeros: Vec<Value> = params
+            .values
+            .iter()
+            .map(|v| {
+                Value::from_vec_f32(
+                    v.shape().to_vec(),
+                    vec![0.0; v.shape().iter().product()],
+                )
+            })
+            .collect();
+        let ttoks = corpus::sample_batch(&data, b, s + 1, &mut rng);
+        let stats = bencher(&args, "train_step_tl-7s", 3, 10).run(|| {
+            let mut inputs = Vec::with_capacity(3 * n + 2);
+            inputs.extend(params.values.iter().cloned());
+            inputs.extend(zeros.iter().cloned());
+            inputs.extend(zeros.iter().cloned());
+            inputs.push(Value::scalar_f32(0.0));
+            inputs.push(Value::from_vec_i32(vec![b, s + 1], ttoks.clone()));
+            rt.exec("train_tl-7s", &inputs).unwrap()
+        });
+        println!("{}", stats.line_throughput((b * s) as f64, "tok"));
+        json.record_with(&stats, Some(((b * s) as f64, "tok")));
+    }
+
+    if !json.is_empty() {
+        let path = json.write(std::path::Path::new("."))?;
+        println!("\nwrote {}", path.display());
+    }
     Ok(())
 }

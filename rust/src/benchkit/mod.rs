@@ -1,9 +1,16 @@
 //! Timing harness for `harness = false` bench targets (criterion is not in
 //! the offline vendor set, so we provide the subset we need: warmup,
-//! repeated timed runs, median/mean/p95, throughput, and a stable one-line
-//! report format consumed by EXPERIMENTS.md §Perf).
+//! repeated timed runs, median/mean/p95, throughput, a stable one-line
+//! report format consumed by EXPERIMENTS.md §Perf, and a machine-readable
+//! JSON sink ([`JsonReport`] → `BENCH_<label>.json`) so the repo keeps a
+//! perf trajectory across PRs. Bench binaries share one argument grammar
+//! ([`BenchArgs`]): `--fast` shrinks every case's time budget (the CI
+//! mode), positional args filter groups by substring.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
@@ -71,6 +78,12 @@ impl Bencher {
         self
     }
 
+    /// Override the per-case wall-time budget (the `--fast` CI mode).
+    pub fn budget(mut self, target_secs: f64) -> Bencher {
+        self.target_secs = target_secs;
+        self
+    }
+
     /// Run the closure repeatedly; uses the closure's return value as a
     /// black-box sink so the optimizer cannot elide the work.
     pub fn run<T>(&self, mut f: impl FnMut() -> T) -> BenchStats {
@@ -108,6 +121,116 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Shared CLI grammar for the `harness = false` bench binaries:
+/// `cargo bench --bench bench_kernels -- [--fast] [group-filter]...`.
+pub struct BenchArgs {
+    /// CI mode: shrink each case's time budget so a full group finishes in
+    /// seconds rather than minutes.
+    pub fast: bool,
+    filters: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> BenchArgs {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        BenchArgs {
+            fast: argv.iter().any(|a| a == "--fast"),
+            filters: argv.into_iter().filter(|a| !a.starts_with("--")).collect(),
+        }
+    }
+
+    /// Should a group with this name run? (no filters ⇒ everything runs)
+    pub fn want(&self, group: &str) -> bool {
+        self.filters.is_empty() || self.filters.iter().any(|f| group.contains(f.as_str()))
+    }
+
+    /// A [`Bencher`] honoring the `--fast` budget.
+    pub fn bencher(&self, name: &str) -> Bencher {
+        if self.fast {
+            Bencher::new(name).iters(2, 12).budget(0.08)
+        } else {
+            Bencher::new(name).fast()
+        }
+    }
+}
+
+/// Machine-readable bench sink: collects one entry per benchmark next to
+/// the printed human-readable lines and writes `BENCH_<label>.json`, so
+/// kernel work leaves a perf trajectory (CI runs the decode group in
+/// `--fast` mode and uploads the file as an artifact).
+pub struct JsonReport {
+    label: String,
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(label: &str) -> JsonReport {
+        JsonReport {
+            label: label.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, s: &BenchStats) {
+        self.record_with(s, None);
+    }
+
+    /// Record a benchmark with an optional `(items per iteration, unit)`
+    /// throughput annotation (reported at the median, like the printed
+    /// lines).
+    pub fn record_with(&mut self, s: &BenchStats, throughput: Option<(f64, &str)>) {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(s.name.clone()))
+            .set("iters", Json::Num(s.iters as f64))
+            .set("ns_per_iter", Json::Num(s.median_s * 1e9))
+            .set("mean_ns", Json::Num(s.mean_s * 1e9))
+            .set("min_ns", Json::Num(s.min_s * 1e9))
+            .set("p95_ns", Json::Num(s.p95_s * 1e9));
+        if let Some((items, unit)) = throughput {
+            let mut t = Json::obj();
+            t.set("unit", Json::Str(unit.to_string()))
+                .set("per_sec", Json::Num(items / s.median_s.max(1e-12)));
+            e.set("throughput", t);
+        }
+        self.entries.push(e);
+    }
+
+    /// Record a timing measured outside a [`Bencher`] run (e.g. the
+    /// per-token decode table). `throughput` has the same meaning as in
+    /// [`JsonReport::record_with`] — `(items per iteration, unit)`, with
+    /// the rate derived from `ns_per_iter` — so the two entry points
+    /// cannot silently disagree on units.
+    pub fn record_value(&mut self, name: &str, ns_per_iter: f64, throughput: Option<(f64, &str)>) {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(name.to_string()))
+            .set("ns_per_iter", Json::Num(ns_per_iter));
+        if let Some((items, unit)) = throughput {
+            let mut t = Json::obj();
+            t.set("unit", Json::Str(unit.to_string()))
+                .set("per_sec", Json::Num(items / (ns_per_iter * 1e-9).max(1e-15)));
+            e.set("throughput", t);
+        }
+        self.entries.push(e);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Write `BENCH_<label>.json` into `dir`, returning the path.
+    pub fn write(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let generated_by = format!("cargo bench --bench bench_{}", self.label);
+        let mut root = Json::obj();
+        root.set("bench", Json::Str(self.label.clone()));
+        root.set("schema", Json::Num(1.0));
+        root.set("generated_by", Json::Str(generated_by));
+        root.set("entries", Json::Arr(self.entries.clone()));
+        let path = dir.join(format!("BENCH_{}.json", self.label));
+        std::fs::write(&path, format!("{root}\n"))?;
+        Ok(path)
+    }
+}
+
 /// Group header for bench output.
 pub fn group(title: &str) {
     println!("\n== {title} ==");
@@ -133,5 +256,47 @@ mod tests {
         assert!(stats.median_s <= stats.p95_s + 1e-9);
         assert!(stats.mean_s > 0.0);
         assert!(stats.line().contains("spin"));
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_parser() {
+        let stats = Bencher::new("spin").iters(2, 4).budget(0.01).run(|| 1u32);
+        let mut rep = JsonReport::new("testlabel");
+        rep.record_with(&stats, Some((100.0, "rows")));
+        rep.record_value("custom", 1250.0, Some((1.0, "tok")));
+        assert!(!rep.is_empty());
+        let dir = std::env::temp_dir().join("odlri_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = rep.write(&dir).unwrap();
+        assert!(path.ends_with("BENCH_testlabel.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.req("bench").unwrap().as_str().unwrap(), "testlabel");
+        let entries = j.req("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].req("name").unwrap().as_str().unwrap(), "spin");
+        assert!(entries[0].req("ns_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+        let thr = entries[1].req("throughput").unwrap();
+        assert_eq!(thr.req("unit").unwrap().as_str().unwrap(), "tok");
+        // 1 item per 1250 ns ⇒ 800k/s, derived from ns_per_iter.
+        let per_sec = thr.req("per_sec").unwrap().as_f64().unwrap();
+        assert!((per_sec - 8e5).abs() < 1.0, "per_sec {per_sec}");
+    }
+
+    #[test]
+    fn bench_args_filters_by_substring() {
+        let args = BenchArgs {
+            fast: true,
+            filters: vec!["decode".into()],
+        };
+        assert!(args.want("decode"));
+        assert!(args.want("decode-specialized"));
+        assert!(!args.want("matmul"));
+        let all = BenchArgs {
+            fast: false,
+            filters: Vec::new(),
+        };
+        assert!(all.want("anything"));
     }
 }

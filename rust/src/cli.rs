@@ -289,12 +289,14 @@ COMMANDS
                       table5 table8 table9 table10 table11 t1norms
                       budget (uniform vs per-projection plans) all
   generate     KV-cached incremental decoding with a per-token latency
-               report
+               report (packed engines additionally report decode
+               weight-throughput in GB/s over Q and which decode kernel ran)
                  --prompt \"text\" (or --prompt-len N from the corpus)
                  --max-new-tokens 64 --top-k 0 (greedy) --temperature 1.0
                  --fused (packed engine) --pack-dense (pack weights at
                  8-bit on the fly — no .odf needed)
-  serve-bench  Continuous-batching serving latency/throughput
+  serve-bench  Continuous-batching serving latency/throughput (packed
+               generation workloads also report decode GB/s over Q)
                  --requests 32 --clients 4 --deadline-ms 10
                  --max-new-tokens N (generation workload; 0 = scoring)
                  --prompt-len N --fused --pack-dense

@@ -107,6 +107,15 @@ pub trait Engine: Send + Sync {
     /// holds that session's next-token logits. Sessions may sit at
     /// different lengths.
     fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix>;
+
+    /// Packed weight bytes the backend streams per decode step (the
+    /// dequant-on-the-fly working set) — `Some` only for engines serving
+    /// packed weights. Drives the CLI's decode weight-throughput (packed
+    /// GB/s) report, which turns per-token latencies into a number that is
+    /// comparable across bit-widths and schemes.
+    fn decode_weight_bytes(&self) -> Option<usize> {
+        None
+    }
 }
 
 // ------------------------------------------------------------ requests

@@ -494,6 +494,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             report.decode_tokens_per_sec(),
             report.decode_p50_ms()
         );
+        // Packed engines re-decode the whole packed Q payload once per
+        // decode step; weight GB/s makes kernel wins visible from the CLI.
+        if let Some(qb) = engine.decode_weight_bytes() {
+            let decode_secs: f64 = report.decode_step_latencies_s.iter().sum();
+            if report.decode_steps > 0 && decode_secs > 0.0 {
+                println!(
+                    "decode weight-throughput {:.2} GB/s over {} of packed Q ({} decode steps)",
+                    qb as f64 * report.decode_steps as f64 / decode_secs / 1e9,
+                    odlri::util::human_bytes(qb),
+                    report.decode_steps
+                );
+            }
+        }
     } else {
         println!(
             "scored {:.0} tok/s",
@@ -556,6 +569,23 @@ fn cmd_generate(args: &Args) -> Result<()> {
             0.0
         }
     );
+    // Packed engines re-decode the whole packed Q payload once per decode
+    // step, so weight GB/s = q_bytes · steps / decode_secs; the kernel
+    // probe counters expose whether the specialized fused dequant-dot path
+    // was actually taken (CI greps this line).
+    if let Some(qb) = engine.decode_weight_bytes() {
+        let steps = out.step_latencies_s.len();
+        if steps > 0 && total > 0.0 {
+            println!(
+                "decode weight-throughput {:.2} GB/s over {} of packed Q   \
+                 (decode path: specialized-dot x{}, panel x{})",
+                qb as f64 * steps as f64 / total / 1e9,
+                odlri::util::human_bytes(qb),
+                odlri::fused::decode_kernel_calls(),
+                odlri::fused::panel_kernel_calls(),
+            );
+        }
+    }
     Ok(())
 }
 

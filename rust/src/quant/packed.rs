@@ -50,8 +50,33 @@
 //! a truncated or corrupt stream yields `Err` instead of unbounded
 //! allocations or out-of-bounds scale indexing. Legacy `ODP1` (uniform-only
 //! v1) streams are still readable; writes always emit v2.
+//!
+//! ## Decode-kernel contract (reference vs specialized)
+//!
+//! Two decoders coexist, with a tested bit-identity contract between them:
+//!
+//! * **Reference** — [`PackedMatrix::dequant_row_into`]: a sequential
+//!   `BitReader` pulling one code at a time, written to read as the spec
+//!   (per-group extents, one scale fetch per group). This is the decoder
+//!   every specialized kernel is property-tested against.
+//! * **Specialized** — `unpack_codes` dispatches *once per call* on the
+//!   stored code width (2/3/4/5/6/8 bits; uniform & MXINT mantissas use
+//!   `bits`, E8 coordinates `bits + 2`) to a SWAR kernel that reads `u64`
+//!   words from the byte stream and emits a whole chunk of integer codes
+//!   per load via shifts/masks. Widths outside the specialized set (1, 7)
+//!   fall back to a scalar two-byte-window read. Word reads are bounds
+//!   guarded: the bulk loop only runs while a full 8-byte window exists,
+//!   with scalar head/tail codes around it, so no read ever leaves the
+//!   code buffer. [`PackedMatrix::dequant_row_fast_into`] (codes → f32 row)
+//!   is **bit-identical** to the reference: it applies the exact same
+//!   per-element expression, only the code extraction differs.
+//!   [`PackedMatrix::dot_row_codes`] fuses dequant into the dot instead —
+//!   `Σ_g s_g · Σ_{j∈g} (code_j − off)·x_j` — hoisting the scale out of the
+//!   group, so its f32 sum agrees with a materialized-row dot only to
+//!   rounding (summation order differs), which is the documented contract
+//!   of the fused serving kernels built on it.
 
-use crate::hadamard::{fwht_cols, fwht_rows};
+use crate::hadamard::{fwht_cols, fwht_normalized, fwht_rows, pow2_segments};
 use crate::tensor::Matrix;
 use anyhow::{bail, Result};
 
@@ -167,6 +192,31 @@ impl Rotation {
         fwht_rows(&mut t);
         t.mul_diag_right(&self.left_signs)
     }
+
+    /// Slice form of [`Rotation::rotate_acts_t`] for the single-vector
+    /// decode kernel: `x̃ = x D_n H_n` without a `Matrix` round-trip. The
+    /// op sequence matches the 1-row matrix version exactly, so both paths
+    /// produce the identical f32 stream.
+    pub fn rotate_vec(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.right_signs.len());
+        let mut t: Vec<f32> = x.iter().zip(&self.right_signs).map(|(&v, &s)| v * s).collect();
+        for &(s, len) in &pow2_segments(t.len()) {
+            fwht_normalized(&mut t[s..s + len]);
+        }
+        t
+    }
+
+    /// Slice form of [`Rotation::unrotate_out_t`]: `y ← (ỹ H_m) D_m` in
+    /// place.
+    pub fn unrotate_vec(&self, y: &mut [f32]) {
+        debug_assert_eq!(y.len(), self.left_signs.len());
+        for &(s, len) in &pow2_segments(y.len()) {
+            fwht_normalized(&mut y[s..s + len]);
+        }
+        for (v, &s) in y.iter_mut().zip(&self.left_signs) {
+            *v *= s;
+        }
+    }
 }
 
 /// A quantized matrix in its scheme's native packed form, optionally in a
@@ -270,12 +320,14 @@ impl PackedMatrix {
     }
 
     /// Dequantize row `i` of the **stored basis** into `out` (length =
-    /// `cols`) without touching any other row — the fused `(Q+LR)·x`
-    /// kernels stream rows/panels through this so the dense matrix is
-    /// never materialized. For a rotated matrix this is a row of `Q̃`; the
-    /// kernels fold the rotation into the activations instead (see
-    /// [`Rotation`]). Uses a sequential bit-stream reader (one shift/mask
-    /// per code instead of a per-bit loop).
+    /// `cols`) without touching any other row. For a rotated matrix this is
+    /// a row of `Q̃`; the kernels fold the rotation into the activations
+    /// instead (see [`Rotation`]). This is the **reference** decoder — a
+    /// sequential bit-stream reader walking the row group by group (one
+    /// scale/exponent fetch per group, no per-element index arithmetic) —
+    /// kept readable as the spec the specialized word-level kernels are
+    /// property-tested against; the serving kernels use
+    /// [`PackedMatrix::dequant_row_fast_into`] / [`PackedMatrix::dot_row_codes`].
     pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
         assert!(i < self.rows, "row {i} out of range");
         assert_eq!(out.len(), self.cols, "dequant_row_into length");
@@ -289,10 +341,11 @@ impl PackedMatrix {
                 let qmax = ((1i32 << (bits - 1)) - 1).max(1);
                 let gpr = self.cols.div_ceil(*group_size);
                 let mut reader = BitReader::at(codes, i * self.cols * *bits as usize);
-                for (j, slot) in out.iter_mut().enumerate() {
-                    let code = reader.take(*bits) as i32;
-                    let s = scales[i * gpr + (j / group_size).min(gpr - 1)];
-                    *slot = (code - qmax) as f32 * s;
+                for (g, chunk) in out.chunks_mut(*group_size).enumerate() {
+                    let s = scales[i * gpr + g];
+                    for slot in chunk {
+                        *slot = (reader.take(*bits) as i32 - qmax) as f32 * s;
+                    }
                 }
             }
             PackedScheme::E8 { bits, scale, codes } => {
@@ -313,15 +366,156 @@ impl PackedMatrix {
                 let mmax = ((1i32 << (bits - 1)) - 1).max(1);
                 let bpr = self.cols.div_ceil(*block);
                 let mut reader = BitReader::at(codes, i * self.cols * *bits as usize);
-                for (j, slot) in out.iter_mut().enumerate() {
-                    let code = reader.take(*bits) as i32;
-                    let e = exps[i * bpr + (j / block).min(bpr.max(1) - 1)];
-                    *slot = if e == MX_ZERO_EXP {
-                        0.0
-                    } else {
-                        (code - mmax) as f32 * exp_pow2(e)
-                    };
+                for (b, chunk) in out.chunks_mut(*block).enumerate() {
+                    let e = exps[i * bpr + b];
+                    if e == MX_ZERO_EXP {
+                        // All-zero block: the codes still occupy stream bits.
+                        for slot in chunk {
+                            reader.take(*bits);
+                            *slot = 0.0;
+                        }
+                        continue;
+                    }
+                    let step = exp_pow2(e);
+                    for slot in chunk {
+                        *slot = (reader.take(*bits) as i32 - mmax) as f32 * step;
+                    }
                 }
+            }
+        }
+    }
+
+    /// Extract row `i`'s raw integer codes through the width-specialized
+    /// word-level unpackers ([`unpack_codes`]) into `codes` (resized to
+    /// `cols`). The scratch vector lets serving kernels decode thousands of
+    /// rows with zero per-row allocation.
+    pub fn load_row_codes(&self, i: usize, codes: &mut Vec<i32>) {
+        assert!(i < self.rows, "row {i} out of range");
+        codes.resize(self.cols, 0);
+        let cb = self.scheme.code_bits();
+        let buf = match &self.scheme {
+            PackedScheme::Uniform { codes, .. }
+            | PackedScheme::E8 { codes, .. }
+            | PackedScheme::MxInt { codes, .. } => codes,
+        };
+        unpack_codes(buf, i * self.cols * cb as usize, cb, codes);
+    }
+
+    /// Turn row `i`'s extracted codes into the dequantized f32 row —
+    /// **bit-identical** to [`PackedMatrix::dequant_row_into`] (the exact
+    /// same per-element expression; only the code extraction path differs).
+    pub fn dequant_row_from_codes(&self, i: usize, codes: &[i32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), self.cols);
+        assert_eq!(out.len(), self.cols, "dequant_row_from_codes length");
+        match &self.scheme {
+            PackedScheme::Uniform {
+                bits,
+                group_size,
+                scales,
+                ..
+            } => {
+                let qmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let gpr = self.cols.div_ceil(*group_size);
+                let groups = out.chunks_mut(*group_size).zip(codes.chunks(*group_size));
+                for (g, (ochunk, cchunk)) in groups.enumerate() {
+                    let s = scales[i * gpr + g];
+                    for (slot, &c) in ochunk.iter_mut().zip(cchunk) {
+                        *slot = (c - qmax) as f32 * s;
+                    }
+                }
+            }
+            PackedScheme::E8 { bits, scale, .. } => {
+                let two_lim = 2 * super::e8::e8_coord_limit(*bits) as i32;
+                for (slot, &c) in out.iter_mut().zip(codes) {
+                    *slot = (c - two_lim) as f32 / 2.0 * scale;
+                }
+            }
+            PackedScheme::MxInt {
+                bits, block, exps, ..
+            } => {
+                let mmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let bpr = self.cols.div_ceil(*block);
+                let blocks = out.chunks_mut(*block).zip(codes.chunks(*block));
+                for (b, (ochunk, cchunk)) in blocks.enumerate() {
+                    let e = exps[i * bpr + b];
+                    if e == MX_ZERO_EXP {
+                        ochunk.fill(0.0);
+                        continue;
+                    }
+                    let step = exp_pow2(e);
+                    for (slot, &c) in ochunk.iter_mut().zip(cchunk) {
+                        *slot = (c - mmax) as f32 * step;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Specialized row decode: word-level code extraction + per-group
+    /// scaling, bit-identical to [`PackedMatrix::dequant_row_into`].
+    /// `codes` is caller-owned scratch (reused across rows).
+    pub fn dequant_row_fast_into(&self, i: usize, codes: &mut Vec<i32>, out: &mut [f32]) {
+        self.load_row_codes(i, codes);
+        self.dequant_row_from_codes(i, codes, out);
+    }
+
+    /// Fused dequant-dot of row `i` with `x`, group-hoisted:
+    /// `Σ_g s_g · Σ_{j∈g} (code_j − off)·x_j`. The decoded row is never
+    /// materialized and the scale (or shared block step) is applied once
+    /// per group, not per element. Summation order differs from dotting a
+    /// materialized row, so the result agrees with the reference to f32
+    /// rounding, not bitwise — the fused serving kernels' documented
+    /// contract.
+    pub fn dot_row_codes(&self, i: usize, codes: &[i32], x: &[f32]) -> f32 {
+        debug_assert_eq!(codes.len(), self.cols);
+        assert_eq!(x.len(), self.cols, "dot_row_codes length");
+        match &self.scheme {
+            PackedScheme::Uniform {
+                bits,
+                group_size,
+                scales,
+                ..
+            } => {
+                let qmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let gpr = self.cols.div_ceil(*group_size);
+                let mut acc = 0f32;
+                let groups = codes.chunks(*group_size).zip(x.chunks(*group_size));
+                for (g, (cchunk, xchunk)) in groups.enumerate() {
+                    let mut gsum = 0f32;
+                    for (&c, &xv) in cchunk.iter().zip(xchunk) {
+                        gsum += (c - qmax) as f32 * xv;
+                    }
+                    acc += scales[i * gpr + g] * gsum;
+                }
+                acc
+            }
+            PackedScheme::E8 { bits, scale, .. } => {
+                let two_lim = 2 * super::e8::e8_coord_limit(*bits) as i32;
+                let mut acc = 0f32;
+                for (&c, &xv) in codes.iter().zip(x) {
+                    acc += (c - two_lim) as f32 * xv;
+                }
+                acc * (0.5 * scale)
+            }
+            PackedScheme::MxInt {
+                bits, block, exps, ..
+            } => {
+                let mmax = ((1i32 << (bits - 1)) - 1).max(1);
+                let bpr = self.cols.div_ceil(*block);
+                let mut acc = 0f32;
+                let blocks = codes.chunks(*block).zip(x.chunks(*block));
+                for (b, (cchunk, xchunk)) in blocks.enumerate() {
+                    let e = exps[i * bpr + b];
+                    if e == MX_ZERO_EXP {
+                        continue;
+                    }
+                    let mut bsum = 0f32;
+                    for (&c, &xv) in cchunk.iter().zip(xchunk) {
+                        bsum += (c - mmax) as f32 * xv;
+                    }
+                    acc += exp_pow2(e) * bsum;
+                }
+                acc
             }
         }
     }
@@ -666,6 +860,89 @@ pub(crate) fn exp_pow2(e: i16) -> f32 {
     }
 }
 
+/// Scalar code read through a two-byte window (a code is at most 8 bits
+/// wide, so with a ≤7-bit intra-byte offset it spans at most 16 bits).
+/// Bytes past the buffer read as 0, mirroring [`BitReader::refill`].
+#[inline]
+fn read_code(buf: &[u8], bitpos: usize, bits: u32) -> i32 {
+    let byte = bitpos / 8;
+    let lo = *buf.get(byte).unwrap_or(&0) as u32;
+    let hi = *buf.get(byte + 1).unwrap_or(&0) as u32;
+    (((lo | (hi << 8)) >> (bitpos % 8)) & ((1u32 << bits) - 1)) as i32
+}
+
+/// SWAR bulk extraction: after a scalar head reaches a byte boundary, each
+/// iteration reads one little-endian `u64` word and emits `cpc` codes via
+/// shifts/masks, advancing `cpc·bits/8` whole bytes (`cpc·bits` must be a
+/// multiple of 8 and ≤ 64). The bulk loop only runs while a full 8-byte
+/// window exists; remaining codes decode through the scalar tail.
+#[inline]
+fn unpack_swar(buf: &[u8], start_bit: usize, bits: u32, cpc: usize, out: &mut [i32]) {
+    let chunk_bits = cpc * bits as usize;
+    debug_assert!(chunk_bits <= 64 && chunk_bits % 8 == 0);
+    let mask = (1u64 << bits) - 1;
+    let n = out.len();
+    let mut k = 0usize;
+    let mut bitpos = start_bit;
+    // Head: codes until the stream is byte-aligned (row starts at
+    // `i·cols·bits`, whose residue always reaches 0 in ≤ 8 steps for the
+    // widths dispatched here; an unreachable alignment just means the whole
+    // row decodes through this scalar loop, which stays correct).
+    while k < n && bitpos % 8 != 0 {
+        out[k] = read_code(buf, bitpos, bits);
+        bitpos += bits as usize;
+        k += 1;
+    }
+    let mut byte = bitpos / 8;
+    while n - k >= cpc && byte + 8 <= buf.len() {
+        let w = u64::from_le_bytes(buf[byte..byte + 8].try_into().unwrap());
+        let mut shift = 0u32;
+        for slot in &mut out[k..k + cpc] {
+            *slot = ((w >> shift) & mask) as i32;
+            shift += bits;
+        }
+        k += cpc;
+        byte += chunk_bits / 8;
+    }
+    // Tail: whatever the guarded bulk loop could not cover.
+    bitpos = byte * 8;
+    while k < n {
+        out[k] = read_code(buf, bitpos, bits);
+        bitpos += bits as usize;
+        k += 1;
+    }
+}
+
+/// Decode `out.len()` consecutive codes of stored width `bits` starting at
+/// absolute bit offset `start_bit`. Dispatches **once per call** on the
+/// width to a word-level SWAR kernel (2/3/4/5/6/8-bit — every width the
+/// uniform/MXINT/E8 layouts emit); other widths take a scalar
+/// two-byte-window path. Bit-identical to reading each code through
+/// [`BitReader`] (property-tested below).
+pub(crate) fn unpack_codes(buf: &[u8], start_bit: usize, bits: u32, out: &mut [i32]) {
+    match bits {
+        // 32 codes per u64 word.
+        2 => unpack_swar(buf, start_bit, 2, 32, out),
+        // 8 codes per 24-bit chunk (3 bytes).
+        3 => unpack_swar(buf, start_bit, 3, 8, out),
+        // 16 codes per u64 word.
+        4 => unpack_swar(buf, start_bit, 4, 16, out),
+        // 8 codes per 40-bit chunk (5 bytes).
+        5 => unpack_swar(buf, start_bit, 5, 8, out),
+        // 8 codes per 48-bit chunk (6 bytes).
+        6 => unpack_swar(buf, start_bit, 6, 8, out),
+        // 8 codes per u64 word.
+        8 => unpack_swar(buf, start_bit, 8, 8, out),
+        _ => {
+            let mut bitpos = start_bit;
+            for slot in out {
+                *slot = read_code(buf, bitpos, bits);
+                bitpos += bits as usize;
+            }
+        }
+    }
+}
+
 /// Sequential LSB-first bit-stream reader over the packed code buffer.
 struct BitReader<'a> {
     buf: &'a [u8],
@@ -919,6 +1196,136 @@ mod tests {
                 p.dequant_row_into(i, &mut row);
                 assert_eq!(&row[..], dense.row(i), "row {i}");
             }
+        });
+    }
+
+    #[test]
+    fn specialized_unpackers_match_bitreader_at_any_offset() {
+        // The word-level SWAR kernels must agree with the scalar reference
+        // for every width, at every starting offset, through buffer tails
+        // where the guarded u64 bulk loop has to hand off to scalar codes.
+        testing::quick("unpack-codes-exact", |rng| {
+            let buf: Vec<u8> = (0..2 + rng.below(96)).map(|_| rng.below(256) as u8).collect();
+            let bits = 1 + rng.below(8) as u32; // 1..=8 incl. fallback widths
+            let start = rng.below(buf.len().min(8) * 8);
+            let max_codes = (buf.len() * 8).saturating_sub(start) / bits as usize;
+            let n = rng.below(max_codes + 1);
+            let mut out = vec![0i32; n];
+            unpack_codes(&buf, start, bits, &mut out);
+            for (k, &got) in out.iter().enumerate() {
+                let want = read_bits(&buf, start + k * bits as usize, bits) as i32;
+                assert_eq!(got, want, "bits={bits} start={start} code {k}");
+            }
+        });
+    }
+
+    #[test]
+    fn fast_row_decode_is_bit_identical_per_scheme() {
+        // The decode-kernel contract: the specialized word-level row decode
+        // reproduces the reference BitReader decode **bit-exactly** for
+        // every scheme × bit-width × ragged tail × random row, including
+        // codes stored in the Hadamard-rotated basis.
+        testing::quick("fast-row-decode-exact", |rng| {
+            let m = testing::gen_dim(rng, 1, 14);
+            let n = testing::gen_dim(rng, 1, 77);
+            let group = [3usize, 5, 8, 32][rng.below(4)];
+            let w = testing::gen_matrix(rng, m, n);
+            let packed = match rng.below(3) {
+                // Uniform straight through pack() so widths 5..=8 (which no
+                // quantizer emits) are covered too.
+                0 => PackedMatrix::pack(&w, 2 + rng.below(7) as u32, group),
+                _ => {
+                    let scheme = ["e8", "mxint"][rng.below(2)];
+                    let bits = 2 + rng.below(3) as u32;
+                    let quant = make_quantizer(scheme, bits, group).unwrap();
+                    quant.quantize(&w).packed
+                }
+            };
+            // Rotation metadata must not perturb the stored-basis decode.
+            let packed = if m >= 2 && n >= 2 && rng.below(2) == 1 {
+                let inc = Incoherence::new(m, n, rng);
+                let mut p = packed;
+                p.rotation = Some(Rotation {
+                    left_signs: inc.left_signs.clone(),
+                    right_signs: inc.right_signs.clone(),
+                });
+                p
+            } else {
+                packed
+            };
+            let mut reference = vec![0f32; n];
+            let mut fast = vec![0f32; n];
+            let mut codes = Vec::new();
+            for _ in 0..4 {
+                let i = rng.below(m);
+                packed.dequant_row_into(i, &mut reference);
+                packed.dequant_row_fast_into(i, &mut codes, &mut fast);
+                for (j, (&a, &b)) in reference.iter().zip(&fast).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{}@{}b row {i} col {j}: {a} vs {b}",
+                        packed.scheme.name(),
+                        packed.bits()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fused_dot_matches_materialized_row_dot() {
+        // dot_row_codes hoists the scale out of each group, so it agrees
+        // with (decoded row)·x to f32 rounding — not bitwise.
+        testing::quick("fused-dot", |rng| {
+            let m = testing::gen_dim(rng, 1, 10);
+            let n = testing::gen_dim(rng, 1, 70);
+            let scheme = ["uniform", "e8", "mxint"][rng.below(3)];
+            let bits = 2 + rng.below(3) as u32;
+            let group = [3usize, 8, 32][rng.below(3)];
+            let w = testing::gen_matrix(rng, m, n);
+            let packed = make_quantizer(scheme, bits, group).unwrap().quantize(&w).packed;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let mut row = vec![0f32; n];
+            let mut codes = Vec::new();
+            for i in 0..m {
+                packed.dequant_row_into(i, &mut row);
+                let want: f32 = row.iter().zip(&x).map(|(&wv, &xv)| wv * xv).sum();
+                packed.load_row_codes(i, &mut codes);
+                let got = packed.dot_row_codes(i, &codes, &x);
+                let mag: f32 = row.iter().map(|v| v.abs()).sum();
+                let tol = 1e-4 * want.abs().max(mag).max(1e-3);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{scheme}@{bits}b row {i}: fused {got} vs reference {want}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn rotation_vector_helpers_match_matrix_ops() {
+        // The slice-form rotation used by the single-vector decode kernel
+        // must replay the 1-row matrix ops bit-for-bit.
+        testing::quick("rotation-vec", |rng| {
+            let m = testing::gen_dim(rng, 2, 24);
+            let n = testing::gen_dim(rng, 2, 24);
+            let inc = Incoherence::new(m, n, rng);
+            let rot = Rotation {
+                left_signs: inc.left_signs.clone(),
+                right_signs: inc.right_signs.clone(),
+            };
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let xm = Matrix::from_vec(1, n, x.clone());
+            let want = rot.rotate_acts_t(&xm);
+            let got = rot.rotate_vec(&x);
+            assert_eq!(&got[..], want.row(0), "rotate_vec diverged");
+            let y: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+            let ym = Matrix::from_vec(1, m, y.clone());
+            let want = rot.unrotate_out_t(&ym);
+            let mut got = y;
+            rot.unrotate_vec(&mut got);
+            assert_eq!(&got[..], want.row(0), "unrotate_vec diverged");
         });
     }
 
