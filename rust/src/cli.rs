@@ -67,9 +67,9 @@ pub const COMMANDS: &[CommandSpec] = &[
         name: "serve-bench",
         flags: &[
             "family", "weights", "requests", "clients", "deadline-ms", "seed",
-            "max-new-tokens", "prompt-len", "artifacts",
+            "max-new-tokens", "prompt-len", "kv-budget", "artifacts",
         ],
-        switches: &["fused", "pack-dense"],
+        switches: &["fused", "pack-dense", "shared-prompt"],
     },
     CommandSpec {
         name: "generate",
@@ -301,6 +301,10 @@ COMMANDS
                  --max-new-tokens N (generation workload; 0 = scoring)
                  --prompt-len N --fused --pack-dense
                  --weights runs/<family>.odf (packed (Q+LR)·x engine)
+                 --kv-budget BYTES (hard paged-KV pool cap, e.g. 512k 64m;
+                 sessions past the budget are preempted and later resumed
+                 bit-exactly) --shared-prompt (every request reuses one
+                 system prompt: benches cross-session KV prefix sharing)
   artifacts    List available artifact entry points
   help         This message
 

@@ -41,6 +41,14 @@
 //! which other sessions share the step (all cross-row ops are row-local),
 //! and on the native path prefill+decode logits are **bit-identical** to a
 //! full-sequence forward.
+//!
+//! Session KV storage is *paged*: both engines draw every session's cache
+//! from a process-wide budgeted [`KvPool`] (fixed-size pages, hash-based
+//! cross-session prefix sharing, copy-on-write — see
+//! [`crate::runtime::kvpool`]). `prefill` adopts any registered identical
+//! prompt prefix and registers its own pages afterwards; the budget
+//! ([`EngineSpec::kv_budget`], pinned via `with_kv_budget`) surfaces as
+//! typed pool-exhaustion errors the scheduler answers with preemption.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -48,6 +56,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::model::ModelParams;
+use crate::runtime::kvpool::{KvPool, PoolStats};
 use crate::runtime::native::{
     forward_with, fwd_decode, fwd_prefill, DenseProj, KvCache, ParamView,
 };
@@ -65,6 +74,9 @@ pub struct EngineSpec {
     pub seq: usize,
     /// Hard cap on prompt + generated length per session.
     pub max_context: usize,
+    /// KV pool byte budget backing all sessions (0 = unpaged/unbudgeted —
+    /// only engines without a paged pool, e.g. test doubles, report 0).
+    pub kv_budget: usize,
 }
 
 /// One in-flight generation stream: the accepted token history plus the
@@ -114,6 +126,13 @@ pub trait Engine: Send + Sync {
     /// GB/s) report, which turns per-token latencies into a number that is
     /// comparable across bit-widths and schemes.
     fn decode_weight_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// Occupancy/sharing snapshot of the paged KV pool — `Some` for
+    /// engines whose sessions draw from a [`KvPool`]. Drives the
+    /// scheduler's admission sanity checks and the CLI pool-stats line.
+    fn pool_stats(&self) -> Option<PoolStats> {
         None
     }
 }
@@ -367,6 +386,11 @@ pub struct NativeEngine {
     max_batch: usize,
     seq: usize,
     max_context: usize,
+    /// Paged KV pool all sessions draw from (prefix sharing + budget).
+    pool: KvPool,
+    /// True once `with_kv_budget` pinned an explicit budget (context
+    /// changes then keep it instead of re-deriving a default).
+    explicit_budget: bool,
 }
 
 impl NativeEngine {
@@ -379,19 +403,48 @@ impl NativeEngine {
             .map(|v| v.to_matrix())
             .collect::<Result<Vec<_>>>()?;
         let seq = seq.max(2);
+        let max_batch = max_batch.max(1);
+        let max_context = 4 * seq;
+        let fam = params.family.clone();
+        let pool = KvPool::with_default_budget(fam.n_layers, fam.kv_dim(), max_context, max_batch);
         Ok(NativeEngine {
-            fam: params.family.clone(),
+            fam,
             mats,
-            max_batch: max_batch.max(1),
+            max_batch,
             seq,
-            max_context: 4 * seq,
+            max_context,
+            pool,
+            explicit_budget: false,
         })
     }
 
-    /// Override the per-session context budget.
+    /// Override the per-session context budget (re-derives the default
+    /// pool budget for the new context unless one was pinned explicitly).
     pub fn with_max_context(mut self, n: usize) -> NativeEngine {
         self.max_context = n.max(self.seq);
+        if !self.explicit_budget {
+            self.pool = KvPool::with_default_budget(
+                self.fam.n_layers,
+                self.fam.kv_dim(),
+                self.max_context,
+                self.max_batch,
+            );
+        }
         self
+    }
+
+    /// Pin a hard KV pool byte budget (the `--kv-budget` knob). Sessions
+    /// beyond the budget are preempted by the serving scheduler rather
+    /// than allocated. Errors if the budget holds less than one page.
+    pub fn with_kv_budget(mut self, bytes: usize) -> Result<NativeEngine> {
+        self.pool = KvPool::new(
+            self.fam.n_layers,
+            self.fam.kv_dim(),
+            crate::runtime::kvpool::DEFAULT_PAGE_TOKENS,
+            bytes,
+        )?;
+        self.explicit_budget = true;
+        Ok(self)
     }
 
     fn view(&self) -> Result<ParamView<'_>> {
@@ -406,6 +459,7 @@ impl Engine for NativeEngine {
             max_batch: self.max_batch,
             seq: self.seq,
             max_context: self.max_context,
+            kv_budget: self.pool.budget_bytes(),
         }
     }
 
@@ -416,9 +470,15 @@ impl Engine for NativeEngine {
 
     fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)> {
         let view = self.view()?;
-        let mut cache = KvCache::for_family(&self.fam);
+        // Paged session: adopt any registered identical prefix (storage
+        // only — the forward still computes every position, so the
+        // returned logits keep the full-forward bit-identity), then
+        // publish this prompt's pages for later sessions.
+        let mut cache = KvCache::paged(&self.pool, self.max_context);
+        cache.adopt_prefix(tokens);
         let logits =
             fwd_prefill(&self.fam, &view, &DenseProj { view: &view }, tokens, &mut cache)?;
+        cache.register_prefix(tokens);
         Ok((Session::new(tokens.to_vec(), cache), logits))
     }
 
@@ -446,6 +506,10 @@ impl Engine for NativeEngine {
             s.tokens.push(t);
         }
         Ok(logits)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
     }
 }
 
@@ -559,6 +623,34 @@ mod tests {
         assert_eq!(out.tokens.len(), 4, "budget = max_context - prompt_len");
         assert!(generate(&engine, &[1i32; 10], 1, Sampling::Greedy).is_err());
         assert!(generate(&engine, &[], 1, Sampling::Greedy).is_err());
+    }
+
+    #[test]
+    fn paged_pool_budget_is_enforced_and_preserves_generation() {
+        use crate::runtime::kvpool::KvError;
+        // micro family: 1 layer × kv_dim 4 × 16-token pages = 512 B/page.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 7);
+        let reference = NativeEngine::new(&params, 3, 8).unwrap();
+        let tight = NativeEngine::new(&params, 3, 8)
+            .unwrap()
+            .with_kv_budget(512)
+            .unwrap();
+        assert_eq!(tight.spec().kv_budget, 512);
+        assert!(reference.spec().kv_budget > 512, "default budget too small");
+        let prompt = micro_tokens(11, 6, 3);
+        // One page (16 positions) fits prompt 6 + 4 new: identical stream.
+        let a = generate(&reference, &prompt, 4, Sampling::Greedy).unwrap();
+        let b = generate(&tight, &prompt, 4, Sampling::Greedy).unwrap();
+        assert_eq!(a.tokens, b.tokens, "budget changed the decoded stream");
+        // A 20-token prompt needs 2 pages — typed pool exhaustion, not a
+        // panic or over-allocation.
+        let long = micro_tokens(11, 20, 4);
+        let err = generate(&tight, &long, 1, Sampling::Greedy).unwrap_err();
+        assert!(KvError::is_pool_exhausted(&err), "got: {err:#}");
+        let stats = tight.pool_stats().unwrap();
+        assert!(stats.resident_pages <= stats.max_pages, "over-allocated");
+        assert_eq!(stats.max_pages, 1);
     }
 
     #[test]

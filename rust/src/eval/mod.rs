@@ -181,6 +181,7 @@ mod tests {
                 max_batch: self.max_batch,
                 seq: self.seq,
                 max_context: 4 * self.seq,
+                kv_budget: 0,
             }
         }
 

@@ -104,6 +104,7 @@ use crate::exec;
 use crate::lowrank::LrPair;
 use crate::model::{CompressedModel, ModelParams};
 use crate::quant::{PackedMatrix, PackedScheme};
+use crate::runtime::kvpool::{KvPool, PoolStats, DEFAULT_PAGE_TOKENS};
 use crate::runtime::native::{
     forward_with, fwd_decode, fwd_prefill, KvCache, ParamView, ProjectionOps,
 };
@@ -468,6 +469,11 @@ pub struct FusedModel {
     pub plans: BTreeMap<String, MatrixPlan>,
     pub batch: usize,
     pub seq: usize,
+    /// Paged KV pool all generation sessions draw from (prefix sharing +
+    /// hard byte budget — see [`crate::runtime::kvpool`]).
+    pool: KvPool,
+    /// True once `with_kv_budget` pinned an explicit budget.
+    explicit_budget: bool,
 }
 
 /// The uniform-style plan an ODF2/ODF1 matrix (or a `pack_dense` one) maps
@@ -519,6 +525,12 @@ impl FusedModel {
                 bail!("fused model is missing plan metadata for '{name}'");
             }
         }
+        let pool = KvPool::with_default_budget(
+            family.n_layers,
+            family.kv_dim(),
+            4 * NATIVE_SEQ,
+            NATIVE_BATCH,
+        );
         Ok(FusedModel {
             family,
             dense,
@@ -527,6 +539,8 @@ impl FusedModel {
             plans,
             batch: NATIVE_BATCH,
             seq: NATIVE_SEQ,
+            pool,
+            explicit_budget: false,
         })
     }
 
@@ -589,10 +603,33 @@ impl FusedModel {
     }
 
     /// Override the forward block shape (defaults mirror the artifacts).
+    /// Re-derives the default KV pool budget for the new shape unless one
+    /// was pinned via [`with_kv_budget`](FusedModel::with_kv_budget).
     pub fn with_shape(mut self, batch: usize, seq: usize) -> FusedModel {
         self.batch = batch;
         self.seq = seq;
+        if !self.explicit_budget {
+            self.pool = KvPool::with_default_budget(
+                self.family.n_layers,
+                self.family.kv_dim(),
+                4 * seq.max(1),
+                batch,
+            );
+        }
         self
+    }
+
+    /// Pin a hard KV pool byte budget (the `--kv-budget` knob); call after
+    /// `with_shape`. Errors if the budget holds less than one page.
+    pub fn with_kv_budget(mut self, bytes: usize) -> Result<FusedModel> {
+        self.pool = KvPool::new(
+            self.family.n_layers,
+            self.family.kv_dim(),
+            DEFAULT_PAGE_TOKENS,
+            bytes,
+        )?;
+        self.explicit_budget = true;
+        Ok(self)
     }
 
     /// Logits for a row-major (batch, seq) token block → (batch·seq, vocab).
@@ -880,6 +917,7 @@ impl Engine for FusedModel {
             max_batch: self.batch,
             seq: self.seq,
             max_context: 4 * self.seq,
+            kv_budget: self.pool.budget_bytes(),
         }
     }
 
@@ -893,8 +931,13 @@ impl Engine for FusedModel {
 
     fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)> {
         let view = ParamView::from_slice(&self.family, &self.dense_mats)?;
-        let mut cache = KvCache::for_family(&self.family);
+        // Same paged-session protocol as NativeEngine: adopt a registered
+        // identical prefix (storage only — logits keep the full-forward
+        // bit-identity), then publish this prompt's pages.
+        let mut cache = KvCache::paged(&self.pool, 4 * self.seq);
+        cache.adopt_prefix(tokens);
         let logits = fwd_prefill(&self.family, &view, self, tokens, &mut cache)?;
+        cache.register_prefix(tokens);
         Ok((Session::new(tokens.to_vec(), cache), logits))
     }
 
@@ -916,6 +959,10 @@ impl Engine for FusedModel {
             s.tokens.push(t);
         }
         Ok(logits)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
     }
 }
 

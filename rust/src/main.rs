@@ -123,6 +123,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a CLI byte size with an optional binary k/m/g suffix: "512k",
+/// "64m", "2g", or a plain byte count.
+fn parse_bytes(s: &str) -> Result<usize> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        bail!("empty byte size");
+    }
+    let (digits, mult) = match t.as_bytes()[t.len() - 1] {
+        b'k' => (&t[..t.len() - 1], 1usize << 10),
+        b'm' => (&t[..t.len() - 1], 1usize << 20),
+        b'g' => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t.as_str(), 1usize),
+    };
+    let n: usize = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad byte size '{s}' (use e.g. 512k, 64m, 2g)"))?;
+    Ok(n * mult)
+}
+
 fn load_model(rt: &Runtime, args: &Args, family: &str) -> Result<ModelParams> {
     let fam = rt.manifest.family(family)?;
     let weights = args.str("weights", &format!("runs/{family}.odw"));
@@ -159,6 +179,12 @@ fn build_fused(rt: &Runtime, args: &Args, family: &str) -> Result<FusedModel> {
         // under the same scheduler batch cap.
         FusedModel::load(fam, &PathBuf::from(weights))?.with_shape(batch, seq)
     };
+    let kvb = args.str("kv-budget", "");
+    let fm = if kvb.is_empty() {
+        fm
+    } else {
+        fm.with_kv_budget(parse_bytes(&kvb)?)?
+    };
     eprintln!(
         "[engine] fused: {:.2} bits/weight over {} packed projections [{}]",
         fm.avg_bits(),
@@ -181,7 +207,14 @@ fn build_engine(rt: &Runtime, args: &Args, family: &str) -> Result<Box<dyn Engin
         } else {
             load_model(rt, args, family)?
         };
-        Ok(Box::new(NativeEngine::new(&params, batch, seq)?))
+        let eng = NativeEngine::new(&params, batch, seq)?;
+        let kvb = args.str("kv-budget", "");
+        let eng = if kvb.is_empty() {
+            eng
+        } else {
+            eng.with_kv_budget(parse_bytes(&kvb)?)?
+        };
+        Ok(Box::new(eng))
     }
 }
 
@@ -465,6 +498,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             }
         },
         prompt_len: args.usize("prompt-len", 0)?,
+        shared_prompt: args.switch("shared-prompt"),
     };
     let engine = build_engine(&rt, args, &family)?;
     let report = run_server(engine.as_ref(), &cfg)?;
@@ -514,6 +548,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
         let finite = report.scores.iter().filter(|s| s.is_finite()).count();
         println!("finite scores: {finite}/{}", report.scores.len());
+    }
+    if max_new > 0 {
+        println!(
+            "scheduler: {} preemptions, {} resumes (bit-exact re-prefill)",
+            report.preemptions, report.resumes
+        );
+    }
+    if let Some(ps) = engine.pool_stats() {
+        println!(
+            "kv pool: {}/{} pages, {} shared, {} cow, {} reclaimed \
+             (page = {} tokens / {}; peak {} pages of {} budgeted)",
+            ps.resident_pages,
+            ps.max_pages,
+            ps.shared_adoptions,
+            ps.cow_copies,
+            ps.reclaimed_pages,
+            ps.page_tokens,
+            odlri::util::human_bytes(ps.page_bytes),
+            ps.peak_resident_pages,
+            odlri::util::human_bytes(ps.budget_bytes),
+        );
     }
     Ok(())
 }

@@ -1,0 +1,798 @@
+//! Process-wide paged KV allocator: the storage layer underneath serving's
+//! per-session [`KvCache`](super::native::KvCache)s.
+//!
+//! ## Why pages
+//!
+//! In the paper's low-bit serving regime the weights are nearly free
+//! (2–4-bit `Q` plus a small `L·R` correction), so what actually caps
+//! concurrency is per-session KV memory. A flat grow-only buffer per
+//! session cannot be budgeted, shared, or evicted. This module replaces it
+//! with a vLLM-style paged layout:
+//!
+//! * **Page**: a fixed block of [`page_tokens`](KvPool::page_tokens) token
+//!   positions × `kv_dim` floats for K and V, for *all* layers
+//!   (layer-major inside the page). Page size in bytes is
+//!   `2 (K+V) · n_layers · page_tokens · kv_dim · 4`.
+//! * **Pool**: one process-wide [`KvPool`] holds every page under a hard
+//!   byte budget (`max_pages = budget / page_bytes`). Allocation order:
+//!   free list → grow (until `max_pages`) → reclaim the least-recently-used
+//!   *cached* page (refcount 0, still registered for prefix sharing) →
+//!   typed [`KvError::PoolExhausted`].
+//! * **Block table**: each session maps logical position `p` to page
+//!   `table[p / page_tokens]`, offset `p % page_tokens`. Tables only ever
+//!   append pages; eviction happens by preempting whole sessions (the
+//!   scheduler drops the session's cache, freeing its refcounts, and later
+//!   *resumes* it by re-prefilling from its token history — bit-exact
+//!   because K rows are pure functions of the token prefix).
+//!
+//! ## Prefix sharing
+//!
+//! K rows are stored post-RoPE at absolute positions and V rows raw, so a
+//! page's contents are a pure function of the token prefix it covers.
+//! After a prefill, each prompt page is **registered** in a hash index
+//! under the FNV-1a hash of the token prefix up to that page's last
+//! covered position (the final partial page under the hash of the whole
+//! prompt). A later session with an identical prefix **adopts** the chain:
+//! it increfs the pages instead of rewriting them, records the adopted
+//! extent as `shared_len`, and its prefill skips the K/V stores for those
+//! positions (the compute still runs — prefill logits stay bit-identical
+//! to the full forward). Lookups verify the stored prefix before adopting,
+//! so a hash collision can only cost sharing, never correctness.
+//!
+//! ## Copy-on-write
+//!
+//! Writes go through [`ensure`](KvPool::ensure), which runs *before* any
+//! forward compute: a session about to write into a page with refcount > 1
+//! first copies its own logical rows of that page into a private page.
+//! Reserving ahead of compute means pool exhaustion surfaces as a clean
+//! typed error with no half-written step — the scheduler can preempt a
+//! session and retry.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::tensor::Matrix;
+
+/// Token positions per KV page. Small enough that short shared prompts
+/// still resolve to whole pages, large enough that block tables stay tiny.
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+// ------------------------------------------------------------------ errors
+
+/// Typed failures of the paged KV path.
+///
+/// The workspace's offline `anyhow` shim flattens error sources into
+/// strings (no downcasting), so each variant's `Display` leads with a
+/// stable tag and the `is_*` matchers classify an `anyhow::Error` by
+/// scanning its `{:#}` chain. The tags are part of the API and pinned by
+/// tests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// The cache would grow past its configured position cap.
+    ContextOverflow { have: usize, extra: usize, max: usize },
+    /// The pool has no free, growable, or reclaimable page left.
+    PoolExhausted { in_use: usize, max_pages: usize },
+    /// A prompt needs more pages than the whole pool holds — no amount of
+    /// preemption can ever admit it.
+    PromptTooLarge { prompt_pages: usize, max_pages: usize },
+}
+
+impl KvError {
+    pub const CONTEXT_OVERFLOW_TAG: &'static str = "kv context overflow";
+    pub const POOL_EXHAUSTED_TAG: &'static str = "kv pool exhausted";
+    pub const PROMPT_TOO_LARGE_TAG: &'static str = "kv prompt too large";
+
+    fn chain_has(e: &anyhow::Error, tag: &str) -> bool {
+        format!("{e:#}").contains(tag)
+    }
+
+    pub fn is_context_overflow(e: &anyhow::Error) -> bool {
+        Self::chain_has(e, Self::CONTEXT_OVERFLOW_TAG)
+    }
+
+    pub fn is_pool_exhausted(e: &anyhow::Error) -> bool {
+        Self::chain_has(e, Self::POOL_EXHAUSTED_TAG)
+    }
+
+    pub fn is_prompt_too_large(e: &anyhow::Error) -> bool {
+        Self::chain_has(e, Self::PROMPT_TOO_LARGE_TAG)
+    }
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::ContextOverflow { have, extra, max } => write!(
+                f,
+                "{}: {have} cached positions + {extra} new exceed the cap of {max}",
+                Self::CONTEXT_OVERFLOW_TAG
+            ),
+            KvError::PoolExhausted { in_use, max_pages } => write!(
+                f,
+                "{}: {in_use}/{max_pages} pages in use and none reclaimable",
+                Self::POOL_EXHAUSTED_TAG
+            ),
+            KvError::PromptTooLarge {
+                prompt_pages,
+                max_pages,
+            } => write!(
+                f,
+                "{}: prompt needs {prompt_pages} pages but the pool budget holds only {max_pages}",
+                Self::PROMPT_TOO_LARGE_TAG
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+// ------------------------------------------------------------------- stats
+
+/// Snapshot of pool occupancy and sharing counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub page_tokens: usize,
+    pub page_bytes: usize,
+    pub budget_bytes: usize,
+    pub max_pages: usize,
+    /// Pages currently holding live data (referenced or cached-for-reuse).
+    pub resident_pages: usize,
+    /// High-water mark of `resident_pages`.
+    pub peak_resident_pages: usize,
+    /// Pages ever backed by an allocation (resident-bytes high water).
+    pub allocated_pages: usize,
+    /// Pages adopted from the prefix index instead of recomputed storage.
+    pub shared_adoptions: u64,
+    /// Copy-on-write page copies taken on first divergence.
+    pub cow_copies: u64,
+    /// Cached (refcount-0, registered) pages reclaimed under pressure.
+    pub reclaimed_pages: u64,
+}
+
+// ------------------------------------------------------------- block table
+
+/// Per-session logical-position → page-slot map. Created empty, appended
+/// to by [`KvPool::ensure`] / [`KvPool::adopt`]; every held page is
+/// refcounted, released via [`KvPool::release`].
+#[derive(Debug, Default)]
+pub struct BlockTable {
+    pages: Vec<usize>,
+    /// Positions `[0, shared_len)` were adopted from the prefix index;
+    /// stores for them are skipped (identical bits are already resident).
+    shared_len: usize,
+}
+
+impl BlockTable {
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn shared_len(&self) -> usize {
+        self.shared_len
+    }
+}
+
+// -------------------------------------------------------------------- pool
+
+struct PageEntry {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refs: usize,
+    /// Prefix-index key this page is registered under, if any.
+    reg_key: Option<u64>,
+    /// The exact token prefix whose tail this page stores — verified on
+    /// adoption so hash collisions cannot alias different histories.
+    reg_prefix: Option<Vec<i32>>,
+    last_use: u64,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    pages: Vec<PageEntry>,
+    free: Vec<usize>,
+    index: HashMap<u64, usize>,
+    tick: u64,
+    shared_adoptions: u64,
+    cow_copies: u64,
+    reclaimed: u64,
+    peak_resident: usize,
+}
+
+/// Process-wide paged KV allocator; cheap to clone (shared state behind a
+/// mutex), immutable geometry outside it. See the module docs for the
+/// allocation, sharing, and eviction policy.
+#[derive(Clone)]
+pub struct KvPool {
+    n_layers: usize,
+    kv_dim: usize,
+    page_tokens: usize,
+    page_bytes: usize,
+    budget_bytes: usize,
+    max_pages: usize,
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl fmt::Debug for KvPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "KvPool({} layers x {} kv_dim, page {} tokens, {}/{} pages resident)",
+            self.n_layers, self.kv_dim, self.page_tokens, s.resident_pages, s.max_pages
+        )
+    }
+}
+
+impl KvPool {
+    /// Bytes one page occupies: K and V panels for every layer.
+    pub fn page_bytes_for(n_layers: usize, kv_dim: usize, page_tokens: usize) -> usize {
+        2 * n_layers.max(1) * page_tokens.max(1) * kv_dim.max(1) * 4
+    }
+
+    pub fn new(
+        n_layers: usize,
+        kv_dim: usize,
+        page_tokens: usize,
+        budget_bytes: usize,
+    ) -> anyhow::Result<KvPool> {
+        let n_layers = n_layers.max(1);
+        let kv_dim = kv_dim.max(1);
+        let page_tokens = page_tokens.max(1);
+        let page_bytes = Self::page_bytes_for(n_layers, kv_dim, page_tokens);
+        let max_pages = budget_bytes / page_bytes;
+        if max_pages == 0 {
+            anyhow::bail!(
+                "kv budget {budget_bytes} B holds no page (page = {page_tokens} tokens = {page_bytes} B)"
+            );
+        }
+        Ok(KvPool {
+            n_layers,
+            kv_dim,
+            page_tokens,
+            page_bytes,
+            budget_bytes,
+            max_pages,
+            inner: Arc::new(Mutex::new(PoolInner::default())),
+        })
+    }
+
+    /// Pool sized so the configured concurrency never feels the budget:
+    /// 2× (max_batch sessions at full context). Used when no explicit
+    /// `--kv-budget` is given.
+    pub fn with_default_budget(
+        n_layers: usize,
+        kv_dim: usize,
+        max_context: usize,
+        max_batch: usize,
+    ) -> KvPool {
+        let page_bytes = Self::page_bytes_for(n_layers, kv_dim, DEFAULT_PAGE_TOKENS);
+        let pages_per = max_context.max(1).div_ceil(DEFAULT_PAGE_TOKENS);
+        let budget = 2 * max_batch.max(1) * pages_per * page_bytes;
+        KvPool::new(n_layers, kv_dim, DEFAULT_PAGE_TOKENS, budget)
+            .expect("default kv budget always holds at least one page")
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Resident bytes held by one session's table (its share of the pool,
+    /// counting shared pages at full size).
+    pub fn held_bytes(&self, table: &BlockTable) -> usize {
+        table.pages.len() * self.page_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.lock();
+        PoolStats {
+            page_tokens: self.page_tokens,
+            page_bytes: self.page_bytes,
+            budget_bytes: self.budget_bytes,
+            max_pages: self.max_pages,
+            resident_pages: inner.pages.len() - inner.free.len(),
+            peak_resident_pages: inner.peak_resident,
+            allocated_pages: inner.pages.len(),
+            shared_adoptions: inner.shared_adoptions,
+            cow_copies: inner.cow_copies,
+            reclaimed_pages: inner.reclaimed,
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Allocate one page: free list → grow → LRU-reclaim a cached page.
+    fn alloc_locked(&self, inner: &mut PoolInner) -> Result<usize, KvError> {
+        let id = if let Some(id) = inner.free.pop() {
+            id
+        } else if inner.pages.len() < self.max_pages {
+            let floats = self.n_layers * self.page_tokens * self.kv_dim;
+            inner.pages.push(PageEntry {
+                k: vec![0f32; floats],
+                v: vec![0f32; floats],
+                refs: 0,
+                reg_key: None,
+                reg_prefix: None,
+                last_use: 0,
+            });
+            inner.pages.len() - 1
+        } else {
+            // Reclaim the least-recently-used cached page (refcount 0 but
+            // kept registered for prefix sharing). Referenced pages are
+            // never reclaimed — eviction of live sessions is the
+            // scheduler's job, by preemption.
+            let victim = inner
+                .pages
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.refs == 0 && e.reg_key.is_some())
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i);
+            let Some(id) = victim else {
+                return Err(KvError::PoolExhausted {
+                    in_use: inner.pages.len() - inner.free.len(),
+                    max_pages: self.max_pages,
+                });
+            };
+            let key = inner.pages[id].reg_key.take().expect("cached page has a key");
+            inner.index.remove(&key);
+            inner.pages[id].reg_prefix = None;
+            inner.reclaimed += 1;
+            id
+        };
+        let e = &mut inner.pages[id];
+        debug_assert_eq!(e.refs, 0, "allocating a referenced page");
+        e.refs = 1;
+        e.last_use = inner.tick;
+        inner.tick += 1;
+        let resident = inner.pages.len() - inner.free.len();
+        inner.peak_resident = inner.peak_resident.max(resident);
+        Ok(id)
+    }
+
+    fn decref_locked(inner: &mut PoolInner, id: usize, tick: u64) {
+        let e = &mut inner.pages[id];
+        debug_assert!(e.refs > 0, "double release of page {id}");
+        e.refs -= 1;
+        if e.refs == 0 {
+            if e.reg_key.is_some() {
+                // Keep registered pages resident as a prefix cache; mark
+                // recency so reclaim takes the coldest first.
+                e.last_use = tick;
+            } else {
+                inner.free.push(id);
+            }
+        }
+    }
+
+    /// Reserve capacity for `extra` more positions after `len`, taking
+    /// copy-on-write copies of any shared page the session is about to
+    /// write into. Runs *before* forward compute: on error nothing about
+    /// the session changed and the caller can preempt + retry.
+    pub(crate) fn ensure(
+        &self,
+        table: &mut BlockTable,
+        len: usize,
+        extra: usize,
+    ) -> Result<(), KvError> {
+        let p = self.page_tokens;
+        let first_write = len.max(table.shared_len);
+        let last = len + extra;
+        if first_write >= last {
+            return Ok(()); // nothing will be stored (fully shared extent)
+        }
+        let mut inner = self.lock();
+        for j in first_write / p..=(last - 1) / p {
+            if j < table.pages.len() {
+                let pid = table.pages[j];
+                if inner.pages[pid].refs > 1 {
+                    // COW: copy only this session's own logical rows of
+                    // the page — rows past `len` may belong to another
+                    // session's divergent tail.
+                    let keep = len.saturating_sub(j * p).min(p);
+                    let kvd = self.kv_dim;
+                    let mut kcopy = vec![0f32; self.n_layers * keep * kvd];
+                    let mut vcopy = vec![0f32; self.n_layers * keep * kvd];
+                    {
+                        let src = &inner.pages[pid];
+                        for l in 0..self.n_layers {
+                            let so = l * p * kvd;
+                            let d0 = l * keep * kvd;
+                            kcopy[d0..d0 + keep * kvd]
+                                .copy_from_slice(&src.k[so..so + keep * kvd]);
+                            vcopy[d0..d0 + keep * kvd]
+                                .copy_from_slice(&src.v[so..so + keep * kvd]);
+                        }
+                    }
+                    let nid = self.alloc_locked(&mut inner)?;
+                    {
+                        let dst = &mut inner.pages[nid];
+                        for l in 0..self.n_layers {
+                            let so = l * p * kvd;
+                            let d0 = l * keep * kvd;
+                            dst.k[so..so + keep * kvd]
+                                .copy_from_slice(&kcopy[d0..d0 + keep * kvd]);
+                            dst.v[so..so + keep * kvd]
+                                .copy_from_slice(&vcopy[d0..d0 + keep * kvd]);
+                        }
+                    }
+                    inner.cow_copies += 1;
+                    let tick = inner.tick;
+                    Self::decref_locked(&mut inner, pid, tick);
+                    table.pages[j] = nid;
+                    // Rows of this page below shared_len are now private
+                    // copies; the skip threshold no longer applies here.
+                    table.shared_len = table.shared_len.min(j * p).min(len);
+                }
+            } else {
+                debug_assert_eq!(j, table.pages.len(), "block table gap");
+                let nid = self.alloc_locked(&mut inner)?;
+                table.pages.push(nid);
+            }
+        }
+        Ok(())
+    }
+
+    /// Store whole K/V rows (multiples of `kv_dim`) for one layer starting
+    /// at logical position `base`. Rows below the table's `shared_len` are
+    /// already resident (adopted) and are skipped.
+    pub(crate) fn write_rows(
+        &self,
+        table: &BlockTable,
+        layer: usize,
+        base: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        let kvd = self.kv_dim;
+        debug_assert_eq!(k.len() % kvd, 0, "kv row width");
+        debug_assert_eq!(k.len(), v.len(), "k/v row count");
+        let rows = k.len() / kvd;
+        let start = table.shared_len.saturating_sub(base).min(rows);
+        if start == rows {
+            return;
+        }
+        let p = self.page_tokens;
+        let mut inner = self.lock();
+        for r in start..rows {
+            let pos = base + r;
+            let pid = table.pages[pos / p];
+            let e = &mut inner.pages[pid];
+            debug_assert!(e.refs >= 1, "write into unreferenced page");
+            let o = layer * p * kvd + (pos % p) * kvd;
+            e.k[o..o + kvd].copy_from_slice(&k[r * kvd..(r + 1) * kvd]);
+            e.v[o..o + kvd].copy_from_slice(&v[r * kvd..(r + 1) * kvd]);
+        }
+    }
+
+    /// Gather one kv-head's cached panels over positions `[0, len)`:
+    /// (K, V), each (len, head_dim).
+    pub(crate) fn read_head(
+        &self,
+        table: &BlockTable,
+        layer: usize,
+        g: usize,
+        hd: usize,
+        len: usize,
+    ) -> (Matrix, Matrix) {
+        let p = self.page_tokens;
+        let kvd = self.kv_dim;
+        let mut k = Matrix::zeros(len, hd);
+        let mut v = Matrix::zeros(len, hd);
+        let inner = self.lock();
+        for pos in 0..len {
+            let e = &inner.pages[table.pages[pos / p]];
+            let o = layer * p * kvd + (pos % p) * kvd + g * hd;
+            k.row_mut(pos).copy_from_slice(&e.k[o..o + hd]);
+            v.row_mut(pos).copy_from_slice(&e.v[o..o + hd]);
+        }
+        (k, v)
+    }
+
+    /// Resolve the longest registered prefix of `tokens` to its page
+    /// chain: adopt whole pages at page-boundary prefixes, then try the
+    /// exact full prompt for a final partial page. Returns the adopted
+    /// extent (recorded as the table's `shared_len`). The table must be
+    /// empty.
+    pub(crate) fn adopt(&self, table: &mut BlockTable, tokens: &[i32]) -> usize {
+        debug_assert!(table.pages.is_empty(), "adopt into a used table");
+        let p = self.page_tokens;
+        let mut inner = self.lock();
+        let mut pos = 0usize;
+        loop {
+            let next = pos + p;
+            if next > tokens.len() {
+                break;
+            }
+            if !Self::adopt_one(&mut inner, table, &tokens[..next]) {
+                break;
+            }
+            pos = next;
+        }
+        if pos < tokens.len() && Self::adopt_one(&mut inner, table, tokens) {
+            pos = tokens.len();
+        }
+        table.shared_len = pos;
+        pos
+    }
+
+    /// Adopt the page registered under exactly `prefix`, if any.
+    fn adopt_one(inner: &mut PoolInner, table: &mut BlockTable, prefix: &[i32]) -> bool {
+        let Some(&pid) = inner.index.get(&hash_tokens(prefix)) else {
+            return false;
+        };
+        if inner.pages[pid].reg_prefix.as_deref() != Some(prefix) {
+            return false; // hash collision: never alias histories
+        }
+        inner.pages[pid].refs += 1;
+        inner.pages[pid].last_use = inner.tick;
+        inner.tick += 1;
+        table.pages.push(pid);
+        inner.shared_adoptions += 1;
+        true
+    }
+
+    /// Publish a completed prefill's pages in the prefix index: page `j`
+    /// under the hash of `tokens[..min((j+1)·P, n)]`. First writer wins;
+    /// already-registered pages and taken keys are left alone.
+    pub(crate) fn register(&self, table: &BlockTable, tokens: &[i32]) {
+        if tokens.is_empty() {
+            return;
+        }
+        let p = self.page_tokens;
+        let mut inner = self.lock();
+        for (j, &pid) in table.pages.iter().enumerate() {
+            let end = ((j + 1) * p).min(tokens.len());
+            if end <= j * p {
+                break;
+            }
+            if inner.pages[pid].reg_key.is_some() {
+                continue;
+            }
+            let key = hash_tokens(&tokens[..end]);
+            if inner.index.contains_key(&key) {
+                continue;
+            }
+            inner.pages[pid].reg_key = Some(key);
+            inner.pages[pid].reg_prefix = Some(tokens[..end].to_vec());
+            inner.index.insert(key, pid);
+        }
+    }
+
+    /// Duplicate a table, increffing every page (both copies then write
+    /// through copy-on-write).
+    pub(crate) fn clone_table(&self, table: &BlockTable) -> BlockTable {
+        let mut inner = self.lock();
+        for &pid in &table.pages {
+            inner.pages[pid].refs += 1;
+        }
+        BlockTable {
+            pages: table.pages.clone(),
+            shared_len: table.shared_len,
+        }
+    }
+
+    /// Drop a session's references; registered pages stay cached for
+    /// prefix sharing, unregistered ones return to the free list.
+    pub(crate) fn release(&self, table: &mut BlockTable) {
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        for i in 0..table.pages.len() {
+            let pid = table.pages[i];
+            Self::decref_locked(&mut inner, pid, tick);
+        }
+        table.pages.clear();
+        table.shared_len = 0;
+    }
+}
+
+/// FNV-1a over the little-endian token bytes.
+fn hash_tokens(tokens: &[i32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tiny geometry: 2 layers, kv_dim 4, 4 positions per page.
+    fn pool(pages: usize) -> KvPool {
+        let pb = KvPool::page_bytes_for(2, 4, 4);
+        KvPool::new(2, 4, 4, pages * pb).unwrap()
+    }
+
+    fn row(tag: f32, pos: usize) -> Vec<f32> {
+        (0..4).map(|j| tag + pos as f32 + j as f32 * 0.01).collect()
+    }
+
+    /// Fill positions [base, base+n) of every layer with recognizable rows.
+    fn fill(p: &KvPool, t: &BlockTable, base: usize, n: usize, tag: f32) {
+        for layer in 0..2 {
+            for pos in base..base + n {
+                let r = row(tag + layer as f32 * 100.0, pos);
+                p.write_rows(t, layer, pos, &r, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn budget_bounds_allocation_and_exhaustion_is_typed() {
+        let p = pool(3);
+        assert_eq!(p.max_pages(), 3);
+        let mut t = BlockTable::default();
+        p.ensure(&mut t, 0, 12).unwrap(); // 3 pages of 4
+        assert_eq!(t.n_pages(), 3);
+        let err = p.ensure(&mut t, 12, 1).unwrap_err();
+        assert!(matches!(err, KvError::PoolExhausted { .. }));
+        assert!(err.to_string().contains(KvError::POOL_EXHAUSTED_TAG));
+        let stats = p.stats();
+        assert_eq!(stats.resident_pages, 3);
+        assert!(stats.resident_pages <= stats.max_pages, "over-allocated");
+        p.release(&mut t);
+        assert_eq!(p.stats().resident_pages, 0);
+        // Error tags classify through the flattened anyhow chain.
+        let e = anyhow::Error::from(KvError::PoolExhausted { in_use: 3, max_pages: 3 })
+            .context("decode step");
+        assert!(KvError::is_pool_exhausted(&e));
+        assert!(!KvError::is_context_overflow(&e));
+    }
+
+    #[test]
+    fn rows_roundtrip_across_page_boundaries() {
+        let p = pool(4);
+        let mut t = BlockTable::default();
+        p.ensure(&mut t, 0, 10).unwrap();
+        fill(&p, &t, 0, 10, 1000.0);
+        for layer in 0..2 {
+            let (k, v) = p.read_head(&t, layer, 0, 4, 10);
+            for pos in 0..10 {
+                let want = row(1000.0 + layer as f32 * 100.0, pos);
+                assert_eq!(k.row(pos), &want[..], "layer {layer} pos {pos}");
+                assert_eq!(v.row(pos), &want[..]);
+            }
+        }
+        assert_eq!(p.held_bytes(&t), 3 * p.page_bytes());
+        p.release(&mut t);
+    }
+
+    #[test]
+    fn prefix_adoption_shares_pages_and_cow_isolates_divergence() {
+        let p = pool(8);
+        let tokens: Vec<i32> = (0..10).collect();
+        // Session A prefilled 10 positions and registered them.
+        let mut a = BlockTable::default();
+        assert_eq!(p.adopt(&mut a, &tokens), 0, "empty index adopts nothing");
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+
+        // Session B with the identical prompt adopts the full chain: two
+        // whole pages plus the partial tail page.
+        let mut b = BlockTable::default();
+        let shared = p.adopt(&mut b, &tokens);
+        assert_eq!(shared, 10);
+        assert_eq!(b.n_pages(), 3);
+        assert_eq!(b.shared_len(), 10);
+        assert_eq!(p.stats().shared_adoptions, 3);
+        assert_eq!(p.stats().resident_pages, 3, "no new storage for B");
+
+        // Adopted rows read back bit-identically without any write.
+        let (kb, _) = p.read_head(&b, 1, 0, 4, 10);
+        for pos in 0..10 {
+            assert_eq!(kb.row(pos), &row(100.0, pos)[..]);
+        }
+
+        // B extends: position 10 lands in the shared tail page → COW.
+        p.ensure(&mut b, 10, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 1);
+        fill(&p, &b, 10, 1, 5000.0);
+        // B sees its kept prefix rows plus the divergent row...
+        let (kb, _) = p.read_head(&b, 0, 0, 4, 11);
+        assert_eq!(kb.row(9), &row(0.0, 9)[..]);
+        assert_eq!(kb.row(10), &row(5000.0, 10)[..]);
+        // ...and A's pages are untouched.
+        let (ka, _) = p.read_head(&a, 0, 0, 4, 10);
+        for pos in 0..10 {
+            assert_eq!(ka.row(pos), &row(0.0, pos)[..]);
+        }
+
+        // A shorter prompt sharing only the first page adopts exactly it.
+        let mut c = BlockTable::default();
+        let short: Vec<i32> = (0..6).collect();
+        assert_eq!(p.adopt(&mut c, &short), 4, "whole first page only");
+        p.release(&mut a);
+        p.release(&mut b);
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn different_tokens_never_adopt() {
+        let p = pool(4);
+        let mut a = BlockTable::default();
+        let tokens: Vec<i32> = (0..8).collect();
+        p.ensure(&mut a, 0, 8).unwrap();
+        fill(&p, &a, 0, 8, 0.0);
+        p.register(&a, &tokens);
+        let mut b = BlockTable::default();
+        let other: Vec<i32> = (100..108).collect();
+        assert_eq!(p.adopt(&mut b, &other), 0);
+        p.release(&mut a);
+    }
+
+    #[test]
+    fn lru_reclaims_cached_pages_under_pressure() {
+        let p = pool(2);
+        // Register a one-page chain, then release it: the page stays
+        // resident as prefix cache.
+        let t1: Vec<i32> = (0..4).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 4).unwrap();
+        fill(&p, &a, 0, 4, 0.0);
+        p.register(&a, &t1);
+        p.release(&mut a);
+        assert_eq!(p.stats().resident_pages, 1);
+        // While cached, it is adoptable...
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &t1), 4);
+        p.release(&mut b);
+        // ...until a 2-page demand forces reclaiming it.
+        let mut c = BlockTable::default();
+        p.ensure(&mut c, 0, 8).unwrap();
+        let s = p.stats();
+        assert_eq!(s.reclaimed_pages, 1);
+        assert_eq!(s.resident_pages, 2);
+        assert!(s.resident_pages <= s.max_pages);
+        // The reclaimed page's index entry is gone: no stale adoption.
+        let mut d = BlockTable::default();
+        assert_eq!(p.adopt(&mut d, &t1), 0);
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn clone_table_shares_then_cow_on_write() {
+        let p = pool(4);
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 6).unwrap();
+        fill(&p, &a, 0, 6, 0.0);
+        let mut b = p.clone_table(&a);
+        assert_eq!(p.stats().resident_pages, 2, "clone allocates nothing");
+        // Writer into the shared tail page takes a private copy.
+        p.ensure(&mut b, 6, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 1);
+        fill(&p, &b, 6, 1, 9000.0);
+        let (ka, _) = p.read_head(&a, 0, 0, 4, 6);
+        assert_eq!(ka.row(5), &row(0.0, 5)[..]);
+        p.release(&mut a);
+        p.release(&mut b);
+    }
+}

@@ -17,6 +17,7 @@
 //! example, and test runs artifact-free.
 
 mod manifest;
+pub mod kvpool;
 pub mod native;
 #[cfg(feature = "xla")]
 mod pjrt;

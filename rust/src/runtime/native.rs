@@ -33,6 +33,20 @@
 //! other sessions share the step, which is what makes continuous batching
 //! in `serve` sound.
 //!
+//! ## Paged storage
+//!
+//! A [`KvCache`] is either *flat* (private growable buffers) or *paged*
+//! (a block table into a budgeted process-wide [`KvPool`] — fixed-size
+//! pages, cross-session prefix sharing, copy-on-write, LRU reclaim; spec
+//! in [`super::kvpool`]). The attention loops are storage-agnostic: they
+//! read gathered per-head panels, so both backings produce bit-identical
+//! logits. Growth is validated against a per-cache position cap and the
+//! pool budget **before** compute; violations are typed
+//! ([`super::kvpool::KvError`]) and leave the caches untouched, which is
+//! what lets the serving scheduler preempt a session (drop its cache,
+//! keep its token history) and later resume it bit-exactly by
+//! re-prefilling.
+//!
 //! `train_*` is a full hand-derived reverse pass (RMSNorm, RoPE, causal
 //! GQA attention, SwiGLU/GeGLU) plus the exact AdamW update from
 //! `model.train_step`; gradients are checked against finite differences in
@@ -44,6 +58,7 @@ use std::f32::consts::PI;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::kvpool::{BlockTable, KvError, KvPool};
 use super::{FamilySpec, Manifest, Value};
 use crate::model::ModelParams;
 use crate::quant::{Quantizer as _, UniformQuantizer};
@@ -267,23 +282,56 @@ fn rope_rotate_row(row: &mut [f32], head_dim: usize, pos: usize, theta: f32) {
 
 // --------------------------------------------------------------- kv cache
 
-/// Per-session key/value cache for incremental decoding: one growable
-/// (len × kv_dim) `K` and `V` buffer per layer. `K` rows are stored
-/// post-RoPE (rotated at their absolute position), `V` rows raw — exactly
-/// the values the full-sequence attention would recompute, so attending
-/// over the cache reproduces the causal forward bit-for-bit.
-#[derive(Clone, Debug)]
+/// Per-session key/value cache for incremental decoding. `K` rows are
+/// stored post-RoPE (rotated at their absolute position), `V` rows raw —
+/// exactly the values the full-sequence attention would recompute, so
+/// attending over the cache reproduces the causal forward bit-for-bit.
+///
+/// Two backings share one interface:
+///
+/// * **Flat** ([`KvCache::new`] / [`KvCache::for_family`]): one growable
+///   (len × kv_dim) `K`/`V` buffer per layer, private to the session.
+/// * **Paged** ([`KvCache::paged`]): a block table into a process-wide
+///   [`KvPool`] — fixed-size pages under a hard byte budget, cross-session
+///   prefix sharing with copy-on-write, LRU reclaim of released prompt
+///   chains. See [`super::kvpool`] for the allocator spec. Storage layout
+///   never changes the arithmetic: reads gather the identical f32 rows, so
+///   both backings decode bit-identically.
+///
+/// Every cache enforces a position cap (`max_len`): growing past it is a
+/// typed [`KvError::ContextOverflow`] from [`fwd_prefill`]/[`fwd_decode`]
+/// instead of a silent decode at positions the model was never validated
+/// at. Capacity (pages / COW copies) is reserved via [`ensure_capacity`]
+/// *before* any forward compute, so a mid-step pool exhaustion leaves the
+/// session unchanged and retryable.
+///
+/// [`ensure_capacity`]: KvCache::ensure_capacity
+#[derive(Debug)]
 pub struct KvCache {
     kv_dim: usize,
+    n_layers: usize,
+    /// Cached positions (tokens whose K/V rows are logically stored).
+    len: usize,
+    /// Hard cap on `len` (context validation; `usize::MAX` = uncapped).
+    max_len: usize,
+    backing: KvBacking,
+}
+
+#[derive(Debug)]
+enum KvBacking {
     /// Per layer: (flat K rows, flat V rows), row-major (len × kv_dim).
-    layers: Vec<(Vec<f32>, Vec<f32>)>,
+    Flat(Vec<(Vec<f32>, Vec<f32>)>),
+    Paged { pool: KvPool, table: BlockTable },
 }
 
 impl KvCache {
     pub fn new(n_layers: usize, kv_dim: usize) -> KvCache {
         KvCache {
             kv_dim: kv_dim.max(1),
-            layers: vec![(Vec::new(), Vec::new()); n_layers],
+            n_layers,
+            len: 0,
+            max_len: usize::MAX,
+            backing: KvBacking::Flat(vec![(Vec::new(), Vec::new()); n_layers]),
         }
     }
 
@@ -291,46 +339,178 @@ impl KvCache {
         KvCache::new(fam.n_layers, fam.kv_dim())
     }
 
+    /// A cache drawing its storage from `pool`, capped at `max_len`
+    /// positions.
+    pub fn paged(pool: &KvPool, max_len: usize) -> KvCache {
+        KvCache {
+            kv_dim: pool.kv_dim(),
+            n_layers: pool.n_layers(),
+            len: 0,
+            max_len: max_len.max(1),
+            backing: KvBacking::Paged {
+                pool: pool.clone(),
+                table: BlockTable::default(),
+            },
+        }
+    }
+
+    /// Cap the cache at `n` positions (builder style).
+    pub fn with_max_len(mut self, n: usize) -> KvCache {
+        self.max_len = n.max(1);
+        self
+    }
+
     /// Number of cached positions (tokens whose K/V rows are stored).
     pub fn len(&self) -> usize {
-        self.layers
-            .first()
-            .map(|(k, _)| k.len() / self.kv_dim)
-            .unwrap_or(0)
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.len == 0
     }
 
-    /// Serialized size of the cached activations (capacity planning).
+    pub fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Positions adopted from the pool's prefix index (0 for flat caches
+    /// and unshared sessions).
+    pub fn shared_len(&self) -> usize {
+        match &self.backing {
+            KvBacking::Flat(_) => 0,
+            KvBacking::Paged { table, .. } => table.shared_len(),
+        }
+    }
+
+    /// Resident bytes this cache holds: buffer *capacity* for the flat
+    /// backing (Vec growth doubles — what the allocator actually keeps),
+    /// page-granular bytes for the paged backing. Budget and eviction
+    /// decisions key on this; the logical size is [`len_bytes`].
+    ///
+    /// [`len_bytes`]: KvCache::len_bytes
     pub fn byte_size(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|(k, v)| 4 * (k.len() + v.len()))
-            .sum()
+        match &self.backing {
+            KvBacking::Flat(layers) => layers
+                .iter()
+                .map(|(k, v)| 4 * (k.capacity() + v.capacity()))
+                .sum(),
+            KvBacking::Paged { pool, table } => pool.held_bytes(table),
+        }
     }
 
-    /// Append whole rows (multiples of kv_dim) for one layer.
+    /// Logical bytes of the cached rows: `4 · 2 · n_layers · len · kv_dim`.
+    pub fn len_bytes(&self) -> usize {
+        4 * 2 * self.n_layers * self.len * self.kv_dim
+    }
+
+    /// Reserve room for `extra` more positions — context-cap check, page
+    /// allocation, and copy-on-write of shared pages about to be written.
+    /// Called before any forward compute; on error the session state is
+    /// unchanged.
+    fn ensure_capacity(&mut self, extra: usize) -> Result<(), KvError> {
+        if self.len.saturating_add(extra) > self.max_len {
+            return Err(KvError::ContextOverflow {
+                have: self.len,
+                extra,
+                max: self.max_len,
+            });
+        }
+        match &mut self.backing {
+            KvBacking::Flat(_) => Ok(()),
+            KvBacking::Paged { pool, table } => pool.ensure(table, self.len, extra),
+        }
+    }
+
+    /// Adopt the longest registered prefix of `tokens` from the pool's
+    /// index (no-op for flat caches / non-empty caches). The adopted rows
+    /// are already resident bit-identically; prefill skips storing them.
+    pub fn adopt_prefix(&mut self, tokens: &[i32]) -> usize {
+        match &mut self.backing {
+            KvBacking::Paged { pool, table } if self.len == 0 && table.n_pages() == 0 => {
+                pool.adopt(table, tokens)
+            }
+            _ => 0,
+        }
+    }
+
+    /// Publish this cache's prompt pages in the pool's prefix index
+    /// (no-op for flat caches).
+    pub fn register_prefix(&self, tokens: &[i32]) {
+        if let KvBacking::Paged { pool, table } = &self.backing {
+            debug_assert!(tokens.len() <= self.len, "registering unstored rows");
+            pool.register(table, tokens);
+        }
+    }
+
+    /// Store whole rows (multiples of kv_dim) for one layer at positions
+    /// `[len, len + rows)`. Capacity must have been reserved via
+    /// [`ensure_capacity`](KvCache::ensure_capacity); `len` advances after
+    /// the last layer's rows land.
     fn append(&mut self, layer: usize, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len() % self.kv_dim, 0, "kv row width");
         debug_assert_eq!(k.len(), v.len(), "k/v row count");
-        self.layers[layer].0.extend_from_slice(k);
-        self.layers[layer].1.extend_from_slice(v);
+        let rows = k.len() / self.kv_dim;
+        match &mut self.backing {
+            KvBacking::Flat(layers) => {
+                layers[layer].0.extend_from_slice(k);
+                layers[layer].1.extend_from_slice(v);
+            }
+            KvBacking::Paged { pool, table } => {
+                pool.write_rows(table, layer, self.len, k, v);
+            }
+        }
+        if layer + 1 == self.n_layers {
+            self.len += rows;
+        }
     }
 
-    /// Copy one kv-head's cached panels: (K, V), each (len, head_dim).
-    fn head(&self, layer: usize, g: usize, hd: usize) -> (Matrix, Matrix) {
-        let (kbuf, vbuf) = &self.layers[layer];
-        let len = kbuf.len() / self.kv_dim;
-        let mut k = Matrix::zeros(len, hd);
-        let mut v = Matrix::zeros(len, hd);
-        for i in 0..len {
-            let o = i * self.kv_dim + g * hd;
-            k.row_mut(i).copy_from_slice(&kbuf[o..o + hd]);
-            v.row_mut(i).copy_from_slice(&vbuf[o..o + hd]);
+    /// Copy one kv-head's cached panels over positions `[0, len)`:
+    /// (K, V), each (len, head_dim). `len` is explicit because decode
+    /// reads a layer's rows after appending them but before the cache
+    /// length advances (which happens after the last layer).
+    fn head(&self, layer: usize, g: usize, hd: usize, len: usize) -> (Matrix, Matrix) {
+        match &self.backing {
+            KvBacking::Flat(layers) => {
+                let (kbuf, vbuf) = &layers[layer];
+                debug_assert!(len * self.kv_dim <= kbuf.len(), "head past stored rows");
+                let mut k = Matrix::zeros(len, hd);
+                let mut v = Matrix::zeros(len, hd);
+                for i in 0..len {
+                    let o = i * self.kv_dim + g * hd;
+                    k.row_mut(i).copy_from_slice(&kbuf[o..o + hd]);
+                    v.row_mut(i).copy_from_slice(&vbuf[o..o + hd]);
+                }
+                (k, v)
+            }
+            KvBacking::Paged { pool, table } => pool.read_head(table, layer, g, hd, len),
         }
-        (k, v)
+    }
+}
+
+impl Clone for KvCache {
+    fn clone(&self) -> KvCache {
+        let backing = match &self.backing {
+            KvBacking::Flat(layers) => KvBacking::Flat(layers.clone()),
+            KvBacking::Paged { pool, table } => KvBacking::Paged {
+                pool: pool.clone(),
+                table: pool.clone_table(table),
+            },
+        };
+        KvCache {
+            kv_dim: self.kv_dim,
+            n_layers: self.n_layers,
+            len: self.len,
+            max_len: self.max_len,
+            backing,
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        if let KvBacking::Paged { pool, table } = &mut self.backing {
+            pool.release(table);
+        }
     }
 }
 
@@ -556,6 +736,10 @@ pub fn fwd_prefill(
     if !cache.is_empty() {
         bail!("prefill expects an empty KV cache (got {} cached positions)", cache.len());
     }
+    // Reserve every page (and take any needed COW copies) up front: on
+    // failure the cache is untouched and the error is typed (context
+    // overflow / pool exhausted), never a half-filled prefill.
+    cache.ensure_capacity(tokens.len())?;
     forward_impl(fam, view, proj, tokens, 1, tokens.len(), None, Some(cache))
 }
 
@@ -594,6 +778,13 @@ pub fn fwd_decode(
         x.row_mut(i).copy_from_slice(embed.row(tok));
         positions.push(caches[i].len());
     }
+    // Reserve one position per session *before* any compute: a context
+    // overflow or pool exhaustion surfaces here as a typed error with no
+    // cache mutated, so the scheduler can preempt a session and retry the
+    // whole step cleanly.
+    for cache in caches.iter_mut() {
+        cache.ensure_capacity(1)?;
+    }
     let hd = fam.head_dim();
     let nh = fam.n_heads;
     let rep = nh / fam.n_kv_heads;
@@ -616,7 +807,7 @@ pub fn fwd_decode(
             // One cached-panel copy per kv group; under GQA all `rep`
             // query heads of the group share it.
             for g in 0..fam.n_kv_heads {
-                let (kh, vh) = caches[i].head(layer, g, hd);
+                let (kh, vh) = caches[i].head(layer, g, hd, len);
                 debug_assert_eq!(kh.rows(), len, "cache length drift");
                 for r in 0..rep {
                     let hh = g * rep + r;
@@ -1331,6 +1522,107 @@ mod tests {
         }
         assert_eq!(a_bat.len(), 7);
         assert_eq!(b_bat.len(), 4);
+    }
+
+    #[test]
+    fn paged_cache_decodes_bit_identically_to_flat() {
+        // Same prompt, same decode steps, one session on flat buffers and
+        // one on a paged pool with a page smaller than the prompt: every
+        // step's logits must agree bit-for-bit across page boundaries and
+        // the COW/adoption machinery.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 41);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 10, 13);
+        let prompt_len = 6usize;
+        let pool = KvPool::new(fam.n_layers, fam.kv_dim(), 4, 64 * 1024).unwrap();
+        let mut flat = KvCache::for_family(&fam);
+        let mut paged = KvCache::paged(&pool, 64);
+        let a = fwd_prefill(&fam, &view, &proj, &tokens[..prompt_len], &mut flat).unwrap();
+        let b = fwd_prefill(&fam, &view, &proj, &tokens[..prompt_len], &mut paged).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "paged prefill diverged");
+        paged.register_prefix(&tokens[..prompt_len]);
+        // A second paged session adopting the prompt chain must also match.
+        let mut shared = KvCache::paged(&pool, 64);
+        assert_eq!(shared.adopt_prefix(&tokens[..prompt_len]), prompt_len);
+        let c = fwd_prefill(&fam, &view, &proj, &tokens[..prompt_len], &mut shared).unwrap();
+        assert_eq!(a.max_abs_diff(&c), 0.0, "adopted prefill diverged");
+        for t in prompt_len..tokens.len() {
+            let sa = {
+                let mut caches = [&mut flat];
+                fwd_decode(&fam, &view, &proj, &tokens[t..t + 1], &mut caches).unwrap()
+            };
+            let sb = {
+                let mut caches = [&mut paged, &mut shared];
+                let two = [tokens[t], tokens[t]];
+                fwd_decode(&fam, &view, &proj, &two, &mut caches).unwrap()
+            };
+            for j in 0..fam.vocab {
+                assert_eq!(sb.at(0, j), sa.at(0, j), "paged step {t} col {j}");
+                assert_eq!(sb.at(1, j), sa.at(0, j), "shared step {t} col {j}");
+            }
+        }
+        assert_eq!(paged.len(), tokens.len());
+        let stats = pool.stats();
+        assert!(stats.shared_adoptions >= 2, "prefix sharing never engaged");
+        assert!(stats.cow_copies >= 1, "divergence never took a COW copy");
+        assert!(stats.resident_pages <= stats.max_pages);
+    }
+
+    #[test]
+    fn growth_past_the_cap_is_a_typed_context_overflow() {
+        // Satellite regression: the cache used to grow unbounded past the
+        // engine's validated sequence length. Both prefill and decode must
+        // refuse with a typed error, leaving the cache untouched.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 42);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 6, 14);
+        let mut cache = KvCache::for_family(&fam).with_max_len(5);
+        let err = fwd_prefill(&fam, &view, &proj, &tokens, &mut cache).unwrap_err();
+        assert!(KvError::is_context_overflow(&err), "got: {err:#}");
+        assert!(cache.is_empty(), "failed prefill dirtied the cache");
+        fwd_prefill(&fam, &view, &proj, &tokens[..4], &mut cache).unwrap();
+        {
+            let mut caches = [&mut cache];
+            fwd_decode(&fam, &view, &proj, &tokens[4..5], &mut caches).unwrap();
+        }
+        assert_eq!(cache.len(), 5);
+        let mut caches = [&mut cache];
+        let err = fwd_decode(&fam, &view, &proj, &tokens[5..6], &mut caches).unwrap_err();
+        assert!(KvError::is_context_overflow(&err), "got: {err:#}");
+        assert_eq!(cache.len(), 5, "failed decode appended rows");
+    }
+
+    #[test]
+    fn byte_size_reports_capacity_and_len_bytes_logical() {
+        // Satellite regression: byte_size() used to report len-based bytes
+        // while Vec doubling keeps more resident — budget decisions keyed
+        // on it undercounted. Capacity is what is resident.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 43);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 5, 15);
+        let mut cache = KvCache::for_family(&fam);
+        fwd_prefill(&fam, &view, &proj, &tokens, &mut cache).unwrap();
+        let logical = 4 * 2 * fam.n_layers * cache.len() * fam.kv_dim();
+        assert_eq!(cache.len_bytes(), logical);
+        assert!(
+            cache.byte_size() >= cache.len_bytes(),
+            "capacity {} under logical {}",
+            cache.byte_size(),
+            cache.len_bytes()
+        );
+        // Paged caches account in whole pages.
+        let pool = KvPool::new(fam.n_layers, fam.kv_dim(), 4, 64 * 1024).unwrap();
+        let mut paged = KvCache::paged(&pool, 64);
+        fwd_prefill(&fam, &view, &proj, &tokens, &mut paged).unwrap();
+        assert_eq!(paged.byte_size(), 2 * pool.page_bytes(), "5 rows = 2 pages of 4");
+        assert_eq!(paged.len_bytes(), logical);
+        assert!(paged.byte_size() >= paged.len_bytes());
     }
 
     #[test]

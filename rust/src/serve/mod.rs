@@ -38,15 +38,43 @@
 //! engine contract), so a request's output does not depend on who it
 //! shared a batch with — property-tested below via solo-vs-concurrent
 //! equality.
+//!
+//! ## KV paging, preemption, and resume
+//!
+//! Generation sessions store their KV in fixed-size pages drawn from the
+//! engine's process-wide [`KvPool`](crate::runtime::kvpool::KvPool) under
+//! a hard byte budget (`--kv-budget`). Admission validates a generate
+//! request against that budget up front: a prompt that can *never* fit —
+//! more pages than the whole pool holds — fails with a typed
+//! [`KvError::PromptTooLarge`](crate::runtime::kvpool::KvError) instead of
+//! queueing forever, and one that merely cannot fit *right now* is put
+//! back at the queue front (FIFO preserved) until running sessions retire.
+//!
+//! When a decode step itself runs out of pages, the scheduler **preempts**
+//! the youngest in-flight session: its KV cache is dropped (every page
+//! returns to the pool), its token history and sampler state are parked,
+//! and the smaller batch retries. Preempted sessions **resume**
+//! oldest-first as soon as capacity frees, by re-prefilling their full
+//! token history — bit-exact, because KV rows are pure functions of the
+//! token prefix and the sampler state survived intact (the resume
+//! prefill's logits are discarded, never re-sampled). A lone session that
+//! outgrows the whole pool is a typed fatal error: it cannot free its own
+//! pages.
+//!
+//! Identical prompt prefixes across sessions share pages copy-on-write
+//! ([`ServeConfig::shared_prompt`] benches exactly this), so N sessions
+//! behind one system prompt hold far fewer resident pages than N × the
+//! prompt's page count.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::corpus;
 use crate::engine::{Engine, Request, Response, Sampler, Sampling, Session};
+use crate::runtime::kvpool::KvError;
 use crate::util::rng::Pcg64;
 
 /// What the closed-loop bench clients submit.
@@ -71,7 +99,12 @@ pub struct ServeConfig {
     pub seed: u64,
     pub workload: Workload,
     /// Sequence length (score) / prompt length (generate); 0 = engine seq.
+    /// Validated against the workload and engine up front — a length the
+    /// engine can never serve is an error, not a silent near-no-op.
     pub prompt_len: usize,
+    /// Every request uses the *same* corpus window as its prompt (a shared
+    /// system prompt) — the cross-session KV prefix-sharing benchmark knob.
+    pub shared_prompt: bool,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +116,7 @@ impl Default for ServeConfig {
             seed: 0,
             workload: Workload::Score,
             prompt_len: 0,
+            shared_prompt: false,
         }
     }
 }
@@ -108,6 +142,11 @@ pub struct ServeReport {
     pub decoded_tokens: usize,
     /// Wall time of each decode step (per-token latency samples).
     pub decode_step_latencies_s: Vec<f64>,
+    /// Sessions preempted under KV pool pressure (pages reclaimed, state
+    /// parked for a later bit-exact resume).
+    pub preemptions: usize,
+    /// Preempted sessions resumed by re-prefilling their token history.
+    pub resumes: usize,
     pub wall_secs: f64,
     /// `latencies_s` sorted once at construction (NaN-last), so percentile
     /// queries are O(1) instead of clone+sort per call.
@@ -192,6 +231,8 @@ struct Stats {
     generated_tokens: usize,
     decoded_tokens: usize,
     decode_step_latencies_s: Vec<f64>,
+    preemptions: usize,
+    resumes: usize,
 }
 
 impl Stats {
@@ -206,6 +247,8 @@ impl Stats {
             generated_tokens: self.generated_tokens,
             decoded_tokens: self.decoded_tokens,
             decode_step_latencies_s: self.decode_step_latencies_s,
+            preemptions: self.preemptions,
+            resumes: self.resumes,
             wall_secs,
             sorted_latencies_s,
         }
@@ -240,12 +283,34 @@ struct ActiveGen {
     submitted: Instant,
 }
 
+/// A generation session parked under KV pool pressure. Its cache (and
+/// thereby every page it held) is gone; everything needed to continue the
+/// stream bit-exactly — full token history, sampler state, the sampled but
+/// not-yet-fed token — is kept.
+struct Preempted {
+    id: u64,
+    /// Prompt plus every token fed back so far (`Session::tokens` at the
+    /// moment of preemption) — re-prefilling exactly this recreates the
+    /// dropped KV rows bit-identically.
+    history: Vec<i32>,
+    sampler: Sampler,
+    next: i32,
+    produced: Vec<i32>,
+    step_latencies_s: Vec<f64>,
+    budget: usize,
+    prompt_len: usize,
+    done: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
 /// Continuous-batching scheduler state (single leader thread).
 struct Scheduler<'a> {
     engine: &'a dyn Engine,
     max_batch: usize,
     queue: VecDeque<Arrived>,
     active: Vec<ActiveGen>,
+    /// Sessions evicted from the pool, waiting to resume (oldest first).
+    preempted: Vec<Preempted>,
     stats: Stats,
     next_id: u64,
 }
@@ -257,6 +322,7 @@ impl<'a> Scheduler<'a> {
             max_batch: engine.spec().max_batch.max(1),
             queue: VecDeque::new(),
             active: Vec::new(),
+            preempted: Vec::new(),
             stats: Stats::default(),
             next_id: 0,
         }
@@ -269,19 +335,27 @@ impl<'a> Scheduler<'a> {
     }
 
     fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty()
+        !self.queue.is_empty() || !self.active.is_empty() || !self.preempted.is_empty()
     }
 
-    /// One scheduler iteration: FIFO admission, one scoring pass, one
-    /// decode step. Always makes progress when `has_work()`.
+    /// One scheduler iteration: resume preempted sessions, FIFO admission,
+    /// one scoring pass, one decode step. Always makes progress when
+    /// `has_work()`.
     fn step(&mut self) -> Result<()> {
+        // Preempted sessions were admitted before anything still queued:
+        // they get first claim on freed pool capacity.
+        self.try_resume()?;
         // Admission from the queue front only — the head never yields its
         // turn to later arrivals (the FIFO fairness guarantee).
         let mut score_batch: Vec<Arrived> = Vec::new();
         loop {
             let admissible = match self.queue.front().map(|a| &a.inc.req) {
                 Some(Request::Score { .. }) => score_batch.len() < self.max_batch,
-                Some(Request::Generate { .. }) => self.active.len() < self.max_batch,
+                Some(Request::Generate { .. }) => {
+                    // New sessions wait while any preempted one still needs
+                    // its pages back — the preempted session arrived first.
+                    self.preempted.is_empty() && self.active.len() < self.max_batch
+                }
                 None => false,
             };
             if !admissible {
@@ -291,8 +365,8 @@ impl<'a> Scheduler<'a> {
             let is_score = matches!(arrived.inc.req, Request::Score { .. });
             if is_score {
                 score_batch.push(arrived);
-            } else {
-                self.admit_generate(arrived)?;
+            } else if !self.admit_generate(arrived)? {
+                break; // pool momentarily full: requeued at the front
             }
         }
         if !score_batch.is_empty() {
@@ -304,9 +378,101 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
+    /// Resume preempted sessions oldest-first while slots and pool pages
+    /// allow: re-prefill the parked token history (recreating the dropped
+    /// KV rows bit-identically), discard the logits — the pending token
+    /// was already sampled — and rejoin the decode pool.
+    fn try_resume(&mut self) -> Result<()> {
+        while !self.preempted.is_empty() && self.active.len() < self.max_batch {
+            let idx = self
+                .preempted
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.id)
+                .map(|(i, _)| i)
+                .expect("non-empty preempted list");
+            let history = self.preempted[idx].history.clone();
+            match self.engine.prefill(&history) {
+                Ok((session, _logits)) => {
+                    debug_assert_eq!(session.tokens, history, "resume history drifted");
+                    let p = self.preempted.swap_remove(idx);
+                    self.stats.batches += 1;
+                    self.stats.resumes += 1;
+                    self.active.push(ActiveGen {
+                        id: p.id,
+                        session,
+                        sampler: p.sampler,
+                        next: p.next,
+                        produced: p.produced,
+                        step_latencies_s: p.step_latencies_s,
+                        budget: p.budget,
+                        prompt_len: p.prompt_len,
+                        done: p.done,
+                        submitted: p.submitted,
+                    });
+                }
+                // Still no room: retry on a later iteration, after more
+                // active sessions retired.
+                Err(e) if KvError::is_pool_exhausted(&e) => break,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
     /// Prefill a generate request into the decode pool and sample its
-    /// first token.
-    fn admit_generate(&mut self, arrived: Arrived) -> Result<()> {
+    /// first token. Returns `false` when the KV pool is momentarily
+    /// exhausted and the request went back to the queue front.
+    fn admit_generate(&mut self, arrived: Arrived) -> Result<bool> {
+        let spec = self.engine.spec();
+        {
+            let Request::Generate { prompt, .. } = &arrived.inc.req else {
+                unreachable!("admit_generate on a non-generate request");
+            };
+            if prompt.is_empty() {
+                bail!("generate request with an empty prompt");
+            }
+            if prompt.len() >= spec.max_context {
+                return Err(anyhow::Error::from(KvError::ContextOverflow {
+                    have: prompt.len(),
+                    extra: 1,
+                    max: spec.max_context,
+                })
+                .context("admitting a generate request"));
+            }
+            if let Some(ps) = self.engine.pool_stats() {
+                let p = ps.page_tokens.max(1);
+                let need = prompt.len().div_ceil(p);
+                if need > ps.max_pages {
+                    // Never satisfiable: even an empty pool cannot hold
+                    // the prompt, so requeueing would spin forever.
+                    return Err(anyhow::Error::from(KvError::PromptTooLarge {
+                        prompt_pages: need,
+                        max_pages: ps.max_pages,
+                    })
+                    .context("admitting a generate request"));
+                }
+            }
+        }
+        let prefilled = {
+            let Request::Generate { prompt, .. } = &arrived.inc.req else {
+                unreachable!("admit_generate on a non-generate request");
+            };
+            self.engine.prefill(prompt)
+        };
+        let (session, logits) = match prefilled {
+            Ok(ok) => ok,
+            Err(e)
+                if KvError::is_pool_exhausted(&e)
+                    && (!self.active.is_empty() || !self.preempted.is_empty()) =>
+            {
+                // Transient pressure: pages free up as running sessions
+                // retire. The head of the queue keeps its turn.
+                self.queue.push_front(arrived);
+                return Ok(false);
+            }
+            Err(e) => return Err(e),
+        };
         let Arrived { id, inc } = arrived;
         let Request::Generate {
             prompt,
@@ -316,10 +482,8 @@ impl<'a> Scheduler<'a> {
         else {
             unreachable!("admit_generate on a non-generate request");
         };
-        let spec = self.engine.spec();
         let prompt_len = prompt.len();
         let budget = max_new_tokens.min(spec.max_context.saturating_sub(prompt_len));
-        let (session, logits) = self.engine.prefill(&prompt)?;
         self.stats.batches += 1;
         let mut sampler = Sampler::new(sampling);
         if budget == 0 {
@@ -333,7 +497,7 @@ impl<'a> Scheduler<'a> {
                     step_latencies_s: Vec::new(),
                 },
             );
-            return Ok(());
+            return Ok(true);
         }
         let next = sampler.sample(logits.row(logits.rows() - 1));
         let ag = ActiveGen {
@@ -353,7 +517,7 @@ impl<'a> Scheduler<'a> {
         } else {
             self.active.push(ag);
         }
-        Ok(())
+        Ok(true)
     }
 
     /// Score the admitted requests through [`crate::engine::score_many`]
@@ -394,35 +558,76 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Advance every in-flight session by one token in a single engine
-    /// call, then retire the ones that hit their budget.
+    /// call, then retire the ones that hit their budget. When the KV pool
+    /// cannot back the step (page reservation runs *before* any compute,
+    /// so a refusal leaves every session untouched), preempt the youngest
+    /// session and retry the smaller batch; with one session left the
+    /// exhaustion is fatal — a lone session cannot free its own pages.
     fn decode_once(&mut self) -> Result<()> {
         let engine = self.engine;
-        let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
-        let t0 = Instant::now();
-        let logits = {
-            let mut sessions: Vec<&mut Session> =
-                self.active.iter_mut().map(|a| &mut a.session).collect();
-            engine.decode_step(&mut sessions, &tokens)?
-        };
-        let step_s = t0.elapsed().as_secs_f64();
-        self.stats.decode_steps += 1;
-        self.stats.decode_step_latencies_s.push(step_s);
-        self.stats.decoded_tokens += self.active.len();
-        for (row, ag) in self.active.iter_mut().enumerate() {
-            let next = ag.sampler.sample(logits.row(row));
-            ag.next = next;
-            ag.produced.push(next);
-            ag.step_latencies_s.push(step_s);
-        }
-        let drained: Vec<ActiveGen> = self.active.drain(..).collect();
-        for ag in drained {
-            if ag.produced.len() >= ag.budget {
-                self.retire(ag);
-            } else {
-                self.active.push(ag);
+        loop {
+            let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
+            let t0 = Instant::now();
+            let step = {
+                let mut sessions: Vec<&mut Session> =
+                    self.active.iter_mut().map(|a| &mut a.session).collect();
+                engine.decode_step(&mut sessions, &tokens)
+            };
+            let logits = match step {
+                Ok(l) => l,
+                Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
+                    self.preempt_youngest();
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            let step_s = t0.elapsed().as_secs_f64();
+            self.stats.decode_steps += 1;
+            self.stats.decode_step_latencies_s.push(step_s);
+            self.stats.decoded_tokens += self.active.len();
+            for (row, ag) in self.active.iter_mut().enumerate() {
+                let next = ag.sampler.sample(logits.row(row));
+                ag.next = next;
+                ag.produced.push(next);
+                ag.step_latencies_s.push(step_s);
             }
+            let drained: Vec<ActiveGen> = self.active.drain(..).collect();
+            for ag in drained {
+                if ag.produced.len() >= ag.budget {
+                    self.retire(ag);
+                } else {
+                    self.active.push(ag);
+                }
+            }
+            return Ok(());
         }
-        Ok(())
+    }
+
+    /// Park the youngest in-flight session: its cache drops here (every
+    /// page back to the pool) while token history, sampler state, and the
+    /// pending token survive for a bit-exact resume.
+    fn preempt_youngest(&mut self) {
+        let idx = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, a)| a.id)
+            .map(|(i, _)| i)
+            .expect("preempt with no active session");
+        let ag = self.active.remove(idx);
+        self.stats.preemptions += 1;
+        self.preempted.push(Preempted {
+            id: ag.id,
+            history: ag.session.tokens,
+            sampler: ag.sampler,
+            next: ag.next,
+            produced: ag.produced,
+            step_latencies_s: ag.step_latencies_s,
+            budget: ag.budget,
+            prompt_len: ag.prompt_len,
+            done: ag.done,
+            submitted: ag.submitted,
+        });
     }
 
     fn retire(&mut self, ag: ActiveGen) {
@@ -492,6 +697,35 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
     } else {
         cfg.prompt_len
     };
+    // Reject configs the engine can never serve before spawning a single
+    // client, instead of the old silent behavior (scoring one token
+    // produced empty "scores"; an over-long generate prompt burned a full
+    // prefill to emit zero tokens).
+    match cfg.workload {
+        Workload::Score => {
+            if prompt_len < 2 {
+                bail!(
+                    "score workload needs prompt_len >= 2 (got {prompt_len}): \
+                     scoring predicts each token from its prefix"
+                );
+            }
+            if prompt_len > spec.max_context {
+                bail!(
+                    "prompt_len {prompt_len} exceeds the engine's max_context {}",
+                    spec.max_context
+                );
+            }
+        }
+        Workload::Generate { .. } => {
+            if prompt_len >= spec.max_context {
+                bail!(
+                    "prompt_len {prompt_len} leaves no room to generate within \
+                     the engine's max_context {}",
+                    spec.max_context
+                );
+            }
+        }
+    }
     let (tx, rx) = mpsc::channel::<Incoming>();
     let t_start = Instant::now();
     let mut sched = Scheduler::new(engine);
@@ -505,12 +739,21 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
             let tx = tx.clone();
             let seed = cfg.seed;
             let workload = cfg.workload;
+            let shared = cfg.shared_prompt;
             let n = per_client + usize::from(c < remainder);
             s.spawn(move || {
                 let mut rng = Pcg64::new(seed ^ c as u64, 77);
-                let data = corpus::generate(corpus::Split::C4Sim, 200_000, seed ^ c as u64);
+                // Shared-prompt mode: every client reads the same corpus
+                // window, so sessions carry one system prompt and the KV
+                // pool can share its prefix pages across all of them.
+                let corpus_seed = if shared { seed } else { seed ^ c as u64 };
+                let data = corpus::generate(corpus::Split::C4Sim, 200_000, corpus_seed);
                 for _ in 0..n {
-                    let start = rng.below(data.len() - prompt_len - 1);
+                    let start = if shared {
+                        0
+                    } else {
+                        rng.below(data.len() - prompt_len - 1)
+                    };
                     let tokens: Vec<i32> = data[start..start + prompt_len]
                         .iter()
                         .map(|&b| b as i32)
@@ -557,9 +800,13 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
                 while let Ok(inc) = rx.try_recv() {
                     sched.enqueue(inc);
                 }
-                // Idle-only dynamic batching: nothing in flight → hold a
-                // partial scoring batch briefly to let it fill.
-                if sched.active.is_empty() && sched.queue.len() < sched.max_batch {
+                // Idle-only dynamic batching: nothing in flight (and no
+                // preempted session waiting on pages) → hold a partial
+                // scoring batch briefly to let it fill.
+                if sched.active.is_empty()
+                    && sched.preempted.is_empty()
+                    && sched.queue.len() < sched.max_batch
+                {
                     let t0 = Instant::now();
                     while sched.queue.len() < sched.max_batch {
                         let left = cfg.deadline.saturating_sub(t0.elapsed());
@@ -583,6 +830,7 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
             // then drain until all submitters hang up.
             sched.queue.clear();
             sched.active.clear();
+            sched.preempted.clear();
             while rx.recv().is_ok() {}
         }
         result
@@ -630,6 +878,7 @@ mod tests {
                 max_batch: self.max_batch,
                 seq: self.seq,
                 max_context: 1024,
+                kv_budget: 0,
             }
         }
 
@@ -664,6 +913,7 @@ mod tests {
             seed: 9,
             workload: Workload::Score,
             prompt_len: 0,
+            shared_prompt: false,
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 13);
@@ -688,6 +938,7 @@ mod tests {
             seed: 4,
             workload: Workload::Generate { max_new_tokens: 5 },
             prompt_len: 8,
+            shared_prompt: false,
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.completed.len(), 9);
@@ -913,8 +1164,248 @@ mod tests {
             seed: 1,
             workload: Workload::Score,
             prompt_len: 0,
+            shared_prompt: false,
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 3);
+    }
+
+    /// Distinct micro-vocab prompts (tokens 1..=10) of `len` tokens each.
+    fn distinct_prompts(n: usize, len: usize) -> Vec<Vec<i32>> {
+        (0..n)
+            .map(|i| (0..len).map(|j| (1 + (i * 3 + j) % 10) as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn preempted_sessions_resume_bit_exact_under_a_tiny_pool() {
+        // Four sessions of one prompt-page each through a 3-page pool
+        // (micro family: one 16-position page = 512 B). The fourth can't
+        // even prefill until a slotholder retires (admission requeue), and
+        // every decode past position 16 needs a second page that only
+        // exists if another session is preempted. All streams must still
+        // finish byte-identical to an unconstrained solo run.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let engine = NativeEngine::new(&params, 4, 8)
+            .unwrap()
+            .with_kv_budget(3 * 512)
+            .unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(4, 12);
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .map(|p| Request::Generate {
+                prompt: p.clone(),
+                max_new_tokens: 10,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert!(report.preemptions >= 1, "pool never forced a preemption");
+        assert!(report.resumes >= 1, "no preempted session resumed");
+        assert_eq!(
+            report.preemptions, report.resumes,
+            "every preemption must be matched by a resume"
+        );
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 10, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens.len(), 10);
+                    assert_eq!(tokens, &solo.tokens, "preempted stream diverged from solo");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        let ps = engine.pool_stats().unwrap();
+        assert_eq!(ps.max_pages, 3);
+        assert!(ps.peak_resident_pages <= ps.max_pages, "pool over-allocated");
+    }
+
+    #[test]
+    fn fused_preempted_sessions_resume_bit_exact_under_a_tiny_pool() {
+        // Same eviction-forcing budget on the PACKED engine: preemption +
+        // re-prefill must preserve the fused greedy streams bit-exactly.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 19);
+        let engine = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8)
+            .with_kv_budget(3 * 512)
+            .unwrap();
+        let reference = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let prompts = distinct_prompts(3, 12);
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .map(|p| Request::Generate {
+                prompt: p.clone(),
+                max_new_tokens: 10,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert!(report.preemptions >= 1, "pool never forced a preemption");
+        assert_eq!(report.preemptions, report.resumes);
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 10, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "fused preempted stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        let ps = engine.pool_stats().unwrap();
+        assert!(ps.peak_resident_pages <= ps.max_pages, "pool over-allocated");
+    }
+
+    #[test]
+    fn identical_prompts_share_prefix_pages_across_sessions() {
+        // Three sessions behind one 20-token "system prompt" (2 pages
+        // each if private): adoption keeps the prompt resident once, and
+        // the first divergent decode takes a COW copy instead of
+        // corrupting the shared rows — so outputs still match solo.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 29);
+        let engine = NativeEngine::new(&params, 3, 8).unwrap();
+        let reference = NativeEngine::new(&params, 3, 8).unwrap();
+        let prompt: Vec<i32> = (0..20).map(|j| (1 + j % 10) as i32).collect();
+        let reqs: Vec<Request> = (0..3)
+            .map(|_| Request::Generate {
+                prompt: prompt.clone(),
+                max_new_tokens: 4,
+                sampling: Sampling::Greedy,
+            })
+            .collect();
+        let (resps, _report) = serve_oneshot(&engine, reqs).unwrap();
+        let solo = crate::engine::generate(&reference, &prompt, 4, Sampling::Greedy).unwrap();
+        for r in &resps {
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "shared-prefix stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        let ps = engine.pool_stats().unwrap();
+        assert!(ps.shared_adoptions >= 2, "no prefix pages were adopted");
+        assert!(ps.cow_copies >= 1, "divergence never took a COW copy");
+        assert!(
+            ps.peak_resident_pages < 3 * 2,
+            "sharing saved nothing: peak {} pages for 3 sessions x 2 prompt pages",
+            ps.peak_resident_pages
+        );
+    }
+
+    #[test]
+    fn pool_exhaustion_is_typed_and_never_over_allocates() {
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 31);
+        let engine = NativeEngine::new(&params, 3, 8)
+            .unwrap()
+            .with_kv_budget(512) // exactly one 16-position page
+            .unwrap();
+        // A prompt needing 2 pages can never be admitted: typed
+        // PromptTooLarge at admission, before any prefill work.
+        let big = Request::Generate {
+            prompt: distinct_prompts(1, 20).pop().unwrap(),
+            max_new_tokens: 2,
+            sampling: Sampling::Greedy,
+        };
+        let err = serve_oneshot(&engine, vec![big]).unwrap_err();
+        assert!(KvError::is_prompt_too_large(&err), "err: {err:#}");
+        assert!(!KvError::is_pool_exhausted(&err), "err: {err:#}");
+        // A lone session that outgrows the whole pool mid-decode is a
+        // typed pool-exhaustion error (nobody left to preempt) — never a
+        // panic, never an allocation past the budget.
+        let long = Request::Generate {
+            prompt: distinct_prompts(1, 14).pop().unwrap(),
+            max_new_tokens: 10,
+            sampling: Sampling::Greedy,
+        };
+        let err = serve_oneshot(&engine, vec![long]).unwrap_err();
+        assert!(KvError::is_pool_exhausted(&err), "err: {err:#}");
+        let ps = engine.pool_stats().unwrap();
+        assert_eq!(ps.max_pages, 1);
+        assert!(ps.resident_pages <= ps.max_pages, "budget exceeded");
+        assert!(ps.peak_resident_pages <= ps.max_pages, "budget exceeded at peak");
+    }
+
+    #[test]
+    fn invalid_prompt_len_is_rejected_up_front() {
+        let engine = ToyEngine::new(256, 2, 8);
+        // Scoring a single token predicts nothing: the old code silently
+        // returned empty scores per request.
+        let cfg = ServeConfig {
+            requests: 2,
+            clients: 1,
+            deadline: Duration::from_millis(1),
+            seed: 3,
+            workload: Workload::Score,
+            prompt_len: 1,
+            shared_prompt: false,
+        };
+        let err = run_server(&engine, &cfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("prompt_len"),
+            "unexpected error: {err:#}"
+        );
+        // A generate prompt at max_context leaves no room to decode: the
+        // old code prefilled it and answered with zero tokens.
+        let cfg = ServeConfig {
+            workload: Workload::Generate { max_new_tokens: 4 },
+            prompt_len: 1024, // == ToyEngine max_context
+            ..cfg
+        };
+        let err = run_server(&engine, &cfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("prompt_len"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn throughput_is_finite_even_with_no_samples_or_zero_wall() {
+        // Empty run, zero wall clock: both rates must be exactly 0.0 —
+        // the 0/0 (NaN) and n/0 (inf) paths both lurked here.
+        let empty = Stats::default().into_report(0.0);
+        assert_eq!(empty.requests_per_sec(), 0.0);
+        assert_eq!(empty.decode_tokens_per_sec(), 0.0);
+        assert!(empty.requests_per_sec().is_finite());
+        assert!(empty.decode_tokens_per_sec().is_finite());
+        // Completed work under a zero-duration clock (coarse timers do
+        // this): still finite, still zero.
+        let report = Stats {
+            completed: vec![0, 1],
+            decoded_tokens: 5,
+            decode_step_latencies_s: vec![0.0, 0.0],
+            ..Default::default()
+        }
+        .into_report(0.0);
+        assert_eq!(report.requests_per_sec(), 0.0);
+        assert_eq!(report.decode_tokens_per_sec(), 0.0);
+        assert!(report.decode_tokens_per_sec().is_finite());
+    }
+
+    #[test]
+    fn shared_prompt_serving_completes() {
+        // The shared-prompt knob routes every client to the same corpus
+        // window; the run must complete normally on a pool-less engine.
+        let engine = ToyEngine::new(256, 4, 16);
+        let cfg = ServeConfig {
+            requests: 6,
+            clients: 3,
+            deadline: Duration::from_millis(1),
+            seed: 5,
+            workload: Workload::Generate { max_new_tokens: 3 },
+            prompt_len: 8,
+            shared_prompt: true,
+        };
+        let report = run_server(&engine, &cfg).unwrap();
+        assert_eq!(report.completed.len(), 6);
+        assert_eq!(report.generated_tokens, 6 * 3);
     }
 }

@@ -1,0 +1,105 @@
+//! Paged-KV integration tests on the tl-7s family, through the public
+//! serving API: budget-forced preemption with bit-exact resume, and
+//! cross-session KV prefix sharing behind one shared system prompt.
+
+use std::path::Path;
+use std::time::Duration;
+
+use odlri::engine::{self, Engine, NativeEngine, Request, Response, Sampling};
+use odlri::fused::FusedModel;
+use odlri::model::ModelParams;
+use odlri::runtime::Runtime;
+use odlri::serve::{run_server, serve_oneshot, ServeConfig, Workload};
+
+/// tl-7s page size: 2 (K+V) · 4 layers · 16 positions · kv_dim 128 · 4 B.
+const PAGE_BYTES: usize = 2 * 4 * 16 * 128 * 4;
+
+fn tl7s(seed: u64) -> (usize, usize, ModelParams) {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, seed);
+    (rt.manifest.batch, rt.manifest.seq, params)
+}
+
+#[test]
+fn serving_survives_eviction_and_stays_bit_exact() {
+    // Three sessions of two prompt pages each through a 5-page pool: the
+    // third prefill must wait for capacity, and growth past position 32
+    // forces a preemption. Every stream still matches an unconstrained
+    // solo run bit-for-bit.
+    let (batch, seq, params) = tl7s(7);
+    let engine = NativeEngine::new(&params, batch, seq)
+        .expect("engine")
+        .with_kv_budget(5 * PAGE_BYTES)
+        .expect("budget");
+    let reference = NativeEngine::new(&params, batch, seq).expect("reference engine");
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|i| (0..24).map(|j| ((i * 31 + j * 7) % 256) as i32).collect())
+        .collect();
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .map(|p| Request::Generate {
+            prompt: p.clone(),
+            max_new_tokens: 16,
+            sampling: Sampling::Greedy,
+        })
+        .collect();
+    let (resps, report) = serve_oneshot(&engine, reqs).expect("serve");
+    assert!(
+        report.preemptions >= 1,
+        "a 5-page pool under 3x3-page demand never preempted"
+    );
+    assert_eq!(
+        report.preemptions, report.resumes,
+        "every preemption must be matched by a bit-exact resume"
+    );
+    for (p, r) in prompts.iter().zip(&resps) {
+        let solo = engine::generate(&reference, p, 16, Sampling::Greedy).expect("solo");
+        match r {
+            Response::Generated { tokens, .. } => {
+                assert_eq!(tokens.len(), 16, "short generation");
+                assert_eq!(tokens, &solo.tokens, "evicted stream diverged from solo");
+            }
+            other => panic!("wrong response {other:?}"),
+        }
+    }
+    let ps = engine.pool_stats().expect("paged engine has stats");
+    assert_eq!(ps.max_pages, 5);
+    assert!(
+        ps.peak_resident_pages <= ps.max_pages,
+        "pool over-allocated: {ps:?}"
+    );
+}
+
+#[test]
+fn shared_system_prompt_shares_kv_pages_across_sessions() {
+    // Six closed-loop requests behind one 48-token system prompt (exactly
+    // three whole pages) on the packed engine: later sessions adopt the
+    // registered prefix pages instead of materializing their own copies,
+    // so resident pages stay well below sessions x prompt-pages.
+    let (batch, seq, params) = tl7s(9);
+    let fm = FusedModel::pack_dense(&params, "uniform", 8, 64)
+        .expect("pack")
+        .with_shape(batch, seq);
+    let cfg = ServeConfig {
+        requests: 6,
+        clients: 3,
+        deadline: Duration::from_millis(5),
+        seed: 11,
+        workload: Workload::Generate { max_new_tokens: 8 },
+        prompt_len: 48,
+        shared_prompt: true,
+    };
+    let report = run_server(&fm, &cfg).expect("serve");
+    assert_eq!(report.completed.len(), 6, "dropped requests");
+    assert_eq!(report.generated_tokens, 6 * 8, "short generations");
+    let ps = fm.pool_stats().expect("paged engine has stats");
+    assert!(
+        ps.shared_adoptions >= 3,
+        "prefix sharing never engaged: {ps:?}"
+    );
+    assert!(
+        ps.peak_resident_pages < 6 * 3,
+        "resident pages not sub-linear in sessions: {ps:?}"
+    );
+}

@@ -21,6 +21,7 @@ fn smoke_config(requests: usize, workload: Workload) -> ServeConfig {
         seed: 11,
         workload,
         prompt_len: 0,
+        shared_prompt: false,
     }
 }
 
