@@ -175,6 +175,14 @@ pub enum Response {
         tokens: Vec<i32>,
         step_latencies_s: Vec<f64>,
     },
+    /// The request itself was invalid or can never be served (empty
+    /// prompt, context overflow, a prompt larger than the whole KV pool).
+    /// A per-request refusal, not a server failure: the scheduler answers
+    /// the offending request and keeps serving everyone else. Where the
+    /// cause is a typed [`KvError`](crate::runtime::kvpool::KvError), the
+    /// message leads with its stable tag so `KvError::is_*` classification
+    /// works on it.
+    Rejected { error: String },
 }
 
 // ------------------------------------------------------------- sampling

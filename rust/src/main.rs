@@ -140,7 +140,8 @@ fn parse_bytes(s: &str) -> Result<usize> {
         .trim()
         .parse()
         .map_err(|_| anyhow::anyhow!("bad byte size '{s}' (use e.g. 512k, 64m, 2g)"))?;
-    Ok(n * mult)
+    n.checked_mul(mult)
+        .ok_or_else(|| anyhow::anyhow!("byte size '{s}' overflows"))
 }
 
 fn load_model(rt: &Runtime, args: &Args, family: &str) -> Result<ModelParams> {
@@ -551,8 +552,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     if max_new > 0 {
         println!(
-            "scheduler: {} preemptions, {} resumes (bit-exact re-prefill)",
-            report.preemptions, report.resumes
+            "scheduler: {} preemptions, {} resumes (bit-exact re-prefill), {} rejected",
+            report.preemptions, report.resumes, report.rejected
         );
     }
     if let Some(ps) = engine.pool_stats() {
@@ -652,4 +653,27 @@ fn tokens_to_text(tokens: &[i32]) -> String {
         .map(|&t| if (0..256).contains(&t) { t as u8 } else { b'?' })
         .collect();
     String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_bytes;
+
+    #[test]
+    fn parse_bytes_suffixes_and_overflow() {
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("512k").unwrap(), 512 << 10);
+        assert_eq!(parse_bytes("64m").unwrap(), 64 << 20);
+        assert_eq!(parse_bytes("2G").unwrap(), 2 << 30);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("12q").is_err());
+        // An oversized count must be an error, not a silent release-mode
+        // wrap to an arbitrary (possibly tiny) budget.
+        let err = parse_bytes("99999999999999999999g").unwrap_err();
+        assert!(format!("{err:#}").contains("byte size"), "err: {err:#}");
+        let err = parse_bytes("99999999999g").unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "err: {err:#}");
+        let err = parse_bytes(&format!("{}g", usize::MAX)).unwrap_err();
+        assert!(format!("{err:#}").contains("overflows"), "err: {err:#}");
+    }
 }

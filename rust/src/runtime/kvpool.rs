@@ -531,7 +531,17 @@ impl KvPool {
             }
             pos = next;
         }
-        if pos < tokens.len() && Self::adopt_one(&mut inner, table, tokens) {
+        // The tail page is registered under the hash of the *whole*
+        // prompt, so adopting it is only sound when every whole page
+        // before it was adopted. After a mid-chain miss (a middle page
+        // was LRU-reclaimed while the tail survived — reachable because
+        // recency is bumped per-page) the tail would be pushed at the
+        // wrong block-table index and `shared_len` would cover positions
+        // mapped to the wrong page.
+        if pos == (tokens.len() / p) * p
+            && pos < tokens.len()
+            && Self::adopt_one(&mut inner, table, tokens)
+        {
             pos = tokens.len();
         }
         table.shared_len = pos;
@@ -733,6 +743,47 @@ mod tests {
         p.release(&mut a);
         p.release(&mut b);
         p.release(&mut c);
+    }
+
+    #[test]
+    fn mid_chain_reclaim_stops_adoption_before_the_tail() {
+        // Register a 3-page chain (two whole pages + partial tail), then
+        // arrange for exactly the *middle* page to be LRU-reclaimed while
+        // the first and tail pages stay registered. Re-adopting the full
+        // prompt must stop at the miss — grafting the surviving tail page
+        // in at block index 1 would silently map positions 4..8 to the
+        // wrong rows.
+        let p = pool(3);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        p.release(&mut a); // all three pages cached, equal recency
+        // Bump the first page's recency via a first-page-only adoption,
+        // leaving the middle page as the coldest reclaim victim.
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &tokens[..4]), 4);
+        p.release(&mut b);
+        // One page of fresh demand reclaims the middle page.
+        let mut c = BlockTable::default();
+        p.ensure(&mut c, 0, 4).unwrap();
+        fill(&p, &c, 0, 4, 7000.0);
+        assert_eq!(p.stats().reclaimed_pages, 1);
+        // Full-prompt adoption now has a mid-chain miss at page 1: the
+        // adopted extent must end there, tail page left alone.
+        let mut d = BlockTable::default();
+        let shared = p.adopt(&mut d, &tokens);
+        assert_eq!(shared, 4, "adoption ran past a mid-chain miss");
+        assert_eq!(d.n_pages(), 1);
+        assert_eq!(d.shared_len(), 4);
+        // What was adopted reads back as the first page's original rows.
+        let (k, _) = p.read_head(&d, 0, 0, 4, 4);
+        for pos in 0..4 {
+            assert_eq!(k.row(pos), &row(0.0, pos)[..]);
+        }
+        p.release(&mut c);
+        p.release(&mut d);
     }
 
     #[test]

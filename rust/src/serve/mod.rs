@@ -44,11 +44,14 @@
 //! Generation sessions store their KV in fixed-size pages drawn from the
 //! engine's process-wide [`KvPool`](crate::runtime::kvpool::KvPool) under
 //! a hard byte budget (`--kv-budget`). Admission validates a generate
-//! request against that budget up front: a prompt that can *never* fit —
-//! more pages than the whole pool holds — fails with a typed
-//! [`KvError::PromptTooLarge`](crate::runtime::kvpool::KvError) instead of
-//! queueing forever, and one that merely cannot fit *right now* is put
-//! back at the queue front (FIFO preserved) until running sessions retire.
+//! request up front: an empty prompt, a prompt at/over `max_context`, or
+//! one that can *never* fit — more pages than the whole pool holds —
+//! answers **that request** with a typed [`Response::Rejected`] (tagged
+//! with the originating [`KvError`](crate::runtime::kvpool::KvError) so
+//! callers can classify it) and the scheduler keeps serving everyone
+//! else; a prompt that merely cannot fit *right now* is put back at the
+//! queue front (FIFO preserved) until running sessions retire. Fatal
+//! errors are reserved for engine/internal failures.
 //!
 //! When a decode step itself runs out of pages, the scheduler **preempts**
 //! the youngest in-flight session: its KV cache is dropped (every page
@@ -147,6 +150,10 @@ pub struct ServeReport {
     pub preemptions: usize,
     /// Preempted sessions resumed by re-prefilling their token history.
     pub resumes: usize,
+    /// Requests answered with [`Response::Rejected`] — per-request
+    /// validation refusals. They appear in `completed`/`latencies_s`
+    /// (each got an answer) but contribute no scores or tokens.
+    pub rejected: usize,
     pub wall_secs: f64,
     /// `latencies_s` sorted once at construction (NaN-last), so percentile
     /// queries are O(1) instead of clone+sort per call.
@@ -233,6 +240,7 @@ struct Stats {
     decode_step_latencies_s: Vec<f64>,
     preemptions: usize,
     resumes: usize,
+    rejected: usize,
 }
 
 impl Stats {
@@ -249,6 +257,7 @@ impl Stats {
             decode_step_latencies_s: self.decode_step_latencies_s,
             preemptions: self.preemptions,
             resumes: self.resumes,
+            rejected: self.rejected,
             wall_secs,
             sorted_latencies_s,
         }
@@ -423,36 +432,49 @@ impl<'a> Scheduler<'a> {
     /// Prefill a generate request into the decode pool and sample its
     /// first token. Returns `false` when the KV pool is momentarily
     /// exhausted and the request went back to the queue front.
+    ///
+    /// Validation failures of the request *itself* — empty prompt, context
+    /// overflow, a prompt no amount of preemption can ever fit — answer
+    /// that one request with [`Response::Rejected`] and keep the loop
+    /// running: one bad request must not abort every other client's queued
+    /// and in-flight work. Fatal errors are reserved for engine/internal
+    /// failures.
     fn admit_generate(&mut self, arrived: Arrived) -> Result<bool> {
         let spec = self.engine.spec();
-        {
+        let invalid = {
             let Request::Generate { prompt, .. } = &arrived.inc.req else {
                 unreachable!("admit_generate on a non-generate request");
             };
             if prompt.is_empty() {
-                bail!("generate request with an empty prompt");
-            }
-            if prompt.len() >= spec.max_context {
-                return Err(anyhow::Error::from(KvError::ContextOverflow {
-                    have: prompt.len(),
-                    extra: 1,
-                    max: spec.max_context,
-                })
-                .context("admitting a generate request"));
-            }
-            if let Some(ps) = self.engine.pool_stats() {
-                let p = ps.page_tokens.max(1);
-                let need = prompt.len().div_ceil(p);
-                if need > ps.max_pages {
+                Some("generate request with an empty prompt".to_string())
+            } else if prompt.len() >= spec.max_context {
+                Some(
+                    KvError::ContextOverflow {
+                        have: prompt.len(),
+                        extra: 1,
+                        max: spec.max_context,
+                    }
+                    .to_string(),
+                )
+            } else {
+                self.engine.pool_stats().and_then(|ps| {
+                    let p = ps.page_tokens.max(1);
+                    let need = prompt.len().div_ceil(p);
                     // Never satisfiable: even an empty pool cannot hold
                     // the prompt, so requeueing would spin forever.
-                    return Err(anyhow::Error::from(KvError::PromptTooLarge {
-                        prompt_pages: need,
-                        max_pages: ps.max_pages,
+                    (need > ps.max_pages).then(|| {
+                        KvError::PromptTooLarge {
+                            prompt_pages: need,
+                            max_pages: ps.max_pages,
+                        }
+                        .to_string()
                     })
-                    .context("admitting a generate request"));
-                }
+                })
             }
+        };
+        if let Some(error) = invalid {
+            self.reject(arrived, error);
+            return Ok(true);
         }
         let prefilled = {
             let Request::Generate { prompt, .. } = &arrived.inc.req else {
@@ -470,6 +492,12 @@ impl<'a> Scheduler<'a> {
                 // retire. The head of the queue keeps its turn.
                 self.queue.push_front(arrived);
                 return Ok(false);
+            }
+            // The engine re-checks request-level bounds; its typed
+            // refusals are per-request too, not server failures.
+            Err(e) if KvError::is_context_overflow(&e) || KvError::is_prompt_too_large(&e) => {
+                self.reject(arrived, format!("{e:#}"));
+                return Ok(true);
             }
             Err(e) => return Err(e),
         };
@@ -642,6 +670,14 @@ impl<'a> Scheduler<'a> {
                 step_latencies_s: ag.step_latencies_s,
             },
         );
+    }
+
+    /// Answer one request with a typed per-request refusal and keep
+    /// serving (counted separately from completions in the report).
+    fn reject(&mut self, arrived: Arrived, error: String) {
+        let Arrived { id, inc } = arrived;
+        self.stats.rejected += 1;
+        self.finish(id, inc.submitted, &inc.done, Response::Rejected { error });
     }
 
     fn finish(&mut self, id: u64, submitted: Instant, done: &mpsc::Sender<Response>, resp: Response) {
@@ -1308,16 +1344,32 @@ mod tests {
             .unwrap()
             .with_kv_budget(512) // exactly one 16-position page
             .unwrap();
-        // A prompt needing 2 pages can never be admitted: typed
-        // PromptTooLarge at admission, before any prefill work.
+        // A prompt needing 2 pages can never be admitted: a typed
+        // Rejected response at admission, before any prefill work — and
+        // the valid request queued behind it is still served.
         let big = Request::Generate {
             prompt: distinct_prompts(1, 20).pop().unwrap(),
             max_new_tokens: 2,
             sampling: Sampling::Greedy,
         };
-        let err = serve_oneshot(&engine, vec![big]).unwrap_err();
-        assert!(KvError::is_prompt_too_large(&err), "err: {err:#}");
-        assert!(!KvError::is_pool_exhausted(&err), "err: {err:#}");
+        let ok = Request::Generate {
+            prompt: distinct_prompts(1, 8).pop().unwrap(),
+            max_new_tokens: 2,
+            sampling: Sampling::Greedy,
+        };
+        let (resps, report) = serve_oneshot(&engine, vec![big, ok]).unwrap();
+        assert_eq!(report.rejected, 1);
+        match &resps[0] {
+            Response::Rejected { error } => {
+                assert!(error.contains(KvError::PROMPT_TOO_LARGE_TAG), "error: {error}");
+                assert!(!error.contains(KvError::POOL_EXHAUSTED_TAG), "error: {error}");
+            }
+            other => panic!("never-fitting prompt not rejected: {other:?}"),
+        }
+        match &resps[1] {
+            Response::Generated { tokens, .. } => assert_eq!(tokens.len(), 2),
+            other => panic!("valid request behind a reject not served: {other:?}"),
+        }
         // A lone session that outgrows the whole pool mid-decode is a
         // typed pool-exhaustion error (nobody left to preempt) — never a
         // panic, never an allocation past the budget.
@@ -1365,6 +1417,48 @@ mod tests {
             format!("{err:#}").contains("prompt_len"),
             "unexpected error: {err:#}"
         );
+    }
+
+    #[test]
+    fn invalid_generate_requests_are_rejected_without_aborting_the_run() {
+        // One empty prompt and one at max_context, with a valid score
+        // request queued behind them: each invalid request gets its own
+        // typed Rejected answer and the run keeps serving — a per-request
+        // validation failure must never take down every other client.
+        let engine = ToyEngine::new(256, 4, 16);
+        let reqs = vec![
+            Request::Generate {
+                prompt: Vec::new(),
+                max_new_tokens: 3,
+                sampling: Sampling::Greedy,
+            },
+            Request::Generate {
+                prompt: vec![1; 1024], // == ToyEngine max_context
+                max_new_tokens: 3,
+                sampling: Sampling::Greedy,
+            },
+            Request::Score {
+                tokens: vec![1, 2, 3, 4],
+            },
+        ];
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert_eq!(report.rejected, 2);
+        match &resps[0] {
+            Response::Rejected { error } => {
+                assert!(error.contains("empty prompt"), "error: {error}")
+            }
+            other => panic!("empty prompt not rejected: {other:?}"),
+        }
+        match &resps[1] {
+            Response::Rejected { error } => {
+                assert!(error.contains(KvError::CONTEXT_OVERFLOW_TAG), "error: {error}")
+            }
+            other => panic!("over-long prompt not rejected: {other:?}"),
+        }
+        match &resps[2] {
+            Response::Score { nlls } => assert_eq!(nlls.len(), 3),
+            other => panic!("score behind rejects not served: {other:?}"),
+        }
     }
 
     #[test]
