@@ -67,9 +67,10 @@ pub const COMMANDS: &[CommandSpec] = &[
         name: "serve-bench",
         flags: &[
             "family", "weights", "requests", "clients", "deadline-ms", "seed",
-            "max-new-tokens", "prompt-len", "kv-budget", "artifacts",
+            "max-new-tokens", "prompt-len", "kv-budget", "prefill-chunk",
+            "batch-clients", "long-prompt-len", "replicas", "artifacts",
         ],
-        switches: &["fused", "pack-dense", "shared-prompt"],
+        switches: &["fused", "pack-dense", "shared-prompt", "json"],
     },
     CommandSpec {
         name: "generate",
@@ -305,6 +306,17 @@ COMMANDS
                  sessions past the budget are preempted and later resumed
                  bit-exactly) --shared-prompt (every request reuses one
                  system prompt: benches cross-session KV prefix sharing)
+                 --prefill-chunk T (chunked prefill: at most T prompt
+                 tokens per tick, decode-first interleaving so a long
+                 prompt never stalls decode; 0 = monolithic prefill)
+                 --batch-clients K (last K client threads submit at Batch
+                 priority; Interactive work overtakes queued Batch work,
+                 FIFO within each class)
+                 --long-prompt-len N (client 0's first generate request
+                 carries an N-token prompt: stresses chunked prefill)
+                 --replicas N (N packed-engine replicas with private KV
+                 pools behind least-loaded routing; needs --fused)
+                 --json (append a one-line machine-readable report)
   artifacts    List available artifact entry points
   help         This message
 
@@ -373,6 +385,20 @@ mod tests {
         assert!(b.switch("fused"));
         assert_eq!(b.positional, vec!["out.odw"]);
         assert_eq!(b.usize("rank", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn serve_bench_scheduler_flags_are_registered() {
+        let a = parse_reg(
+            "serve-bench --fused --pack-dense --replicas 2 --prefill-chunk 16 \
+             --batch-clients 1 --long-prompt-len 192 --json",
+        )
+        .unwrap();
+        assert!(a.switch("fused") && a.switch("json"));
+        assert_eq!(a.usize("replicas", 1).unwrap(), 2);
+        assert_eq!(a.usize("prefill-chunk", 0).unwrap(), 16);
+        assert_eq!(a.usize("batch-clients", 0).unwrap(), 1);
+        assert_eq!(a.usize("long-prompt-len", 0).unwrap(), 192);
     }
 
     #[test]

@@ -22,12 +22,17 @@
 //!   not the O(len²) full re-forward). Sampling is [`Sampling::Greedy`]
 //!   (deterministic argmax) or [`Sampling::TopK`] (seeded, reproducible).
 //!
+//! Generate requests additionally carry a [`Priority`] class
+//! (`Interactive` or `Batch`) the scheduler orders admission, preemption,
+//! and resume by — see [`crate::serve`] for the fairness spec.
+//!
 //! ## The trait
 //!
 //! [`Engine`] is the narrow SPI an inference backend implements:
 //! `forward_batch` (uniform-length batched scoring), `prefill` (open a
-//! session) and `decode_step` (advance a *batch* of sessions by one token
-//! each — sessions may sit at different lengths). Two backends ship:
+//! session), `prefill_chunk` (incremental prefill — see below) and
+//! `decode_step` (advance a *batch* of sessions by one token each —
+//! sessions may sit at different lengths). Three backends ship:
 //!
 //! * [`NativeEngine`] — dense weights through the pure-Rust transformer in
 //!   [`crate::runtime::native`] (the artifact-free path).
@@ -35,12 +40,30 @@
 //!   every projection of prefill *and* decode goes through the
 //!   dequant-on-the-fly fused kernels, so generation serving never
 //!   materializes a dense weight matrix.
+//! * [`replicas::Replicas`] — N cloned packed models, each with a private
+//!   KV pool; sessions are routed to the least-loaded shard and decode
+//!   batches run shard-parallel (cheap because low-bit packed weights make
+//!   replication nearly free — the paper's deployment regime).
 //!
-//! Both give the guarantee the continuous-batching scheduler in
-//! [`crate::serve`] relies on: a session's decode output is independent of
-//! which other sessions share the step (all cross-row ops are row-local),
-//! and on the native path prefill+decode logits are **bit-identical** to a
-//! full-sequence forward.
+//! ## Chunked prefill
+//!
+//! [`Engine::prefill`] runs a whole prompt in one call, which would let a
+//! long prompt stall every in-flight decode stream for the duration.
+//! [`Engine::prefill_chunk`] is the incremental form: each call extends a
+//! building [`KvCache`] by a slice of the prompt (`state` threads the
+//! cache between calls; progress = `cache.len()`), so the scheduler can
+//! interleave decode steps between chunks. The contract is **bit-
+//! exactness**: any chunking of a prompt yields the same cache contents,
+//! the same final-row logits, and therefore byte-identical greedy streams
+//! as the one-shot path. Engines that cannot chunk report
+//! `supports_chunked_prefill() == false` and only accept the degenerate
+//! whole-prompt call.
+//!
+//! Both real backends give the guarantee the continuous-batching scheduler
+//! in [`crate::serve`] relies on: a session's decode output is independent
+//! of which other sessions share the step (all cross-row ops are
+//! row-local), and on the native path prefill+decode logits are
+//! **bit-identical** to a full-sequence forward.
 //!
 //! Session KV storage is *paged*: both engines draw every session's cache
 //! from a process-wide budgeted [`KvPool`] (fixed-size pages, hash-based
@@ -50,6 +73,8 @@
 //! ([`EngineSpec::kv_budget`], pinned via `with_kv_budget`) surfaces as
 //! typed pool-exhaustion errors the scheduler answers with preemption.
 
+pub mod replicas;
+
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -58,7 +83,7 @@ use anyhow::{bail, Result};
 use crate::model::ModelParams;
 use crate::runtime::kvpool::{KvPool, PoolStats};
 use crate::runtime::native::{
-    forward_with, fwd_decode, fwd_prefill, DenseProj, KvCache, ParamView,
+    forward_with, fwd_decode, fwd_prefill, fwd_prefill_chunk, DenseProj, KvCache, ParamView,
 };
 use crate::runtime::FamilySpec;
 use crate::tensor::Matrix;
@@ -114,6 +139,39 @@ pub trait Engine: Send + Sync {
     /// cache; returns the session plus the full (prompt_len, vocab) logits.
     fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)>;
 
+    /// Whether [`prefill_chunk`](Engine::prefill_chunk) accepts partial
+    /// prompts. Engines answering `false` (the default) only serve the
+    /// degenerate whole-prompt chunk, and the scheduler falls back to
+    /// one-shot prefill for them.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Incrementally prefill `prompt[..upto]`: extend the building cache in
+    /// `state` (created, with prefix adoption, on the first call) from its
+    /// current `len()` to `upto` positions, returning the new slice's
+    /// logits. When `upto == prompt.len()` the prompt's pages are
+    /// registered for prefix sharing and `state` holds a cache
+    /// interchangeable with [`prefill`](Engine::prefill)'s — **bit-exactly**,
+    /// for any chunking. On a typed error (pool exhausted) the cache keeps
+    /// its pre-call extent and the chunk can be retried.
+    ///
+    /// The default implementation serves only the degenerate whole-prompt
+    /// call by delegating to one-shot `prefill`.
+    fn prefill_chunk(
+        &self,
+        prompt: &[i32],
+        state: &mut Option<KvCache>,
+        upto: usize,
+    ) -> Result<Matrix> {
+        if state.is_some() || upto != prompt.len() {
+            bail!("engine does not support incremental prefill chunks");
+        }
+        let (session, logits) = self.prefill(prompt)?;
+        *state = Some(session.cache);
+        Ok(logits)
+    }
+
     /// Advance a batch of sessions by one token each: `tokens[i]` is
     /// appended to `sessions[i]`; row `i` of the returned (n, vocab) matrix
     /// holds that session's next-token logits. Sessions may sit at
@@ -149,17 +207,54 @@ pub enum Sampling {
     TopK { k: usize, temperature: f32, seed: u64 },
 }
 
+/// Scheduling class of a generate request. Declaration order is urgency
+/// order: the scheduler admits and resumes `Interactive` work before
+/// `Batch`, and preempts `Batch` work first, while staying FIFO *within*
+/// each class (see [`crate::serve`] for the full fairness spec).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default).
+    #[default]
+    Interactive,
+    /// Throughput traffic that tolerates queueing and preemption.
+    Batch,
+}
+
+impl Priority {
+    pub const COUNT: usize = 2;
+
+    /// Dense index (0 = most urgent), for per-class tables.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "Interactive",
+            Priority::Batch => "Batch",
+        }
+    }
+
+    pub fn from_index(i: usize) -> Priority {
+        match i {
+            0 => Priority::Interactive,
+            _ => Priority::Batch,
+        }
+    }
+}
+
 /// A typed serving request.
 #[derive(Clone, Debug)]
 pub enum Request {
     /// Score a full sequence: answered with per-position next-token NLLs.
     Score { tokens: Vec<i32> },
     /// Generate up to `max_new_tokens` continuation tokens from `prompt`
-    /// via KV-cached incremental decoding.
+    /// via KV-cached incremental decoding, scheduled under `priority`.
     Generate {
         prompt: Vec<i32>,
         max_new_tokens: usize,
         sampling: Sampling,
+        priority: Priority,
     },
 }
 
@@ -372,6 +467,7 @@ pub fn process(engine: &dyn Engine, req: &Request) -> Result<Response> {
             prompt,
             max_new_tokens,
             sampling,
+            ..
         } => {
             let g = generate(engine, prompt, *max_new_tokens, sampling.clone())?;
             Ok(Response::Generated {
@@ -488,6 +584,42 @@ impl Engine for NativeEngine {
             fwd_prefill(&self.fam, &view, &DenseProj { view: &view }, tokens, &mut cache)?;
         cache.register_prefix(tokens);
         Ok((Session::new(tokens.to_vec(), cache), logits))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &self,
+        prompt: &[i32],
+        state: &mut Option<KvCache>,
+        upto: usize,
+    ) -> Result<Matrix> {
+        let view = self.view()?;
+        let cache = state.get_or_insert_with(|| {
+            let mut c = KvCache::paged(&self.pool, self.max_context);
+            c.adopt_prefix(prompt);
+            c
+        });
+        let done = cache.len();
+        if upto <= done || upto > prompt.len() {
+            bail!(
+                "prefill chunk target {upto} outside ({done}, {}]",
+                prompt.len()
+            );
+        }
+        let logits = fwd_prefill_chunk(
+            &self.fam,
+            &view,
+            &DenseProj { view: &view },
+            &prompt[done..upto],
+            cache,
+        )?;
+        if upto == prompt.len() {
+            cache.register_prefix(prompt);
+        }
+        Ok(logits)
     }
 
     fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix> {
@@ -662,6 +794,57 @@ mod tests {
     }
 
     #[test]
+    fn priority_orders_interactive_before_batch() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::Interactive.index(), 0);
+        assert_eq!(Priority::Batch.index(), 1);
+        for i in 0..Priority::COUNT {
+            assert_eq!(Priority::from_index(i).index(), i);
+        }
+    }
+
+    #[test]
+    fn engine_prefill_chunks_match_one_shot_prefill() {
+        // The trait-level chunk API: chunked prefill through NativeEngine
+        // must hand back a session cache whose greedy continuation is
+        // byte-identical to the one-shot path, and the final chunk's last
+        // row must equal the one-shot last-row logits bit-for-bit.
+        let engine = micro_engine(8);
+        let vocab = engine.spec().vocab;
+        let prompt = micro_tokens(vocab, 9, 31);
+        let (mut one_session, one_logits) = engine.prefill(&prompt).unwrap();
+        for split in [vec![4usize, 5], vec![2, 2, 2, 3], vec![9]] {
+            let mut state = None;
+            let mut done = 0usize;
+            let mut last = None;
+            for &m in &split {
+                last = Some(engine.prefill_chunk(&prompt, &mut state, done + m).unwrap());
+                done += m;
+            }
+            let last = last.unwrap();
+            let lrow = last.row(last.rows() - 1);
+            let orow = one_logits.row(one_logits.rows() - 1);
+            assert_eq!(lrow, orow, "split {split:?} final-row logits diverged");
+            let mut session = Session::new(prompt.clone(), state.take().unwrap());
+            assert_eq!(session.cache.len(), prompt.len());
+            let next = argmax(orow) as i32;
+            let a = engine.decode_step(&mut [&mut one_session], &[next]).unwrap();
+            let b = engine.decode_step(&mut [&mut session], &[next]).unwrap();
+            assert_eq!(a.row(0), b.row(0), "split {split:?} decode diverged");
+            // Rewind the one-shot session for the next split: re-prefill.
+            let (s, _) = engine.prefill(&prompt).unwrap();
+            one_session = s;
+        }
+        // Out-of-range targets are refused without touching the cache.
+        let mut state = None;
+        engine.prefill_chunk(&prompt, &mut state, 4).unwrap();
+        assert!(engine.prefill_chunk(&prompt, &mut state, 4).is_err());
+        assert!(engine.prefill_chunk(&prompt, &mut state, prompt.len() + 1).is_err());
+        assert_eq!(state.as_ref().unwrap().len(), 4);
+    }
+
+    #[test]
     fn process_answers_typed_requests() {
         let engine = micro_engine(6);
         let toks = micro_tokens(11, 6, 2);
@@ -676,6 +859,7 @@ mod tests {
             prompt: toks[..3].to_vec(),
             max_new_tokens: 4,
             sampling: Sampling::Greedy,
+            priority: Priority::default(),
         };
         match process(&engine, &req).unwrap() {
             Response::Generated {

@@ -1,0 +1,315 @@
+//! Multi-replica serving engine: N clones of one packed [`FusedModel`],
+//! each with a **private KV pool**, behind the single [`Engine`] SPI the
+//! scheduler already speaks.
+//!
+//! ## Why replicas
+//!
+//! In the paper's regime the deployed artifact is 2–4-bit `Q` plus a
+//! skinny `L·R` correction — replicating the weights is nearly free, so
+//! the way to scale serving is N cheap replicas rather than one big
+//! engine. What is *not* free is KV memory: each shard owns an
+//! independent budgeted pool ([`FusedModel::fork_replica`]), so shards
+//! never contend on pages and prefix sharing stays shard-local.
+//!
+//! ## Invariants
+//!
+//! * **Shard-independence**: all shards hold bit-identical weights, and a
+//!   session's [`KvCache`] carries its own pool handle — so any shard's
+//!   kernels can serve any session's compute, and a session's output is
+//!   independent of which shard hosts it (tested below).
+//! * **Routing**: a *new* session (one-shot prefill or the first chunk of
+//!   an incremental prefill) goes to the shard with the fewest resident
+//!   pages — least-loaded-first keeps the per-shard pools balanced.
+//!   Continuation chunks and decode steps read the shard choice out of
+//!   the cache itself.
+//! * **Decode batching**: a decode batch is split into contiguous
+//!   sub-batches of at most one shard's `max_batch` rows, dispatched to
+//!   worker threads (one per shard), and the logits are stitched back in
+//!   order. Sub-batch size never exceeds the decode-kernel dispatch
+//!   threshold, so the specialized fused dequant-dot path keeps running.
+//!   Capacity for the *whole* batch is reserved before any dispatch
+//!   ([`ensure_decode_capacity`]) — a typed pool error surfaces with no
+//!   session mutated, exactly like the single-engine step.
+//! * **Aggregation**: [`Engine::pool_stats`] sums occupancy and sharing
+//!   counters across shards (geometry from shard 0), so the serve-bench
+//!   pool line reports fleet totals.
+
+use anyhow::{bail, Result};
+
+use crate::fused::FusedModel;
+use crate::runtime::kvpool::PoolStats;
+use crate::runtime::native::{ensure_decode_capacity, KvCache};
+use crate::tensor::Matrix;
+
+use super::{Engine, EngineSpec, Session};
+
+/// N packed replicas behind one [`Engine`].
+pub struct Replicas {
+    shards: Vec<FusedModel>,
+}
+
+impl Replicas {
+    /// Shard 0 is `base` itself (keeping its pool); shards 1..n are
+    /// [`FusedModel::fork_replica`] clones with fresh pools of the same
+    /// geometry. `n` is clamped to at least 1.
+    pub fn new(base: FusedModel, n: usize) -> Replicas {
+        let n = n.max(1);
+        let mut shards = Vec::with_capacity(n);
+        for _ in 1..n {
+            shards.push(base.fork_replica());
+        }
+        shards.insert(0, base);
+        Replicas { shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard pool snapshots (index = shard id), for load reporting.
+    pub fn shard_stats(&self) -> Vec<PoolStats> {
+        self.shards
+            .iter()
+            .map(|s| s.pool_stats().expect("fused shards always have a pool"))
+            .collect()
+    }
+
+    /// Least-loaded routing: the shard with the fewest resident pages
+    /// (ties to the lowest index).
+    fn route(&self) -> &FusedModel {
+        self.shards
+            .iter()
+            .min_by_key(|s| {
+                s.pool_stats()
+                    .map(|p| p.resident_pages)
+                    .unwrap_or(usize::MAX)
+            })
+            .expect("at least one shard")
+    }
+}
+
+impl Engine for Replicas {
+    fn spec(&self) -> EngineSpec {
+        let one = self.shards[0].spec();
+        EngineSpec {
+            vocab: one.vocab,
+            max_batch: one.max_batch * self.shards.len(),
+            seq: one.seq,
+            max_context: one.max_context,
+            kv_budget: one.kv_budget * self.shards.len(),
+        }
+    }
+
+    fn forward_batch(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<Matrix> {
+        self.shards[0].forward_batch(tokens, batch, seq)
+    }
+
+    fn decode_weight_bytes(&self) -> Option<usize> {
+        self.shards[0].decode_weight_bytes()
+    }
+
+    fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)> {
+        self.route().prefill(tokens)
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &self,
+        prompt: &[i32],
+        state: &mut Option<KvCache>,
+        upto: usize,
+    ) -> Result<Matrix> {
+        // The first chunk picks the session's shard (its cache draws from
+        // that shard's pool); continuation chunks only need weights, which
+        // are bit-identical everywhere, so any shard serves them.
+        let shard = if state.is_none() {
+            self.route()
+        } else {
+            &self.shards[0]
+        };
+        shard.prefill_chunk(prompt, state, upto)
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix> {
+        let n = sessions.len();
+        if n != tokens.len() {
+            bail!("decode step: {} tokens for {} sessions", tokens.len(), n);
+        }
+        if n == 0 {
+            bail!("decode step needs at least one session");
+        }
+        let vocab = self.shards[0].spec().vocab;
+        let sub = self.shards[0].spec().max_batch.max(1);
+        // All-or-nothing capacity across the whole batch before any shard
+        // runs: a typed pool/context error here mutates nothing.
+        {
+            let mut caches: Vec<&mut KvCache> =
+                sessions.iter_mut().map(|s| &mut s.cache).collect();
+            ensure_decode_capacity(&mut caches)?;
+        }
+        let groups: Vec<(&mut [&mut Session], &[i32])> = sessions
+            .chunks_mut(sub)
+            .zip(tokens.chunks(sub))
+            .collect();
+        let results: Vec<Result<Matrix>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .enumerate()
+                .map(|(gi, (group, toks))| {
+                    let shard = &self.shards[gi % self.shards.len()];
+                    scope.spawn(move || shard.decode_step(group, toks))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("decode worker panicked"))
+                .collect()
+        });
+        let mut logits = Matrix::zeros(n, vocab);
+        let mut row = 0usize;
+        for r in results {
+            let part = r?;
+            for i in 0..part.rows() {
+                logits.row_mut(row).copy_from_slice(part.row(i));
+                row += 1;
+            }
+        }
+        debug_assert_eq!(row, n, "stitched logits row count");
+        Ok(logits)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        let mut agg = PoolStats::default();
+        for (i, s) in self.shard_stats().into_iter().enumerate() {
+            if i == 0 {
+                agg.page_tokens = s.page_tokens;
+                agg.page_bytes = s.page_bytes;
+            }
+            agg.budget_bytes += s.budget_bytes;
+            agg.max_pages += s.max_pages;
+            agg.resident_pages += s.resident_pages;
+            agg.peak_resident_pages += s.peak_resident_pages;
+            agg.allocated_pages += s.allocated_pages;
+            agg.shared_adoptions += s.shared_adoptions;
+            agg.cow_copies += s.cow_copies;
+            agg.reclaimed_pages += s.reclaimed_pages;
+        }
+        Some(agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{argmax, generate, Sampling};
+    use crate::model::ModelParams;
+    use crate::runtime::FamilySpec;
+    use crate::util::rng::Pcg64;
+
+    fn micro_fused(seed: u64) -> FusedModel {
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, seed);
+        FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(2, 8)
+    }
+
+    fn micro_tokens(vocab: usize, len: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(seed, 77);
+        (0..len).map(|_| rng.below(vocab) as i32).collect()
+    }
+
+    #[test]
+    fn replica_spec_scales_batch_and_budget() {
+        let solo = micro_fused(61);
+        let one = solo.spec();
+        let reps = Replicas::new(solo, 3);
+        let spec = reps.spec();
+        assert_eq!(reps.n_shards(), 3);
+        assert_eq!(spec.max_batch, 3 * one.max_batch);
+        assert_eq!(spec.kv_budget, 3 * one.kv_budget);
+        assert_eq!(spec.max_context, one.max_context);
+        assert_eq!(reps.shard_stats().len(), 3);
+    }
+
+    #[test]
+    fn generation_is_independent_of_shard_count() {
+        // The same prompt must decode to byte-identical greedy streams on
+        // the solo engine and through any replica fleet — shard routing
+        // and fork_replica change nothing observable.
+        let solo = micro_fused(62);
+        let prompt = micro_tokens(11, 6, 5);
+        let want = generate(&solo, &prompt, 8, Sampling::Greedy).unwrap();
+        for n in [1usize, 2, 3] {
+            let reps = Replicas::new(micro_fused(62), n);
+            let got = generate(&reps, &prompt, 8, Sampling::Greedy).unwrap();
+            assert_eq!(got.tokens, want.tokens, "{n} replicas diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_decode_matches_solo_decode_per_session() {
+        // Batch-composition independence across the shard boundary: a
+        // 3-session batch splits into sub-batches of 2 + 1 on different
+        // shards; every row must equal the session's solo decode.
+        let reps = Replicas::new(micro_fused(63), 2);
+        let solo = micro_fused(63);
+        let prompts: Vec<Vec<i32>> = (0..3).map(|i| micro_tokens(11, 4 + i, 20 + i as u64)).collect();
+        let mut batch: Vec<Session> = Vec::new();
+        let mut solos: Vec<Session> = Vec::new();
+        for p in &prompts {
+            batch.push(reps.prefill(p).unwrap().0);
+            solos.push(solo.prefill(p).unwrap().0);
+        }
+        let next = [1i32, 2, 3];
+        let stitched = {
+            let mut refs: Vec<&mut Session> = batch.iter_mut().collect();
+            reps.decode_step(&mut refs, &next).unwrap()
+        };
+        assert_eq!(stitched.rows(), 3);
+        for (i, s) in solos.iter_mut().enumerate() {
+            let want = solo.decode_step(&mut [s], &next[i..i + 1]).unwrap();
+            assert_eq!(stitched.row(i), want.row(0), "session {i} diverged");
+        }
+        for (i, s) in batch.iter().enumerate() {
+            assert_eq!(s.tokens.len(), prompts[i].len() + 1, "token history drift");
+        }
+    }
+
+    #[test]
+    fn routing_spreads_sessions_and_stats_aggregate() {
+        let reps = Replicas::new(micro_fused(64), 2);
+        let mut held = Vec::new();
+        for i in 0..4 {
+            let p = micro_tokens(11, 6, 40 + i);
+            held.push(reps.prefill(&p).unwrap().0);
+        }
+        let per = reps.shard_stats();
+        assert!(per.iter().all(|s| s.resident_pages > 0), "a shard sat idle");
+        let agg = reps.pool_stats().unwrap();
+        assert_eq!(
+            agg.resident_pages,
+            per.iter().map(|s| s.resident_pages).sum::<usize>()
+        );
+        assert_eq!(agg.max_pages, per.iter().map(|s| s.max_pages).sum::<usize>());
+    }
+
+    #[test]
+    fn chunked_prefill_routes_and_matches_one_shot() {
+        let reps = Replicas::new(micro_fused(65), 2);
+        let prompt = micro_tokens(11, 9, 50);
+        let (mut one, logits) = reps.prefill(&prompt).unwrap();
+        let mut state = None;
+        reps.prefill_chunk(&prompt, &mut state, 4).unwrap();
+        let last = reps.prefill_chunk(&prompt, &mut state, prompt.len()).unwrap();
+        assert_eq!(last.row(last.rows() - 1), logits.row(logits.rows() - 1));
+        let mut chunked = Session::new(prompt.clone(), state.take().unwrap());
+        let next = argmax(logits.row(logits.rows() - 1)) as i32;
+        let a = reps.decode_step(&mut [&mut one], &[next]).unwrap();
+        let b = reps.decode_step(&mut [&mut chunked], &[next]).unwrap();
+        assert_eq!(a.row(0), b.row(0), "chunked replica session diverged");
+    }
+}

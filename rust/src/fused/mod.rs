@@ -106,7 +106,7 @@ use crate::model::{CompressedModel, ModelParams};
 use crate::quant::{PackedMatrix, PackedScheme};
 use crate::runtime::kvpool::{KvPool, PoolStats, DEFAULT_PAGE_TOKENS};
 use crate::runtime::native::{
-    forward_with, fwd_decode, fwd_prefill, KvCache, ParamView, ProjectionOps,
+    forward_with, fwd_decode, fwd_prefill, fwd_prefill_chunk, KvCache, ParamView, ProjectionOps,
 };
 use crate::runtime::{FamilySpec, Value, NATIVE_BATCH, NATIVE_SEQ};
 use crate::tensor::{axpy, dotp, matmul_nt, Matrix};
@@ -632,6 +632,34 @@ impl FusedModel {
         Ok(self)
     }
 
+    /// A replica of this model for shard-parallel serving: identical
+    /// packed weights and shape, but a **fresh, private** KV pool of the
+    /// same geometry and budget. Replication is nearly free in the
+    /// paper's regime — the packed `Q + L·R` weights are a few bits per
+    /// parameter — and identical weights make decode on any replica
+    /// bit-identical, so a session's output never depends on which shard
+    /// hosts it.
+    pub fn fork_replica(&self) -> FusedModel {
+        let pool = KvPool::new(
+            self.family.n_layers,
+            self.family.kv_dim(),
+            self.pool.page_tokens(),
+            self.pool.budget_bytes(),
+        )
+        .expect("existing pool geometry always holds a page");
+        FusedModel {
+            family: self.family.clone(),
+            dense: self.dense.clone(),
+            dense_mats: self.dense_mats.clone(),
+            mats: self.mats.clone(),
+            plans: self.plans.clone(),
+            batch: self.batch,
+            seq: self.seq,
+            pool,
+            explicit_budget: self.explicit_budget,
+        }
+    }
+
     /// Logits for a row-major (batch, seq) token block → (batch·seq, vocab).
     pub fn forward(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<Matrix> {
         let view = ParamView::from_slice(&self.family, &self.dense_mats)?;
@@ -906,6 +934,29 @@ impl ProjectionOps for FusedModel {
     }
 }
 
+/// Projection provider for *chunked* prefill: the kernel regime is pinned
+/// by the **full prompt's** row count, not the chunk's. One-shot prefill
+/// dispatches on `prompt_len` rows; a chunk of the same prompt may carry
+/// fewer rows and would fall into the decode-kernel regime, whose
+/// summation order differs from the panel kernel's at f32 rounding. Both
+/// kernels are exactly row-local, so pinning the regime makes every
+/// chunking produce bit-identical K/V rows and logits to the one-shot
+/// path — the chunked-prefill contract.
+struct ChunkProj<'a> {
+    fm: &'a FusedModel,
+    decode_regime: bool,
+}
+
+impl ProjectionOps for ChunkProj<'_> {
+    fn project(&self, name: &str, x: &Matrix) -> Result<Matrix> {
+        match self.fm.mats.get(name) {
+            Some(m) if self.decode_regime => Ok(m.decode_matmul_t(x)),
+            Some(m) => Ok(m.matmul_t(x)),
+            None => bail!("no fused projection '{name}'"),
+        }
+    }
+}
+
 /// The packed deployment form serves the full generation-first API: every
 /// projection of scoring, prefill, *and* per-token decode goes through the
 /// dequant-on-the-fly fused kernels — no dense `W` is ever materialized on
@@ -939,6 +990,44 @@ impl Engine for FusedModel {
         let logits = fwd_prefill(&self.family, &view, self, tokens, &mut cache)?;
         cache.register_prefix(tokens);
         Ok((Session::new(tokens.to_vec(), cache), logits))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &self,
+        prompt: &[i32],
+        state: &mut Option<KvCache>,
+        upto: usize,
+    ) -> Result<Matrix> {
+        let view = ParamView::from_slice(&self.family, &self.dense_mats)?;
+        let cache = state.get_or_insert_with(|| {
+            let mut c = KvCache::paged(&self.pool, 4 * self.seq);
+            c.adopt_prefix(prompt);
+            c
+        });
+        let done = cache.len();
+        if upto <= done || upto > prompt.len() {
+            bail!(
+                "prefill chunk target {upto} outside ({done}, {}]",
+                prompt.len()
+            );
+        }
+        // Pin the kernel regime to what one-shot prefill over the whole
+        // prompt would dispatch (see [`ChunkProj`]) so any chunking stays
+        // bit-identical to `prefill`.
+        let proj = ChunkProj {
+            fm: self,
+            decode_regime: prompt.len() <= self.batch,
+        };
+        let logits =
+            fwd_prefill_chunk(&self.family, &view, &proj, &prompt[done..upto], cache)?;
+        if upto == prompt.len() {
+            cache.register_prefix(prompt);
+        }
+        Ok(logits)
     }
 
     fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix> {
@@ -1514,6 +1603,57 @@ mod tests {
                     (got - want).abs() <= 1e-4 * want.abs().max(1.0),
                     "step {t} col {j}: {got} vs {want}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_chunked_prefill_matches_one_shot_bit_exactly() {
+        // The chunked-prefill contract on the packed path: any chunking —
+        // including ragged final chunks small enough to fall into the
+        // decode-kernel regime, which ChunkProj pins back to the one-shot
+        // kernel — produces the same final-row logits and byte-identical
+        // decode continuations as one-shot prefill.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 47);
+        let fm = FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(2, 8);
+        let mut rng = Pcg64::new(51, 3);
+        for plen in [9usize, 2] {
+            // 9 > batch (panel regime one-shot); 2 ≤ batch (decode regime).
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(fam.vocab) as i32).collect();
+            let (mut one, logits) = fm.prefill(&prompt).unwrap();
+            let splits: Vec<Vec<usize>> = if plen == 9 {
+                vec![vec![4, 5], vec![2, 2, 2, 3], vec![8, 1], vec![9]]
+            } else {
+                vec![vec![1, 1], vec![2]]
+            };
+            for split in splits {
+                let mut state = None;
+                let mut done = 0usize;
+                let mut last = None;
+                for &m in &split {
+                    last = Some(fm.prefill_chunk(&prompt, &mut state, done + m).unwrap());
+                    done += m;
+                }
+                let last = last.unwrap();
+                assert_eq!(
+                    last.row(last.rows() - 1),
+                    logits.row(logits.rows() - 1),
+                    "plen {plen} split {split:?}: final-row logits diverged"
+                );
+                let mut chunked = Session::new(prompt.clone(), state.take().unwrap());
+                let next = crate::engine::argmax(logits.row(logits.rows() - 1)) as i32;
+                let a = fm.decode_step(&mut [&mut one], &[next]).unwrap();
+                let b = fm.decode_step(&mut [&mut chunked], &[next]).unwrap();
+                assert_eq!(
+                    a.row(0),
+                    b.row(0),
+                    "plen {plen} split {split:?}: decode diverged"
+                );
+                let (fresh, _) = fm.prefill(&prompt).unwrap();
+                one = fresh;
             }
         }
     }

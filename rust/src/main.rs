@@ -16,6 +16,7 @@ use odlri::cli::{Args, HELP};
 use odlri::coordinator::{
     BudgetPlanner, CompressionPipeline, CompressionPlan, InitKind, PipelineConfig, Planner,
 };
+use odlri::engine::replicas::Replicas;
 use odlri::engine::{self, Engine, NativeEngine, Sampling};
 use odlri::eval;
 use odlri::exp;
@@ -200,9 +201,18 @@ fn build_fused(rt: &Runtime, args: &Args, family: &str) -> Result<FusedModel> {
 /// from dense weights with `--pack-dense`) or the dense native engine.
 fn build_engine(rt: &Runtime, args: &Args, family: &str) -> Result<Box<dyn Engine>> {
     let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let replicas = args.usize("replicas", 1)?.max(1);
     if args.switch("fused") {
-        Ok(Box::new(build_fused(rt, args, family)?))
+        let fm = build_fused(rt, args, family)?;
+        if replicas > 1 {
+            eprintln!("[engine] {replicas} fused replicas (private KV pools, least-loaded routing)");
+            return Ok(Box::new(Replicas::new(fm, replicas)));
+        }
+        Ok(Box::new(fm))
     } else {
+        if replicas > 1 {
+            bail!("--replicas requires the packed engine; add --fused");
+        }
         let params = if args.switch("pack-dense") {
             load_model_or_init(rt, args, family)?
         } else {
@@ -500,6 +510,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         },
         prompt_len: args.usize("prompt-len", 0)?,
         shared_prompt: args.switch("shared-prompt"),
+        prefill_chunk: args.usize("prefill-chunk", 0)?,
+        batch_clients: args.usize("batch-clients", 0)?,
+        long_prompt_len: args.usize("long-prompt-len", 0)?,
     };
     let engine = build_engine(&rt, args, &family)?;
     let report = run_server(engine.as_ref(), &cfg)?;
@@ -552,9 +565,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     if max_new > 0 {
         println!(
-            "scheduler: {} preemptions, {} resumes (bit-exact re-prefill), {} rejected",
-            report.preemptions, report.resumes, report.rejected
+            "scheduler: {} preemptions, {} resumes (bit-exact re-prefill), {} rejected, \
+             {} interleaved decode steps",
+            report.preemptions, report.resumes, report.rejected, report.interleaved_decode_steps
         );
+        for c in &report.classes {
+            if c.requests == 0 {
+                continue;
+            }
+            println!(
+                "class {}: {} requests, ttft p50 {:.1} ms, {:.2}/{:.2} ms/tok p50/p99, \
+                 {} preemptions",
+                c.class.name(),
+                c.requests,
+                c.ttft_p50_ms,
+                c.ms_per_tok_p50,
+                c.ms_per_tok_p99,
+                c.preemptions
+            );
+        }
     }
     if let Some(ps) = engine.pool_stats() {
         println!(
@@ -569,6 +598,48 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             odlri::util::human_bytes(ps.page_bytes),
             ps.peak_resident_pages,
             odlri::util::human_bytes(ps.budget_bytes),
+        );
+    }
+    if args.switch("json") {
+        // Hand-rolled single-line JSON (no serde in the offline vendor
+        // set); non-finite percentile samples become 0 so the line always
+        // parses.
+        let j = |x: f64| if x.is_finite() { x } else { 0.0 };
+        let classes: Vec<String> = report
+            .classes
+            .iter()
+            .filter(|c| c.requests > 0)
+            .map(|c| {
+                format!(
+                    "{{\"class\":\"{}\",\"requests\":{},\"ttft_p50_ms\":{:.3},\
+                     \"ms_per_tok_p50\":{:.3},\"ms_per_tok_p99\":{:.3},\"preemptions\":{}}}",
+                    c.class.name(),
+                    c.requests,
+                    j(c.ttft_p50_ms),
+                    j(c.ms_per_tok_p50),
+                    j(c.ms_per_tok_p99),
+                    c.preemptions
+                )
+            })
+            .collect();
+        println!(
+            "{{\"requests\":{},\"batches\":{},\"decode_steps\":{},\
+             \"interleaved_decode_steps\":{},\"generated_tokens\":{},\"decoded_tokens\":{},\
+             \"preemptions\":{},\"resumes\":{},\"rejected\":{},\"wall_secs\":{:.4},\
+             \"p50_ms\":{:.3},\"p95_ms\":{:.3},\"classes\":[{}]}}",
+            report.completed.len(),
+            report.batches,
+            report.decode_steps,
+            report.interleaved_decode_steps,
+            report.generated_tokens,
+            report.decoded_tokens,
+            report.preemptions,
+            report.resumes,
+            report.rejected,
+            j(report.wall_secs),
+            j(report.p50_ms()),
+            j(report.p95_ms()),
+            classes.join(",")
         );
     }
     Ok(())

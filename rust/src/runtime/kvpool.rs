@@ -15,9 +15,12 @@
 //!   `2 (K+V) · n_layers · page_tokens · kv_dim · 4`.
 //! * **Pool**: one process-wide [`KvPool`] holds every page under a hard
 //!   byte budget (`max_pages = budget / page_bytes`). Allocation order:
-//!   free list → grow (until `max_pages`) → reclaim the least-recently-used
-//!   *cached* page (refcount 0, still registered for prefix sharing) →
-//!   typed [`KvError::PoolExhausted`].
+//!   free list → grow (until `max_pages`) → reclaim a *cached* page
+//!   (refcount 0, still registered for prefix sharing) → typed
+//!   [`KvError::PoolExhausted`]. Reclaim is shared-prefix-aware: pages are
+//!   ranked by their chain's recency (max over the chain's pages, live
+//!   references pinning it hot), so a cold prompt chain is consumed
+//!   tail-first before a hot shared system prompt loses a page.
 //! * **Block table**: each session maps logical position `p` to page
 //!   `table[p / page_tokens]`, offset `p % page_tokens`. Tables only ever
 //!   append pages; eviction happens by preempting whole sessions (the
@@ -184,6 +187,11 @@ struct PageEntry {
     /// The exact token prefix whose tail this page stores — verified on
     /// adoption so hash collisions cannot alias different histories.
     reg_prefix: Option<Vec<i32>>,
+    /// Chain id: the hash of the prompt's *first-page* prefix. Every page
+    /// of one registered prompt (and of any prompt sharing its head)
+    /// carries the same id, so reclaim can rank whole chains by their
+    /// hottest page instead of per-page recency.
+    reg_chain: Option<u64>,
     last_use: u64,
 }
 
@@ -335,20 +343,47 @@ impl KvPool {
                 refs: 0,
                 reg_key: None,
                 reg_prefix: None,
+                reg_chain: None,
                 last_use: 0,
             });
             inner.pages.len() - 1
         } else {
-            // Reclaim the least-recently-used cached page (refcount 0 but
-            // kept registered for prefix sharing). Referenced pages are
-            // never reclaimed — eviction of live sessions is the
-            // scheduler's job, by preemption.
+            // Reclaim a cached page (refcount 0 but kept registered for
+            // prefix sharing). Referenced pages are never reclaimed —
+            // eviction of live sessions is the scheduler's job, by
+            // preemption.
+            //
+            // Shared-prefix-aware LRU: pages are ranked by their *chain's*
+            // recency (max over the chain's pages; a page referenced by a
+            // live session pins its chain hot), so one cold prompt chain
+            // is fully consumed before a hot shared system prompt loses a
+            // single page. Within the coldest chain, the longest
+            // registered prefix — the tail — goes first, so eviction only
+            // ever shortens a chain from the back and later adoption
+            // stops cleanly at the missing page instead of hitting a
+            // mid-chain hole.
+            let mut chain_recency: HashMap<u64, u64> = HashMap::new();
+            for e in &inner.pages {
+                if let Some(c) = e.reg_chain {
+                    let r = if e.refs > 0 { u64::MAX } else { e.last_use };
+                    let slot = chain_recency.entry(c).or_insert(0);
+                    *slot = (*slot).max(r);
+                }
+            }
             let victim = inner
                 .pages
                 .iter()
                 .enumerate()
                 .filter(|(_, e)| e.refs == 0 && e.reg_key.is_some())
-                .min_by_key(|(_, e)| e.last_use)
+                .min_by_key(|(_, e)| {
+                    let chain = e
+                        .reg_chain
+                        .and_then(|c| chain_recency.get(&c))
+                        .copied()
+                        .unwrap_or(e.last_use);
+                    let plen = e.reg_prefix.as_ref().map_or(0, |t| t.len());
+                    (chain, std::cmp::Reverse(plen), e.last_use)
+                })
                 .map(|(i, _)| i);
             let Some(id) = victim else {
                 return Err(KvError::PoolExhausted {
@@ -359,6 +394,7 @@ impl KvPool {
             let key = inner.pages[id].reg_key.take().expect("cached page has a key");
             inner.index.remove(&key);
             inner.pages[id].reg_prefix = None;
+            inner.pages[id].reg_chain = None;
             inner.reclaimed += 1;
             id
         };
@@ -572,6 +608,7 @@ impl KvPool {
             return;
         }
         let p = self.page_tokens;
+        let chain = hash_tokens(&tokens[..p.min(tokens.len())]);
         let mut inner = self.lock();
         for (j, &pid) in table.pages.iter().enumerate() {
             let end = ((j + 1) * p).min(tokens.len());
@@ -587,6 +624,7 @@ impl KvPool {
             }
             inner.pages[pid].reg_key = Some(key);
             inner.pages[pid].reg_prefix = Some(tokens[..end].to_vec());
+            inner.pages[pid].reg_chain = Some(chain);
             inner.index.insert(key, pid);
         }
     }
@@ -746,13 +784,12 @@ mod tests {
     }
 
     #[test]
-    fn mid_chain_reclaim_stops_adoption_before_the_tail() {
+    fn reclaim_shortens_a_chain_tail_first() {
         // Register a 3-page chain (two whole pages + partial tail), then
-        // arrange for exactly the *middle* page to be LRU-reclaimed while
-        // the first and tail pages stay registered. Re-adopting the full
-        // prompt must stop at the miss — grafting the surviving tail page
-        // in at block index 1 would silently map positions 4..8 to the
-        // wrong rows.
+        // bump only the *first* page's recency. Per-page LRU would evict
+        // the middle page — leaving a hole that forfeits the whole chain.
+        // Chain-aware reclaim must take the tail instead, so the surviving
+        // head pages still adopt cleanly.
         let p = pool(3);
         let tokens: Vec<i32> = (0..10).collect();
         let mut a = BlockTable::default();
@@ -760,29 +797,107 @@ mod tests {
         fill(&p, &a, 0, 10, 0.0);
         p.register(&a, &tokens);
         p.release(&mut a); // all three pages cached, equal recency
-        // Bump the first page's recency via a first-page-only adoption,
-        // leaving the middle page as the coldest reclaim victim.
+        // First-page-only adoption bumps page 0, leaving the middle page
+        // the per-page-coldest.
         let mut b = BlockTable::default();
         assert_eq!(p.adopt(&mut b, &tokens[..4]), 4);
         p.release(&mut b);
-        // One page of fresh demand reclaims the middle page.
+        // One page of fresh demand: the chain loses its *tail* page.
         let mut c = BlockTable::default();
         p.ensure(&mut c, 0, 4).unwrap();
         fill(&p, &c, 0, 4, 7000.0);
         assert_eq!(p.stats().reclaimed_pages, 1);
-        // Full-prompt adoption now has a mid-chain miss at page 1: the
-        // adopted extent must end there, tail page left alone.
+        // Both whole head pages still adopt; extent ends at the evicted
+        // tail.
         let mut d = BlockTable::default();
         let shared = p.adopt(&mut d, &tokens);
-        assert_eq!(shared, 4, "adoption ran past a mid-chain miss");
+        assert_eq!(shared, 8, "tail-first reclaim must keep the chain head");
+        assert_eq!(d.n_pages(), 2);
+        assert_eq!(d.shared_len(), 8);
+        let (k, _) = p.read_head(&d, 0, 0, 4, 8);
+        for pos in 0..8 {
+            assert_eq!(k.row(pos), &row(0.0, pos)[..]);
+        }
+        p.release(&mut c);
+        p.release(&mut d);
+    }
+
+    #[test]
+    fn mid_chain_gap_stops_adoption_before_the_tail() {
+        // Defense-in-depth behind the eviction order: if a chain ends up
+        // with a hole at a middle page (reachable via first-writer-wins
+        // registration collisions), re-adopting the full prompt must stop
+        // at the miss — grafting the surviving tail page in at block
+        // index 1 would silently map positions 4..8 to the wrong rows.
+        let p = pool(3);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        p.release(&mut a);
+        // Simulate the hole: deregister exactly the middle page.
+        {
+            let mut inner = p.lock();
+            let key = hash_tokens(&tokens[..8]);
+            let pid = inner.index.remove(&key).expect("middle page registered");
+            inner.pages[pid].reg_key = None;
+            inner.pages[pid].reg_prefix = None;
+            inner.pages[pid].reg_chain = None;
+            inner.free.push(pid);
+        }
+        let mut d = BlockTable::default();
+        let shared = p.adopt(&mut d, &tokens);
+        assert_eq!(shared, 4, "adoption ran past a mid-chain gap");
         assert_eq!(d.n_pages(), 1);
         assert_eq!(d.shared_len(), 4);
-        // What was adopted reads back as the first page's original rows.
         let (k, _) = p.read_head(&d, 0, 0, 4, 4);
         for pos in 0..4 {
             assert_eq!(k.row(pos), &row(0.0, pos)[..]);
         }
+        p.release(&mut d);
+    }
+
+    #[test]
+    fn hot_shared_prompt_survives_pressure_that_reclaims_a_cold_chain() {
+        // Two 2-page chains: H (a shared system prompt, recently adopted)
+        // and C (cold, untouched since registration). Two pages of fresh
+        // demand must consume chain C entirely — H stays fully adoptable
+        // even though H's *tail* page is per-page older than C's pages.
+        let p = pool(4);
+        let hot: Vec<i32> = (0..8).collect();
+        let cold: Vec<i32> = (100..108).collect();
+        let mut h = BlockTable::default();
+        p.ensure(&mut h, 0, 8).unwrap();
+        fill(&p, &h, 0, 8, 0.0);
+        p.register(&h, &hot);
+        p.release(&mut h);
+        let mut c = BlockTable::default();
+        p.ensure(&mut c, 0, 8).unwrap();
+        fill(&p, &c, 0, 8, 3000.0);
+        p.register(&c, &cold);
         p.release(&mut c);
+        // Touch only H's first page: its tail page is now the per-page
+        // LRU victim, but its *chain* is the hottest thing in the pool.
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &hot[..4]), 4);
+        p.release(&mut b);
+        // Two pages of fresh demand.
+        let mut f = BlockTable::default();
+        p.ensure(&mut f, 0, 8).unwrap();
+        fill(&p, &f, 0, 8, 9000.0);
+        assert_eq!(p.stats().reclaimed_pages, 2);
+        // The hot system prompt still adopts in full...
+        let mut d = BlockTable::default();
+        assert_eq!(p.adopt(&mut d, &hot), 8, "hot chain lost a page");
+        let (k, _) = p.read_head(&d, 0, 0, 4, 8);
+        for pos in 0..8 {
+            assert_eq!(k.row(pos), &row(0.0, pos)[..]);
+        }
+        // ...and the cold chain is gone.
+        let mut e = BlockTable::default();
+        assert_eq!(p.adopt(&mut e, &cold), 0, "cold chain survived");
+        p.release(&mut f);
         p.release(&mut d);
     }
 

@@ -743,6 +743,123 @@ pub fn fwd_prefill(
     forward_impl(fam, view, proj, tokens, 1, tokens.len(), None, Some(cache))
 }
 
+/// One prefill chunk: extend a (possibly non-empty) per-session cache by
+/// `chunk.len()` consecutive prompt positions and return their logits
+/// (chunk_len, vocab). `fwd_prefill` over a prompt equals any sequence of
+/// `fwd_prefill_chunk` calls that concatenates to the same prompt,
+/// **bit-for-bit**: every per-row operation here is the row-local decode
+/// arithmetic of [`fwd_decode`] (RoPE rotated at the row's absolute
+/// position, the exact causal-softmax op order, cached-panel attention),
+/// which is itself bit-identical to the full forward. The scheduler uses
+/// this to interleave long-prompt prefills with decode steps.
+///
+/// Capacity for the whole chunk is reserved up front; on a typed error the
+/// cache is unchanged and the chunk can be retried after preemption.
+/// Positions inside an adopted shared prefix are recomputed (logits stay
+/// exact) but their stores are skipped — same protocol as one-shot
+/// prefill.
+pub fn fwd_prefill_chunk(
+    fam: &FamilySpec,
+    view: &ParamView,
+    proj: &dyn ProjectionOps,
+    chunk: &[i32],
+    cache: &mut KvCache,
+) -> Result<Matrix> {
+    let m = chunk.len();
+    if m == 0 {
+        bail!("prefill chunk needs at least one token");
+    }
+    let pos0 = cache.len();
+    cache.ensure_capacity(m)?;
+    let d = fam.d_model;
+    let embed = view.get("embed")?;
+    let mut x = Matrix::zeros(m, d);
+    for (r, &tok) in chunk.iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= fam.vocab {
+            bail!("token {tok} out of range for vocab {}", fam.vocab);
+        }
+        x.row_mut(r).copy_from_slice(embed.row(tok));
+    }
+    let hd = fam.head_dim();
+    let nh = fam.n_heads;
+    let rep = nh / fam.n_kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    for layer in 0..fam.n_layers {
+        let p = format!("layer{layer}.");
+        let g1 = view.get(&format!("{p}ln1"))?;
+        let (h, _r1) = rms_norm(&x, g1.as_slice());
+        let mut q = proj.project(&format!("{p}wq"), &h)?;
+        let mut k = proj.project(&format!("{p}wk"), &h)?;
+        let v = proj.project(&format!("{p}wv"), &h)?;
+        for r in 0..m {
+            rope_rotate_row(q.row_mut(r), hd, pos0 + r, fam.rope_theta);
+            rope_rotate_row(k.row_mut(r), hd, pos0 + r, fam.rope_theta);
+        }
+        // Land the whole chunk's K/V rows first (stores below the adopted
+        // shared extent are skipped), then attend row by row over the
+        // cached history — rows of this chunk included, so intra-chunk
+        // causal attention reads the same bits the one-shot path computes.
+        cache.append(layer, k.as_slice(), v.as_slice());
+        let mut ctx = Matrix::zeros(m, d);
+        for r in 0..m {
+            let len = pos0 + r + 1;
+            for g in 0..fam.n_kv_heads {
+                let (kh, vh) = cache.head(layer, g, hd, len);
+                debug_assert_eq!(kh.rows(), len, "cache length drift");
+                for rr in 0..rep {
+                    let hh = g * rep + rr;
+                    let qh = q.slice(r, r + 1, hh * hd, (hh + 1) * hd);
+                    let mut scores = matmul_nt(&qh, &kh); // (1, len)
+                    let row = scores.row_mut(0);
+                    let mut mx = f32::NEG_INFINITY;
+                    for cell in row.iter_mut().take(len) {
+                        *cell *= scale;
+                        mx = mx.max(*cell);
+                    }
+                    let mut sum = 0f32;
+                    for cell in row.iter_mut().take(len) {
+                        *cell = (*cell - mx).exp();
+                        sum += *cell;
+                    }
+                    let inv = 1.0 / sum;
+                    for cell in row.iter_mut().take(len) {
+                        *cell *= inv;
+                    }
+                    let ctx_h = matmul(&scores, &vh); // (1, hd)
+                    ctx.row_mut(r)[hh * hd..(hh + 1) * hd].copy_from_slice(ctx_h.row(0));
+                }
+            }
+        }
+        let attn_out = proj.project(&format!("{p}wo"), &ctx)?;
+        x.add_assign(&attn_out);
+        let g2 = view.get(&format!("{p}ln2"))?;
+        let (h2, _r2) = rms_norm(&x, g2.as_slice());
+        let gate = proj.project(&format!("{p}wgate"), &h2)?;
+        let up = proj.project(&format!("{p}wup"), &h2)?;
+        let mid = glu_mid(&gate, &up, fam.is_geglu());
+        let down = proj.project(&format!("{p}wdown"), &mid)?;
+        x.add_assign(&down);
+    }
+    let gf = view.get("ln_f")?;
+    let (hf, _rf) = rms_norm(&x, gf.as_slice());
+    Ok(matmul_nt(&hf, view.get("unembed")?))
+}
+
+/// Reserve one more position on every cache — the all-or-nothing capacity
+/// phase of a decode step, split out so a multi-shard engine can run it
+/// across the *whole* batch before dispatching per-shard sub-batches to
+/// worker threads. [`fwd_decode`]'s own reservation is idempotent after
+/// this (pages exist, COW copies are taken), so a typed failure here
+/// leaves every cache untouched and no sub-batch can fail on capacity
+/// mid-flight after it succeeds.
+pub fn ensure_decode_capacity(caches: &mut [&mut KvCache]) -> Result<()> {
+    for cache in caches.iter_mut() {
+        cache.ensure_capacity(1)?;
+    }
+    Ok(())
+}
+
 /// One incremental decode step for a batch of sessions: `tokens[i]` is
 /// appended to the session behind `caches[i]` and its next-token logits are
 /// returned in row `i` of the (n_sessions, vocab) output.
@@ -1453,6 +1570,68 @@ mod tests {
         assert!(cache.byte_size() > 0);
         // Prefill refuses a dirty cache.
         assert!(fwd_prefill(&fam, &view, &proj, &tokens, &mut cache).is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        // Any chunking of a prompt (page-aligned or ragged) must produce
+        // the same per-row logits, the same cache contents, and the same
+        // subsequent decode steps as one-shot prefill — on both backings.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 44);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 10, 17);
+        let mut oneshot = KvCache::for_family(&fam);
+        let full = fwd_prefill(&fam, &view, &proj, &tokens, &mut oneshot).unwrap();
+        let pool = KvPool::new(fam.n_layers, fam.kv_dim(), 4, 64 * 1024).unwrap();
+        for split in [vec![4usize, 4, 2], vec![3, 3, 3, 1], vec![10], vec![1; 10]] {
+            let mut flat = KvCache::for_family(&fam);
+            let mut paged = KvCache::paged(&pool, 64);
+            for cache in [&mut flat, &mut paged] {
+                let mut pos = 0usize;
+                for &m in &split {
+                    let logits =
+                        fwd_prefill_chunk(&fam, &view, &proj, &tokens[pos..pos + m], cache)
+                            .unwrap();
+                    assert_eq!(logits.shape(), (m, fam.vocab));
+                    for r in 0..m {
+                        for j in 0..fam.vocab {
+                            assert_eq!(
+                                logits.at(r, j),
+                                full.at(pos + r, j),
+                                "split {split:?} pos {} col {j}",
+                                pos + r
+                            );
+                        }
+                    }
+                    pos += m;
+                }
+                assert_eq!(cache.len(), tokens.len());
+            }
+            // The caches are interchangeable with the one-shot one: the
+            // next decode step agrees bit-for-bit.
+            let want = {
+                let mut solo = oneshot.clone();
+                let mut caches = [&mut solo];
+                fwd_decode(&fam, &view, &proj, &[5], &mut caches).unwrap()
+            };
+            let got = {
+                let mut caches = [&mut flat, &mut paged];
+                fwd_decode(&fam, &view, &proj, &[5, 5], &mut caches).unwrap()
+            };
+            for j in 0..fam.vocab {
+                assert_eq!(got.at(0, j), want.at(0, j), "flat decode col {j}");
+                assert_eq!(got.at(1, j), want.at(0, j), "paged decode col {j}");
+            }
+        }
+        // Chunk growth past the cap is typed and leaves the cache intact.
+        let mut capped = KvCache::for_family(&fam).with_max_len(5);
+        fwd_prefill_chunk(&fam, &view, &proj, &tokens[..4], &mut capped).unwrap();
+        let err =
+            fwd_prefill_chunk(&fam, &view, &proj, &tokens[4..8], &mut capped).unwrap_err();
+        assert!(KvError::is_context_overflow(&err), "got: {err:#}");
+        assert_eq!(capped.len(), 4, "failed chunk dirtied the cache");
     }
 
     #[test]

@@ -4,70 +4,92 @@
 //!
 //! Client threads submit typed [`Request`]s over a channel; a single
 //! leader thread runs the [`Scheduler`]. Every arrival is stamped with a
-//! monotonically increasing id and appended to one FIFO queue. On each
-//! scheduler iteration:
+//! monotonically increasing id and appended to the FIFO queue of its
+//! [`Priority`] class (`Score` requests, which have no priority field,
+//! ride the `Interactive` queue — so an all-default workload degenerates
+//! to the single strict-FIFO queue of earlier revisions, bit-for-bit).
+//! On each scheduler iteration:
 //!
-//! 1. **Admission (strict FIFO).** Requests are admitted from the queue
-//!    *front only*: a `Score` joins the current scoring batch (up to the
-//!    engine's `max_batch` rows), a `Generate` is prefilled into the
-//!    in-flight decode pool when a slot is free. If the head of the queue
-//!    cannot be admitted, nothing behind it is — **no request ever
-//!    overtakes an earlier arrival at admission time**. That is the
-//!    fairness guarantee: admission order = arrival order, so equal-work
-//!    generate requests also *complete* in arrival order.
+//! 1. **Admission (priority classes, FIFO within each).** Classes are
+//!    scanned in urgency order (`Interactive` before `Batch`); within a
+//!    class, requests are admitted from the queue *front only*. The first
+//!    blocked head stops admission entirely: nothing overtakes it — not a
+//!    later arrival in its own class, and not a lower class either. That
+//!    is the fairness guarantee: admission order = (class, arrival)
+//!    order, so equal-work generate requests in one class also *complete*
+//!    in arrival order, and `Batch` work can never delay an admissible
+//!    `Interactive` request.
 //! 2. **Scoring (variable batch assembly).** Admitted score requests are
 //!    grouped by exact sequence length and each group runs as one
-//!    variable-size forward — the PR-1 "pad the batch by repeating request
-//!    0" hack is gone; no wasted rows, no fixed shape.
+//!    variable-size forward — no wasted rows, no fixed shape.
 //! 3. **Decode (continuous batching, vLLM-style).** All in-flight
 //!    sessions — whatever their lengths — advance by one token in a single
 //!    [`Engine::decode_step`] against their KV caches. Finished sessions
 //!    retire immediately and their slots are refilled by admission on the
-//!    *next* iteration, so new sessions join a decode batch that is still
-//!    in flight rather than waiting for a full drain.
+//!    *next* iteration. **Decode runs before prefill work** each tick.
+//! 4. **Chunked prefill (decode never stalls behind a long prompt).**
+//!    When the engine implements [`Engine::prefill_chunk`] and the
+//!    scheduler was given a chunk budget, admitted generate requests do
+//!    not prefill monolithically: they park in a *prefilling* set (each
+//!    occupying a decode slot) and advance by at most `prefill_chunk`
+//!    prompt tokens per tick — after the decode step, in (class, arrival)
+//!    order, chunk boundaries page-aligned when possible. A 10k-token
+//!    prompt therefore costs every running session at most one
+//!    chunk-sized bubble per tick instead of a full-prompt stall; the
+//!    report counts these overlapped ticks in
+//!    [`ServeReport::interleaved_decode_steps`]. Chunking is invisible in
+//!    the output: [`Engine::prefill_chunk`] is bit-identical to one-shot
+//!    [`Engine::prefill`] by contract (property-tested in the engine
+//!    modules and end-to-end below).
 //!
 //! ## Batching policy
 //!
 //! The only time the leader waits is when it is fully idle (no in-flight
-//! sessions): it then holds a partial scoring batch up to
-//! [`ServeConfig::deadline`] hoping to fill it (dynamic batching). With
-//! decode work in flight the loop never sleeps — arrivals are drained
-//! non-blockingly each iteration and admitted continuously.
+//! decode, prefill, or preempted sessions): it then holds a partial
+//! scoring batch up to [`ServeConfig::deadline`] hoping to fill it
+//! (dynamic batching). With work in flight the loop never sleeps.
 //!
 //! Per-session decode results are independent of batch composition (the
 //! engine contract), so a request's output does not depend on who it
 //! shared a batch with — property-tested below via solo-vs-concurrent
-//! equality.
+//! equality, including through a multi-replica engine.
 //!
 //! ## KV paging, preemption, and resume
 //!
 //! Generation sessions store their KV in fixed-size pages drawn from the
-//! engine's process-wide [`KvPool`](crate::runtime::kvpool::KvPool) under
-//! a hard byte budget (`--kv-budget`). Admission validates a generate
-//! request up front: an empty prompt, a prompt at/over `max_context`, or
-//! one that can *never* fit — more pages than the whole pool holds —
-//! answers **that request** with a typed [`Response::Rejected`] (tagged
-//! with the originating [`KvError`](crate::runtime::kvpool::KvError) so
-//! callers can classify it) and the scheduler keeps serving everyone
-//! else; a prompt that merely cannot fit *right now* is put back at the
-//! queue front (FIFO preserved) until running sessions retire. Fatal
-//! errors are reserved for engine/internal failures.
+//! engine's [`KvPool`](crate::runtime::kvpool::KvPool) under a hard byte
+//! budget (`--kv-budget`). Admission validates a generate request up
+//! front: an empty prompt, a prompt at/over `max_context`, or one that
+//! can *never* fit answers **that request** with a typed
+//! [`Response::Rejected`] and the scheduler keeps serving everyone else;
+//! a prompt that merely cannot fit *right now* is put back at its class
+//! queue front until running sessions retire.
 //!
-//! When a decode step itself runs out of pages, the scheduler **preempts**
-//! the youngest in-flight session: its KV cache is dropped (every page
-//! returns to the pool), its token history and sampler state are parked,
-//! and the smaller batch retries. Preempted sessions **resume**
-//! oldest-first as soon as capacity frees, by re-prefilling their full
-//! token history — bit-exact, because KV rows are pure functions of the
-//! token prefix and the sampler state survived intact (the resume
-//! prefill's logits are discarded, never re-sampled). A lone session that
-//! outgrows the whole pool is a typed fatal error: it cannot free its own
-//! pages.
+//! When a decode step runs out of pages, the scheduler **preempts** the
+//! lowest-class, youngest in-flight session (`Batch` before
+//! `Interactive`, LIFO within a class): its KV cache is dropped, its
+//! token history and sampler state are parked, and the smaller batch
+//! retries. Preempted sessions **resume** highest-class-oldest first as
+//! soon as capacity frees, by re-prefilling their full token history —
+//! bit-exact, because KV rows are pure functions of the token prefix and
+//! the sampler state survived intact. A lone session that outgrows the
+//! whole pool is a typed fatal error: it cannot free its own pages.
+//! Partially prefilled sessions relieve pressure the cheap way: their
+//! chunk cache is dropped and the request returns to its queue slot (no
+//! history to park — nothing was sampled yet).
 //!
 //! Identical prompt prefixes across sessions share pages copy-on-write
 //! ([`ServeConfig::shared_prompt`] benches exactly this), so N sessions
 //! behind one system prompt hold far fewer resident pages than N × the
 //! prompt's page count.
+//!
+//! ## Telemetry
+//!
+//! [`ServeReport`] aggregates fleet-wide counters plus a per-priority
+//! breakdown ([`ServeReport::classes`]): completed generate streams,
+//! time-to-first-token, per-decode-step latency percentiles (NaN-last
+//! nearest-rank, shared with the global percentiles), and preemptions —
+//! the numbers that show `Interactive` latency surviving `Batch` load.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -76,8 +98,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::corpus;
-use crate::engine::{Engine, Request, Response, Sampler, Sampling, Session};
+use crate::engine::{Engine, Priority, Request, Response, Sampler, Sampling, Session};
 use crate::runtime::kvpool::KvError;
+use crate::runtime::native::KvCache;
+use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
 
 /// What the closed-loop bench clients submit.
@@ -108,6 +132,17 @@ pub struct ServeConfig {
     /// Every request uses the *same* corpus window as its prompt (a shared
     /// system prompt) — the cross-session KV prefix-sharing benchmark knob.
     pub shared_prompt: bool,
+    /// Prompt tokens prefilled per scheduler tick (0 = monolithic one-shot
+    /// prefill). Only engines that implement [`Engine::prefill_chunk`]
+    /// chunk; others fall back to one-shot regardless.
+    pub prefill_chunk: usize,
+    /// The last `batch_clients` client threads submit at
+    /// [`Priority::Batch`]; the rest are `Interactive`.
+    pub batch_clients: usize,
+    /// When nonzero (generate workload), client 0's *first* request uses a
+    /// prompt of this length — the long-prompt-vs-decode interference
+    /// probe that chunked prefill exists to fix.
+    pub long_prompt_len: usize,
 }
 
 impl Default for ServeConfig {
@@ -120,8 +155,27 @@ impl Default for ServeConfig {
             workload: Workload::Score,
             prompt_len: 0,
             shared_prompt: false,
+            prefill_chunk: 0,
+            batch_clients: 0,
+            long_prompt_len: 0,
         }
     }
+}
+
+/// Per-priority-class serving outcome (completed generate streams only:
+/// scores carry no priority and rejected requests produced no tokens).
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    pub class: Priority,
+    /// Completed generate requests in this class.
+    pub requests: usize,
+    /// Median time-to-first-token (submit → first sampled token), ms.
+    pub ttft_p50_ms: f64,
+    /// Per-decode-step latency percentiles for this class's sessions, ms.
+    pub ms_per_tok_p50: f64,
+    pub ms_per_tok_p99: f64,
+    /// Sessions of this class preempted under KV pool pressure.
+    pub preemptions: usize,
 }
 
 /// Serving outcome: per-request scores/latencies plus decode telemetry.
@@ -134,10 +188,13 @@ pub struct ServeReport {
     /// Arrival ids (0-based intake order) in completion order — the
     /// fairness audit trail.
     pub completed: Vec<u64>,
-    /// Executed scoring/prefill forwards.
+    /// Executed scoring/prefill forwards (each prefill chunk counts one).
     pub batches: usize,
     /// Executed incremental decode steps.
     pub decode_steps: usize,
+    /// Decode steps taken while at least one session was mid-chunked-
+    /// prefill — the "long prompt did not stall decode" evidence.
+    pub interleaved_decode_steps: usize,
     /// Tokens produced by generate requests (the first token of each
     /// request comes from its prefill; the rest from decode steps).
     pub generated_tokens: usize,
@@ -154,6 +211,8 @@ pub struct ServeReport {
     /// validation refusals. They appear in `completed`/`latencies_s`
     /// (each got an answer) but contribute no scores or tokens.
     pub rejected: usize,
+    /// Per-priority breakdown, indexed by [`Priority::index`].
+    pub classes: Vec<ClassReport>,
     pub wall_secs: f64,
     /// `latencies_s` sorted once at construction (NaN-last), so percentile
     /// queries are O(1) instead of clone+sort per call.
@@ -226,6 +285,15 @@ impl ServeReport {
     }
 }
 
+/// Per-class raw samples accumulated while serving.
+#[derive(Default)]
+struct ClassAccum {
+    requests: usize,
+    ttft_s: Vec<f64>,
+    step_latencies_s: Vec<f64>,
+    preemptions: usize,
+}
+
 /// Accumulating counters the scheduler fills; sealed into a [`ServeReport`]
 /// (sorting the latency samples exactly once) when serving ends.
 #[derive(Default)]
@@ -235,29 +303,50 @@ struct Stats {
     completed: Vec<u64>,
     batches: usize,
     decode_steps: usize,
+    interleaved_decode_steps: usize,
     generated_tokens: usize,
     decoded_tokens: usize,
     decode_step_latencies_s: Vec<f64>,
     preemptions: usize,
     resumes: usize,
     rejected: usize,
+    classes: [ClassAccum; Priority::COUNT],
 }
 
 impl Stats {
     fn into_report(self, wall_secs: f64) -> ServeReport {
         let sorted_latencies_s = sort_nan_last(&self.latencies_s);
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, acc)| {
+                let ttft = sort_nan_last(&acc.ttft_s);
+                let steps = sort_nan_last(&acc.step_latencies_s);
+                ClassReport {
+                    class: Priority::from_index(ci),
+                    requests: acc.requests,
+                    ttft_p50_ms: nearest_rank(&ttft, 0.50) * 1e3,
+                    ms_per_tok_p50: nearest_rank(&steps, 0.50) * 1e3,
+                    ms_per_tok_p99: nearest_rank(&steps, 0.99) * 1e3,
+                    preemptions: acc.preemptions,
+                }
+            })
+            .collect();
         ServeReport {
             scores: self.scores,
             latencies_s: self.latencies_s,
             completed: self.completed,
             batches: self.batches,
             decode_steps: self.decode_steps,
+            interleaved_decode_steps: self.interleaved_decode_steps,
             generated_tokens: self.generated_tokens,
             decoded_tokens: self.decoded_tokens,
             decode_step_latencies_s: self.decode_step_latencies_s,
             preemptions: self.preemptions,
             resumes: self.resumes,
             rejected: self.rejected,
+            classes,
             wall_secs,
             sorted_latencies_s,
         }
@@ -276,9 +365,20 @@ struct Arrived {
     inc: Incoming,
 }
 
+/// The scheduling class of a request. `Score` carries no priority field
+/// and rides the `Interactive` queue, which keeps an all-default workload
+/// identical to the historical single-queue FIFO.
+fn req_class(req: &Request) -> Priority {
+    match req {
+        Request::Score { .. } => Priority::Interactive,
+        Request::Generate { priority, .. } => *priority,
+    }
+}
+
 /// An in-flight generation session in the decode pool.
 struct ActiveGen {
     id: u64,
+    class: Priority,
     session: Session,
     sampler: Sampler,
     /// Last sampled token, not yet fed back.
@@ -288,6 +388,26 @@ struct ActiveGen {
     step_latencies_s: Vec<f64>,
     budget: usize,
     prompt_len: usize,
+    /// Submit → first sampled token (survives preemption: the token was
+    /// already delivered to the stream state).
+    ttft_s: f64,
+    done: mpsc::Sender<Response>,
+    submitted: Instant,
+}
+
+/// A generate request mid-chunked-prefill: it owns a decode slot and a
+/// growing KV cache but has not sampled its first token yet.
+struct PrefillingGen {
+    id: u64,
+    class: Priority,
+    prompt: Vec<i32>,
+    /// The building cache, threaded through [`Engine::prefill_chunk`].
+    state: Option<KvCache>,
+    /// Prompt tokens fed so far (scheduler-side mirror of the cache len).
+    fed: usize,
+    budget: usize,
+    max_new_tokens: usize,
+    sampling: Sampling,
     done: mpsc::Sender<Response>,
     submitted: Instant,
 }
@@ -298,6 +418,7 @@ struct ActiveGen {
 /// not-yet-fed token — is kept.
 struct Preempted {
     id: u64,
+    class: Priority,
     /// Prompt plus every token fed back so far (`Session::tokens` at the
     /// moment of preemption) — re-prefilling exactly this recreates the
     /// dropped KV rows bit-identically.
@@ -308,6 +429,7 @@ struct Preempted {
     step_latencies_s: Vec<f64>,
     budget: usize,
     prompt_len: usize,
+    ttft_s: f64,
     done: mpsc::Sender<Response>,
     submitted: Instant,
 }
@@ -316,21 +438,29 @@ struct Preempted {
 struct Scheduler<'a> {
     engine: &'a dyn Engine,
     max_batch: usize,
-    queue: VecDeque<Arrived>,
+    /// Prompt tokens advanced per tick across all prefilling sessions
+    /// (0 = one-shot prefill).
+    prefill_chunk: usize,
+    /// One FIFO queue per priority class, indexed by [`Priority::index`].
+    queues: [VecDeque<Arrived>; Priority::COUNT],
     active: Vec<ActiveGen>,
-    /// Sessions evicted from the pool, waiting to resume (oldest first).
+    /// Sessions mid-chunked-prefill (each holds a decode slot).
+    prefilling: Vec<PrefillingGen>,
+    /// Sessions evicted from the pool, waiting to resume.
     preempted: Vec<Preempted>,
     stats: Stats,
     next_id: u64,
 }
 
 impl<'a> Scheduler<'a> {
-    fn new(engine: &'a dyn Engine) -> Scheduler<'a> {
+    fn new(engine: &'a dyn Engine, prefill_chunk: usize) -> Scheduler<'a> {
         Scheduler {
             engine,
             max_batch: engine.spec().max_batch.max(1),
-            queue: VecDeque::new(),
+            prefill_chunk,
+            queues: std::array::from_fn(|_| VecDeque::new()),
             active: Vec::new(),
+            prefilling: Vec::new(),
             preempted: Vec::new(),
             stats: Stats::default(),
             next_id: 0,
@@ -340,42 +470,59 @@ impl<'a> Scheduler<'a> {
     fn enqueue(&mut self, inc: Incoming) {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Arrived { id, inc });
+        let class = req_class(&inc.req);
+        self.queues[class.index()].push_back(Arrived { id, inc });
     }
 
     fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty() || !self.preempted.is_empty()
+        self.queues.iter().any(|q| !q.is_empty())
+            || !self.active.is_empty()
+            || !self.prefilling.is_empty()
+            || !self.preempted.is_empty()
     }
 
-    /// One scheduler iteration: resume preempted sessions, FIFO admission,
-    /// one scoring pass, one decode step. Always makes progress when
-    /// `has_work()`.
+    /// Decode slots held: decoding sessions plus mid-prefill sessions.
+    fn slots_used(&self) -> usize {
+        self.active.len() + self.prefilling.len()
+    }
+
+    /// One scheduler iteration: resume preempted sessions, priority-class
+    /// FIFO admission, one scoring pass, one decode step, then up to
+    /// `prefill_chunk` tokens of chunked prefill. Decode runs *before*
+    /// prefill so a long prompt can never stall running streams. Always
+    /// makes progress when `has_work()`.
     fn step(&mut self) -> Result<()> {
         // Preempted sessions were admitted before anything still queued:
         // they get first claim on freed pool capacity.
         self.try_resume()?;
-        // Admission from the queue front only — the head never yields its
-        // turn to later arrivals (the FIFO fairness guarantee).
+        // Admission: classes in urgency order, front-only within a class.
+        // The first blocked head stops admission entirely — nothing
+        // overtakes it (the fairness guarantee).
+        let chunked = self.prefill_chunk > 0 && self.engine.supports_chunked_prefill();
         let mut score_batch: Vec<Arrived> = Vec::new();
-        loop {
-            let admissible = match self.queue.front().map(|a| &a.inc.req) {
-                Some(Request::Score { .. }) => score_batch.len() < self.max_batch,
-                Some(Request::Generate { .. }) => {
-                    // New sessions wait while any preempted one still needs
-                    // its pages back — the preempted session arrived first.
-                    self.preempted.is_empty() && self.active.len() < self.max_batch
+        'admission: for ci in 0..Priority::COUNT {
+            loop {
+                let admissible = match self.queues[ci].front().map(|a| &a.inc.req) {
+                    Some(Request::Score { .. }) => score_batch.len() < self.max_batch,
+                    Some(Request::Generate { .. }) => {
+                        // New sessions wait while any preempted one still
+                        // needs its pages back — it was admitted first.
+                        self.preempted.is_empty() && self.slots_used() < self.max_batch
+                    }
+                    None => break, // class drained; a lower class may admit
+                };
+                if !admissible {
+                    break 'admission;
                 }
-                None => false,
-            };
-            if !admissible {
-                break;
-            }
-            let arrived = self.queue.pop_front().unwrap();
-            let is_score = matches!(arrived.inc.req, Request::Score { .. });
-            if is_score {
-                score_batch.push(arrived);
-            } else if !self.admit_generate(arrived)? {
-                break; // pool momentarily full: requeued at the front
+                let arrived = self.queues[ci].pop_front().unwrap();
+                let is_score = matches!(arrived.inc.req, Request::Score { .. });
+                if is_score {
+                    score_batch.push(arrived);
+                } else if chunked {
+                    self.admit_generate_chunked(arrived)?;
+                } else if !self.admit_generate(arrived)? {
+                    break 'admission; // pool momentarily full: requeued at the front
+                }
             }
         }
         if !score_batch.is_empty() {
@@ -384,20 +531,22 @@ impl<'a> Scheduler<'a> {
         if !self.active.is_empty() {
             self.decode_once()?;
         }
+        self.prefill_tick()?;
         Ok(())
     }
 
-    /// Resume preempted sessions oldest-first while slots and pool pages
-    /// allow: re-prefill the parked token history (recreating the dropped
-    /// KV rows bit-identically), discard the logits — the pending token
-    /// was already sampled — and rejoin the decode pool.
+    /// Resume preempted sessions highest-class-oldest first while slots
+    /// and pool pages allow: re-prefill the parked token history
+    /// (recreating the dropped KV rows bit-identically), discard the
+    /// logits — the pending token was already sampled — and rejoin the
+    /// decode pool.
     fn try_resume(&mut self) -> Result<()> {
-        while !self.preempted.is_empty() && self.active.len() < self.max_batch {
+        while !self.preempted.is_empty() && self.slots_used() < self.max_batch {
             let idx = self
                 .preempted
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, p)| p.id)
+                .min_by_key(|(_, p)| (p.class, p.id))
                 .map(|(i, _)| i)
                 .expect("non-empty preempted list");
             let history = self.preempted[idx].history.clone();
@@ -409,6 +558,7 @@ impl<'a> Scheduler<'a> {
                     self.stats.resumes += 1;
                     self.active.push(ActiveGen {
                         id: p.id,
+                        class: p.class,
                         session,
                         sampler: p.sampler,
                         next: p.next,
@@ -416,6 +566,7 @@ impl<'a> Scheduler<'a> {
                         step_latencies_s: p.step_latencies_s,
                         budget: p.budget,
                         prompt_len: p.prompt_len,
+                        ttft_s: p.ttft_s,
                         done: p.done,
                         submitted: p.submitted,
                     });
@@ -429,50 +580,54 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
+    /// Request-level validation shared by both admission paths: `Some` is
+    /// the typed per-request refusal message (empty prompt, context
+    /// overflow, a prompt no amount of preemption can ever fit).
+    fn validate_generate(&self, arrived: &Arrived) -> Option<String> {
+        let spec = self.engine.spec();
+        let Request::Generate { prompt, .. } = &arrived.inc.req else {
+            unreachable!("generate admission on a non-generate request");
+        };
+        if prompt.is_empty() {
+            Some("generate request with an empty prompt".to_string())
+        } else if prompt.len() >= spec.max_context {
+            Some(
+                KvError::ContextOverflow {
+                    have: prompt.len(),
+                    extra: 1,
+                    max: spec.max_context,
+                }
+                .to_string(),
+            )
+        } else {
+            self.engine.pool_stats().and_then(|ps| {
+                let p = ps.page_tokens.max(1);
+                let need = prompt.len().div_ceil(p);
+                // Never satisfiable: even an empty pool cannot hold the
+                // prompt, so requeueing would spin forever.
+                (need > ps.max_pages).then(|| {
+                    KvError::PromptTooLarge {
+                        prompt_pages: need,
+                        max_pages: ps.max_pages,
+                    }
+                    .to_string()
+                })
+            })
+        }
+    }
+
     /// Prefill a generate request into the decode pool and sample its
-    /// first token. Returns `false` when the KV pool is momentarily
-    /// exhausted and the request went back to the queue front.
+    /// first token (the monolithic one-shot path). Returns `false` when
+    /// the KV pool is momentarily exhausted and the request went back to
+    /// the queue front.
     ///
-    /// Validation failures of the request *itself* — empty prompt, context
-    /// overflow, a prompt no amount of preemption can ever fit — answer
-    /// that one request with [`Response::Rejected`] and keep the loop
-    /// running: one bad request must not abort every other client's queued
-    /// and in-flight work. Fatal errors are reserved for engine/internal
-    /// failures.
+    /// Validation failures of the request *itself* answer that one request
+    /// with [`Response::Rejected`] and keep the loop running: one bad
+    /// request must not abort every other client's queued and in-flight
+    /// work. Fatal errors are reserved for engine/internal failures.
     fn admit_generate(&mut self, arrived: Arrived) -> Result<bool> {
         let spec = self.engine.spec();
-        let invalid = {
-            let Request::Generate { prompt, .. } = &arrived.inc.req else {
-                unreachable!("admit_generate on a non-generate request");
-            };
-            if prompt.is_empty() {
-                Some("generate request with an empty prompt".to_string())
-            } else if prompt.len() >= spec.max_context {
-                Some(
-                    KvError::ContextOverflow {
-                        have: prompt.len(),
-                        extra: 1,
-                        max: spec.max_context,
-                    }
-                    .to_string(),
-                )
-            } else {
-                self.engine.pool_stats().and_then(|ps| {
-                    let p = ps.page_tokens.max(1);
-                    let need = prompt.len().div_ceil(p);
-                    // Never satisfiable: even an empty pool cannot hold
-                    // the prompt, so requeueing would spin forever.
-                    (need > ps.max_pages).then(|| {
-                        KvError::PromptTooLarge {
-                            prompt_pages: need,
-                            max_pages: ps.max_pages,
-                        }
-                        .to_string()
-                    })
-                })
-            }
-        };
-        if let Some(error) = invalid {
+        if let Some(error) = self.validate_generate(&arrived) {
             self.reject(arrived, error);
             return Ok(true);
         }
@@ -483,14 +638,16 @@ impl<'a> Scheduler<'a> {
             self.engine.prefill(prompt)
         };
         let (session, logits) = match prefilled {
-            Ok(ok) => ok,
             Err(e)
                 if KvError::is_pool_exhausted(&e)
-                    && (!self.active.is_empty() || !self.preempted.is_empty()) =>
+                    && (!self.active.is_empty()
+                        || !self.prefilling.is_empty()
+                        || !self.preempted.is_empty()) =>
             {
                 // Transient pressure: pages free up as running sessions
-                // retire. The head of the queue keeps its turn.
-                self.queue.push_front(arrived);
+                // retire. The head of its class queue keeps its turn.
+                let class = req_class(&arrived.inc.req);
+                self.queues[class.index()].push_front(arrived);
                 return Ok(false);
             }
             // The engine re-checks request-level bounds; its typed
@@ -500,12 +657,14 @@ impl<'a> Scheduler<'a> {
                 return Ok(true);
             }
             Err(e) => return Err(e),
+            Ok(ok) => ok,
         };
         let Arrived { id, inc } = arrived;
         let Request::Generate {
             prompt,
             max_new_tokens,
             sampling,
+            priority,
         } = inc.req
         else {
             unreachable!("admit_generate on a non-generate request");
@@ -530,6 +689,7 @@ impl<'a> Scheduler<'a> {
         let next = sampler.sample(logits.row(logits.rows() - 1));
         let ag = ActiveGen {
             id,
+            class: priority,
             session,
             sampler,
             next,
@@ -537,6 +697,7 @@ impl<'a> Scheduler<'a> {
             step_latencies_s: Vec::new(),
             budget,
             prompt_len,
+            ttft_s: inc.submitted.elapsed().as_secs_f64(),
             done: inc.done,
             submitted: inc.submitted,
         };
@@ -546,6 +707,307 @@ impl<'a> Scheduler<'a> {
             self.active.push(ag);
         }
         Ok(true)
+    }
+
+    /// Admit a generate request onto the chunked-prefill path: validate,
+    /// then park it in the prefilling set (claiming a decode slot) without
+    /// touching the engine — [`Scheduler::prefill_tick`] feeds the prompt
+    /// incrementally after each decode step.
+    fn admit_generate_chunked(&mut self, arrived: Arrived) -> Result<()> {
+        let spec = self.engine.spec();
+        if let Some(error) = self.validate_generate(&arrived) {
+            self.reject(arrived, error);
+            return Ok(());
+        }
+        let Arrived { id, inc } = arrived;
+        let Request::Generate {
+            prompt,
+            max_new_tokens,
+            sampling,
+            priority,
+        } = inc.req
+        else {
+            unreachable!("admit_generate_chunked on a non-generate request");
+        };
+        let prompt_len = prompt.len();
+        let budget = max_new_tokens.min(spec.max_context.saturating_sub(prompt_len));
+        if budget == 0 {
+            self.finish(
+                id,
+                inc.submitted,
+                &inc.done,
+                Response::Generated {
+                    prompt_len,
+                    tokens: Vec::new(),
+                    step_latencies_s: Vec::new(),
+                },
+            );
+            return Ok(());
+        }
+        self.prefilling.push(PrefillingGen {
+            id,
+            class: priority,
+            prompt,
+            state: None,
+            fed: 0,
+            budget,
+            max_new_tokens,
+            sampling,
+            done: inc.done,
+            submitted: inc.submitted,
+        });
+        Ok(())
+    }
+
+    /// Advance chunked prefills by up to `prefill_chunk` prompt tokens
+    /// total this tick, highest-class-oldest session first, chunk
+    /// boundaries page-aligned when that still makes progress. A session
+    /// whose final chunk lands samples its first token and joins the
+    /// decode pool immediately.
+    fn prefill_tick(&mut self) -> Result<()> {
+        let mut tokens_left = self.prefill_chunk;
+        while tokens_left > 0 && !self.prefilling.is_empty() {
+            let idx = self
+                .prefilling
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| (p.class, p.id))
+                .map(|(i, _)| i)
+                .expect("non-empty prefilling list");
+            let (target, is_final) = {
+                let p = &self.prefilling[idx];
+                let total = p.prompt.len();
+                let want = (p.fed + tokens_left).min(total);
+                let target = if want < total {
+                    // Stop at a page boundary so mid-prompt chunks fill
+                    // whole pages — unless that would stall the session.
+                    let pt = self.engine.pool_stats().map_or(0, |s| s.page_tokens);
+                    if pt > 1 {
+                        let aligned = (want / pt) * pt;
+                        if aligned > p.fed {
+                            aligned
+                        } else {
+                            want
+                        }
+                    } else {
+                        want
+                    }
+                } else {
+                    total
+                };
+                (target, target == total)
+            };
+            let chunk = {
+                let p = &mut self.prefilling[idx];
+                self.engine.prefill_chunk(&p.prompt, &mut p.state, target)
+            };
+            match chunk {
+                Ok(logits) => {
+                    self.stats.batches += 1;
+                    let fed_before = self.prefilling[idx].fed;
+                    self.prefilling[idx].fed = target;
+                    tokens_left = tokens_left.saturating_sub(target - fed_before);
+                    if is_final {
+                        let p = self.prefilling.remove(idx);
+                        self.finish_prefill(p, &logits);
+                    }
+                }
+                Err(e) if KvError::is_pool_exhausted(&e) => {
+                    if !self.active.is_empty() {
+                        // Pages free as decode sessions retire; retry the
+                        // chunk next tick.
+                        break;
+                    }
+                    // Nothing decoding: relieve pressure now by returning
+                    // the youngest lowest-class OTHER prefill to its queue.
+                    if self.requeue_one_prefilling(Some(idx)) {
+                        continue;
+                    }
+                    // Last prefill standing with preempted sessions parked:
+                    // give up our own pages too — the preempted session was
+                    // admitted first and holds none, so waiting would stall
+                    // forever. (The request keeps its queue slot; admission
+                    // re-admits it once the preempted have resumed.)
+                    if !self.preempted.is_empty() && self.requeue_one_prefilling(None) {
+                        continue;
+                    }
+                    // A lone prefill the pool cannot hold was pre-checked
+                    // at admission — this is a genuine pool failure.
+                    return Err(e);
+                }
+                Err(e)
+                    if KvError::is_context_overflow(&e) || KvError::is_prompt_too_large(&e) =>
+                {
+                    let p = self.prefilling.remove(idx);
+                    self.stats.rejected += 1;
+                    self.finish(
+                        p.id,
+                        p.submitted,
+                        &p.done,
+                        Response::Rejected {
+                            error: format!("{e:#}"),
+                        },
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal a completed chunked prefill: sample the first token from the
+    /// final chunk's logits (its last row is the last prompt position,
+    /// bit-identical to one-shot prefill) and join the decode pool.
+    fn finish_prefill(&mut self, p: PrefillingGen, logits: &Matrix) {
+        let mut sampler = Sampler::new(p.sampling);
+        let next = sampler.sample(logits.row(logits.rows() - 1));
+        let prompt_len = p.prompt.len();
+        let cache = p.state.expect("completed prefill has a cache");
+        let ag = ActiveGen {
+            id: p.id,
+            class: p.class,
+            session: Session::new(p.prompt, cache),
+            sampler,
+            next,
+            produced: vec![next],
+            step_latencies_s: Vec::new(),
+            budget: p.budget,
+            prompt_len,
+            ttft_s: p.submitted.elapsed().as_secs_f64(),
+            done: p.done,
+            submitted: p.submitted,
+        };
+        if ag.produced.len() >= ag.budget {
+            self.retire(ag);
+        } else {
+            self.active.push(ag);
+        }
+    }
+
+    /// Drop one mid-prefill session (youngest of the lowest class,
+    /// skipping `except`) back to its class queue — its chunk cache frees
+    /// here. Cheaper than preempting a decoding session: nothing was
+    /// sampled yet, so there is no stream state to park. Insertion keeps
+    /// the queue id-ordered, preserving within-class FIFO.
+    fn requeue_one_prefilling(&mut self, except: Option<usize>) -> bool {
+        let Some(vi) = self
+            .prefilling
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| Some(*i) != except)
+            .max_by_key(|(_, p)| (p.class, p.id))
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let v = self.prefilling.remove(vi);
+        let req = Request::Generate {
+            prompt: v.prompt,
+            max_new_tokens: v.max_new_tokens,
+            sampling: v.sampling,
+            priority: v.class,
+        };
+        let q = &mut self.queues[v.class.index()];
+        let pos = q.iter().position(|a| a.id > v.id).unwrap_or(q.len());
+        q.insert(
+            pos,
+            Arrived {
+                id: v.id,
+                inc: Incoming {
+                    req,
+                    done: v.done,
+                    submitted: v.submitted,
+                },
+            },
+        );
+        true
+    }
+
+    /// Advance every in-flight session by one token in a single engine
+    /// call, then retire the ones that hit their budget. When the KV pool
+    /// cannot back the step (page reservation runs *before* any compute,
+    /// so a refusal leaves every session untouched), preempt the youngest
+    /// session of the lowest class and retry the smaller batch; with one
+    /// session left the exhaustion is fatal — a lone session cannot free
+    /// its own pages (a mid-prefill session is requeued first if present).
+    fn decode_once(&mut self) -> Result<()> {
+        let engine = self.engine;
+        loop {
+            let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
+            let t0 = Instant::now();
+            let step = {
+                let mut sessions: Vec<&mut Session> =
+                    self.active.iter_mut().map(|a| &mut a.session).collect();
+                engine.decode_step(&mut sessions, &tokens)
+            };
+            let logits = match step {
+                Ok(l) => l,
+                Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
+                    self.preempt_one();
+                    continue;
+                }
+                Err(e)
+                    if KvError::is_pool_exhausted(&e)
+                        && self.requeue_one_prefilling(None) =>
+                {
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            let step_s = t0.elapsed().as_secs_f64();
+            self.stats.decode_steps += 1;
+            if !self.prefilling.is_empty() {
+                self.stats.interleaved_decode_steps += 1;
+            }
+            self.stats.decode_step_latencies_s.push(step_s);
+            self.stats.decoded_tokens += self.active.len();
+            for (row, ag) in self.active.iter_mut().enumerate() {
+                let next = ag.sampler.sample(logits.row(row));
+                ag.next = next;
+                ag.produced.push(next);
+                ag.step_latencies_s.push(step_s);
+            }
+            let drained: Vec<ActiveGen> = self.active.drain(..).collect();
+            for ag in drained {
+                if ag.produced.len() >= ag.budget {
+                    self.retire(ag);
+                } else {
+                    self.active.push(ag);
+                }
+            }
+            return Ok(());
+        }
+    }
+
+    /// Park the youngest session of the lowest priority class (`Batch`
+    /// before `Interactive`, LIFO within a class): its cache drops here
+    /// (every page back to the pool) while token history, sampler state,
+    /// and the pending token survive for a bit-exact resume.
+    fn preempt_one(&mut self) {
+        let idx = self
+            .active
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, a)| (a.class, a.id))
+            .map(|(i, _)| i)
+            .expect("preempt with no active session");
+        let ag = self.active.remove(idx);
+        self.stats.preemptions += 1;
+        self.stats.classes[ag.class.index()].preemptions += 1;
+        self.preempted.push(Preempted {
+            id: ag.id,
+            class: ag.class,
+            history: ag.session.tokens,
+            sampler: ag.sampler,
+            next: ag.next,
+            produced: ag.produced,
+            step_latencies_s: ag.step_latencies_s,
+            budget: ag.budget,
+            prompt_len: ag.prompt_len,
+            ttft_s: ag.ttft_s,
+            done: ag.done,
+            submitted: ag.submitted,
+        });
     }
 
     /// Score the admitted requests through [`crate::engine::score_many`]
@@ -585,81 +1047,12 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
-    /// Advance every in-flight session by one token in a single engine
-    /// call, then retire the ones that hit their budget. When the KV pool
-    /// cannot back the step (page reservation runs *before* any compute,
-    /// so a refusal leaves every session untouched), preempt the youngest
-    /// session and retry the smaller batch; with one session left the
-    /// exhaustion is fatal — a lone session cannot free its own pages.
-    fn decode_once(&mut self) -> Result<()> {
-        let engine = self.engine;
-        loop {
-            let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
-            let t0 = Instant::now();
-            let step = {
-                let mut sessions: Vec<&mut Session> =
-                    self.active.iter_mut().map(|a| &mut a.session).collect();
-                engine.decode_step(&mut sessions, &tokens)
-            };
-            let logits = match step {
-                Ok(l) => l,
-                Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
-                    self.preempt_youngest();
-                    continue;
-                }
-                Err(e) => return Err(e),
-            };
-            let step_s = t0.elapsed().as_secs_f64();
-            self.stats.decode_steps += 1;
-            self.stats.decode_step_latencies_s.push(step_s);
-            self.stats.decoded_tokens += self.active.len();
-            for (row, ag) in self.active.iter_mut().enumerate() {
-                let next = ag.sampler.sample(logits.row(row));
-                ag.next = next;
-                ag.produced.push(next);
-                ag.step_latencies_s.push(step_s);
-            }
-            let drained: Vec<ActiveGen> = self.active.drain(..).collect();
-            for ag in drained {
-                if ag.produced.len() >= ag.budget {
-                    self.retire(ag);
-                } else {
-                    self.active.push(ag);
-                }
-            }
-            return Ok(());
-        }
-    }
-
-    /// Park the youngest in-flight session: its cache drops here (every
-    /// page back to the pool) while token history, sampler state, and the
-    /// pending token survive for a bit-exact resume.
-    fn preempt_youngest(&mut self) {
-        let idx = self
-            .active
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, a)| a.id)
-            .map(|(i, _)| i)
-            .expect("preempt with no active session");
-        let ag = self.active.remove(idx);
-        self.stats.preemptions += 1;
-        self.preempted.push(Preempted {
-            id: ag.id,
-            history: ag.session.tokens,
-            sampler: ag.sampler,
-            next: ag.next,
-            produced: ag.produced,
-            step_latencies_s: ag.step_latencies_s,
-            budget: ag.budget,
-            prompt_len: ag.prompt_len,
-            done: ag.done,
-            submitted: ag.submitted,
-        });
-    }
-
     fn retire(&mut self, ag: ActiveGen) {
         self.stats.generated_tokens += ag.produced.len();
+        let acc = &mut self.stats.classes[ag.class.index()];
+        acc.requests += 1;
+        acc.ttft_s.push(ag.ttft_s);
+        acc.step_latencies_s.extend_from_slice(&ag.step_latencies_s);
         self.finish(
             ag.id,
             ag.submitted,
@@ -696,8 +1089,19 @@ pub fn serve_oneshot(
     engine: &dyn Engine,
     reqs: Vec<Request>,
 ) -> Result<(Vec<Response>, ServeReport)> {
+    serve_oneshot_chunked(engine, reqs, 0)
+}
+
+/// [`serve_oneshot`] with a per-tick chunked-prefill token budget
+/// (0 = monolithic prefill; engines without chunk support fall back to
+/// one-shot regardless).
+pub fn serve_oneshot_chunked(
+    engine: &dyn Engine,
+    reqs: Vec<Request>,
+    prefill_chunk: usize,
+) -> Result<(Vec<Response>, ServeReport)> {
     let t0 = Instant::now();
-    let mut sched = Scheduler::new(engine);
+    let mut sched = Scheduler::new(engine, prefill_chunk);
     let mut rxs = Vec::with_capacity(reqs.len());
     for req in reqs {
         let (dtx, drx) = mpsc::channel();
@@ -724,7 +1128,8 @@ pub fn serve_oneshot(
 
 /// Run the closed-loop threaded server until every client request
 /// completes: `cfg.clients` threads submit `cfg.requests` total requests of
-/// `cfg.workload`, the leader thread runs the continuous-batching
+/// `cfg.workload` (the last [`ServeConfig::batch_clients`] threads at
+/// [`Priority::Batch`]), the leader thread runs the continuous-batching
 /// scheduler.
 pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport> {
     let spec = engine.spec();
@@ -760,11 +1165,19 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
                     spec.max_context
                 );
             }
+            if cfg.long_prompt_len > 0 && cfg.long_prompt_len >= spec.max_context {
+                bail!(
+                    "long_prompt_len {} leaves no room to generate within \
+                     the engine's max_context {}",
+                    cfg.long_prompt_len,
+                    spec.max_context
+                );
+            }
         }
     }
     let (tx, rx) = mpsc::channel::<Incoming>();
     let t_start = Instant::now();
-    let mut sched = Scheduler::new(engine);
+    let mut sched = Scheduler::new(engine, cfg.prefill_chunk);
 
     std::thread::scope(|s| -> Result<()> {
         // Client threads: each submits a burst of requests with jitter.
@@ -777,6 +1190,13 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
             let workload = cfg.workload;
             let shared = cfg.shared_prompt;
             let n = per_client + usize::from(c < remainder);
+            // The last `batch_clients` threads submit throughput traffic.
+            let class = if clients - c <= cfg.batch_clients.min(clients) {
+                Priority::Batch
+            } else {
+                Priority::Interactive
+            };
+            let long_first = if c == 0 { cfg.long_prompt_len } else { 0 };
             s.spawn(move || {
                 let mut rng = Pcg64::new(seed ^ c as u64, 77);
                 // Shared-prompt mode: every client reads the same corpus
@@ -784,13 +1204,18 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
                 // pool can share its prefix pages across all of them.
                 let corpus_seed = if shared { seed } else { seed ^ c as u64 };
                 let data = corpus::generate(corpus::Split::C4Sim, 200_000, corpus_seed);
-                for _ in 0..n {
+                for i in 0..n {
+                    let plen = if i == 0 && long_first > 0 && matches!(workload, Workload::Generate { .. }) {
+                        long_first.min(data.len() - 2)
+                    } else {
+                        prompt_len
+                    };
                     let start = if shared {
                         0
                     } else {
-                        rng.below(data.len() - prompt_len - 1)
+                        rng.below(data.len() - plen - 1)
                     };
-                    let tokens: Vec<i32> = data[start..start + prompt_len]
+                    let tokens: Vec<i32> = data[start..start + plen]
                         .iter()
                         .map(|&b| b as i32)
                         .collect();
@@ -800,6 +1225,7 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
                             prompt: tokens,
                             max_new_tokens,
                             sampling: Sampling::Greedy,
+                            priority: class,
                         },
                     };
                     let (dtx, drx) = mpsc::channel();
@@ -836,15 +1262,17 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
                 while let Ok(inc) = rx.try_recv() {
                     sched.enqueue(inc);
                 }
-                // Idle-only dynamic batching: nothing in flight (and no
-                // preempted session waiting on pages) → hold a partial
-                // scoring batch briefly to let it fill.
+                // Idle-only dynamic batching: nothing in flight (no decode,
+                // no mid-prefill, no preempted session waiting on pages) →
+                // hold a partial scoring batch briefly to let it fill.
                 if sched.active.is_empty()
+                    && sched.prefilling.is_empty()
                     && sched.preempted.is_empty()
-                    && sched.queue.len() < sched.max_batch
+                    && sched.queues.iter().map(|q| q.len()).sum::<usize>() < sched.max_batch
                 {
                     let t0 = Instant::now();
-                    while sched.queue.len() < sched.max_batch {
+                    while sched.queues.iter().map(|q| q.len()).sum::<usize>() < sched.max_batch
+                    {
                         let left = cfg.deadline.saturating_sub(t0.elapsed());
                         if left.is_zero() {
                             break;
@@ -864,8 +1292,11 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
             // Queued and in-flight requests still hold their responders:
             // drop them so every client blocked on a response wakes up,
             // then drain until all submitters hang up.
-            sched.queue.clear();
+            for q in sched.queues.iter_mut() {
+                q.clear();
+            }
             sched.active.clear();
+            sched.prefilling.clear();
             sched.preempted.clear();
             while rx.recv().is_ok() {}
         }
@@ -881,9 +1312,7 @@ mod tests {
     use super::*;
     use crate::engine::{EngineSpec, NativeEngine};
     use crate::model::ModelParams;
-    use crate::runtime::native::KvCache;
     use crate::runtime::FamilySpec;
-    use crate::tensor::Matrix;
     use std::sync::Mutex;
 
     /// Uniform-logits stand-in engine: instant forwards, exact expected
@@ -939,6 +1368,24 @@ mod tests {
         }
     }
 
+    fn gen_req(prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request::Generate {
+            prompt,
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            priority: Priority::default(),
+        }
+    }
+
+    fn gen_req_class(prompt: Vec<i32>, max_new_tokens: usize, priority: Priority) -> Request {
+        Request::Generate {
+            prompt,
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            priority,
+        }
+    }
+
     #[test]
     fn serves_every_score_request_with_exact_uniform_score() {
         let engine = ToyEngine::new(256, 4, 32);
@@ -948,8 +1395,7 @@ mod tests {
             deadline: Duration::from_millis(2),
             seed: 9,
             workload: Workload::Score,
-            prompt_len: 0,
-            shared_prompt: false,
+            ..ServeConfig::default()
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 13);
@@ -974,7 +1420,7 @@ mod tests {
             seed: 4,
             workload: Workload::Generate { max_new_tokens: 5 },
             prompt_len: 8,
-            shared_prompt: false,
+            ..ServeConfig::default()
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.completed.len(), 9);
@@ -988,6 +1434,11 @@ mod tests {
         );
         assert!(report.decode_tokens_per_sec() > 0.0);
         assert!(report.decode_p50_ms() >= 0.0);
+        // All-default traffic lands in the Interactive class breakdown.
+        assert_eq!(report.classes.len(), Priority::COUNT);
+        assert_eq!(report.classes[0].class, Priority::Interactive);
+        assert_eq!(report.classes[0].requests, 9);
+        assert_eq!(report.classes[1].requests, 0);
     }
 
     #[test]
@@ -996,11 +1447,7 @@ mod tests {
         // admission ⇒ completion order is exactly arrival order.
         let engine = ToyEngine::new(16, 2, 8);
         let reqs: Vec<Request> = (0..6)
-            .map(|i| Request::Generate {
-                prompt: vec![1 + (i % 8), 2, 3],
-                max_new_tokens: 3,
-                sampling: Sampling::Greedy,
-            })
+            .map(|i| gen_req(vec![1 + (i % 8), 2, 3], 3))
             .collect();
         let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
         assert_eq!(report.completed, vec![0, 1, 2, 3, 4, 5]);
@@ -1019,17 +1466,9 @@ mod tests {
         // one is still decoding — the decode batch stays at width 2
         // (continuous batching), and the long request finishes last.
         let engine = ToyEngine::new(16, 2, 8);
-        let mut reqs = vec![Request::Generate {
-            prompt: vec![1, 2],
-            max_new_tokens: 7,
-            sampling: Sampling::Greedy,
-        }];
+        let mut reqs = vec![gen_req(vec![1, 2], 7)];
         for _ in 0..3 {
-            reqs.push(Request::Generate {
-                prompt: vec![3, 4],
-                max_new_tokens: 2,
-                sampling: Sampling::Greedy,
-            });
+            reqs.push(gen_req(vec![3, 4], 2));
         }
         let (_resps, report) = serve_oneshot(&engine, reqs).unwrap();
         assert_eq!(report.completed, vec![1, 2, 3, 0], "short ones first, FIFO");
@@ -1051,21 +1490,9 @@ mod tests {
         // arrives last and must NOT overtake the blocked generate.
         let engine = ToyEngine::new(16, 2, 8);
         let reqs = vec![
-            Request::Generate {
-                prompt: vec![1, 2],
-                max_new_tokens: 4,
-                sampling: Sampling::Greedy,
-            },
-            Request::Generate {
-                prompt: vec![1, 2],
-                max_new_tokens: 4,
-                sampling: Sampling::Greedy,
-            },
-            Request::Generate {
-                prompt: vec![1, 2],
-                max_new_tokens: 2,
-                sampling: Sampling::Greedy,
-            },
+            gen_req(vec![1, 2], 4),
+            gen_req(vec![1, 2], 4),
+            gen_req(vec![1, 2], 2),
             Request::Score {
                 tokens: vec![1, 2, 3, 4],
             },
@@ -1084,6 +1511,56 @@ mod tests {
     }
 
     #[test]
+    fn interactive_requests_overtake_queued_batch_work_but_not_their_own_class() {
+        // Arrival order: two Batch generates, then two Interactive ones,
+        // through a 1-slot engine. Priority admission serves Interactive
+        // first; *within* each class, completion stays in arrival order.
+        let engine = ToyEngine::new(16, 1, 8);
+        let reqs = vec![
+            gen_req_class(vec![1, 2], 3, Priority::Batch),
+            gen_req_class(vec![3, 4], 3, Priority::Batch),
+            gen_req_class(vec![5, 6], 3, Priority::Interactive),
+            gen_req_class(vec![7, 8], 3, Priority::Interactive),
+        ];
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert_eq!(
+            report.completed,
+            vec![2, 3, 0, 1],
+            "priority classes with within-class FIFO violated"
+        );
+        for r in &resps {
+            match r {
+                Response::Generated { tokens, .. } => assert_eq!(tokens.len(), 3),
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        assert_eq!(report.classes[Priority::Interactive.index()].requests, 2);
+        assert_eq!(report.classes[Priority::Batch.index()].requests, 2);
+    }
+
+    #[test]
+    fn per_class_report_breaks_out_generate_streams() {
+        let engine = ToyEngine::new(16, 2, 8);
+        let reqs = vec![
+            gen_req_class(vec![1, 2], 3, Priority::Interactive),
+            gen_req_class(vec![3, 4], 3, Priority::Batch),
+            gen_req_class(vec![5, 6], 3, Priority::Interactive),
+        ];
+        let (_resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert_eq!(report.classes.len(), Priority::COUNT);
+        let inter = &report.classes[Priority::Interactive.index()];
+        let batch = &report.classes[Priority::Batch.index()];
+        assert_eq!(inter.class, Priority::Interactive);
+        assert_eq!(batch.class, Priority::Batch);
+        assert_eq!(inter.requests, 2);
+        assert_eq!(batch.requests, 1);
+        assert_eq!(inter.preemptions + batch.preemptions, report.preemptions);
+        assert!(inter.ttft_p50_ms >= 0.0 && batch.ttft_p50_ms >= 0.0);
+        assert!(inter.ms_per_tok_p99 >= inter.ms_per_tok_p50);
+        assert_eq!(report.interleaved_decode_steps, 0, "no chunking configured");
+    }
+
+    #[test]
     fn generation_output_is_independent_of_batch_composition() {
         // Real model: a request served concurrently produces exactly the
         // tokens it produces served alone (the engine's row-local decode
@@ -1092,14 +1569,7 @@ mod tests {
         let params = ModelParams::init(&fam, 17);
         let engine = NativeEngine::new(&params, 3, 8).unwrap();
         let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9]];
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .map(|p| Request::Generate {
-                prompt: p.clone(),
-                max_new_tokens: 6,
-                sampling: Sampling::Greedy,
-            })
-            .collect();
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 6)).collect();
         let (resps, _report) = serve_oneshot(&engine, reqs).unwrap();
         for (p, r) in prompts.iter().zip(&resps) {
             let solo = crate::engine::generate(&engine, p, 6, Sampling::Greedy).unwrap();
@@ -1124,14 +1594,7 @@ mod tests {
             .unwrap()
             .with_shape(3, 8);
         let prompts: Vec<Vec<i32>> = vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9]];
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .map(|p| Request::Generate {
-                prompt: p.clone(),
-                max_new_tokens: 6,
-                sampling: Sampling::Greedy,
-            })
-            .collect();
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 6)).collect();
         let (resps, _report) = serve_oneshot(&engine, reqs).unwrap();
         for (p, r) in prompts.iter().zip(&resps) {
             let solo = crate::engine::generate(&engine, p, 6, Sampling::Greedy).unwrap();
@@ -1169,6 +1632,8 @@ mod tests {
         // Empty: zeros, no panic.
         let empty = Stats::default().into_report(0.0);
         assert_eq!(empty.p50_ms(), 0.0);
+        assert_eq!(empty.classes.len(), Priority::COUNT);
+        assert_eq!(empty.classes[0].ttft_p50_ms, 0.0);
     }
 
     #[test]
@@ -1199,8 +1664,7 @@ mod tests {
             deadline: Duration::from_millis(1),
             seed: 1,
             workload: Workload::Score,
-            prompt_len: 0,
-            shared_prompt: false,
+            ..ServeConfig::default()
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.scores.len(), 3);
@@ -1229,14 +1693,7 @@ mod tests {
             .unwrap();
         let reference = NativeEngine::new(&params, 4, 8).unwrap();
         let prompts = distinct_prompts(4, 12);
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .map(|p| Request::Generate {
-                prompt: p.clone(),
-                max_new_tokens: 10,
-                sampling: Sampling::Greedy,
-            })
-            .collect();
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 10)).collect();
         let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
         assert!(report.preemptions >= 1, "pool never forced a preemption");
         assert!(report.resumes >= 1, "no preempted session resumed");
@@ -1274,14 +1731,7 @@ mod tests {
             .unwrap()
             .with_shape(3, 8);
         let prompts = distinct_prompts(3, 12);
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .map(|p| Request::Generate {
-                prompt: p.clone(),
-                max_new_tokens: 10,
-                sampling: Sampling::Greedy,
-            })
-            .collect();
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 10)).collect();
         let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
         assert!(report.preemptions >= 1, "pool never forced a preemption");
         assert_eq!(report.preemptions, report.resumes);
@@ -1299,6 +1749,171 @@ mod tests {
     }
 
     #[test]
+    fn preemption_parks_batch_class_before_interactive() {
+        // One Batch arrival, then one Interactive, both decoding past the
+        // page boundary under a 3-page pool: the pool can only back one of
+        // them, and it must be the *Batch* session that gets parked — the
+        // old youngest-first policy would have preempted the Interactive
+        // one (it has the higher id). Both streams still finish bit-exact.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let engine = NativeEngine::new(&params, 4, 8)
+            .unwrap()
+            .with_kv_budget(3 * 512)
+            .unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(2, 12);
+        let reqs = vec![
+            gen_req_class(prompts[0].clone(), 10, Priority::Batch),
+            gen_req_class(prompts[1].clone(), 10, Priority::Interactive),
+        ];
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert!(report.preemptions >= 1, "pool never forced a preemption");
+        let inter = &report.classes[Priority::Interactive.index()];
+        let batch = &report.classes[Priority::Batch.index()];
+        assert_eq!(
+            inter.preemptions, 0,
+            "an Interactive session was preempted while Batch work ran"
+        );
+        assert_eq!(batch.preemptions, report.preemptions);
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 10, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "priority-preempted stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_decode_under_a_long_prompt() {
+        // A short request starts decoding; a long-prompt request then
+        // prefills in small chunks. Decode steps must land *between* the
+        // chunks (interleaved_decode_steps > 0) and both streams must be
+        // byte-identical to unchunked solo runs — chunking is a scheduling
+        // artifact, never an output artifact.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 37);
+        let engine = NativeEngine::new(&params, 4, 8).unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let short: Vec<i32> = vec![1, 2, 3];
+        let long: Vec<i32> = (0..20).map(|j| (1 + (j * 7) % 10) as i32).collect();
+        let reqs = vec![gen_req(short.clone(), 8), gen_req(long.clone(), 4)];
+        let (resps, report) = serve_oneshot_chunked(&engine, reqs, 4).unwrap();
+        assert!(
+            report.interleaved_decode_steps >= 3,
+            "decode stalled behind the long prompt: {} interleaved steps",
+            report.interleaved_decode_steps
+        );
+        assert!(report.decode_steps >= report.interleaved_decode_steps);
+        // The long prompt took several chunk forwards, not one.
+        assert!(report.batches > 2, "prompt was not actually chunked");
+        assert_eq!(report.completed, vec![0, 1], "short request must finish first");
+        for (p, (r, n)) in [(&short, (&resps[0], 8)), (&long, (&resps[1], 4))] {
+            let solo = crate::engine::generate(&reference, p, n, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "chunk-prefilled stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_serving_matches_one_shot_serving_exactly() {
+        // The same request list served with and without chunking must
+        // produce identical token streams — on both engine families.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 41);
+        let prompts = distinct_prompts(3, 7);
+        let reqs = |_: ()| -> Vec<Request> {
+            prompts.iter().map(|p| gen_req(p.clone(), 6)).collect()
+        };
+        let native_a = NativeEngine::new(&params, 3, 8).unwrap();
+        let native_b = NativeEngine::new(&params, 3, 8).unwrap();
+        let (one_shot, _) = serve_oneshot(&native_a, reqs(())).unwrap();
+        for chunk in [1usize, 3, 16] {
+            let (chunked, _) = serve_oneshot_chunked(&native_b, reqs(()), chunk).unwrap();
+            for (a, b) in one_shot.iter().zip(&chunked) {
+                match (a, b) {
+                    (
+                        Response::Generated { tokens: ta, .. },
+                        Response::Generated { tokens: tb, .. },
+                    ) => assert_eq!(ta, tb, "chunk={chunk} diverged on native"),
+                    other => panic!("wrong response pair {other:?}"),
+                }
+            }
+        }
+        let fused_a = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let fused_b = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let (one_shot_f, _) = serve_oneshot(&fused_a, reqs(())).unwrap();
+        let (chunked_f, _) = serve_oneshot_chunked(&fused_b, reqs(()), 3).unwrap();
+        for (a, b) in one_shot_f.iter().zip(&chunked_f) {
+            match (a, b) {
+                (
+                    Response::Generated { tokens: ta, .. },
+                    Response::Generated { tokens: tb, .. },
+                ) => assert_eq!(ta, tb, "chunked serving diverged on fused"),
+                other => panic!("wrong response pair {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn replica_serving_matches_solo_streams() {
+        // Serving through a 2-shard replica fleet (with chunked prefill)
+        // must answer every request with exactly the solo engine's greedy
+        // stream: shard routing and sub-batch stitching are invisible.
+        use crate::engine::replicas::Replicas;
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 43);
+        let base = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(2, 8);
+        let reference = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(2, 8);
+        let reps = Replicas::new(base, 2);
+        let prompts = distinct_prompts(4, 6);
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                gen_req_class(
+                    p.clone(),
+                    5,
+                    if i % 2 == 0 {
+                        Priority::Interactive
+                    } else {
+                        Priority::Batch
+                    },
+                )
+            })
+            .collect();
+        let (resps, report) = serve_oneshot_chunked(&reps, reqs, 4).unwrap();
+        assert_eq!(report.completed.len(), 4);
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 5, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "replica-served stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        // Both shards actually hosted sessions.
+        let per = reps.shard_stats();
+        assert!(per.iter().all(|s| s.allocated_pages > 0), "a shard sat idle");
+    }
+
+    #[test]
     fn identical_prompts_share_prefix_pages_across_sessions() {
         // Three sessions behind one 20-token "system prompt" (2 pages
         // each if private): adoption keeps the prompt resident once, and
@@ -1309,13 +1924,7 @@ mod tests {
         let engine = NativeEngine::new(&params, 3, 8).unwrap();
         let reference = NativeEngine::new(&params, 3, 8).unwrap();
         let prompt: Vec<i32> = (0..20).map(|j| (1 + j % 10) as i32).collect();
-        let reqs: Vec<Request> = (0..3)
-            .map(|_| Request::Generate {
-                prompt: prompt.clone(),
-                max_new_tokens: 4,
-                sampling: Sampling::Greedy,
-            })
-            .collect();
+        let reqs: Vec<Request> = (0..3).map(|_| gen_req(prompt.clone(), 4)).collect();
         let (resps, _report) = serve_oneshot(&engine, reqs).unwrap();
         let solo = crate::engine::generate(&reference, &prompt, 4, Sampling::Greedy).unwrap();
         for r in &resps {
@@ -1347,16 +1956,8 @@ mod tests {
         // A prompt needing 2 pages can never be admitted: a typed
         // Rejected response at admission, before any prefill work — and
         // the valid request queued behind it is still served.
-        let big = Request::Generate {
-            prompt: distinct_prompts(1, 20).pop().unwrap(),
-            max_new_tokens: 2,
-            sampling: Sampling::Greedy,
-        };
-        let ok = Request::Generate {
-            prompt: distinct_prompts(1, 8).pop().unwrap(),
-            max_new_tokens: 2,
-            sampling: Sampling::Greedy,
-        };
+        let big = gen_req(distinct_prompts(1, 20).pop().unwrap(), 2);
+        let ok = gen_req(distinct_prompts(1, 8).pop().unwrap(), 2);
         let (resps, report) = serve_oneshot(&engine, vec![big, ok]).unwrap();
         assert_eq!(report.rejected, 1);
         match &resps[0] {
@@ -1373,11 +1974,7 @@ mod tests {
         // A lone session that outgrows the whole pool mid-decode is a
         // typed pool-exhaustion error (nobody left to preempt) — never a
         // panic, never an allocation past the budget.
-        let long = Request::Generate {
-            prompt: distinct_prompts(1, 14).pop().unwrap(),
-            max_new_tokens: 10,
-            sampling: Sampling::Greedy,
-        };
+        let long = gen_req(distinct_prompts(1, 14).pop().unwrap(), 10);
         let err = serve_oneshot(&engine, vec![long]).unwrap_err();
         assert!(KvError::is_pool_exhausted(&err), "err: {err:#}");
         let ps = engine.pool_stats().unwrap();
@@ -1398,7 +1995,7 @@ mod tests {
             seed: 3,
             workload: Workload::Score,
             prompt_len: 1,
-            shared_prompt: false,
+            ..ServeConfig::default()
         };
         let err = run_server(&engine, &cfg).unwrap_err();
         assert!(
@@ -1417,6 +2014,17 @@ mod tests {
             format!("{err:#}").contains("prompt_len"),
             "unexpected error: {err:#}"
         );
+        // Same guard for the long-prompt probe knob.
+        let cfg = ServeConfig {
+            prompt_len: 8,
+            long_prompt_len: 1024,
+            ..cfg
+        };
+        let err = run_server(&engine, &cfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("long_prompt_len"),
+            "unexpected error: {err:#}"
+        );
     }
 
     #[test]
@@ -1427,16 +2035,8 @@ mod tests {
         // validation failure must never take down every other client.
         let engine = ToyEngine::new(256, 4, 16);
         let reqs = vec![
-            Request::Generate {
-                prompt: Vec::new(),
-                max_new_tokens: 3,
-                sampling: Sampling::Greedy,
-            },
-            Request::Generate {
-                prompt: vec![1; 1024], // == ToyEngine max_context
-                max_new_tokens: 3,
-                sampling: Sampling::Greedy,
-            },
+            gen_req(Vec::new(), 3),
+            gen_req(vec![1; 1024], 3), // == ToyEngine max_context
             Request::Score {
                 tokens: vec![1, 2, 3, 4],
             },
@@ -1497,9 +2097,37 @@ mod tests {
             workload: Workload::Generate { max_new_tokens: 3 },
             prompt_len: 8,
             shared_prompt: true,
+            ..ServeConfig::default()
         };
         let report = run_server(&engine, &cfg).unwrap();
         assert_eq!(report.completed.len(), 6);
         assert_eq!(report.generated_tokens, 6 * 3);
+    }
+
+    #[test]
+    fn mixed_priority_threaded_serving_completes_with_class_stats() {
+        // Closed-loop run with one Batch client, a long first prompt, and
+        // chunked prefill on the toy engine (which does not support
+        // chunking — the one-shot fallback must serve it all the same).
+        let engine = ToyEngine::new(256, 4, 16);
+        let cfg = ServeConfig {
+            requests: 8,
+            clients: 4,
+            deadline: Duration::from_millis(1),
+            seed: 11,
+            workload: Workload::Generate { max_new_tokens: 3 },
+            prompt_len: 8,
+            prefill_chunk: 16,
+            batch_clients: 1,
+            long_prompt_len: 64,
+            ..ServeConfig::default()
+        };
+        let report = run_server(&engine, &cfg).unwrap();
+        assert_eq!(report.completed.len(), 8);
+        assert_eq!(report.generated_tokens, 8 * 3);
+        let inter = &report.classes[Priority::Interactive.index()];
+        let batch = &report.classes[Priority::Batch.index()];
+        assert_eq!(inter.requests + batch.requests, 8);
+        assert!(batch.requests >= 1, "the batch client produced nothing");
     }
 }

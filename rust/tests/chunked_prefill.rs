@@ -1,0 +1,202 @@
+//! Chunked-prefill acceptance tests on the tl-7s family, through the
+//! public engine + serving API: any sequence of `prefill_chunk` calls
+//! that concatenates to the prompt must be **bit-identical** to one-shot
+//! `prefill` — same logits rows, same cache, same greedy continuation —
+//! on both the dense native engine and the bit-packed fused engine, and
+//! KV prefix adoption must still fire when the shared prefix spans a
+//! chunk boundary.
+
+use std::path::Path;
+
+use odlri::engine::{self, Engine, NativeEngine, Priority, Request, Response, Sampling, Session};
+use odlri::fused::FusedModel;
+use odlri::model::ModelParams;
+use odlri::runtime::Runtime;
+use odlri::serve::{serve_oneshot, serve_oneshot_chunked};
+
+fn tl7s(seed: u64) -> (usize, usize, ModelParams) {
+    let rt = Runtime::open(Path::new("artifacts")).expect("opening runtime");
+    let fam = rt.manifest.family("tl-7s").unwrap().clone();
+    let params = ModelParams::init(&fam, seed);
+    (rt.manifest.batch, rt.manifest.seq, params)
+}
+
+fn native(seed: u64) -> NativeEngine {
+    let (batch, seq, params) = tl7s(seed);
+    NativeEngine::new(&params, batch, seq).expect("engine")
+}
+
+fn fused(seed: u64) -> FusedModel {
+    let (batch, seq, params) = tl7s(seed);
+    FusedModel::pack_dense(&params, "uniform", 8, 64)
+        .expect("pack")
+        .with_shape(batch, seq)
+}
+
+fn prompt_tokens(len: usize, seed: usize) -> Vec<i32> {
+    (0..len).map(|j| ((seed * 31 + j * 7) % 256) as i32).collect()
+}
+
+/// Feed `prompt` through `prefill_chunk` at the given cumulative targets
+/// (the last must be `prompt.len()`), asserting every chunk's logits rows
+/// equal the corresponding rows of the one-shot `prefill`, then return
+/// the assembled session.
+fn chunked_session(engine: &dyn Engine, prompt: &[i32], targets: &[usize]) -> Session {
+    let (_one, oneshot) = engine.prefill(prompt).expect("one-shot prefill");
+    assert_eq!(oneshot.rows(), prompt.len());
+    let mut state = None;
+    let mut done = 0usize;
+    for &upto in targets {
+        let logits = engine
+            .prefill_chunk(prompt, &mut state, upto)
+            .unwrap_or_else(|e| panic!("chunk to {upto}: {e}"));
+        assert_eq!(logits.rows(), upto - done, "chunk row count");
+        for r in 0..logits.rows() {
+            assert_eq!(
+                logits.row(r),
+                oneshot.row(done + r),
+                "chunk row {r} (absolute {}) != one-shot prefill row",
+                done + r
+            );
+        }
+        done = upto;
+    }
+    assert_eq!(done, prompt.len());
+    Session::new(prompt.to_vec(), state.take().expect("built cache"))
+}
+
+#[test]
+fn chunk_splits_are_bit_identical_to_one_shot_on_native_engine() {
+    // Page-aligned, ragged, degenerate whole-prompt, and token-at-a-time
+    // splits all reproduce the monolithic prefill logits bit-for-bit and
+    // decode to the same greedy stream.
+    let engine = native(21);
+    let prompt = prompt_tokens(40, 3);
+    let reference = engine::generate(&engine, &prompt, 8, Sampling::Greedy).expect("solo");
+    let splits: Vec<Vec<usize>> = vec![
+        vec![40],
+        vec![16, 32, 40],
+        vec![7, 20, 40],
+        (1..=40).collect(),
+    ];
+    for targets in &splits {
+        let mut sess = chunked_session(&engine, &prompt, targets);
+        // Greedy-decode from the chunk-built cache and compare streams.
+        let mut next = {
+            let (_s, logits) = engine.prefill(&prompt).expect("prefill");
+            engine::argmax(logits.row(logits.rows() - 1)) as i32
+        };
+        let mut tokens = Vec::new();
+        for _ in 0..8 {
+            tokens.push(next);
+            let logits = engine.decode_step(&mut [&mut sess], &[next]).expect("decode");
+            next = engine::argmax(logits.row(0)) as i32;
+        }
+        assert_eq!(
+            tokens, reference.tokens,
+            "split {targets:?} changed the greedy stream"
+        );
+    }
+}
+
+#[test]
+fn chunk_splits_are_bit_identical_to_one_shot_on_fused_engine() {
+    // Same property through the packed (Q+LR) projections, whose prefill
+    // kernels pick a dispatch regime by row count: the chunk path must
+    // pin the one-shot regime so logits stay bit-exact at any split.
+    let fm = fused(22);
+    let prompt = prompt_tokens(33, 5);
+    let reference = engine::generate(&fm, &prompt, 6, Sampling::Greedy).expect("solo");
+    for targets in [vec![33], vec![16, 32, 33], vec![5, 11, 33]] {
+        let mut sess = chunked_session(&fm, &prompt, &targets);
+        let mut next = {
+            let (_s, logits) = fm.prefill(&prompt).expect("prefill");
+            engine::argmax(logits.row(logits.rows() - 1)) as i32
+        };
+        let mut tokens = Vec::new();
+        for _ in 0..6 {
+            tokens.push(next);
+            let logits = fm.decode_step(&mut [&mut sess], &[next]).expect("decode");
+            next = engine::argmax(logits.row(0)) as i32;
+        }
+        assert_eq!(
+            tokens, reference.tokens,
+            "fused split {targets:?} changed the greedy stream"
+        );
+    }
+}
+
+#[test]
+fn chunked_serving_streams_match_one_shot_serving() {
+    // End to end through the scheduler: the same request list served with
+    // chunked prefill (several chunk budgets) returns byte-identical
+    // token streams to monolithic-prefill serving.
+    let engine = native(23);
+    let mk_reqs = || -> Vec<Request> {
+        (0..4)
+            .map(|i| Request::Generate {
+                prompt: prompt_tokens(18 + 5 * i, 40 + i),
+                max_new_tokens: 6,
+                sampling: Sampling::Greedy,
+                priority: if i % 2 == 0 {
+                    Priority::Interactive
+                } else {
+                    Priority::Batch
+                },
+            })
+            .collect()
+    };
+    let (want, _) = serve_oneshot(&engine, mk_reqs()).expect("one-shot serve");
+    for chunk in [1usize, 4, 16, 64] {
+        let (got, report) =
+            serve_oneshot_chunked(&engine, mk_reqs(), chunk).expect("chunked serve");
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            match (a, b) {
+                (
+                    Response::Generated { tokens: ta, .. },
+                    Response::Generated { tokens: tb, .. },
+                ) => assert_eq!(ta, tb, "chunk {chunk}: request {i} stream diverged"),
+                other => panic!("wrong response pair {other:?}"),
+            }
+        }
+        assert_eq!(report.rejected, 0);
+    }
+}
+
+#[test]
+fn prefix_adoption_fires_across_a_chunk_boundary() {
+    // A 32-token (two whole pages) system prompt registered by an earlier
+    // one-shot session must still be adopted by a later *chunked* prefill
+    // whose first chunk boundary falls inside the shared prefix — and the
+    // adopted session's stream must stay bit-exact.
+    let fm = fused(24);
+    let shared = prompt_tokens(32, 9);
+    let (_holder, _l) = fm.prefill(&shared).expect("register shared prefix");
+    let before = fm.pool_stats().expect("pool stats").shared_adoptions;
+
+    let mut prompt = shared.clone();
+    prompt.extend(prompt_tokens(16, 77)); // distinct 16-token tail
+    // Chunk boundary at 16: inside the adopted two-page extent.
+    let mut sess = chunked_session(&fm, &prompt, &[16, 32, 48]);
+    let after = fm.pool_stats().expect("pool stats").shared_adoptions;
+    assert!(
+        after > before,
+        "chunked prefill never adopted the registered prefix ({before} -> {after})"
+    );
+
+    // Bit-exactness against an unshared engine built from the same params.
+    let reference = fused(24);
+    let want = engine::generate(&reference, &prompt, 6, Sampling::Greedy).expect("solo");
+    let mut next = {
+        let (_s, logits) = reference.prefill(&prompt).expect("prefill");
+        engine::argmax(logits.row(logits.rows() - 1)) as i32
+    };
+    let mut tokens = Vec::new();
+    for _ in 0..6 {
+        tokens.push(next);
+        let logits = fm.decode_step(&mut [&mut sess], &[next]).expect("decode");
+        next = engine::argmax(logits.row(0)) as i32;
+    }
+    assert_eq!(tokens, want.tokens, "adopted chunked stream diverged");
+}

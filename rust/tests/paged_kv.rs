@@ -5,7 +5,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use odlri::engine::{self, Engine, NativeEngine, Request, Response, Sampling};
+use odlri::engine::{self, Engine, NativeEngine, Priority, Request, Response, Sampling};
 use odlri::fused::FusedModel;
 use odlri::model::ModelParams;
 use odlri::runtime::Runtime;
@@ -42,6 +42,7 @@ fn serving_survives_eviction_and_stays_bit_exact() {
             prompt: p.clone(),
             max_new_tokens: 16,
             sampling: Sampling::Greedy,
+            priority: Priority::default(),
         })
         .collect();
     let (resps, report) = serve_oneshot(&engine, reqs).expect("serve");
@@ -89,6 +90,9 @@ fn shared_system_prompt_shares_kv_pages_across_sessions() {
         workload: Workload::Generate { max_new_tokens: 8 },
         prompt_len: 48,
         shared_prompt: true,
+        prefill_chunk: 0,
+        batch_clients: 0,
+        long_prompt_len: 0,
     };
     let report = run_server(&fm, &cfg).expect("serve");
     assert_eq!(report.completed.len(), 6, "dropped requests");

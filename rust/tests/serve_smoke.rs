@@ -22,6 +22,9 @@ fn smoke_config(requests: usize, workload: Workload) -> ServeConfig {
         workload,
         prompt_len: 0,
         shared_prompt: false,
+        prefill_chunk: 0,
+        batch_clients: 0,
+        long_prompt_len: 0,
     }
 }
 

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Refresh the committed bench snapshots (BENCH_kernels.json /
+# BENCH_runtime.json) in place. Run from anywhere inside the repo; needs
+# a Rust toolchain. CI runs the same two bench commands and fails if the
+# JSON still carries the placeholder empty `entries` arrays, so commit
+# the refreshed files (or take them from the CI `bench-json` artifact).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench bench_kernels -- --fast decode
+cargo bench --bench bench_runtime -- --fast
+
+for f in BENCH_kernels.json BENCH_runtime.json; do
+  if python3 -c "import json,sys; sys.exit(0 if json.load(open('$f'))['entries'] else 1)"; then
+    echo "refreshed $f"
+  else
+    echo "error: $f still has an empty entries array after the bench run" >&2
+    exit 1
+  fi
+done
