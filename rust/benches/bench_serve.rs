@@ -1,0 +1,74 @@
+//! Serving bench: speculative decoding (low-bit ODLRI draft proposing, the
+//! target verifying each round in one batched step) vs plain target-only
+//! greedy decode, on the artifact-free pack-dense pairing. Every
+//! speculative run is asserted bit-identical to the plain stream before
+//! its timing is reported. Results also land in machine-readable
+//! `BENCH_serve.json` for the CI bench-json artifact flow.
+//!
+//! Usage: `cargo bench --bench bench_serve -- [--fast] [group-filter]...`
+//! (`--fast` is the CI budget; filters select groups by substring:
+//! speculative).
+
+use odlri::benchkit::{group, BenchArgs, JsonReport};
+use odlri::corpus;
+use odlri::engine::speculative::SpeculativeEngine;
+use odlri::engine::{generate, Sampling};
+use odlri::fused::FusedModel;
+use odlri::model::ModelParams;
+use odlri::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let mut json = JsonReport::new("serve");
+    let rt = Runtime::open(&odlri::runtime::default_artifact_dir())?;
+    let fam = rt.manifest.family("tl-7s")?.clone();
+    let params = ModelParams::init(&fam, 2);
+    let data = corpus::generate(corpus::Split::WikiSim, 4096, 1);
+    let prompt: Vec<i32> = data[..32].iter().map(|&x| x as i32).collect();
+    let max_new = if args.fast { 24 } else { 96 };
+    let pack = |bits: u32| -> anyhow::Result<FusedModel> {
+        Ok(FusedModel::pack_dense(&params, "uniform", bits, 64)?.with_shape(1, 256))
+    };
+
+    if args.want("speculative") {
+        group("speculative vs plain greedy decode (4-bit target, 2-bit draft)");
+        let target = pack(4)?;
+        let plain = generate(&target, &prompt, max_new, Sampling::Greedy)?;
+        let plain_secs: f64 = plain.step_latencies_s.iter().sum();
+        let plain_toks = plain.tokens.len().saturating_sub(1).max(1);
+        let plain_ns = plain_secs * 1e9 / plain_toks as f64;
+        println!("plain 4b target: {:.3} ms/tok", plain_ns / 1e6);
+        json.record_value("decode_plain_4b", plain_ns, Some((1.0, "tok")));
+        for k in [2usize, 4] {
+            let spec = SpeculativeEngine::new(Box::new(pack(2)?), Box::new(pack(4)?), k)?;
+            let out = spec.generate(&prompt, max_new)?;
+            assert_eq!(
+                out.gen.tokens, plain.tokens,
+                "speculative stream diverged from plain greedy (k={k})"
+            );
+            let secs: f64 = out.gen.step_latencies_s.iter().sum();
+            let toks = out.gen.tokens.len().saturating_sub(1).max(1);
+            let ns = secs * 1e9 / toks as f64;
+            let c = out.counters;
+            println!(
+                "spec 2b draft k={k}: {:.3} ms/tok, acceptance {:.1}% \
+                 ({} draft steps + {} verify steps)",
+                ns / 1e6,
+                c.acceptance_rate() * 100.0,
+                c.draft_steps,
+                c.verify_steps
+            );
+            json.record_value(
+                &format!("decode_speculative_2b_draft_k{k}"),
+                ns,
+                Some((1.0, "tok")),
+            );
+        }
+    }
+
+    if !json.is_empty() {
+        let path = json.write(std::path::Path::new("."))?;
+        println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}

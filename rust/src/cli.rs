@@ -68,7 +68,8 @@ pub const COMMANDS: &[CommandSpec] = &[
         flags: &[
             "family", "weights", "requests", "clients", "deadline-ms", "seed",
             "max-new-tokens", "prompt-len", "kv-budget", "prefill-chunk",
-            "batch-clients", "long-prompt-len", "replicas", "artifacts",
+            "batch-clients", "long-prompt-len", "replicas", "draft", "speculate",
+            "artifacts",
         ],
         switches: &["fused", "pack-dense", "shared-prompt", "json"],
     },
@@ -76,7 +77,7 @@ pub const COMMANDS: &[CommandSpec] = &[
         name: "generate",
         flags: &[
             "family", "weights", "prompt", "prompt-len", "max-new-tokens", "top-k",
-            "temperature", "seed", "artifacts",
+            "temperature", "seed", "draft", "speculate", "artifacts",
         ],
         switches: &["fused", "pack-dense"],
     },
@@ -288,7 +289,9 @@ COMMANDS
   exp <id>     Regenerate a paper table/figure into results/
                  ids: table1 fig2 fig3 fig4 fig5 table2 table3 table4
                       table5 table8 table9 table10 table11 t1norms
-                      budget (uniform vs per-projection plans) all
+                      budget (uniform vs per-projection plans)
+                      speculate (draft-bits × k acceptance / ms-per-tok)
+                      all
   generate     KV-cached incremental decoding with a per-token latency
                report (packed engines additionally report decode
                weight-throughput in GB/s over Q and which decode kernel ran)
@@ -296,6 +299,12 @@ COMMANDS
                  --max-new-tokens 64 --top-k 0 (greedy) --temperature 1.0
                  --fused (packed engine) --pack-dense (pack weights at
                  8-bit on the fly — no .odf needed)
+                 --draft PATH (speculative decoding: a low-bit packed
+                 draft proposes tokens, the target verifies them in one
+                 batched step — greedy output stays bit-identical)
+                 --speculate K (draft depth per round, default 4; with
+                 --pack-dense and no --draft a 2-bit draft is packed on
+                 the fly from the same dense weights)
   serve-bench  Continuous-batching serving latency/throughput (packed
                generation workloads also report decode GB/s over Q)
                  --requests 32 --clients 4 --deadline-ms 10
@@ -316,6 +325,9 @@ COMMANDS
                  carries an N-token prompt: stresses chunked prefill)
                  --replicas N (N packed-engine replicas with private KV
                  pools behind least-loaded routing; needs --fused)
+                 --draft PATH --speculate K (speculative decoding for
+                 greedy streams: reports acceptance rate and drafted /
+                 accepted / rejected token counters)
                  --json (append a one-line machine-readable report)
   artifacts    List available artifact entry points
   help         This message
@@ -399,6 +411,32 @@ mod tests {
         assert_eq!(a.usize("prefill-chunk", 0).unwrap(), 16);
         assert_eq!(a.usize("batch-clients", 0).unwrap(), 1);
         assert_eq!(a.usize("long-prompt-len", 0).unwrap(), 192);
+    }
+
+    #[test]
+    fn speculation_flags_are_registered_on_both_decode_commands() {
+        // --draft and --speculate are value-taking flags, never switches:
+        // a following positional or path must bind as the value.
+        let a = parse_reg("generate --fused --draft runs/tl-7s-draft.odf --speculate 4").unwrap();
+        assert_eq!(a.str("draft", ""), "runs/tl-7s-draft.odf");
+        assert_eq!(a.usize("speculate", 0).unwrap(), 4);
+        let b = parse_reg(
+            "serve-bench --fused --pack-dense --draft d.odf --speculate 2 --json",
+        )
+        .unwrap();
+        assert_eq!(b.str("draft", ""), "d.odf");
+        assert_eq!(b.usize("speculate", 0).unwrap(), 2);
+        assert!(b.switch("json"));
+        // A negative depth parses as a flag value but fails integer
+        // conversion with a typed error (usize has no sign bit).
+        let c = parse_reg("generate --speculate -2").unwrap();
+        let err = c.usize("speculate", 4).unwrap_err();
+        assert!(err.to_string().contains("--speculate"), "err: {err:#}");
+        // Dangling flags are rejected at parse time, not at use time.
+        assert!(parse_reg("generate --draft").is_err());
+        assert!(parse_reg("serve-bench --draft --fused").is_err());
+        let d = parse_reg("generate --speculate=3").unwrap();
+        assert_eq!(d.usize("speculate", 0).unwrap(), 3);
     }
 
     #[test]

@@ -65,6 +65,27 @@
 //! row-local), and on the native path prefill+decode logits are
 //! **bit-identical** to a full-sequence forward.
 //!
+//! ## Speculative decoding
+//!
+//! [`speculative::SpeculativeEngine`] wraps a cheap low-bit *draft* engine
+//! and an expensive *target* engine over the same tokenizer/family (the
+//! paper's regime: a 2-bit aggressive ODLRI plan drafting for a 4-bit
+//! budget plan). Per round the draft greedily proposes up to k tokens,
+//! [`Engine::verify_step`] scores the pending token plus all proposals in
+//! **one** batched causal forward over the target session's cache, the
+//! longest agreeing prefix is accepted, and the target's own argmax at the
+//! first disagreement becomes the bonus token. Rejected positions are
+//! rolled back with [`Session::truncate`] / `KvCache::truncate` on *both*
+//! engines, so after any accept/reject sequence the session state — token
+//! history and cache bits — is identical to a plain target-only greedy
+//! stream. `verify_step`'s contract is therefore bit-exactness with
+//! sequential [`Engine::decode_step`] calls (row `i` of its logits equals
+//! the decode logits after feeding `tokens[..i]`), and atomicity: on a
+//! typed error the session is unchanged. The default implementation *is*
+//! the sequential loop (with rollback on error); `NativeEngine` and
+//! `FusedModel` override it with a single chunked forward whose per-row
+//! arithmetic is exactly the decode step's.
+//!
 //! Session KV storage is *paged*: both engines draw every session's cache
 //! from a process-wide budgeted [`KvPool`] (fixed-size pages, hash-based
 //! cross-session prefix sharing, copy-on-write — see
@@ -74,6 +95,7 @@
 //! typed pool-exhaustion errors the scheduler answers with preemption.
 
 pub mod replicas;
+pub mod speculative;
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -124,6 +146,17 @@ impl Session {
 
     pub fn is_empty(&self) -> bool {
         self.tokens.is_empty()
+    }
+
+    /// Roll the stream back to its first `n` tokens: the token history
+    /// and every KV row past `n` are discarded (pages past the new
+    /// length are released). No-op at or below `n` already. Because K
+    /// rows are cached post-RoPE at absolute positions, truncate +
+    /// re-extend is bit-identical to never having decoded the dropped
+    /// suffix — the rollback primitive speculative decoding rests on.
+    pub fn truncate(&mut self, n: usize) {
+        self.tokens.truncate(n);
+        self.cache.truncate(n);
     }
 }
 
@@ -177,6 +210,39 @@ pub trait Engine: Send + Sync {
     /// holds that session's next-token logits. Sessions may sit at
     /// different lengths.
     fn decode_step(&self, sessions: &mut [&mut Session], tokens: &[i32]) -> Result<Matrix>;
+
+    /// Score a whole candidate chunk against one session in a single
+    /// causal forward: `tokens` are appended to the session and row `i`
+    /// of the returned (n, vocab) matrix holds the next-token logits
+    /// after `tokens[..=i]` — **bit-identical** to feeding the tokens
+    /// through [`decode_step`](Engine::decode_step) one at a time. This
+    /// is speculative decoding's verify primitive: one batched target
+    /// step scores the pending token plus every draft proposal, and the
+    /// caller rolls rejected rows back via [`Session::truncate`].
+    ///
+    /// Atomicity: on a typed error (pool exhausted / context overflow)
+    /// the session is left at its pre-call extent.
+    ///
+    /// The default implementation is the sequential decode loop itself
+    /// (trivially exact); real backends override it with one chunked
+    /// forward sharing the decode path's per-row arithmetic.
+    fn verify_step(&self, session: &mut Session, tokens: &[i32]) -> Result<Matrix> {
+        if tokens.is_empty() {
+            bail!("verify step needs at least one token");
+        }
+        let start = session.tokens.len();
+        let mut out = Matrix::zeros(tokens.len(), self.spec().vocab);
+        for (i, &t) in tokens.iter().enumerate() {
+            match self.decode_step(&mut [&mut *session], &[t]) {
+                Ok(lg) => out.row_mut(i).copy_from_slice(lg.row(0)),
+                Err(e) => {
+                    session.truncate(start);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
 
     /// Packed weight bytes the backend streams per decode step (the
     /// dequant-on-the-fly working set) — `Some` only for engines serving
@@ -645,6 +711,28 @@ impl Engine for NativeEngine {
         for (s, &t) in sessions.iter_mut().zip(tokens) {
             s.tokens.push(t);
         }
+        Ok(logits)
+    }
+
+    fn verify_step(&self, session: &mut Session, tokens: &[i32]) -> Result<Matrix> {
+        if tokens.is_empty() {
+            bail!("verify step needs at least one token");
+        }
+        let view = self.view()?;
+        // One chunked causal forward over the session's cache. Its per-row
+        // arithmetic (RoPE at absolute positions, causal softmax op order,
+        // row-local dense projections) is exactly fwd_decode's, so each
+        // row is bit-identical to a sequential decode step; capacity is
+        // reserved before compute, so a typed failure leaves the session
+        // untouched.
+        let logits = fwd_prefill_chunk(
+            &self.fam,
+            &view,
+            &DenseProj { view: &view },
+            tokens,
+            &mut session.cache,
+        )?;
+        session.tokens.extend_from_slice(tokens);
         Ok(logits)
     }
 

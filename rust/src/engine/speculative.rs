@@ -1,0 +1,462 @@
+//! Speculative decoding: a low-bit ODLRI *draft* proposes tokens, the
+//! full-precision-budget *target* verifies them in one batched step.
+//!
+//! ## Why this fits the paper
+//!
+//! ODLRI's claim is that assigning distinct roles to `Q` and `L·R` keeps
+//! aggressive low-bit quantization accurate — which is exactly what a
+//! speculative draft model needs: cheap enough that k extra forward
+//! passes cost less than one saved target step, accurate enough that most
+//! proposals survive verification. One compression run emits both halves
+//! (e.g. a 2-bit aggressive plan as the draft, a 4-bit budget plan as the
+//! target), and scheme-exact decode makes the draft/target comparison
+//! deterministic.
+//!
+//! ## The round protocol
+//!
+//! [`SpeculativeEngine::generate`] maintains one *pending* token `next`
+//! (sampled but not yet fed to the target) and per round:
+//!
+//! 1. **Catch up** the draft session to the target's accepted history
+//!    (after a fully-accepted round the draft trails by one token).
+//! 2. **Draft**: feed `next` and greedily extend `m = min(k, remaining−1)`
+//!    proposals `d₁..d_m` with the draft engine (`m` clamps so a round
+//!    never emits past the token budget; `m = 0` degenerates to a plain
+//!    decode step through the verify path).
+//! 3. **Verify**: one [`Engine::verify_step`] over `[next, d₁..d_m]` —
+//!    a single batched causal forward whose row `i` is bit-identical to
+//!    the sequential decode logits after `chunk[..=i]`.
+//! 4. **Accept** the longest prefix with `dᵢ == argmax(row i)`; the
+//!    argmax of the first disagreeing row (or of the last row on full
+//!    acceptance) is the free *bonus* token — so every round emits at
+//!    least one token that is exactly what plain greedy decoding would
+//!    have produced.
+//! 5. **Roll back** both sessions with [`Session::truncate`]: rejected
+//!    rows leave no trace in token history or KV bits (paged backings
+//!    release the dropped pages).
+//!
+//! The headline invariant — property-tested across both engine families —
+//! is that the emitted stream is **bit-identical** to a plain target-only
+//! greedy stream for any prompt and any k, because verification rows are
+//! bit-identical to decode steps and rollback is bit-exact (K rows are
+//! cached post-RoPE at absolute positions).
+//!
+//! Only greedy streams can be verified this way: accepting a draft token
+//! requires it to be *the* token the target would have chosen, which is
+//! well-defined for argmax but not for a sampled policy.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{argmax, Engine, EngineSpec, GenOutput, Session};
+use crate::tensor::Matrix;
+
+/// Acceptance accounting for a speculative run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecCounters {
+    /// Draft/verify rounds executed.
+    pub rounds: usize,
+    /// Draft proposals offered for verification.
+    pub drafted: usize,
+    /// Proposals the target agreed with (emitted for free).
+    pub accepted: usize,
+    /// Proposals discarded at the first disagreement.
+    pub rejected: usize,
+    /// Single-token draft decode calls (catch-up + proposal steps).
+    pub draft_steps: usize,
+    /// Batched target verify calls.
+    pub verify_steps: usize,
+}
+
+impl SpecCounters {
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// One generation run plus its acceptance accounting. `gen.step_latencies_s`
+/// holds one entry per *round* (each round emits ≥ 1 token), so per-token
+/// cost is `steps_total / tokens`, not the per-entry mean.
+#[derive(Clone, Debug)]
+pub struct SpecOutput {
+    pub gen: GenOutput,
+    pub counters: SpecCounters,
+}
+
+/// Longest accepted prefix of `drafts` under the verify logits, plus the
+/// bonus token. `logits` must have `drafts.len() + 1` rows: row `i` holds
+/// the target's next-token logits after the pending token and `drafts[..i]`.
+/// Returns `(accepted, bonus)` where `bonus` is the target's argmax at the
+/// first disagreement (or after the last draft token on full acceptance).
+pub fn verify_accept(drafts: &[i32], logits: &Matrix) -> (usize, i32) {
+    debug_assert_eq!(logits.rows(), drafts.len() + 1, "verify row count");
+    let mut acc = 0usize;
+    while acc < drafts.len() && drafts[acc] == argmax(logits.row(acc)) as i32 {
+        acc += 1;
+    }
+    (acc, argmax(logits.row(acc)) as i32)
+}
+
+/// Draft and target must speak the same token space for draft proposals
+/// to be meaningful (and for `verify_accept`'s argmax comparison to be
+/// well-typed).
+pub fn check_pair(draft: &EngineSpec, target: &EngineSpec) -> Result<()> {
+    if draft.vocab != target.vocab {
+        bail!(
+            "draft vocab {} does not match target vocab {}",
+            draft.vocab,
+            target.vocab
+        );
+    }
+    Ok(())
+}
+
+/// The combinator: a cheap draft [`Engine`] speculating for an expensive
+/// target [`Engine`]. See the module docs for the round protocol and the
+/// bit-exactness invariant.
+pub struct SpeculativeEngine {
+    draft: Box<dyn Engine>,
+    target: Box<dyn Engine>,
+    k: usize,
+}
+
+impl SpeculativeEngine {
+    /// Wrap `draft` speculating `k ≥ 1` tokens per round for `target`.
+    pub fn new(
+        draft: Box<dyn Engine>,
+        target: Box<dyn Engine>,
+        k: usize,
+    ) -> Result<SpeculativeEngine> {
+        if k == 0 {
+            bail!("speculation depth k must be at least 1");
+        }
+        check_pair(&draft.spec(), &target.spec())?;
+        Ok(SpeculativeEngine { draft, target, k })
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn target(&self) -> &dyn Engine {
+        self.target.as_ref()
+    }
+
+    pub fn draft(&self) -> &dyn Engine {
+        self.draft.as_ref()
+    }
+
+    /// Greedy speculative generation: bit-identical tokens to
+    /// [`crate::engine::generate`] on the target alone, in fewer target
+    /// steps whenever the draft earns acceptances. The context budget is
+    /// the smaller of the two engines' (the draft session must hold the
+    /// same positions the target's does).
+    pub fn generate(&self, prompt: &[i32], max_new_tokens: usize) -> Result<SpecOutput> {
+        let tspec = self.target.spec();
+        let dspec = self.draft.spec();
+        if prompt.is_empty() {
+            bail!("generate needs a non-empty prompt");
+        }
+        let max_context = tspec.max_context.min(dspec.max_context);
+        if prompt.len() >= max_context {
+            bail!(
+                "prompt length {} exceeds the engine context budget {}",
+                prompt.len(),
+                max_context
+            );
+        }
+        let budget = max_new_tokens.min(max_context - prompt.len());
+        let mut c = SpecCounters::default();
+        let t0 = Instant::now();
+        let (mut tsession, logits) = self.target.prefill(prompt)?;
+        let (mut dsession, _) = self.draft.prefill(prompt)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let mut tokens: Vec<i32> = Vec::with_capacity(budget);
+        let mut steps = Vec::new();
+        if budget > 0 {
+            let mut next = argmax(logits.row(logits.rows() - 1)) as i32;
+            tokens.push(next);
+            while tokens.len() < budget {
+                let ts = Instant::now();
+                let remaining = budget - tokens.len();
+                // A round emits at most m + 1 tokens; clamp so the last
+                // round never drafts past the budget (k larger than the
+                // remaining budget degenerates gracefully, m = 0 being a
+                // plain decode step through the verify path).
+                let m = self.k.min(remaining - 1);
+                let mut drafts: Vec<i32> = Vec::with_capacity(m);
+                if m > 0 {
+                    // Catch the draft up to the target's accepted history
+                    // (it trails by one token after a full accept).
+                    while dsession.tokens.len() < tsession.tokens.len() {
+                        let t = tsession.tokens[dsession.tokens.len()];
+                        self.draft.decode_step(&mut [&mut dsession], &[t])?;
+                        c.draft_steps += 1;
+                    }
+                    let mut cur = next;
+                    for _ in 0..m {
+                        let lg = self.draft.decode_step(&mut [&mut dsession], &[cur])?;
+                        cur = argmax(lg.row(0)) as i32;
+                        drafts.push(cur);
+                        c.draft_steps += 1;
+                    }
+                }
+                c.drafted += m;
+                // One batched target step over pending + proposals.
+                let start = tsession.tokens.len();
+                let mut chunk = Vec::with_capacity(m + 1);
+                chunk.push(next);
+                chunk.extend_from_slice(&drafts);
+                let vl = self.target.verify_step(&mut tsession, &chunk)?;
+                c.verify_steps += 1;
+                c.rounds += 1;
+                let (acc, bonus) = verify_accept(&drafts, &vl);
+                c.accepted += acc;
+                c.rejected += m - acc;
+                // Roll both sessions back to the accepted extent (a no-op
+                // on the draft after a full accept — it trails instead).
+                tsession.truncate(start + 1 + acc);
+                dsession.truncate(start + 1 + acc);
+                tokens.extend_from_slice(&drafts[..acc]);
+                tokens.push(bonus);
+                next = bonus;
+                steps.push(ts.elapsed().as_secs_f64());
+            }
+        }
+        Ok(SpecOutput {
+            gen: GenOutput {
+                prompt_len: prompt.len(),
+                tokens,
+                prefill_s,
+                step_latencies_s: steps,
+            },
+            counters: c,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{generate, NativeEngine, Sampling};
+    use crate::fused::FusedModel;
+    use crate::model::ModelParams;
+    use crate::runtime::FamilySpec;
+    use crate::util::rng::Pcg64;
+
+    fn micro_family() -> FamilySpec {
+        FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu")
+    }
+
+    fn micro_engine(seed: u64) -> NativeEngine {
+        NativeEngine::new(&ModelParams::init(&micro_family(), seed), 3, 8).unwrap()
+    }
+
+    fn micro_tokens(vocab: usize, len: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg64::new(seed, 77);
+        (0..len).map(|_| rng.below(vocab) as i32).collect()
+    }
+
+    #[test]
+    fn verify_accept_takes_longest_prefix_and_bonus() {
+        // 3 drafts over vocab 4; target argmaxes are [2, 1, 3, 0].
+        let mut logits = Matrix::zeros(4, 4);
+        for (r, &am) in [2usize, 1, 3, 0].iter().enumerate() {
+            logits.row_mut(r)[am] = 1.0;
+        }
+        // Full agreement: all 3 accepted, bonus from the last row.
+        assert_eq!(verify_accept(&[2, 1, 3], &logits), (3, 0));
+        // Disagreement at row 1: one accepted, bonus is row 1's argmax.
+        let l2 = {
+            let mut l = Matrix::zeros(3, 4);
+            for (r, &am) in [2usize, 1, 3].iter().enumerate() {
+                l.row_mut(r)[am] = 1.0;
+            }
+            l
+        };
+        assert_eq!(verify_accept(&[2, 0], &l2), (1, 1));
+        // Immediate disagreement: nothing accepted, bonus = target's own
+        // choice for the pending position.
+        assert_eq!(verify_accept(&[0, 1], &l2), (0, 2));
+        // No drafts (m = 0): a plain decode step.
+        let one = {
+            let mut l = Matrix::zeros(1, 4);
+            l.row_mut(0)[3] = 1.0;
+            l
+        };
+        assert_eq!(verify_accept(&[], &one), (0, 3));
+    }
+
+    #[test]
+    fn new_validates_k_and_vocab() {
+        let a = Box::new(micro_engine(1));
+        let b = Box::new(micro_engine(2));
+        assert!(SpeculativeEngine::new(a, b, 0).is_err(), "k = 0 accepted");
+        let other_fam = FamilySpec::build("micro13", 13, 8, 1, 2, 1, 12, "swiglu");
+        let other = Box::new(NativeEngine::new(&ModelParams::init(&other_fam, 3), 3, 8).unwrap());
+        let err = SpeculativeEngine::new(other, Box::new(micro_engine(4)), 2).unwrap_err();
+        assert!(err.to_string().contains("vocab"), "got: {err:#}");
+        assert!(
+            SpeculativeEngine::new(Box::new(micro_engine(5)), Box::new(micro_engine(6)), 4)
+                .is_ok()
+        );
+    }
+
+    #[test]
+    fn native_verify_step_matches_sequential_decode_bitwise() {
+        // The override's whole contract: row i of one batched verify call
+        // equals the logits of the i-th sequential decode step, and the
+        // session ends in the identical state.
+        let engine = micro_engine(11);
+        let vocab = engine.spec().vocab;
+        let prompt = micro_tokens(vocab, 5, 41);
+        let chunk = micro_tokens(vocab, 4, 42);
+        let (mut a, _) = engine.prefill(&prompt).unwrap();
+        let (mut b, _) = engine.prefill(&prompt).unwrap();
+        let batched = engine.verify_step(&mut a, &chunk).unwrap();
+        assert_eq!(batched.shape(), (chunk.len(), vocab));
+        for (i, &t) in chunk.iter().enumerate() {
+            let lg = engine.decode_step(&mut [&mut b], &[t]).unwrap();
+            assert_eq!(batched.row(i), lg.row(0), "verify row {i} diverged");
+        }
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.cache.len(), b.cache.len());
+        // Continuations from both sessions agree bit-for-bit.
+        let x = engine.decode_step(&mut [&mut a], &[1]).unwrap();
+        let y = engine.decode_step(&mut [&mut b], &[1]).unwrap();
+        assert_eq!(x.row(0), y.row(0));
+        assert!(engine.verify_step(&mut a, &[]).is_err(), "empty chunk accepted");
+    }
+
+    #[test]
+    fn fused_verify_step_matches_sequential_decode_bitwise() {
+        // Same contract on the packed engine: the verify chunk must stay
+        // in the decode kernel regime even when it carries more rows than
+        // max_batch, or the accept comparison would see f32 drift.
+        let params = ModelParams::init(&micro_family(), 21);
+        let fm = FusedModel::pack_dense(&params, "uniform", 4, 32)
+            .unwrap()
+            .with_shape(2, 8);
+        let vocab = fm.spec().vocab;
+        let prompt = micro_tokens(vocab, 5, 51);
+        let chunk = micro_tokens(vocab, 4, 52); // 4 rows > max_batch 2
+        let (mut a, _) = fm.prefill(&prompt).unwrap();
+        let (mut b, _) = fm.prefill(&prompt).unwrap();
+        let batched = fm.verify_step(&mut a, &chunk).unwrap();
+        for (i, &t) in chunk.iter().enumerate() {
+            let lg = fm.decode_step(&mut [&mut b], &[t]).unwrap();
+            assert_eq!(batched.row(i), lg.row(0), "verify row {i} diverged");
+        }
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn speculative_stream_equals_plain_greedy_dense() {
+        // The headline invariant on the dense family: for k ∈ {1,2,4,8}
+        // and a draft that genuinely disagrees with the target (different
+        // seed), the speculative stream is bit-identical to plain greedy
+        // target-only generation — including k far beyond the remaining
+        // budget.
+        let target = micro_engine(7);
+        let vocab = target.spec().vocab;
+        for prompt_len in [3usize, 6] {
+            let prompt = micro_tokens(vocab, prompt_len, 19 + prompt_len as u64);
+            for max_new in [1usize, 3, 12] {
+                let want = generate(&target, &prompt, max_new, Sampling::Greedy).unwrap();
+                for k in [1usize, 2, 4, 8] {
+                    let spec = SpeculativeEngine::new(
+                        Box::new(micro_engine(8)), // draft: different weights
+                        Box::new(micro_engine(7)),
+                        k,
+                    )
+                    .unwrap();
+                    let out = spec.generate(&prompt, max_new).unwrap();
+                    assert_eq!(
+                        out.gen.tokens, want.tokens,
+                        "k={k} max_new={max_new} prompt_len={prompt_len}"
+                    );
+                    let c = out.counters;
+                    assert_eq!(c.drafted, c.accepted + c.rejected);
+                    assert_eq!(c.verify_steps, c.rounds);
+                    assert!((0.0..=1.0).contains(&c.acceptance_rate()));
+                    assert!(
+                        c.rounds <= want.tokens.len(),
+                        "every round must emit at least one token"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_draft_accepts_everything() {
+        // Draft == target: every proposal verifies, so n tokens cost
+        // ceil((n-1)/(k+1)) verify rounds and the acceptance rate is 1.
+        let prompt = micro_tokens(11, 4, 9);
+        let spec = SpeculativeEngine::new(
+            Box::new(micro_engine(12)),
+            Box::new(micro_engine(12)),
+            4,
+        )
+        .unwrap();
+        let out = spec.generate(&prompt, 11).unwrap();
+        let want = generate(&micro_engine(12), &prompt, 11, Sampling::Greedy).unwrap();
+        assert_eq!(out.gen.tokens, want.tokens);
+        let c = out.counters;
+        assert_eq!(c.rejected, 0, "identical models must agree");
+        assert!(c.drafted > 0 && c.accepted == c.drafted);
+        assert_eq!(c.acceptance_rate(), 1.0);
+        // 1 prefill token + 10 more in full-accept rounds of k + 1 = 5.
+        assert_eq!(c.rounds, 2);
+    }
+
+    #[test]
+    fn speculative_stream_equals_plain_greedy_fused() {
+        // The paper's deployment pairing: a 2-bit aggressive pack drafts
+        // for a 4-bit target packed from the same dense weights. The
+        // low-bit draft disagrees sometimes (quantization noise) but the
+        // emitted stream must match plain 4-bit greedy exactly.
+        let params = ModelParams::init(&micro_family(), 23);
+        let target = FusedModel::pack_dense(&params, "uniform", 4, 32)
+            .unwrap()
+            .with_shape(3, 8);
+        let prompt = micro_tokens(target.spec().vocab, 5, 61);
+        let want = generate(&target, &prompt, 9, Sampling::Greedy).unwrap();
+        for k in [1usize, 2, 4, 8] {
+            let draft = FusedModel::pack_dense(&params, "uniform", 2, 32)
+                .unwrap()
+                .with_shape(3, 8);
+            let tgt = FusedModel::pack_dense(&params, "uniform", 4, 32)
+                .unwrap()
+                .with_shape(3, 8);
+            let spec = SpeculativeEngine::new(Box::new(draft), Box::new(tgt), k).unwrap();
+            let out = spec.generate(&prompt, 9).unwrap();
+            assert_eq!(out.gen.tokens, want.tokens, "k={k}");
+            assert_eq!(out.counters.drafted, out.counters.accepted + out.counters.rejected);
+        }
+    }
+
+    #[test]
+    fn generate_validates_prompt_and_clamps_budget() {
+        let spec = SpeculativeEngine::new(
+            Box::new(micro_engine(14)),
+            Box::new(micro_engine(15)),
+            4,
+        )
+        .unwrap();
+        assert!(spec.generate(&[], 4).is_err(), "empty prompt accepted");
+        let max_context = spec.target().spec().max_context;
+        assert!(spec.generate(&vec![1i32; max_context], 1).is_err());
+        // Budget clamps to the context like plain generate does.
+        let prompt = micro_tokens(11, max_context - 3, 71);
+        let out = spec.generate(&prompt, 100).unwrap();
+        assert_eq!(out.gen.tokens.len(), 3);
+    }
+}

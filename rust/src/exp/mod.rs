@@ -81,11 +81,12 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table10" => model_level::table10(&ctx),
         "table11" => model_level::table11(&ctx),
         "budget" => model_level::budget(&ctx),
+        "speculate" => model_level::speculate(&ctx),
         "all" => {
             for id in [
                 "table1", "t1norms", "fig2", "fig3", "fig4", "fig5", "table8",
                 "table2", "table3", "table4", "table5", "table9", "table10",
-                "table11", "budget",
+                "table11", "budget", "speculate",
             ] {
                 eprintln!("\n===== exp {id} =====");
                 run(id, args)?;
@@ -95,7 +96,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         other => bail!(
             "unknown experiment '{other}'; known: table1 t1norms fig2 fig3 \
              fig4 fig5 table2 table3 table4 table5 table8 table9 table10 \
-             table11 budget all"
+             table11 budget speculate all"
         ),
     }
 }

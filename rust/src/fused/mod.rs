@@ -1050,6 +1050,28 @@ impl Engine for FusedModel {
         Ok(logits)
     }
 
+    fn verify_step(&self, session: &mut Session, tokens: &[i32]) -> Result<Matrix> {
+        if tokens.is_empty() {
+            bail!("verify step needs at least one token");
+        }
+        let view = ParamView::from_slice(&self.family, &self.dense_mats)?;
+        // One chunked causal forward, pinned to the *decode* kernel
+        // regime: sequential decode steps always carry one row per
+        // session and hence dispatch to `decode_matmul_t`, whose f32
+        // summation order differs from the panel kernel's. Both kernels
+        // are exactly row-local, so with the regime pinned each verify
+        // row is bit-identical to the decode step that would have fed
+        // the same token — the speculative accept/reject comparison
+        // never sees kernel-induced drift.
+        let proj = ChunkProj {
+            fm: self,
+            decode_regime: true,
+        };
+        let logits = fwd_prefill_chunk(&self.family, &view, &proj, tokens, &mut session.cache)?;
+        session.tokens.extend_from_slice(tokens);
+        Ok(logits)
+    }
+
     fn pool_stats(&self) -> Option<PoolStats> {
         Some(self.pool.stats())
     }

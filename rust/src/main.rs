@@ -4,7 +4,10 @@
 //! All inference commands run through the [`odlri::engine::Engine`] API
 //! (dense native engine or the packed fused `(Q+LR)·x` engine); `generate`
 //! and `serve-bench --max-new-tokens` exercise KV-cached incremental
-//! decoding. Runs artifact-free on the native engine by default; with
+//! decoding, plain or speculative (`--draft PATH --speculate K`: a low-bit
+//! packed draft proposes, the target verifies in one batched step and the
+//! greedy stream stays bit-identical). Runs artifact-free on the native
+//! engine by default; with
 //! `--features xla` and an `artifacts/` directory the training/calibration
 //! commands execute the AOT HLO artifacts through PJRT.
 
@@ -17,13 +20,17 @@ use odlri::coordinator::{
     BudgetPlanner, CompressionPipeline, CompressionPlan, InitKind, PipelineConfig, Planner,
 };
 use odlri::engine::replicas::Replicas;
+use odlri::engine::speculative::SpeculativeEngine;
 use odlri::engine::{self, Engine, NativeEngine, Sampling};
 use odlri::eval;
 use odlri::exp;
 use odlri::fused::FusedModel;
 use odlri::model::{inject_outliers, ModelParams};
 use odlri::runtime::Runtime;
-use odlri::serve::{nearest_rank, run_server, sort_nan_last, ServeConfig, Workload};
+use odlri::serve::{
+    nearest_rank, run_server, run_server_speculative, sort_nan_last, ServeConfig, ServeReport,
+    Workload,
+};
 use odlri::train::{train, TrainConfig};
 
 fn main() {
@@ -227,6 +234,45 @@ fn build_engine(rt: &Runtime, args: &Args, family: &str) -> Result<Box<dyn Engin
         };
         Ok(Box::new(eng))
     }
+}
+
+/// Build the optional speculative-decoding draft engine (`--draft PATH`,
+/// depth `--speculate K`, default 4). The draft is always a packed
+/// [`FusedModel`]: a low-bit aggressive plan from the same compression run
+/// as the target, or — with `--pack-dense` and no `--draft` — a 2-bit pack
+/// of the same dense weights, the artifact-free smoke pairing. Returns
+/// `None` when neither flag is given. The draft keeps its own unbounded KV
+/// pool: `--kv-budget` caps the target only, so draft state can always be
+/// rebuilt after target-side preemption drops it.
+fn build_draft(
+    rt: &Runtime,
+    args: &Args,
+    family: &str,
+) -> Result<Option<(Box<dyn Engine>, usize)>> {
+    let draft_path = args.str("draft", "");
+    if draft_path.is_empty() && args.str("speculate", "").is_empty() {
+        return Ok(None);
+    }
+    let k = args.usize("speculate", 4)?;
+    if k == 0 {
+        bail!("--speculate wants a draft depth of at least 1, got 0");
+    }
+    let (batch, seq) = (rt.manifest.batch, rt.manifest.seq);
+    let fam = rt.manifest.family(family)?;
+    let fm = if !draft_path.is_empty() {
+        FusedModel::load(fam, &PathBuf::from(&draft_path))?
+    } else if args.switch("pack-dense") {
+        FusedModel::pack_dense(&load_model_or_init(rt, args, family)?, "uniform", 2, 64)?
+    } else {
+        bail!("--speculate needs a draft engine: --draft runs/<family>-draft.odf (or --pack-dense)");
+    };
+    let fm = fm.with_shape(batch, seq);
+    eprintln!(
+        "[engine] speculative draft: {:.2} bits/weight over {} packed projections, k={k}",
+        fm.avg_bits(),
+        fm.mats.len()
+    );
+    Ok(Some((Box::new(fm), k)))
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {
@@ -515,7 +561,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         long_prompt_len: args.usize("long-prompt-len", 0)?,
     };
     let engine = build_engine(&rt, args, &family)?;
-    let report = run_server(engine.as_ref(), &cfg)?;
+    let speculation = build_draft(&rt, args, &family)?;
+    if speculation.is_some() && max_new == 0 {
+        bail!("--draft speculates on generation workloads; set --max-new-tokens");
+    }
+    let report = match &speculation {
+        Some((draft, k)) => run_server_speculative(engine.as_ref(), draft.as_ref(), *k, &cfg)?,
+        None => run_server(engine.as_ref(), &cfg)?,
+    };
     let seq = if cfg.prompt_len == 0 {
         engine.spec().seq
     } else {
@@ -562,6 +615,31 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
         let finite = report.scores.iter().filter(|s| s.is_finite()).count();
         println!("finite scores: {finite}/{}", report.scores.len());
+    }
+    let mut spec_vs_plain: Option<(f64, f64)> = None;
+    if let Some((_, k)) = &speculation {
+        println!(
+            "speculative decode: k={k}, acceptance {:.1}% (drafted {}, accepted {}, rejected {}; \
+             {} draft steps + {} verify steps)",
+            report.acceptance_rate() * 100.0,
+            report.drafted_tokens,
+            report.accepted_tokens,
+            report.rejected_tokens,
+            report.draft_steps,
+            report.verify_steps
+        );
+        // Re-run the identical workload target-only so the report shows
+        // what speculation actually bought (same engine, prompts, seeds —
+        // greedy serving is deterministic, so only the timing differs).
+        let plain = run_server(engine.as_ref(), &cfg)?;
+        let (s_ms, p_ms) = (ms_per_decoded_tok(&report), ms_per_decoded_tok(&plain));
+        println!(
+            "speculative vs plain: {:.3} vs {:.3} ms/tok ({:.2}x)",
+            s_ms,
+            p_ms,
+            if s_ms > 0.0 { p_ms / s_ms } else { 0.0 }
+        );
+        spec_vs_plain = Some((s_ms, p_ms));
     }
     if max_new > 0 {
         println!(
@@ -622,10 +700,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 )
             })
             .collect();
+        let (s_ms, p_ms) = spec_vs_plain.unwrap_or((0.0, 0.0));
         println!(
             "{{\"requests\":{},\"batches\":{},\"decode_steps\":{},\
              \"interleaved_decode_steps\":{},\"generated_tokens\":{},\"decoded_tokens\":{},\
-             \"preemptions\":{},\"resumes\":{},\"rejected\":{},\"wall_secs\":{:.4},\
+             \"preemptions\":{},\"resumes\":{},\"rejected\":{},\
+             \"drafted_tokens\":{},\"accepted_tokens\":{},\"rejected_tokens\":{},\
+             \"draft_steps\":{},\"verify_steps\":{},\"acceptance_rate\":{:.4},\
+             \"spec_ms_per_tok\":{:.3},\"plain_ms_per_tok\":{:.3},\"wall_secs\":{:.4},\
              \"p50_ms\":{:.3},\"p95_ms\":{:.3},\"classes\":[{}]}}",
             report.completed.len(),
             report.batches,
@@ -636,6 +718,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             report.preemptions,
             report.resumes,
             report.rejected,
+            report.drafted_tokens,
+            report.accepted_tokens,
+            report.rejected_tokens,
+            report.draft_steps,
+            report.verify_steps,
+            j(report.acceptance_rate()),
+            j(s_ms),
+            j(p_ms),
             j(report.wall_secs),
             j(report.p50_ms()),
             j(report.p95_ms()),
@@ -643,6 +733,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Decode cost per emitted token: total decode-tick wall time over tokens
+/// that went through KV-cached decode. Speculative rounds count every
+/// token they emit, which is exactly the comparison the speculative-vs-
+/// plain line is after.
+fn ms_per_decoded_tok(r: &ServeReport) -> f64 {
+    let secs: f64 = r.decode_step_latencies_s.iter().sum();
+    if r.decoded_tokens == 0 {
+        0.0
+    } else {
+        secs * 1e3 / r.decoded_tokens as f64
+    }
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -667,8 +770,45 @@ fn cmd_generate(args: &Args) -> Result<()> {
         },
     };
     let max_new = args.usize("max-new-tokens", 64)?;
+    // Captured before the engine may move into the speculative wrapper.
+    let qb = engine.decode_weight_bytes();
+    if let Some((draft, k)) = build_draft(&rt, args, &family)? {
+        if !matches!(sampling, Sampling::Greedy) {
+            bail!("--draft verifies greedy streams only; drop --top-k (or drop --draft)");
+        }
+        let spec = SpeculativeEngine::new(draft, engine, k)?;
+        let out = spec.generate(&prompt, max_new)?;
+        report_generation(&prompt, &out.gen, qb);
+        let c = out.counters;
+        let decode_s: f64 = out.gen.step_latencies_s.iter().sum();
+        let emitted = out.gen.tokens.len().saturating_sub(1).max(1);
+        println!(
+            "speculative: k={k} over {} rounds — drafted {}, accepted {}, rejected {} \
+             (acceptance {:.1}%); {} draft steps + {} verify steps, {:.2} ms/tok effective",
+            c.rounds,
+            c.drafted,
+            c.accepted,
+            c.rejected,
+            c.acceptance_rate() * 100.0,
+            c.draft_steps,
+            c.verify_steps,
+            decode_s * 1e3 / emitted as f64,
+        );
+        return Ok(());
+    }
     let out = engine::generate(engine.as_ref(), &prompt, max_new, sampling)?;
-    println!("prompt ({} tokens): {:?}", out.prompt_len, tokens_to_text(&prompt));
+    report_generation(&prompt, &out, qb);
+    Ok(())
+}
+
+/// Shared tail of `generate`: token text, the per-step latency report, and
+/// (for packed engines) decode weight throughput with the kernel-path
+/// probe counters CI greps. Speculative runs pass per-*round* latencies —
+/// every round emits at least one token — so the mean/percentiles read as
+/// per-round there and the speculative summary line carries the effective
+/// per-token cost.
+fn report_generation(prompt: &[i32], out: &engine::GenOutput, qb: Option<usize>) {
+    println!("prompt ({} tokens): {:?}", out.prompt_len, tokens_to_text(prompt));
     println!(
         "generated {} tokens: {:?}",
         out.tokens.len(),
@@ -700,7 +840,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // step, so weight GB/s = q_bytes · steps / decode_secs; the kernel
     // probe counters expose whether the specialized fused dequant-dot path
     // was actually taken (CI greps this line).
-    if let Some(qb) = engine.decode_weight_bytes() {
+    if let Some(qb) = qb {
         let steps = out.step_latencies_s.len();
         if steps > 0 && total > 0.0 {
             println!(
@@ -713,7 +853,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
             );
         }
     }
-    Ok(())
 }
 
 /// Render byte-level tokens as text (tokens ≥ 256 from wide-vocab families
@@ -728,7 +867,39 @@ fn tokens_to_text(tokens: &[i32]) -> String {
 
 #[cfg(test)]
 mod tests {
-    use super::parse_bytes;
+    use super::{build_draft, parse_bytes};
+    use odlri::cli::{command_spec, Args};
+    use odlri::runtime::Runtime;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse_with(&argv, command_spec(&argv[0]).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn build_draft_surfaces_typed_errors_not_panics() {
+        // Native runtime (no artifact dir): same environment the CLI gets.
+        let rt = Runtime::open(std::path::Path::new("no-such-artifact-dir")).unwrap();
+        // Neither flag given: no speculation.
+        let none = parse("generate --fused --pack-dense");
+        assert!(build_draft(&rt, &none, "tl-7s").unwrap().is_none());
+        // A missing draft artifact is a typed open error naming the path,
+        // not a panic.
+        let missing = parse("generate --fused --draft /nonexistent/draft.odf --speculate 2");
+        let err = build_draft(&rt, &missing, "tl-7s").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("/nonexistent/draft.odf"),
+            "err: {err:#}"
+        );
+        // Depth zero is rejected before any model loading happens.
+        let zero = parse("generate --draft x.odf --speculate 0");
+        let err = build_draft(&rt, &zero, "tl-7s").unwrap_err();
+        assert!(err.to_string().contains("at least 1"), "err: {err:#}");
+        // --speculate with no way to build a draft points at --draft.
+        let bare = parse("generate --speculate 3");
+        let err = build_draft(&rt, &bare, "tl-7s").unwrap_err();
+        assert!(err.to_string().contains("--draft"), "err: {err:#}");
+    }
 
     #[test]
     fn parse_bytes_suffixes_and_overflow() {

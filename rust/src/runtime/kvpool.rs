@@ -655,6 +655,52 @@ impl KvPool {
         table.pages.clear();
         table.shared_len = 0;
     }
+
+    /// Roll a session's table back to `new_len` positions (speculative-
+    /// decode rejection): pages wholly past the new length are decref'd
+    /// (registered ones stay cached and adoptable — their contents are
+    /// still a valid prefix of the released history).
+    ///
+    /// The boundary page needs care, because the session will rewrite its
+    /// rows at positions `>= new_len` on the next decode:
+    ///
+    /// * refs > 1 (adopted/cloned, still shared): leave it alone —
+    ///   [`ensure`](Self::ensure) copy-on-writes before any store, so the
+    ///   shared bits can never be mutated through this table.
+    /// * refs == 1 but registered with a prefix extending past `new_len`:
+    ///   deregister it. The in-place rewrite is fine for *this* session,
+    ///   but a later adopter must not resolve the stale prefix hash to
+    ///   rows about to be overwritten. Deregistering (rather than COW)
+    ///   keeps rollback infallible — no allocation, no pool pressure.
+    ///
+    /// Finally the table's `shared_len` is clamped to `new_len`: positions
+    /// past the rollback point are no longer "already resident", so
+    /// [`write_rows`](Self::write_rows) must stop skipping them.
+    pub(crate) fn truncate(&self, table: &mut BlockTable, new_len: usize) {
+        let p = self.page_tokens;
+        let keep = new_len.div_ceil(p);
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        while table.pages.len() > keep {
+            let pid = table.pages.pop().expect("len checked above");
+            Self::decref_locked(&mut inner, pid, tick);
+        }
+        if let Some(&pid) = table.pages.last() {
+            let e = &mut inner.pages[pid];
+            if e.refs == 1 {
+                if let Some(prefix) = &e.reg_prefix {
+                    if prefix.len() > new_len {
+                        let key = e.reg_key.take().expect("registered page has a key");
+                        e.reg_prefix = None;
+                        e.reg_chain = None;
+                        inner.index.remove(&key);
+                    }
+                }
+            }
+        }
+        table.shared_len = table.shared_len.min(new_len);
+    }
 }
 
 /// FNV-1a over the little-endian token bytes.
@@ -942,6 +988,149 @@ mod tests {
         let mut d = BlockTable::default();
         assert_eq!(p.adopt(&mut d, &t1), 0);
         p.release(&mut c);
+    }
+
+    #[test]
+    fn truncate_frees_suffix_pages_and_clamps_shared_len() {
+        let p = pool(4);
+        let mut t = BlockTable::default();
+        p.ensure(&mut t, 0, 10).unwrap();
+        fill(&p, &t, 0, 10, 0.0);
+        assert_eq!(t.n_pages(), 3);
+        // Unregistered suffix pages go straight back to the free list.
+        p.truncate(&mut t, 5);
+        assert_eq!(t.n_pages(), 2);
+        assert_eq!(p.stats().resident_pages, 2);
+        // Kept rows are untouched; re-extending rewrites from position 5.
+        p.ensure(&mut t, 5, 3).unwrap();
+        fill(&p, &t, 5, 3, 4000.0);
+        let (k, _) = p.read_head(&t, 0, 0, 4, 8);
+        for pos in 0..5 {
+            assert_eq!(k.row(pos), &row(0.0, pos)[..]);
+        }
+        for pos in 5..8 {
+            assert_eq!(k.row(pos), &row(4000.0, pos)[..]);
+        }
+        // Truncating to zero releases everything.
+        p.truncate(&mut t, 0);
+        assert_eq!(t.n_pages(), 0);
+        assert_eq!(t.shared_len(), 0);
+        assert_eq!(p.stats().resident_pages, 0);
+    }
+
+    #[test]
+    fn truncate_deregisters_the_rolled_back_boundary_page() {
+        // A registered prefix page whose extent runs past the rollback
+        // point, with no other holder: the session will rewrite rows
+        // inside the registered extent in place, so the stale hash must
+        // leave the index — a later identical prompt must stop adopting
+        // at the still-valid head, never resolve into rewritten rows.
+        let p = pool(4);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        p.truncate(&mut a, 6); // boundary page covered tokens[..8]
+        assert_eq!(a.n_pages(), 2);
+        // The rewrite lands in place — no COW, the page is private now.
+        p.ensure(&mut a, 6, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 0);
+        fill(&p, &a, 6, 1, 8000.0);
+        // Adoption of the original prompt stops at the intact first page.
+        let mut d = BlockTable::default();
+        assert_eq!(p.adopt(&mut d, &tokens), 4, "stale boundary page adopted");
+        assert_eq!(d.n_pages(), 1);
+        p.release(&mut a);
+        p.release(&mut d);
+    }
+
+    #[test]
+    fn truncate_keeps_shared_boundary_page_and_cow_isolates_rewrite() {
+        // The boundary page is still referenced by an adopter: rollback
+        // must not mutate or deregister it — the next write through the
+        // truncated table copy-on-writes, and the shared bits survive.
+        let p = pool(8);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &tokens), 10);
+        // A rolls back into the shared middle page and diverges.
+        p.truncate(&mut a, 5);
+        p.ensure(&mut a, 5, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 1, "shared boundary page must COW");
+        fill(&p, &a, 5, 1, 8000.0);
+        let (ka, _) = p.read_head(&a, 0, 0, 4, 6);
+        assert_eq!(ka.row(4), &row(0.0, 4)[..]);
+        assert_eq!(ka.row(5), &row(8000.0, 5)[..]);
+        // B's adopted history is bit-intact...
+        let (kb, _) = p.read_head(&b, 0, 0, 4, 10);
+        for pos in 0..10 {
+            assert_eq!(kb.row(pos), &row(0.0, pos)[..]);
+        }
+        // ...and the registration survived: a third session still adopts
+        // the full original prompt.
+        let mut c = BlockTable::default();
+        assert_eq!(p.adopt(&mut c, &tokens), 10);
+        p.release(&mut a);
+        p.release(&mut b);
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn truncate_into_adopted_extent_clamps_shared_len_so_rewrites_store() {
+        // An adopter rolls back *into* its adopted extent. Without the
+        // shared_len clamp, `ensure` would see the whole write range as
+        // "already resident" (no COW) and `write_rows` would silently
+        // skip the stores — the session would keep serving the donor's
+        // rows for positions it has logically rewritten.
+        let p = pool(8);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &tokens), 10);
+        assert_eq!(b.shared_len(), 10);
+        p.truncate(&mut b, 5);
+        assert_eq!(b.shared_len(), 5, "rollback must clamp the skip extent");
+        p.ensure(&mut b, 5, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 1);
+        fill(&p, &b, 5, 1, 6000.0);
+        let (kb, _) = p.read_head(&b, 0, 0, 4, 6);
+        assert_eq!(kb.row(5), &row(6000.0, 5)[..], "rewrite was skipped");
+        // The donor still reads its original rows.
+        let (ka, _) = p.read_head(&a, 0, 0, 4, 10);
+        assert_eq!(ka.row(5), &row(0.0, 5)[..]);
+        p.release(&mut a);
+        p.release(&mut b);
+    }
+
+    #[test]
+    fn truncate_at_page_boundary_keeps_registration_and_caches_the_tail() {
+        // Rolling back to exactly a page boundary: the boundary page's
+        // registered extent is untouched (future writes land in fresh
+        // pages), so its registration stays; the popped registered tail
+        // drops to refcount 0 and stays cached for adoption.
+        let p = pool(4);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        p.truncate(&mut a, 8);
+        assert_eq!(a.n_pages(), 2);
+        assert_eq!(p.stats().resident_pages, 3, "registered tail stays cached");
+        // Both whole head pages still adopt; the cached tail completes
+        // the chain for an identical full prompt.
+        let mut d = BlockTable::default();
+        assert_eq!(p.adopt(&mut d, &tokens), 10);
+        p.release(&mut a);
+        p.release(&mut d);
     }
 
     #[test]

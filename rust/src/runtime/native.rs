@@ -464,6 +464,34 @@ impl KvCache {
         }
     }
 
+    /// Roll the cache back to its first `len` positions (speculative-
+    /// decode rejection). No-op when already at or below `len`.
+    ///
+    /// Flat backing just shrinks the row buffers. Paged backing releases
+    /// every page wholly past the new length (registered pages stay
+    /// cached for prefix sharing) and hardens the boundary page: a shared
+    /// (refs > 1) page is left for copy-on-write at the next store, a
+    /// privately-held page registered past `len` is deregistered, and the
+    /// table's adopted extent is clamped so post-rollback stores are not
+    /// skipped. Because K rows are stored post-RoPE at absolute
+    /// positions, truncate + re-extend is bit-identical to never having
+    /// cached the dropped suffix.
+    pub fn truncate(&mut self, len: usize) {
+        if len >= self.len {
+            return;
+        }
+        match &mut self.backing {
+            KvBacking::Flat(layers) => {
+                for (k, v) in layers.iter_mut() {
+                    k.truncate(len * self.kv_dim);
+                    v.truncate(len * self.kv_dim);
+                }
+            }
+            KvBacking::Paged { pool, table } => pool.truncate(table, len),
+        }
+        self.len = len;
+    }
+
     /// Copy one kv-head's cached panels over positions `[0, len)`:
     /// (K, V), each (len, head_dim). `len` is explicit because decode
     /// reads a layer's rows after appending them but before the cache
@@ -1747,6 +1775,60 @@ mod tests {
         assert!(stats.shared_adoptions >= 2, "prefix sharing never engaged");
         assert!(stats.cow_copies >= 1, "divergence never took a COW copy");
         assert!(stats.resident_pages <= stats.max_pages);
+    }
+
+    #[test]
+    fn truncate_then_reextend_is_bit_identical_on_both_backings() {
+        // Speculative decoding's rollback contract: truncate(len), then
+        // re-extending the stream, must behave exactly as if the dropped
+        // suffix had never been cached — on flat buffers, on paged
+        // tables, and on a paged table rolled back *into* its adopted
+        // extent. K rows are stored post-RoPE at absolute positions, so
+        // this holds bit-for-bit.
+        let fam = micro_family();
+        let params = ModelParams::init(&fam, 45);
+        let view = ParamView::from_params(&params).unwrap();
+        let proj = DenseProj { view: &view };
+        let tokens = micro_tokens(&fam, 1, 12, 19);
+        let want = |t: usize| {
+            let full =
+                forward_with(&fam, &view, &proj, &tokens[..t + 1], 1, t + 1, None).unwrap();
+            (0..fam.vocab).map(|j| full.at(t, j)).collect::<Vec<f32>>()
+        };
+        let pool = KvPool::new(fam.n_layers, fam.kv_dim(), 4, 64 * 1024).unwrap();
+        let mut flat = KvCache::for_family(&fam);
+        let mut paged = KvCache::paged(&pool, 64);
+        let mut donor = KvCache::paged(&pool, 64);
+        fwd_prefill(&fam, &view, &proj, &tokens[..6], &mut donor).unwrap();
+        donor.register_prefix(&tokens[..6]);
+        let mut adopted = KvCache::paged(&pool, 64);
+        assert_eq!(adopted.adopt_prefix(&tokens[..6]), 6);
+        for cache in [&mut flat, &mut paged, &mut adopted] {
+            fwd_prefill(&fam, &view, &proj, &tokens[..6], &mut *cache).unwrap();
+            // A rejected speculation: three wrong tokens land in the
+            // cache, then the whole excursion is rolled back past the
+            // prompt boundary (into the adopted extent for `adopted`).
+            for &g in &[2i32, 4, 6] {
+                let mut caches = [&mut *cache];
+                fwd_decode(&fam, &view, &proj, &[g], &mut caches).unwrap();
+            }
+            assert_eq!(cache.len(), 9);
+            cache.truncate(5);
+            assert_eq!(cache.len(), 5);
+            // Re-extending along the real stream matches the
+            // never-rolled-back reference at every step.
+            for t in 5..tokens.len() {
+                let step = {
+                    let mut caches = [&mut *cache];
+                    fwd_decode(&fam, &view, &proj, &tokens[t..t + 1], &mut caches).unwrap()
+                };
+                assert_eq!(step.row(0), &want(t)[..], "step {t} diverged after rollback");
+            }
+            assert_eq!(cache.len(), tokens.len());
+        }
+        // The donor's registered prompt survived its adopter's rollback.
+        let mut fresh = KvCache::paged(&pool, 64);
+        assert_eq!(fresh.adopt_prefix(&tokens[..6]), 6);
     }
 
     #[test]

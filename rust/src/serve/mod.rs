@@ -41,6 +41,24 @@
 //!    the output: [`Engine::prefill_chunk`] is bit-identical to one-shot
 //!    [`Engine::prefill`] by contract (property-tested in the engine
 //!    modules and end-to-end below).
+//! 5. **Speculative decoding (optional, [`Scheduler::with_speculation`]).**
+//!    Given a cheap draft [`Engine`] (a lower-bit ODLRI pack of the same
+//!    family) and a depth `k`, the decode tick becomes a draft/verify
+//!    round per session: the draft greedily proposes up to `k` tokens,
+//!    the target checks the pending token *plus all drafts* in one
+//!    batched [`Engine::verify_step`], the longest matching prefix is
+//!    accepted, and both KV caches roll back to the committed length via
+//!    [`Session::truncate`] on first mismatch. Greedy streams therefore
+//!    commit 1..=k+1 tokens per target forward while staying **bit-
+//!    identical** to plain target-only serving (the headline invariant,
+//!    tested below through preemption and chunked prefill); sampled
+//!    streams take the plain single-token path through the same verify
+//!    call, with the bonus token drawn from the session's [`Sampler`].
+//!    The draft is strictly advisory: each session's draft KV lives in
+//!    the *draft engine's* pool, is dropped on preemption and rebuilt by
+//!    a draft prefill on resume, and any draft-side failure (pool
+//!    exhaustion, a smaller draft context) silently degrades that round
+//!    to plain decode — only target errors drive the preemption policy.
 //!
 //! ## Batching policy
 //!
@@ -90,6 +108,9 @@
 //! time-to-first-token, per-decode-step latency percentiles (NaN-last
 //! nearest-rank, shared with the global percentiles), and preemptions —
 //! the numbers that show `Interactive` latency surviving `Batch` load.
+//! Speculative runs additionally report drafted/accepted/rejected token
+//! counters and [`ServeReport::acceptance_rate`], the fraction of draft
+//! proposals the target confirmed.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -211,6 +232,17 @@ pub struct ServeReport {
     /// validation refusals. They appear in `completed`/`latencies_s`
     /// (each got an answer) but contribute no scores or tokens.
     pub rejected: usize,
+    /// Tokens the draft engine proposed (speculative runs only).
+    pub drafted_tokens: usize,
+    /// Draft proposals the target confirmed and committed.
+    pub accepted_tokens: usize,
+    /// Draft proposals the target overruled (rolled back via truncate).
+    pub rejected_tokens: usize,
+    /// Single-token forwards the draft engine ran (catch-up + proposals).
+    pub draft_steps: usize,
+    /// Batched target verify forwards (one per session per decode tick
+    /// when speculating).
+    pub verify_steps: usize,
     /// Per-priority breakdown, indexed by [`Priority::index`].
     pub classes: Vec<ClassReport>,
     pub wall_secs: f64,
@@ -272,6 +304,16 @@ impl ServeReport {
         nearest_rank(&sort_nan_last(&self.decode_step_latencies_s), 0.50) * 1e3
     }
 
+    /// Fraction of drafted tokens the target accepted; 0.0 when nothing
+    /// was drafted (plain runs), so the field is always finite.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.drafted_tokens as f64
+        }
+    }
+
     /// Decode-step throughput: tokens produced by decode steps over decode
     /// wall time (each request's first token comes from prefill and is
     /// deliberately excluded from both numerator and denominator).
@@ -310,6 +352,11 @@ struct Stats {
     preemptions: usize,
     resumes: usize,
     rejected: usize,
+    drafted_tokens: usize,
+    accepted_tokens: usize,
+    rejected_tokens: usize,
+    draft_steps: usize,
+    verify_steps: usize,
     classes: [ClassAccum; Priority::COUNT],
 }
 
@@ -346,6 +393,11 @@ impl Stats {
             preemptions: self.preemptions,
             resumes: self.resumes,
             rejected: self.rejected,
+            drafted_tokens: self.drafted_tokens,
+            accepted_tokens: self.accepted_tokens,
+            rejected_tokens: self.rejected_tokens,
+            draft_steps: self.draft_steps,
+            verify_steps: self.verify_steps,
             classes,
             wall_secs,
             sorted_latencies_s,
@@ -383,6 +435,15 @@ struct ActiveGen {
     sampler: Sampler,
     /// Last sampled token, not yet fed back.
     next: i32,
+    /// Greedy streams are the only ones the speculative tick drafts for:
+    /// accepted draft tokens are argmaxes, which only equal the plain
+    /// stream under greedy sampling.
+    greedy: bool,
+    /// This session's mirror on the draft engine (speculative runs).
+    /// Lazily built by a draft prefill of the token history; dropped on
+    /// preemption (releasing its draft-pool pages) and on any draft
+    /// failure, then rebuilt the same way.
+    draft_session: Option<Session>,
     produced: Vec<i32>,
     /// Wall time of each decode step this session took part in.
     step_latencies_s: Vec<f64>,
@@ -425,6 +486,7 @@ struct Preempted {
     history: Vec<i32>,
     sampler: Sampler,
     next: i32,
+    greedy: bool,
     produced: Vec<i32>,
     step_latencies_s: Vec<f64>,
     budget: usize,
@@ -441,6 +503,10 @@ struct Scheduler<'a> {
     /// Prompt tokens advanced per tick across all prefilling sessions
     /// (0 = one-shot prefill).
     prefill_chunk: usize,
+    /// Draft engine for speculative decoding (same vocab as `engine`).
+    draft: Option<&'a dyn Engine>,
+    /// Speculation depth: draft tokens proposed per session per tick.
+    speculate: usize,
     /// One FIFO queue per priority class, indexed by [`Priority::index`].
     queues: [VecDeque<Arrived>; Priority::COUNT],
     active: Vec<ActiveGen>,
@@ -458,6 +524,8 @@ impl<'a> Scheduler<'a> {
             engine,
             max_batch: engine.spec().max_batch.max(1),
             prefill_chunk,
+            draft: None,
+            speculate: 0,
             queues: std::array::from_fn(|_| VecDeque::new()),
             active: Vec::new(),
             prefilling: Vec::new(),
@@ -465,6 +533,14 @@ impl<'a> Scheduler<'a> {
             stats: Stats::default(),
             next_id: 0,
         }
+    }
+
+    /// Switch decode ticks to speculative draft/verify rounds against
+    /// `draft`. Callers validate the pair first ([`validate_speculation`]).
+    fn with_speculation(mut self, draft: &'a dyn Engine, k: usize) -> Scheduler<'a> {
+        self.draft = Some(draft);
+        self.speculate = k;
+        self
     }
 
     fn enqueue(&mut self, inc: Incoming) {
@@ -562,6 +638,10 @@ impl<'a> Scheduler<'a> {
                         session,
                         sampler: p.sampler,
                         next: p.next,
+                        greedy: p.greedy,
+                        // The draft mirror was dropped with its pages at
+                        // preemption; the next speculative tick rebuilds it.
+                        draft_session: None,
                         produced: p.produced,
                         step_latencies_s: p.step_latencies_s,
                         budget: p.budget,
@@ -672,6 +752,7 @@ impl<'a> Scheduler<'a> {
         let prompt_len = prompt.len();
         let budget = max_new_tokens.min(spec.max_context.saturating_sub(prompt_len));
         self.stats.batches += 1;
+        let greedy = matches!(sampling, Sampling::Greedy);
         let mut sampler = Sampler::new(sampling);
         if budget == 0 {
             self.finish(
@@ -693,6 +774,8 @@ impl<'a> Scheduler<'a> {
             session,
             sampler,
             next,
+            greedy,
+            draft_session: None,
             produced: vec![next],
             step_latencies_s: Vec::new(),
             budget,
@@ -859,6 +942,7 @@ impl<'a> Scheduler<'a> {
     /// final chunk's logits (its last row is the last prompt position,
     /// bit-identical to one-shot prefill) and join the decode pool.
     fn finish_prefill(&mut self, p: PrefillingGen, logits: &Matrix) {
+        let greedy = matches!(p.sampling, Sampling::Greedy);
         let mut sampler = Sampler::new(p.sampling);
         let next = sampler.sample(logits.row(logits.rows() - 1));
         let prompt_len = p.prompt.len();
@@ -869,6 +953,8 @@ impl<'a> Scheduler<'a> {
             session: Session::new(p.prompt, cache),
             sampler,
             next,
+            greedy,
+            draft_session: None,
             produced: vec![next],
             step_latencies_s: Vec::new(),
             budget: p.budget,
@@ -931,6 +1017,9 @@ impl<'a> Scheduler<'a> {
     /// session left the exhaustion is fatal — a lone session cannot free
     /// its own pages (a mid-prefill session is requeued first if present).
     fn decode_once(&mut self) -> Result<()> {
+        if self.draft.is_some() && self.speculate > 0 {
+            return self.speculative_tick();
+        }
         let engine = self.engine;
         loop {
             let tokens: Vec<i32> = self.active.iter().map(|a| a.next).collect();
@@ -979,6 +1068,163 @@ impl<'a> Scheduler<'a> {
         }
     }
 
+    /// One speculative decode tick: every in-flight session advances by
+    /// one draft/verify round. Greedy sessions may commit up to
+    /// `speculate + 1` tokens per round; sampled sessions (and greedy
+    /// ones on their final budgeted token) take the plain single-token
+    /// path through the same verify call. Sessions advance one at a time
+    /// so a KV-pool refusal preempts under the exact policy of the plain
+    /// path — lowest class, youngest first — and retries the survivors;
+    /// a session preempted by an earlier retry in the same tick is simply
+    /// skipped. Counts as ONE decode step in the report (one latency
+    /// sample per tick keeps `decode_steps == decode_step_latencies_s`).
+    fn speculative_tick(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let mut emitted_total = 0usize;
+        let ids: Vec<u64> = self.active.iter().map(|a| a.id).collect();
+        for id in ids {
+            loop {
+                let Some(i) = self.active.iter().position(|a| a.id == id) else {
+                    break; // preempted by an earlier retry this tick
+                };
+                match self.spec_advance_one(i) {
+                    Ok(emitted) => {
+                        emitted_total += emitted;
+                        // Retire at-budget sessions NOW, not at tick end:
+                        // a later session's pool-exhaustion retry must
+                        // never park an already-finished stream (it would
+                        // resume and overshoot its budget).
+                        if self.active[i].produced.len() >= self.active[i].budget {
+                            let ag = self.active.remove(i);
+                            self.retire(ag);
+                        }
+                        break;
+                    }
+                    Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
+                        self.preempt_one();
+                    }
+                    Err(e)
+                        if KvError::is_pool_exhausted(&e)
+                            && self.requeue_one_prefilling(None) => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        let step_s = t0.elapsed().as_secs_f64();
+        self.stats.decode_steps += 1;
+        if !self.prefilling.is_empty() {
+            self.stats.interleaved_decode_steps += 1;
+        }
+        self.stats.decode_step_latencies_s.push(step_s);
+        self.stats.decoded_tokens += emitted_total;
+        Ok(())
+    }
+
+    /// Advance one session by a speculative round: draft up to
+    /// `speculate` tokens greedily on the draft engine, verify the
+    /// pending token plus all drafts in a single batched target
+    /// [`Engine::verify_step`], commit the longest accepted prefix plus
+    /// the target's own next token, and roll both KV caches back to the
+    /// committed length. Returns the number of tokens emitted
+    /// (`accepted + 1`, never past the session's budget because the
+    /// draft count is clamped to `remaining - 1`).
+    ///
+    /// The draft is advisory: any draft-side failure (its pool
+    /// exhausted, a smaller draft context, an engine refusal) silently
+    /// degrades this round toward plain single-token decode and drops
+    /// the draft mirror for a later rebuild. Only *target* errors
+    /// escape, so the caller's retry loop reasons about exactly one KV
+    /// pool; [`Engine::verify_step`] is atomic, leaving the session
+    /// untouched for the post-preemption retry.
+    fn spec_advance_one(&mut self, i: usize) -> Result<usize> {
+        let draft = self.draft.expect("speculative round without a draft engine");
+        let t0 = Instant::now();
+        let (greedy, remaining, history_len) = {
+            let a = &self.active[i];
+            (a.greedy, a.budget - a.produced.len(), a.session.tokens.len())
+        };
+        let mut m = if greedy {
+            // Clamped so a fully accepted round (m drafts + bonus) lands
+            // exactly on the budget, never past it.
+            self.speculate.min(remaining.saturating_sub(1))
+        } else {
+            0
+        };
+        // The draft must hold history + pending + drafts; skip the round's
+        // speculation rather than overflow a smaller draft context.
+        if m > 0 && history_len + 1 + m > draft.spec().max_context {
+            m = 0;
+        }
+        if m > 0 && self.active[i].draft_session.is_none() {
+            // Fresh session or post-preemption resume: rebuild the draft
+            // KV from the token history (bit-exact by the prefill
+            // contract — KV rows are pure functions of the prefix).
+            match draft.prefill(&self.active[i].session.tokens) {
+                Ok((ds, _logits)) => self.active[i].draft_session = Some(ds),
+                Err(_) => m = 0, // no draft pages → no speculation this round
+            }
+        }
+        let mut drafts: Vec<i32> = Vec::with_capacity(m);
+        if m > 0 {
+            let a = &mut self.active[i];
+            let ds = a.draft_session.as_mut().expect("draft session ensured above");
+            let mut draft_ok = true;
+            // Catch-up: after a fully accepted round the draft trails the
+            // target by exactly the bonus token it never consumed.
+            while draft_ok && ds.tokens.len() < a.session.tokens.len() {
+                let t = a.session.tokens[ds.tokens.len()];
+                match draft.decode_step(&mut [&mut *ds], &[t]) {
+                    Ok(_) => self.stats.draft_steps += 1,
+                    Err(_) => draft_ok = false,
+                }
+            }
+            let mut cur = a.next;
+            while draft_ok && drafts.len() < m {
+                match draft.decode_step(&mut [&mut *ds], &[cur]) {
+                    Ok(lg) => {
+                        self.stats.draft_steps += 1;
+                        cur = crate::engine::argmax(lg.row(0)) as i32;
+                        drafts.push(cur);
+                    }
+                    Err(_) => draft_ok = false,
+                }
+            }
+            if !draft_ok {
+                // Unknown draft-side state: drop the mirror (pages free);
+                // tokens drafted before the failure are still verifiable.
+                a.draft_session = None;
+            }
+        }
+        // One batched target step verifies the pending token + all drafts.
+        let engine = self.engine;
+        let a = &mut self.active[i];
+        let start = a.session.tokens.len();
+        let mut chunk = Vec::with_capacity(1 + drafts.len());
+        chunk.push(a.next);
+        chunk.extend_from_slice(&drafts);
+        let logits = engine.verify_step(&mut a.session, &chunk)?;
+        self.stats.verify_steps += 1;
+        let (acc, _) = crate::engine::speculative::verify_accept(&drafts, &logits);
+        // The bonus token goes through the session's sampler: argmax for
+        // greedy (identical to the accept rule), a real draw for sampled
+        // streams — whose RNG stream advances exactly once per emitted
+        // token, same as plain serving.
+        let bonus = a.sampler.sample(logits.row(acc));
+        let committed = start + 1 + acc;
+        a.session.truncate(committed);
+        if let Some(ds) = a.draft_session.as_mut() {
+            ds.truncate(committed);
+        }
+        a.produced.extend_from_slice(&drafts[..acc]);
+        a.produced.push(bonus);
+        a.next = bonus;
+        a.step_latencies_s.push(t0.elapsed().as_secs_f64());
+        self.stats.drafted_tokens += drafts.len();
+        self.stats.accepted_tokens += acc;
+        self.stats.rejected_tokens += drafts.len() - acc;
+        Ok(acc + 1)
+    }
+
     /// Park the youngest session of the lowest priority class (`Batch`
     /// before `Interactive`, LIFO within a class): its cache drops here
     /// (every page back to the pool) while token history, sampler state,
@@ -994,12 +1240,15 @@ impl<'a> Scheduler<'a> {
         let ag = self.active.remove(idx);
         self.stats.preemptions += 1;
         self.stats.classes[ag.class.index()].preemptions += 1;
+        // `ag.draft_session` drops here too: the draft-pool pages a parked
+        // session held go back with the target pages.
         self.preempted.push(Preempted {
             id: ag.id,
             class: ag.class,
             history: ag.session.tokens,
             sampler: ag.sampler,
             next: ag.next,
+            greedy: ag.greedy,
             produced: ag.produced,
             step_latencies_s: ag.step_latencies_s,
             budget: ag.budget,
@@ -1100,8 +1349,48 @@ pub fn serve_oneshot_chunked(
     reqs: Vec<Request>,
     prefill_chunk: usize,
 ) -> Result<(Vec<Response>, ServeReport)> {
+    serve_oneshot_inner(engine, None, reqs, prefill_chunk)
+}
+
+/// [`serve_oneshot`] with speculative decoding: greedy generate streams
+/// draft up to `k` tokens per tick on `draft` and commit them through
+/// single batched target verify steps — bit-identical outputs, fewer
+/// target forwards. `prefill_chunk` composes as in
+/// [`serve_oneshot_chunked`]. The pair is validated up front: `k >= 1`
+/// and matching vocabularies.
+pub fn serve_oneshot_speculative(
+    engine: &dyn Engine,
+    draft: &dyn Engine,
+    k: usize,
+    reqs: Vec<Request>,
+    prefill_chunk: usize,
+) -> Result<(Vec<Response>, ServeReport)> {
+    serve_oneshot_inner(engine, Some((draft, k)), reqs, prefill_chunk)
+}
+
+/// Shared up-front validation for the speculative entry points.
+fn validate_speculation(engine: &dyn Engine, spec: Option<(&dyn Engine, usize)>) -> Result<()> {
+    if let Some((draft, k)) = spec {
+        if k == 0 {
+            bail!("speculation depth k must be at least 1");
+        }
+        crate::engine::speculative::check_pair(&draft.spec(), &engine.spec())?;
+    }
+    Ok(())
+}
+
+fn serve_oneshot_inner(
+    engine: &dyn Engine,
+    speculation: Option<(&dyn Engine, usize)>,
+    reqs: Vec<Request>,
+    prefill_chunk: usize,
+) -> Result<(Vec<Response>, ServeReport)> {
+    validate_speculation(engine, speculation)?;
     let t0 = Instant::now();
     let mut sched = Scheduler::new(engine, prefill_chunk);
+    if let Some((draft, k)) = speculation {
+        sched = sched.with_speculation(draft, k);
+    }
     let mut rxs = Vec::with_capacity(reqs.len());
     for req in reqs {
         let (dtx, drx) = mpsc::channel();
@@ -1132,6 +1421,26 @@ pub fn serve_oneshot_chunked(
 /// [`Priority::Batch`]), the leader thread runs the continuous-batching
 /// scheduler.
 pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport> {
+    run_server_inner(engine, None, cfg)
+}
+
+/// [`run_server`] with speculative decoding against `draft` at depth `k`
+/// (see [`serve_oneshot_speculative`] for the contract).
+pub fn run_server_speculative(
+    engine: &dyn Engine,
+    draft: &dyn Engine,
+    k: usize,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    run_server_inner(engine, Some((draft, k)), cfg)
+}
+
+fn run_server_inner(
+    engine: &dyn Engine,
+    speculation: Option<(&dyn Engine, usize)>,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    validate_speculation(engine, speculation)?;
     let spec = engine.spec();
     let prompt_len = if cfg.prompt_len == 0 {
         spec.seq
@@ -1178,6 +1487,9 @@ pub fn run_server(engine: &dyn Engine, cfg: &ServeConfig) -> Result<ServeReport>
     let (tx, rx) = mpsc::channel::<Incoming>();
     let t_start = Instant::now();
     let mut sched = Scheduler::new(engine, cfg.prefill_chunk);
+    if let Some((draft, k)) = speculation {
+        sched = sched.with_speculation(draft, k);
+    }
 
     std::thread::scope(|s| -> Result<()> {
         // Client threads: each submits a burst of requests with jitter.
@@ -2129,5 +2441,271 @@ mod tests {
         let batch = &report.classes[Priority::Batch.index()];
         assert_eq!(inter.requests + batch.requests, 8);
         assert!(batch.requests >= 1, "the batch client produced nothing");
+    }
+
+    #[test]
+    fn speculative_serving_is_bit_identical_to_plain_serving_native() {
+        // A *different-seed* draft (real rejections) at every depth: the
+        // speculatively served streams must equal both plain serving and
+        // the solo greedy reference, token for token — speculation is a
+        // latency optimization, never an output artifact.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let target = NativeEngine::new(&ModelParams::init(&fam, 17), 4, 8).unwrap();
+        let draft = NativeEngine::new(&ModelParams::init(&fam, 18), 4, 8).unwrap();
+        let reference = NativeEngine::new(&ModelParams::init(&fam, 17), 4, 8).unwrap();
+        let prompts = distinct_prompts(3, 7);
+        let reqs = || -> Vec<Request> { prompts.iter().map(|p| gen_req(p.clone(), 8)).collect() };
+        let (plain, _) = serve_oneshot(&target, reqs()).unwrap();
+        for k in [1usize, 2, 4, 8] {
+            let (spec, report) = serve_oneshot_speculative(&target, &draft, k, reqs(), 0).unwrap();
+            for ((p, a), b) in prompts.iter().zip(&plain).zip(&spec) {
+                let solo = crate::engine::generate(&reference, p, 8, Sampling::Greedy).unwrap();
+                match (a, b) {
+                    (
+                        Response::Generated { tokens: ta, .. },
+                        Response::Generated { tokens: tb, .. },
+                    ) => {
+                        assert_eq!(tb, &solo.tokens, "k={k}: speculative diverged from solo");
+                        assert_eq!(ta, tb, "k={k}: speculative diverged from plain serving");
+                    }
+                    other => panic!("wrong response pair {other:?}"),
+                }
+            }
+            assert!(report.drafted_tokens > 0, "k={k}: nothing was drafted");
+            assert_eq!(
+                report.accepted_tokens + report.rejected_tokens,
+                report.drafted_tokens
+            );
+            assert!(report.verify_steps > 0);
+            assert!((0.0..=1.0).contains(&report.acceptance_rate()));
+            // Every request's first token comes from prefill, the rest
+            // from draft/verify rounds — same ledger as plain decode.
+            assert_eq!(report.decoded_tokens, report.generated_tokens - prompts.len());
+        }
+    }
+
+    #[test]
+    fn speculative_serving_is_bit_identical_on_the_fused_pair() {
+        // The ODLRI pairing from the paper's serving story: a 2-bit pack
+        // drafts for a 4-bit pack of the same checkpoint — high agreement,
+        // verified batched through the decode-regime fused kernel. Also
+        // composes with chunked prefill (the tick loop interleaves draft,
+        // verify, and prompt chunks).
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let target = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let draft = crate::fused::FusedModel::pack_dense(&params, "uniform", 2, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let reference = crate::fused::FusedModel::pack_dense(&params, "uniform", 4, 16)
+            .unwrap()
+            .with_shape(3, 8);
+        let prompts = distinct_prompts(3, 7);
+        let reqs = || -> Vec<Request> { prompts.iter().map(|p| gen_req(p.clone(), 8)).collect() };
+        for chunk in [0usize, 3] {
+            let (spec, report) =
+                serve_oneshot_speculative(&target, &draft, 4, reqs(), chunk).unwrap();
+            for (p, r) in prompts.iter().zip(&spec) {
+                let solo = crate::engine::generate(&reference, p, 8, Sampling::Greedy).unwrap();
+                match r {
+                    Response::Generated { tokens, .. } => {
+                        assert_eq!(tokens, &solo.tokens, "chunk={chunk}: fused spec diverged");
+                    }
+                    other => panic!("wrong response {other:?}"),
+                }
+            }
+            assert!(report.drafted_tokens > 0);
+            assert!(report.accepted_tokens > 0, "2-bit draft never agreed with 4-bit target");
+        }
+    }
+
+    #[test]
+    fn identical_draft_accepts_every_token_and_cuts_target_ticks() {
+        // Draft == target: every proposal verifies, so acceptance is 1.0
+        // and the run needs far fewer target decode ticks than plain
+        // serving — the whole point of the draft/verify split.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 29);
+        let target = NativeEngine::new(&params, 4, 8).unwrap();
+        let draft = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(3, 7);
+        let reqs = || -> Vec<Request> { prompts.iter().map(|p| gen_req(p.clone(), 8)).collect() };
+        let (_, plain_report) = serve_oneshot(&target, reqs()).unwrap();
+        let (_, spec_report) = serve_oneshot_speculative(&target, &draft, 4, reqs(), 0).unwrap();
+        assert_eq!(spec_report.rejected_tokens, 0, "identical draft was rejected");
+        assert!((spec_report.acceptance_rate() - 1.0).abs() < 1e-12);
+        assert!(
+            spec_report.decode_steps < plain_report.decode_steps,
+            "speculation saved no ticks: {} vs {}",
+            spec_report.decode_steps,
+            plain_report.decode_steps
+        );
+        assert_eq!(spec_report.generated_tokens, plain_report.generated_tokens);
+    }
+
+    #[test]
+    fn speculation_survives_preemption_under_a_five_page_pool() {
+        // Four sessions through a 5-page target pool: every session needs
+        // a second page mid-stream, so the scheduler preempts mid-
+        // speculation (dropping target pages AND the parked session's
+        // draft mirror), resumes by re-prefilling both, and still delivers
+        // streams bit-identical to an unconstrained solo run.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let target = NativeEngine::new(&params, 4, 8)
+            .unwrap()
+            .with_kv_budget(5 * 512)
+            .unwrap();
+        let draft = NativeEngine::new(&ModelParams::init(&fam, 31), 4, 8).unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(4, 12);
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 10)).collect();
+        let (resps, report) = serve_oneshot_speculative(&target, &draft, 4, reqs, 0).unwrap();
+        assert!(report.preemptions >= 1, "5-page pool never forced a preemption");
+        assert_eq!(
+            report.preemptions, report.resumes,
+            "every preemption must be matched by a resume"
+        );
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 10, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens.len(), 10);
+                    assert_eq!(tokens, &solo.tokens, "preempted speculative stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        let ps = target.pool_stats().unwrap();
+        assert_eq!(ps.max_pages, 5);
+        assert!(ps.peak_resident_pages <= ps.max_pages, "target pool over-allocated");
+    }
+
+    #[test]
+    fn draft_pool_pressure_degrades_to_plain_decode_without_corruption() {
+        // A draft engine with a single KV page cannot mirror two sessions
+        // (and loses even the one it has when it crosses the page
+        // boundary). Every draft-side refusal must silently fall back to
+        // plain decode for that round — the streams stay bit-exact and
+        // the run never errors.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 37);
+        let target = NativeEngine::new(&params, 4, 8).unwrap();
+        let draft = NativeEngine::new(&ModelParams::init(&fam, 38), 4, 8)
+            .unwrap()
+            .with_kv_budget(512)
+            .unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(2, 12);
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 10)).collect();
+        let (resps, report) = serve_oneshot_speculative(&target, &draft, 2, reqs, 0).unwrap();
+        assert_eq!(report.preemptions, 0, "target pool is unbounded here");
+        assert!(report.verify_steps > 0);
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 10, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "draft-starved stream diverged");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        let ps = draft.pool_stats().unwrap();
+        assert!(ps.peak_resident_pages <= ps.max_pages, "draft pool over-allocated");
+    }
+
+    #[test]
+    fn sampled_streams_under_speculation_match_plain_serving() {
+        // Non-greedy sessions must NOT be drafted for (accepted drafts are
+        // argmaxes); they take the single-token path through verify with
+        // the bonus drawn from their own sampler — one RNG draw per
+        // emitted token, exactly like plain serving. Mixed with a greedy
+        // session that DOES speculate.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 41);
+        let target = NativeEngine::new(&params, 4, 8).unwrap();
+        let draft = NativeEngine::new(&ModelParams::init(&fam, 42), 4, 8).unwrap();
+        let sampled = Sampling::TopK {
+            k: 3,
+            temperature: 1.0,
+            seed: 5,
+        };
+        let reqs = || -> Vec<Request> {
+            vec![
+                Request::Generate {
+                    prompt: vec![1, 2, 3, 4],
+                    max_new_tokens: 7,
+                    sampling: sampled.clone(),
+                    priority: Priority::Interactive,
+                },
+                gen_req(vec![5, 6, 7], 7),
+            ]
+        };
+        let (plain, _) = serve_oneshot(&target, reqs()).unwrap();
+        let (spec, report) = serve_oneshot_speculative(&target, &draft, 4, reqs(), 0).unwrap();
+        for (i, (a, b)) in plain.iter().zip(&spec).enumerate() {
+            match (a, b) {
+                (
+                    Response::Generated { tokens: ta, .. },
+                    Response::Generated { tokens: tb, .. },
+                ) => assert_eq!(ta, tb, "request {i} diverged under speculation"),
+                other => panic!("wrong response pair {other:?}"),
+            }
+        }
+        // Only the greedy session drafted: 7 tokens, first from prefill,
+        // so at most 6 proposals ever needed.
+        assert!(report.drafted_tokens > 0 && report.drafted_tokens <= 6 + report.rejected_tokens);
+    }
+
+    #[test]
+    fn speculative_pair_is_validated_up_front() {
+        let target = ToyEngine::new(32, 2, 8);
+        let draft_ok = ToyEngine::new(32, 2, 8);
+        let draft_bad = ToyEngine::new(16, 2, 8);
+        let reqs = vec![gen_req(vec![1, 2, 3], 4)];
+        let err = serve_oneshot_speculative(&target, &draft_ok, 0, reqs.clone(), 0).unwrap_err();
+        assert!(format!("{err:#}").contains("at least 1"), "err: {err:#}");
+        let err = serve_oneshot_speculative(&target, &draft_bad, 2, reqs, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("vocab"), "err: {err:#}");
+        // Same guards on the threaded server.
+        let cfg = ServeConfig {
+            requests: 2,
+            clients: 1,
+            deadline: Duration::from_millis(1),
+            workload: Workload::Generate { max_new_tokens: 3 },
+            prompt_len: 4,
+            ..ServeConfig::default()
+        };
+        let err = run_server_speculative(&target, &draft_bad, 2, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("vocab"), "err: {err:#}");
+    }
+
+    #[test]
+    fn threaded_speculative_serving_completes_with_full_acceptance_on_the_toy_pair() {
+        // ToyEngine logits are all zeros → every argmax is token 0, so an
+        // identical toy draft is always right: the threaded speculative
+        // server must complete every request with acceptance 1.0. This
+        // also exercises the *default* `Engine::verify_step` (sequential
+        // decode fallback) inside the scheduler.
+        let target = ToyEngine::new(256, 4, 16);
+        let draft = ToyEngine::new(256, 4, 16);
+        let cfg = ServeConfig {
+            requests: 6,
+            clients: 2,
+            deadline: Duration::from_millis(1),
+            seed: 7,
+            workload: Workload::Generate { max_new_tokens: 5 },
+            prompt_len: 8,
+            ..ServeConfig::default()
+        };
+        let report = run_server_speculative(&target, &draft, 3, &cfg).unwrap();
+        assert_eq!(report.completed.len(), 6);
+        assert_eq!(report.generated_tokens, 6 * 5);
+        assert!(report.drafted_tokens > 0);
+        assert_eq!(report.rejected_tokens, 0);
+        assert!((report.acceptance_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(report.decoded_tokens, report.generated_tokens - 6);
     }
 }
