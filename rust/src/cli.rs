@@ -267,11 +267,16 @@ USAGE: odlri <command> [options]
 COMMANDS
   train        Train a tiny model family via the AOT train-step artifact
                  --family tl-7s --steps 300 --seed 0 --out runs/
+                 --corpus-tokens 400000 --log-every 25
+                 --outliers 4 (planted outlier-channel boosts)
   calibrate    Capture activations and accumulate per-matrix Hessians
                  --family tl-7s --weights runs/tl-7s.odw --batches 8
   compress     Compress a trained model (CALDERA / +ODLRI)
                  --family tl-7s --init odlri|caldera|lr-first --rank 64
                  --lr-bits 4 --scheme e8|uniform|mxint --bits 2 --iters 15
+                 --group 64 (quantizer group size) --lplr-iters 10
+                 --workers 0 (0 = all cores) --no-hadamard --verbose
+                 --hessians FILE (default runs/<family>.hess)
                  --budget B (per-projection plan: outlier-sensitive
                  projections get more rank/bits under a model-wide
                  avg-bits ceiling B)
@@ -283,6 +288,7 @@ COMMANDS
                  --fused-out PATH
   eval         Perplexity + zero-shot proxy accuracy through the Engine API
                  --family tl-7s --weights runs/tl-7s.odw
+                 --windows 40 (perplexity windows) --task-items 64
                  --fused (packed engine; default weights runs/<family>.odf)
   pipeline     train → calibrate → compress → eval, end to end
                  --family tl-7s --steps 300 --rank 64
@@ -292,6 +298,8 @@ COMMANDS
                       budget (uniform vs per-projection plans)
                       speculate (draft-bits × k acceptance / ms-per-tok)
                       all
+                 --results results/ --runs runs/ (output / weight dirs)
+                 --quick (smaller grids) --trained (reuse runs/ weights)
   generate     KV-cached incremental decoding with a per-token latency
                report (packed engines additionally report decode
                weight-throughput in GB/s over Q and which decode kernel ran)

@@ -34,7 +34,7 @@
 //!   counters across shards (geometry from shard 0), so the serve-bench
 //!   pool line reports fleet totals.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::fused::FusedModel;
 use crate::runtime::kvpool::PoolStats;
@@ -70,6 +70,7 @@ impl Replicas {
     pub fn shard_stats(&self) -> Vec<PoolStats> {
         self.shards
             .iter()
+            // lint:allow(hot-path-panic) every shard is a FusedModel, whose pool_stats() is always Some
             .map(|s| s.pool_stats().expect("fused shards always have a pool"))
             .collect()
     }
@@ -84,6 +85,7 @@ impl Replicas {
                     .map(|p| p.resident_pages)
                     .unwrap_or(usize::MAX)
             })
+            // lint:allow(hot-path-panic) new() inserts the base model, so shards is never empty
             .expect("at least one shard")
     }
 }
@@ -165,7 +167,10 @@ impl Engine for Replicas {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("decode worker panicked"))
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("decode worker thread panicked")))
+                })
                 .collect()
         });
         let mut logits = Matrix::zeros(n, vocab);

@@ -212,6 +212,7 @@ impl FusedQlrMatrix {
     pub fn byte_size(&self) -> usize {
         let mut count = crate::quant::ByteCount(0);
         self.write_to(&mut count)
+            // lint:allow(hot-path-panic) ByteCount's Write impl never errors; write_to has no other failure source
             .expect("counting writer is infallible");
         count.0
     }
@@ -476,6 +477,27 @@ pub struct FusedModel {
     explicit_budget: bool,
 }
 
+/// Hard cap on any name-length field read from a fused container. Real
+/// family/param/matrix names are tens of bytes; a length beyond this is a
+/// corrupt count and must error before it sizes an allocation.
+pub const MAX_NAME_BYTES: usize = 4096;
+
+/// Hard cap on a dense param's rank read from a fused container (real
+/// shapes are 1-D/2-D; 8 leaves headroom without admitting a 4-billion
+/// iteration dim-read loop from one flipped bit).
+pub const MAX_TENSOR_DIMS: usize = 8;
+
+fn checked_name_len(raw: u32, what: &str) -> Result<usize> {
+    let n = raw as usize;
+    if n > MAX_NAME_BYTES {
+        bail!(
+            "fused container: {what} length {n} exceeds the {MAX_NAME_BYTES}-byte \
+             cap — corrupt count field"
+        );
+    }
+    Ok(n)
+}
+
 /// The uniform-style plan an ODF2/ODF1 matrix (or a `pack_dense` one) maps
 /// to: everything observable comes from the matrix itself (realized rank,
 /// packed scheme/bits/group, rotation); the init is unknown so it records
@@ -646,6 +668,7 @@ impl FusedModel {
             self.pool.page_tokens(),
             self.pool.budget_bytes(),
         )
+        // lint:allow(hot-path-panic) self.pool was built from this exact geometry/budget, which KvPool::new already accepted
         .expect("existing pool geometry always holds a page");
         FusedModel {
             family: self.family.clone(),
@@ -772,6 +795,11 @@ impl FusedModel {
 
     /// Read a v3/v2/v1 container. v2/v1 matrices get a synthesized
     /// uniform-style plan (observable fields from the matrix itself).
+    ///
+    /// Length fields read from the stream are range-checked *before* they
+    /// size an allocation ([`MAX_NAME_BYTES`], [`MAX_TENSOR_DIMS`]): a
+    /// corrupt count must surface as a ranged error, not an allocation
+    /// bomb or a multi-gigabyte read loop.
     pub fn read_from(family: &FamilySpec, f: &mut impl Read) -> Result<FusedModel> {
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
@@ -784,7 +812,7 @@ impl FusedModel {
             f.read_exact(&mut b4)?;
             Ok(u32::from_le_bytes(b4))
         };
-        let nlen = next_u32(f)? as usize;
+        let nlen = checked_name_len(next_u32(f)?, "family name")?;
         let mut nb = vec![0u8; nlen];
         f.read_exact(&mut nb)?;
         let name = String::from_utf8(nb)?;
@@ -810,11 +838,17 @@ impl FusedModel {
         let mut filled = vec![false; family.params.len()];
         let ndense = next_u32(f)? as usize;
         for _ in 0..ndense {
-            let nlen = next_u32(f)? as usize;
+            let nlen = checked_name_len(next_u32(f)?, "dense param name")?;
             let mut nb = vec![0u8; nlen];
             f.read_exact(&mut nb)?;
             let pname = String::from_utf8(nb)?;
             let ndim = next_u32(f)? as usize;
+            if ndim > MAX_TENSOR_DIMS {
+                bail!(
+                    "fused container: dense param '{pname}' claims {ndim} dims \
+                     (cap {MAX_TENSOR_DIMS}) — corrupt count field"
+                );
+            }
             let mut dims = Vec::with_capacity(ndim);
             for _ in 0..ndim {
                 dims.push(next_u32(f)? as usize);
@@ -848,7 +882,7 @@ impl FusedModel {
         let mut mats = BTreeMap::new();
         let mut plans = BTreeMap::new();
         for _ in 0..count {
-            let nlen = next_u32(f)? as usize;
+            let nlen = checked_name_len(next_u32(f)?, "matrix name")?;
             let mut nb = vec![0u8; nlen];
             f.read_exact(&mut nb)?;
             let mname = String::from_utf8(nb)?;
@@ -1708,6 +1742,55 @@ mod tests {
         let a = fm.forward(&tokens, 2, 6).unwrap();
         let b = back.forward(&tokens, 2, 6).unwrap();
         assert!(a.max_abs_diff(&b) == 0.0);
+    }
+
+    /// Corrupt length fields must surface as ranged errors *before* they
+    /// size an allocation or a read loop: an oversized name length, an
+    /// oversized dim count, and truncated streams all refuse to load.
+    #[test]
+    fn corrupt_container_counts_are_ranged_errors() {
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 23);
+        let fm = FusedModel::pack_dense(&params, "mxint", 4, 16).unwrap();
+        let mut buf = Vec::new();
+        fm.write_to(&mut buf).unwrap();
+
+        // Family-name length (bytes 4..8) blown up to ~4 GiB: a ranged
+        // refusal, not an allocation attempt.
+        let mut bad = buf.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = FusedModel::read_from(&fam, &mut bad.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "unexpected error: {err:#}");
+
+        // One past the cap is refused too (boundary).
+        let mut bad = buf.clone();
+        bad[4..8].copy_from_slice(&(MAX_NAME_BYTES as u32 + 1).to_le_bytes());
+        let err = FusedModel::read_from(&fam, &mut bad.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "unexpected error: {err:#}");
+
+        // First dense param's ndim field blown up: the dim-read loop must
+        // refuse instead of spinning for 4 billion reads. Layout: magic(4)
+        // + nlen(4) + name + batch(4) + seq(4) + ndense(4) + pnlen(4) +
+        // pname + ndim.
+        let name_len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let ndense_off = 8 + name_len + 8;
+        let ndense = u32::from_le_bytes(buf[ndense_off..ndense_off + 4].try_into().unwrap());
+        assert!(ndense > 0, "test needs at least one stored dense param");
+        let pn_off = ndense_off + 4;
+        let pn_len = u32::from_le_bytes(buf[pn_off..pn_off + 4].try_into().unwrap()) as usize;
+        let ndim_off = pn_off + 4 + pn_len;
+        let mut bad = buf.clone();
+        bad[ndim_off..ndim_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = FusedModel::read_from(&fam, &mut bad.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("dims"), "unexpected error: {err:#}");
+
+        // Truncated streams fail cleanly at any cut point.
+        for cut in [3, 7, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                FusedModel::read_from(&fam, &mut &buf[..cut]).is_err(),
+                "cut at {cut} loaded"
+            );
+        }
     }
 
     /// A heterogeneous compressed model (different rank/scheme/bits per

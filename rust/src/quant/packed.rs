@@ -524,6 +524,7 @@ impl PackedMatrix {
     /// footprint reporting can never drift from the on-disk format.
     pub fn byte_size(&self) -> usize {
         let mut count = ByteCount(0);
+        // lint:allow(hot-path-panic) ByteCount's Write impl never errors; write_to has no other failure source
         self.write_to(&mut count).expect("counting writer is infallible");
         count.0
     }
@@ -693,7 +694,7 @@ impl PackedMatrix {
                     .map(|c| i16::from_le_bytes([c[0], c[1]]))
                     .collect();
                 for &e in &exps {
-                    if e != MX_ZERO_EXP && !(-149..=127).contains(&(e as i32)) {
+                    if e != MX_ZERO_EXP && !(-149..=127).contains(&i32::from(e)) {
                         bail!("mxint packed matrix: exponent {e} outside f32 range");
                     }
                 }
@@ -895,6 +896,7 @@ fn unpack_swar(buf: &[u8], start_bit: usize, bits: u32, cpc: usize, out: &mut [i
     }
     let mut byte = bitpos / 8;
     while n - k >= cpc && byte + 8 <= buf.len() {
+        // lint:allow(hot-path-panic) the loop guard `byte + 8 <= buf.len()` makes the 8-byte slice exact
         let w = u64::from_le_bytes(buf[byte..byte + 8].try_into().unwrap());
         let mut shift = 0u32;
         for slot in &mut out[k..k + cpc] {

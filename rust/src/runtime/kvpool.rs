@@ -50,6 +50,16 @@
 //! Reserving ahead of compute means pool exhaustion surfaces as a clean
 //! typed error with no half-written step — the scheduler can preempt a
 //! session and retry.
+//!
+//! ## Machine-checked invariants
+//!
+//! The invariants above are enforced by tooling, not convention:
+//! `tools/odlri-lint` statically refuses panics on this path, requires the
+//! `KvError` tags below to stay in sync with their `is_*` classifiers, and
+//! forbids holding the pool mutex across a forward. [`KvPool::audit`] /
+//! [`KvPool::audit_tables`] dynamically cross-check refcounts,
+//! registration state, and the free list against the live block tables —
+//! the serving loop runs them at every tick boundary in debug builds.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -278,6 +288,7 @@ impl KvPool {
         let pages_per = max_context.max(1).div_ceil(DEFAULT_PAGE_TOKENS);
         let budget = 2 * max_batch.max(1) * pages_per * page_bytes;
         KvPool::new(n_layers, kv_dim, DEFAULT_PAGE_TOKENS, budget)
+            // lint:allow(hot-path-panic) budget = 2·max(1)·div_ceil(..)·page_bytes >= page_bytes, so max_pages >= 1
             .expect("default kv budget always holds at least one page")
     }
 
@@ -391,8 +402,9 @@ impl KvPool {
                     max_pages: self.max_pages,
                 });
             };
-            let key = inner.pages[id].reg_key.take().expect("cached page has a key");
-            inner.index.remove(&key);
+            if let Some(key) = inner.pages[id].reg_key.take() {
+                inner.index.remove(&key);
+            }
             inner.pages[id].reg_prefix = None;
             inner.pages[id].reg_chain = None;
             inner.reclaimed += 1;
@@ -683,23 +695,156 @@ impl KvPool {
         inner.tick += 1;
         let tick = inner.tick;
         while table.pages.len() > keep {
-            let pid = table.pages.pop().expect("len checked above");
+            let Some(pid) = table.pages.pop() else { break };
             Self::decref_locked(&mut inner, pid, tick);
         }
         if let Some(&pid) = table.pages.last() {
             let e = &mut inner.pages[pid];
-            if e.refs == 1 {
-                if let Some(prefix) = &e.reg_prefix {
-                    if prefix.len() > new_len {
-                        let key = e.reg_key.take().expect("registered page has a key");
-                        e.reg_prefix = None;
-                        e.reg_chain = None;
-                        inner.index.remove(&key);
-                    }
+            if e.refs == 1 && e.reg_prefix.as_ref().is_some_and(|prefix| prefix.len() > new_len) {
+                let key = e.reg_key.take();
+                e.reg_prefix = None;
+                e.reg_chain = None;
+                if let Some(key) = key {
+                    inner.index.remove(&key);
                 }
             }
         }
         table.shared_len = table.shared_len.min(new_len);
+    }
+
+    // ------------------------------------------------------ debug auditor
+
+    /// Whether two handles share one underlying pool (used by the serving
+    /// loop to group per-session caches by pool before auditing).
+    pub fn ptr_eq(&self, other: &KvPool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Cross-check the pool's internal bookkeeping: free-list sanity,
+    /// page-buffer geometry, all-or-nothing registration state, the
+    /// `index` ↔ `reg_key` bijection, no orphaned pages, and the
+    /// peak-resident high-water mark. Returns a description of the first
+    /// violated invariant. Pure read; takes the lock once.
+    pub fn audit(&self) -> Result<(), String> {
+        let inner = self.lock();
+        self.audit_impl(&inner, None)
+    }
+
+    /// [`audit`](Self::audit) plus a refcount cross-check against the
+    /// *complete* set of live block tables on this pool: every table entry
+    /// must be resident, every page's refcount must equal its occurrence
+    /// count across the tables, and no table may claim a shared extent
+    /// beyond the positions it maps. With `tables` empty this is the
+    /// no-leak check — after the last session drains, every refcount must
+    /// be zero (registered pages may stay cached, but nothing may pin
+    /// them).
+    pub fn audit_tables(&self, tables: &[&BlockTable]) -> Result<(), String> {
+        let inner = self.lock();
+        self.audit_impl(&inner, Some(tables))
+    }
+
+    fn audit_impl(&self, inner: &PoolInner, tables: Option<&[&BlockTable]>) -> Result<(), String> {
+        let n = inner.pages.len();
+        let floats = self.n_layers * self.page_tokens * self.kv_dim;
+        if n > self.max_pages {
+            return Err(format!(
+                "{n} pages allocated but the budget holds only {}",
+                self.max_pages
+            ));
+        }
+        let mut free = vec![false; n];
+        for &id in &inner.free {
+            if id >= n {
+                return Err(format!("free-list entry {id} out of range ({n} pages)"));
+            }
+            if free[id] {
+                return Err(format!("page {id} appears twice in the free list"));
+            }
+            free[id] = true;
+            let e = &inner.pages[id];
+            if e.refs != 0 {
+                return Err(format!("free page {id} still has {} refs", e.refs));
+            }
+            if e.reg_key.is_some() {
+                return Err(format!("free page {id} is still registered"));
+            }
+        }
+        for (id, e) in inner.pages.iter().enumerate() {
+            if e.k.len() != floats || e.v.len() != floats {
+                return Err(format!(
+                    "page {id} buffers hold {}/{} floats but geometry says {floats}",
+                    e.k.len(),
+                    e.v.len()
+                ));
+            }
+            let full = e.reg_key.is_some() && e.reg_prefix.is_some() && e.reg_chain.is_some();
+            let none = e.reg_key.is_none() && e.reg_prefix.is_none() && e.reg_chain.is_none();
+            if !full && !none {
+                return Err(format!("page {id} has partial registration state"));
+            }
+            if !free[id] && e.refs == 0 && e.reg_key.is_none() {
+                return Err(format!(
+                    "page {id} is orphaned: not free, not referenced, not registered"
+                ));
+            }
+        }
+        for (&key, &pid) in &inner.index {
+            if pid >= n {
+                return Err(format!("index key {key:#x} points past the page vec ({pid})"));
+            }
+            if inner.pages[pid].reg_key != Some(key) {
+                return Err(format!(
+                    "index key {key:#x} maps to page {pid}, which is registered differently"
+                ));
+            }
+        }
+        let registered = inner.pages.iter().filter(|e| e.reg_key.is_some()).count();
+        if registered != inner.index.len() {
+            return Err(format!(
+                "{registered} pages carry a reg_key but the index holds {} entries",
+                inner.index.len()
+            ));
+        }
+        let resident = n - inner.free.len();
+        if inner.peak_resident < resident {
+            return Err(format!(
+                "peak_resident {} below current resident {resident}",
+                inner.peak_resident
+            ));
+        }
+        let Some(tables) = tables else {
+            return Ok(());
+        };
+        let mut occ = vec![0usize; n];
+        for (ti, t) in tables.iter().enumerate() {
+            for &pid in &t.pages {
+                if pid >= n {
+                    return Err(format!("table {ti} maps a position to nonexistent page {pid}"));
+                }
+                if free[pid] {
+                    return Err(format!("table {ti} holds freed page {pid}"));
+                }
+                occ[pid] += 1;
+            }
+            if t.shared_len > t.pages.len() * self.page_tokens {
+                return Err(format!(
+                    "table {ti} claims shared_len {} over only {} mapped positions",
+                    t.shared_len,
+                    t.pages.len() * self.page_tokens
+                ));
+            }
+        }
+        for (id, e) in inner.pages.iter().enumerate() {
+            if e.refs != occ[id] {
+                return Err(format!(
+                    "page {id} has {} refs but appears {} times across {} live tables",
+                    e.refs,
+                    occ[id],
+                    tables.len()
+                ));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -1149,5 +1294,81 @@ mod tests {
         assert_eq!(ka.row(5), &row(0.0, 5)[..]);
         p.release(&mut a);
         p.release(&mut b);
+    }
+
+    #[test]
+    fn audit_passes_through_share_cow_reclaim_and_release() {
+        let p = pool(4);
+        let tokens: Vec<i32> = (0..10).collect();
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 10).unwrap();
+        fill(&p, &a, 0, 10, 0.0);
+        p.register(&a, &tokens);
+        p.audit_tables(&[&a]).unwrap();
+        // Adoption: refcounts double on the shared chain.
+        let mut b = BlockTable::default();
+        assert_eq!(p.adopt(&mut b, &tokens), 10);
+        p.audit_tables(&[&a, &b]).unwrap();
+        // COW on the shared tail page.
+        p.ensure(&mut b, 10, 1).unwrap();
+        assert_eq!(p.stats().cow_copies, 1);
+        p.audit_tables(&[&a, &b]).unwrap();
+        // Release A: its registered pages stay cached at refcount B-only.
+        p.release(&mut a);
+        p.audit_tables(&[&b]).unwrap();
+        // Exhaust the pool so a cached page is reclaimed.
+        p.release(&mut b);
+        let mut c = BlockTable::default();
+        p.ensure(&mut c, 0, 16).unwrap();
+        assert!(p.stats().reclaimed_pages > 0, "reclaim exercised");
+        p.audit_tables(&[&c]).unwrap();
+        // Drain: the no-leak check — every refcount back to zero.
+        p.release(&mut c);
+        p.audit_tables(&[]).unwrap();
+        p.audit().unwrap();
+    }
+
+    #[test]
+    fn audit_rejects_corrupted_state() {
+        // A leaked reference: a table the auditor is not told about still
+        // pins pages, so the empty-table no-leak check must fail.
+        let p = pool(4);
+        let mut a = BlockTable::default();
+        p.ensure(&mut a, 0, 4).unwrap();
+        let err = p.audit_tables(&[]).unwrap_err();
+        assert!(err.contains("refs"), "unexpected report: {err}");
+        // A table listed twice claims more occurrences than refs back it.
+        let err = p.audit_tables(&[&a, &a]).unwrap_err();
+        assert!(err.contains("refs"), "unexpected report: {err}");
+        p.audit_tables(&[&a]).unwrap();
+        // A hand-built table pointing at a freed page is caught.
+        p.release(&mut a);
+        let ghost = BlockTable {
+            pages: vec![0],
+            shared_len: 0,
+        };
+        let err = p.audit_tables(&[&ghost]).unwrap_err();
+        assert!(
+            err.contains("freed") || err.contains("refs"),
+            "unexpected report: {err}"
+        );
+        // shared_len past the mapped extent is caught.
+        let mut d = BlockTable::default();
+        p.ensure(&mut d, 0, 4).unwrap();
+        let bogus = BlockTable {
+            pages: d.pages.clone(),
+            shared_len: 99,
+        };
+        let err = p.audit_tables(&[&bogus]).unwrap_err();
+        assert!(err.contains("shared_len"), "unexpected report: {err}");
+        p.release(&mut d);
+    }
+
+    #[test]
+    fn pool_identity_is_by_shared_state() {
+        let p = pool(2);
+        let q = p.clone();
+        assert!(p.ptr_eq(&q));
+        assert!(!p.ptr_eq(&pool(2)));
     }
 }

@@ -299,6 +299,7 @@ impl Manifest {
         let mut artifacts = BTreeMap::new();
         let mut families = BTreeMap::new();
         for name in FamilySpec::builtin_names() {
+            // lint:allow(hot-path-panic) iterating builtin_names(): every name resolves by construction
             let fam = FamilySpec::builtin(name).expect("builtin family");
             let pspecs: Vec<IoSpec> = fam
                 .params
@@ -322,6 +323,7 @@ impl Manifest {
             // fwd_fused: params + (Q, L, R) per projection + tokens → logits
             let mut inputs = pspecs.clone();
             for proj in &fam.projections {
+                // lint:allow(hot-path-panic) fam.projections is a subset of fam.params by FamilySpec construction
                 let shape = fam.param_shape(proj).expect("projection shape");
                 inputs.push(IoSpec::f32(&format!("{proj}.q"), shape.to_vec()));
                 inputs.push(IoSpec::f32(

@@ -110,10 +110,9 @@ impl Value {
     pub fn to_matrix_2d(&self) -> Result<Matrix> {
         let data = self.f32_data()?.to_vec();
         let shape = self.shape();
-        if shape.is_empty() {
+        let Some(&last) = shape.last() else {
             return Ok(Matrix::from_vec(1, 1, data));
-        }
-        let last = *shape.last().unwrap();
+        };
         let lead: usize = shape[..shape.len() - 1].iter().product();
         Ok(Matrix::from_vec(lead, last, data))
     }

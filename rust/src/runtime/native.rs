@@ -373,6 +373,16 @@ impl KvCache {
         self.max_len
     }
 
+    /// The pool and block table behind a paged cache (`None` for flat
+    /// backings). The serving loop's debug-mode auditor uses this to
+    /// cross-check pool refcounts against the live tables.
+    pub fn pool_and_table(&self) -> Option<(&KvPool, &BlockTable)> {
+        match &self.backing {
+            KvBacking::Flat(_) => None,
+            KvBacking::Paged { pool, table } => Some((pool, table)),
+        }
+    }
+
     /// Positions adopted from the pool's prefix index (0 for flat caches
     /// and unshared sessions).
     pub fn shared_len(&self) -> usize {

@@ -73,7 +73,12 @@ impl PjrtEngine {
         manifest: &Manifest,
         name: &str,
     ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = self
+            .cache
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(name)
+        {
             return Ok(exe.clone());
         }
         let spec = manifest
@@ -90,7 +95,7 @@ impl PjrtEngine {
         let exe = Arc::new(exe);
         self.cache
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .insert(name.to_string(), exe.clone());
         Ok(exe)
     }

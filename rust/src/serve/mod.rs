@@ -111,6 +111,17 @@
 //! Speculative runs additionally report drafted/accepted/rejected token
 //! counters and [`ServeReport::acceptance_rate`], the fraction of draft
 //! proposals the target confirmed.
+//!
+//! ## Machine-checked invariants
+//!
+//! The rules this module relies on are enforced by tooling, not
+//! convention: `tools/odlri-lint` statically refuses panics on the
+//! scheduler hot path and pool locks held across a forward, and keeps the
+//! `KvError` tags in sync with their classifiers. In debug builds (and
+//! therefore the whole test suite) the one-shot serving loop additionally
+//! runs [`KvPool::audit_tables`](crate::runtime::kvpool::KvPool::audit_tables)
+//! against the complete set of live block tables at every tick boundary,
+//! and checks every touched pool for page leaks once the scheduler drains.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -590,7 +601,9 @@ impl<'a> Scheduler<'a> {
                 if !admissible {
                     break 'admission;
                 }
-                let arrived = self.queues[ci].pop_front().unwrap();
+                let Some(arrived) = self.queues[ci].pop_front() else {
+                    break; // peeked Some above; defensive for the linter
+                };
                 let is_score = matches!(arrived.inc.req, Request::Score { .. });
                 if is_score {
                     score_batch.push(arrived);
@@ -611,6 +624,56 @@ impl<'a> Scheduler<'a> {
         Ok(())
     }
 
+    /// Debug-mode tick auditor: collect every live paged cache (active
+    /// target sessions, their draft mirrors, mid-prefill chunk states),
+    /// group them by underlying pool identity, and run
+    /// [`crate::runtime::kvpool::KvPool::audit_tables`] on each pool
+    /// against its complete table set. A pool seen on an earlier tick but
+    /// holding no table this tick is audited against the empty set — every
+    /// refcount must be back at zero (registered pages may stay cached).
+    /// Newly seen pools are appended to `seen` so the caller can run the
+    /// final no-leak check after the scheduler drains.
+    #[cfg(debug_assertions)]
+    fn audit_tick(&self, seen: &mut Vec<crate::runtime::kvpool::KvPool>) -> Result<()> {
+        use crate::runtime::kvpool::{BlockTable, KvPool};
+        let mut caches: Vec<&KvCache> = Vec::new();
+        for a in &self.active {
+            caches.push(&a.session.cache);
+            if let Some(ds) = &a.draft_session {
+                caches.push(&ds.cache);
+            }
+        }
+        for p in &self.prefilling {
+            if let Some(c) = &p.state {
+                caches.push(c);
+            }
+        }
+        let mut groups: Vec<(&KvPool, Vec<&BlockTable>)> = Vec::new();
+        for c in caches {
+            let Some((pool, table)) = c.pool_and_table() else {
+                continue;
+            };
+            match groups.iter_mut().find(|(p, _)| p.ptr_eq(pool)) {
+                Some((_, tables)) => tables.push(table),
+                None => groups.push((pool, vec![table])),
+            }
+        }
+        for (pool, tables) in &groups {
+            pool.audit_tables(tables)
+                .map_err(|e| anyhow!("kv pool audit failed at tick boundary: {e}"))?;
+            if !seen.iter().any(|p| p.ptr_eq(pool)) {
+                seen.push((*pool).clone());
+            }
+        }
+        for pool in seen.iter() {
+            if !groups.iter().any(|(p, _)| p.ptr_eq(pool)) {
+                pool.audit_tables(&[])
+                    .map_err(|e| anyhow!("kv pool audit failed at idle tick: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
     /// Resume preempted sessions highest-class-oldest first while slots
     /// and pool pages allow: re-prefill the parked token history
     /// (recreating the dropped KV rows bit-identically), discard the
@@ -618,13 +681,15 @@ impl<'a> Scheduler<'a> {
     /// decode pool.
     fn try_resume(&mut self) -> Result<()> {
         while !self.preempted.is_empty() && self.slots_used() < self.max_batch {
-            let idx = self
+            let Some(idx) = self
                 .preempted
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, p)| (p.class, p.id))
                 .map(|(i, _)| i)
-                .expect("non-empty preempted list");
+            else {
+                break; // loop condition guarantees non-empty
+            };
             let history = self.preempted[idx].history.clone();
             match self.engine.prefill(&history) {
                 Ok((session, _logits)) => {
@@ -850,13 +915,15 @@ impl<'a> Scheduler<'a> {
     fn prefill_tick(&mut self) -> Result<()> {
         let mut tokens_left = self.prefill_chunk;
         while tokens_left > 0 && !self.prefilling.is_empty() {
-            let idx = self
+            let Some(idx) = self
                 .prefilling
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, p)| (p.class, p.id))
                 .map(|(i, _)| i)
-                .expect("non-empty prefilling list");
+            else {
+                break; // loop condition guarantees non-empty
+            };
             let (target, is_final) = {
                 let p = &self.prefilling[idx];
                 let total = p.prompt.len();
@@ -946,7 +1013,23 @@ impl<'a> Scheduler<'a> {
         let mut sampler = Sampler::new(p.sampling);
         let next = sampler.sample(logits.row(logits.rows() - 1));
         let prompt_len = p.prompt.len();
-        let cache = p.state.expect("completed prefill has a cache");
+        let Some(cache) = p.state else {
+            // Every prefill_chunk call stores a cache into `state` before
+            // returning Ok, and finish_prefill only runs on the final Ok
+            // chunk — a missing cache is an engine contract bug. Refuse
+            // the one request instead of killing the server.
+            debug_assert!(false, "completed prefill lost its cache");
+            self.stats.rejected += 1;
+            self.finish(
+                p.id,
+                p.submitted,
+                &p.done,
+                Response::Rejected {
+                    error: "internal: completed prefill lost its cache".to_string(),
+                },
+            );
+            return;
+        };
         let ag = ActiveGen {
             id: p.id,
             class: p.class,
@@ -1017,8 +1100,8 @@ impl<'a> Scheduler<'a> {
     /// session left the exhaustion is fatal — a lone session cannot free
     /// its own pages (a mid-prefill session is requeued first if present).
     fn decode_once(&mut self) -> Result<()> {
-        if self.draft.is_some() && self.speculate > 0 {
-            return self.speculative_tick();
+        if let (Some(draft), true) = (self.draft, self.speculate > 0) {
+            return self.speculative_tick(draft);
         }
         let engine = self.engine;
         loop {
@@ -1078,7 +1161,7 @@ impl<'a> Scheduler<'a> {
     /// a session preempted by an earlier retry in the same tick is simply
     /// skipped. Counts as ONE decode step in the report (one latency
     /// sample per tick keeps `decode_steps == decode_step_latencies_s`).
-    fn speculative_tick(&mut self) -> Result<()> {
+    fn speculative_tick(&mut self, draft: &'a dyn Engine) -> Result<()> {
         let t0 = Instant::now();
         let mut emitted_total = 0usize;
         let ids: Vec<u64> = self.active.iter().map(|a| a.id).collect();
@@ -1087,7 +1170,7 @@ impl<'a> Scheduler<'a> {
                 let Some(i) = self.active.iter().position(|a| a.id == id) else {
                     break; // preempted by an earlier retry this tick
                 };
-                match self.spec_advance_one(i) {
+                match self.spec_advance_one(draft, i) {
                     Ok(emitted) => {
                         emitted_total += emitted;
                         // Retire at-budget sessions NOW, not at tick end:
@@ -1136,8 +1219,7 @@ impl<'a> Scheduler<'a> {
     /// escape, so the caller's retry loop reasons about exactly one KV
     /// pool; [`Engine::verify_step`] is atomic, leaving the session
     /// untouched for the post-preemption retry.
-    fn spec_advance_one(&mut self, i: usize) -> Result<usize> {
-        let draft = self.draft.expect("speculative round without a draft engine");
+    fn spec_advance_one(&mut self, draft: &'a dyn Engine, i: usize) -> Result<usize> {
         let t0 = Instant::now();
         let (greedy, remaining, history_len) = {
             let a = &self.active[i];
@@ -1166,33 +1248,38 @@ impl<'a> Scheduler<'a> {
         }
         let mut drafts: Vec<i32> = Vec::with_capacity(m);
         if m > 0 {
+            // The rebuild above either stored a draft session or zeroed
+            // `m`; if it is somehow absent, drafting nothing degrades this
+            // round to plain single-token decode via the same verify call.
             let a = &mut self.active[i];
-            let ds = a.draft_session.as_mut().expect("draft session ensured above");
-            let mut draft_ok = true;
-            // Catch-up: after a fully accepted round the draft trails the
-            // target by exactly the bonus token it never consumed.
-            while draft_ok && ds.tokens.len() < a.session.tokens.len() {
-                let t = a.session.tokens[ds.tokens.len()];
-                match draft.decode_step(&mut [&mut *ds], &[t]) {
-                    Ok(_) => self.stats.draft_steps += 1,
-                    Err(_) => draft_ok = false,
-                }
-            }
-            let mut cur = a.next;
-            while draft_ok && drafts.len() < m {
-                match draft.decode_step(&mut [&mut *ds], &[cur]) {
-                    Ok(lg) => {
-                        self.stats.draft_steps += 1;
-                        cur = crate::engine::argmax(lg.row(0)) as i32;
-                        drafts.push(cur);
+            if let Some(ds) = a.draft_session.as_mut() {
+                let mut draft_ok = true;
+                // Catch-up: after a fully accepted round the draft trails
+                // the target by exactly the bonus token it never consumed.
+                while draft_ok && ds.tokens.len() < a.session.tokens.len() {
+                    let t = a.session.tokens[ds.tokens.len()];
+                    match draft.decode_step(&mut [&mut *ds], &[t]) {
+                        Ok(_) => self.stats.draft_steps += 1,
+                        Err(_) => draft_ok = false,
                     }
-                    Err(_) => draft_ok = false,
                 }
-            }
-            if !draft_ok {
-                // Unknown draft-side state: drop the mirror (pages free);
-                // tokens drafted before the failure are still verifiable.
-                a.draft_session = None;
+                let mut cur = a.next;
+                while draft_ok && drafts.len() < m {
+                    match draft.decode_step(&mut [&mut *ds], &[cur]) {
+                        Ok(lg) => {
+                            self.stats.draft_steps += 1;
+                            cur = crate::engine::argmax(lg.row(0)) as i32;
+                            drafts.push(cur);
+                        }
+                        Err(_) => draft_ok = false,
+                    }
+                }
+                if !draft_ok {
+                    // Unknown draft-side state: drop the mirror (pages
+                    // free); tokens drafted before the failure are still
+                    // verifiable.
+                    a.draft_session = None;
+                }
             }
         }
         // One batched target step verifies the pending token + all drafts.
@@ -1236,6 +1323,7 @@ impl<'a> Scheduler<'a> {
             .enumerate()
             .max_by_key(|(_, a)| (a.class, a.id))
             .map(|(i, _)| i)
+            // lint:allow(hot-path-panic) callers check active.len() > 1; a silent no-op would spin the exhaustion retry loop forever
             .expect("preempt with no active session");
         let ag = self.active.remove(idx);
         self.stats.preemptions += 1;
@@ -1401,8 +1489,21 @@ fn serve_oneshot_inner(
         });
         rxs.push(drx);
     }
+    // Debug builds (and therefore the whole test suite — the test profile
+    // inherits dev) audit every KV pool against the complete set of live
+    // block tables at each tick boundary, and check for page leaks once the
+    // scheduler drains.
+    #[cfg(debug_assertions)]
+    let mut audited_pools: Vec<crate::runtime::kvpool::KvPool> = Vec::new();
     while sched.has_work() {
         sched.step()?;
+        #[cfg(debug_assertions)]
+        sched.audit_tick(&mut audited_pools)?;
+    }
+    #[cfg(debug_assertions)]
+    for pool in &audited_pools {
+        pool.audit_tables(&[])
+            .map_err(|e| anyhow!("kv pool leak after drain: {e}"))?;
     }
     let mut out = Vec::with_capacity(rxs.len());
     for rx in rxs {

@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
 # Refresh the committed bench snapshots (BENCH_kernels.json /
-# BENCH_runtime.json) in place. Run from anywhere inside the repo; needs
-# a Rust toolchain. CI runs the same two bench commands and fails if the
-# JSON still carries the placeholder empty `entries` arrays, so commit
-# the refreshed files (or take them from the CI `bench-json` artifact).
+# BENCH_runtime.json / BENCH_serve.json) in place. Run from anywhere
+# inside the repo; needs a Rust toolchain. CI runs the same bench
+# commands, fails if any JSON still carries the placeholder empty
+# `entries` array, and on pushes to main the `bench-commit` job commits
+# the refreshed files back automatically from the `bench-json` artifact
+# — so committing by hand is only needed off-main.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo bench --bench bench_kernels -- --fast decode
 cargo bench --bench bench_runtime -- --fast
+cargo bench --bench bench_serve -- --fast
 
-for f in BENCH_kernels.json BENCH_runtime.json; do
+for f in BENCH_kernels.json BENCH_runtime.json BENCH_serve.json; do
   if python3 -c "import json,sys; sys.exit(0 if json.load(open('$f'))['entries'] else 1)"; then
     echo "refreshed $f"
   else

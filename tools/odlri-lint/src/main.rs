@@ -1,0 +1,1020 @@
+//! `odlri-lint` — a repo-specific static analysis pass over `rust/src`.
+//!
+//! The repo's core claims (bit-exact `Q` decode, bit-sound prefix sharing,
+//! bit-exact preempt/resume, speculative == plain greedy) rest on invariants
+//! that a general-purpose linter cannot know about. This tool makes them
+//! machine-checked: it does a token-level scan (comments and string literals
+//! are masked out, `#[cfg(test)]` items are skipped) and fails the build on
+//! any violation. Run as `cargo run -p odlri-lint -- rust/src`; CI runs the
+//! same command as a required job.
+//!
+//! ## Rules
+//!
+//! * **hot-path-panic** — no `.unwrap()` / `.expect(` / `panic!` / `todo!` /
+//!   `unimplemented!` in non-test code under `serve/`, `engine/`, `fused/`,
+//!   `runtime/`, or `quant/packed.rs`. A panic on the scheduler or decode
+//!   hot path kills every in-flight session of the process; failures there
+//!   must be typed errors the scheduler can route (preempt / reject / retry).
+//! * **checked-narrowing** — inside container read paths (functions named
+//!   `read_from` / `parse*` in `quant/packed.rs`, `fused/mod.rs`,
+//!   `runtime/manifest.rs`), `as`-casts to a sub-64-bit integer type
+//!   (`u8/u16/u32/i8/i16/i32`) are refused: a wrapped cast while
+//!   deserializing turns a corrupt container into wrong logits instead of a
+//!   ranged error. Use `try_into()` / `T::from()` with a typed error.
+//! * **error-tag-sync** — `runtime/kvpool.rs` classifies `KvError` values
+//!   across the vendored no-downcast `anyhow` by scanning `{e:#}` chains for
+//!   stable `*_TAG` strings. Every `*_TAG` const must have a matching
+//!   `is_<tag>` classifier and vice versa, and every tag must appear in the
+//!   `Display` impl — a tag without a classifier silently demotes a typed
+//!   refusal to a fatal error.
+//! * **cli-help-sync** — every flag/switch registered in `cli::COMMANDS`
+//!   must appear as a `--flag` token in `cli::HELP`, and every `--flag`
+//!   token in `HELP` must exist in the registry. Undocumented flags and
+//!   documented-but-rejected flags are both failures.
+//! * **lock-across-forward** — no lock guard (a `let` binding whose
+//!   initializer contains `.lock(`) may be live across a call to `fwd_*` /
+//!   `prefill*` / `project` / `verify_step*` (brace-depth guard-lifetime
+//!   heuristic). Holding the KV pool mutex across a forward serializes every
+//!   other session's decode behind one matmul — and deadlocks if the forward
+//!   re-enters the pool.
+//!
+//! ## Escapes
+//!
+//! A violation that is provably fine carries a narrowly scoped allow on the
+//! same line or the line directly above:
+//!
+//! ```text
+//! // lint:allow(hot-path-panic) <one-line justification, required>
+//! ```
+//!
+//! An allow with an empty justification is itself a violation, and so is an
+//! allow that matches nothing (they rot otherwise).
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const NARROW_TARGETS: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl Violation {
+    fn render(&self) -> String {
+        format!("{}:{}: {}: {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A `// lint:allow(<rule>) <justification>` directive.
+#[derive(Debug)]
+struct Allow {
+    line: usize,
+    rule: String,
+    justified: bool,
+    used: std::cell::Cell<bool>,
+}
+
+/// Source with comments and string/char literals blanked (byte-for-byte, so
+/// offsets and line numbers survive), plus the allow directives found in the
+/// stripped line comments.
+struct Masked {
+    text: Vec<u8>,
+    allows: Vec<Allow>,
+}
+
+impl Masked {
+    fn allowed(&self, rule: &str, line: usize) -> bool {
+        for a in &self.allows {
+            if a.rule == rule && a.justified && (a.line == line || a.line + 1 == line) {
+                a.used.set(true);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Blank comments and string/char literals with spaces (newlines kept), and
+/// collect `lint:allow` directives from line comments.
+fn mask(src: &str) -> Masked {
+    let bytes = src.as_bytes();
+    let mut out = bytes.to_vec();
+    let mut allows = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for b in &mut out[from..to] {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    };
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'\n' {
+            line += 1;
+            i += 1;
+        } else if b == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < bytes.len() && bytes[i] != b'\n' {
+                i += 1;
+            }
+            parse_allow(&src[start..i], line, &mut allows);
+            blank(&mut out, start, i);
+        } else if b == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < bytes.len() && depth > 0 {
+                if bytes[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    i += 2;
+                } else if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+        } else if b == b'"' {
+            // Raw string? Count `#`s directly before the quote; raw iff the
+            // char before them is an `r` not glued to an identifier.
+            let mut hashes = 0usize;
+            while i > hashes && bytes[i - 1 - hashes] == b'#' {
+                hashes += 1;
+            }
+            let r_at = i.checked_sub(hashes + 1);
+            let raw = r_at.is_some_and(|k| {
+                bytes[k] == b'r' && (k == 0 || !is_ident(bytes[k - 1]) || bytes[k - 1] == b'b')
+            });
+            let start = i;
+            i += 1;
+            if raw {
+                let close: Vec<u8> = std::iter::once(b'"')
+                    .chain(std::iter::repeat(b'#').take(hashes))
+                    .collect();
+                while i < bytes.len() && !bytes[i..].starts_with(&close) {
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i = (i + close.len()).min(bytes.len());
+            } else {
+                while i < bytes.len() && bytes[i] != b'"' {
+                    if bytes[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if bytes[i] == b'\\' {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                i = (i + 1).min(bytes.len());
+            }
+            blank(&mut out, start, i);
+        } else if b == b'\'' {
+            // Char literal vs lifetime.
+            let start = i;
+            if bytes.get(i + 1) == Some(&b'\\') {
+                i += 2;
+                while i < bytes.len() && bytes[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(bytes.len());
+                blank(&mut out, start, i);
+            } else if bytes.get(i + 2) == Some(&b'\'')
+                || (bytes.get(i + 1).is_some_and(|c| *c >= 0x80)
+                    && bytes[i + 1..].iter().take(5).any(|c| *c == b'\''))
+            {
+                i += 2;
+                while i < bytes.len() && bytes[i] != b'\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(bytes.len());
+                blank(&mut out, start, i);
+            } else {
+                i += 1; // lifetime: leave the identifier in place
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Masked { text: out, allows }
+}
+
+fn parse_allow(comment: &str, line: usize, allows: &mut Vec<Allow>) {
+    let Some(pos) = comment.find("lint:allow(") else {
+        return;
+    };
+    let rest = &comment[pos + "lint:allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        allows.push(Allow {
+            line,
+            rule: String::new(),
+            justified: false,
+            used: std::cell::Cell::new(false),
+        });
+        return;
+    };
+    let rule = rest[..close].trim().to_string();
+    let justified = !rest[close + 1..].trim().is_empty();
+    allows.push(Allow {
+        line,
+        rule,
+        justified,
+        used: std::cell::Cell::new(false),
+    });
+}
+
+/// Line number (1-based) of a byte offset.
+fn line_of(text: &[u8], offset: usize) -> usize {
+    1 + text[..offset].iter().filter(|b| **b == b'\n').count()
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (attribute → matching close
+/// brace of the next braced item; brace-less items are skipped).
+fn test_regions(masked: &[u8]) -> Vec<(usize, usize)> {
+    let needle = b"#[cfg(test)]";
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = find(&masked[from..], needle) {
+        let attr = from + rel;
+        from = attr + needle.len();
+        let mut i = from;
+        let mut open = None;
+        while i < masked.len() {
+            match masked[i] {
+                b'{' => {
+                    open = Some(i);
+                    break;
+                }
+                b';' => break, // brace-less item (e.g. `#[cfg(test)] use ...;`)
+                _ => i += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 0usize;
+        let mut close = masked.len();
+        for (j, b) in masked.iter().enumerate().skip(open) {
+            if *b == b'{' {
+                depth += 1;
+            } else if *b == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    close = j;
+                    break;
+                }
+            }
+        }
+        out.push((line_of(masked, attr), line_of(masked, close)));
+        from = close.min(masked.len().saturating_sub(1)) + 1;
+    }
+    out
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|(a, b)| (*a..=*b).contains(&line))
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack
+        .windows(needle.len())
+        .position(|w| w == needle)
+}
+
+// ----------------------------------------------------------- rule 1: panics
+
+fn hot_path_scope(rel: &str) -> bool {
+    rel.starts_with("serve/")
+        || rel.starts_with("engine/")
+        || rel.starts_with("fused/")
+        || rel.starts_with("runtime/")
+        || rel == "quant/packed.rs"
+}
+
+fn check_hot_path_panic(
+    rel: &str,
+    masked: &Masked,
+    regions: &[(usize, usize)],
+    out: &mut Vec<Violation>,
+) {
+    let text = &masked.text;
+    let tokens: [(&[u8], &str); 5] = [
+        (b".unwrap()", "`.unwrap()`"),
+        (b".expect(", "`.expect(...)`"),
+        (b"panic!", "`panic!`"),
+        (b"todo!", "`todo!`"),
+        (b"unimplemented!", "`unimplemented!`"),
+    ];
+    for (needle, label) in tokens {
+        let mut from = 0usize;
+        while let Some(rel_pos) = find(&text[from..], needle) {
+            let at = from + rel_pos;
+            from = at + needle.len();
+            // Token boundary on the left for the macro names.
+            if needle[0] != b'.' && at > 0 && is_ident(text[at - 1]) {
+                continue;
+            }
+            let line = line_of(text, at);
+            if in_regions(regions, line) || masked.allowed("hot-path-panic", line) {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: "hot-path-panic",
+                msg: format!(
+                    "{label} on the serving hot path — return a typed error \
+                     or add `// lint:allow(hot-path-panic) <why infallible>`"
+                ),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------- rule 2: narrowing casts
+
+fn narrowing_scope(rel: &str) -> bool {
+    rel == "quant/packed.rs" || rel == "fused/mod.rs" || rel == "runtime/manifest.rs"
+}
+
+/// Body spans (byte ranges) of functions named `read_from` / `parse*`
+/// (exactly the container deserializers — bit-twiddling helpers like
+/// `read_code` cast as part of field extraction, not untrusted counts).
+fn reader_fn_bodies(masked: &[u8]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = find(&masked[from..], b"fn ") {
+        let at = from + rel;
+        from = at + 3;
+        if at > 0 && is_ident(masked[at - 1]) {
+            continue;
+        }
+        let mut j = at + 3;
+        while j < masked.len() && masked[j] == b' ' {
+            j += 1;
+        }
+        let name_start = j;
+        while j < masked.len() && is_ident(masked[j]) {
+            j += 1;
+        }
+        let name = &masked[name_start..j];
+        if !(name == b"read_from" || name.starts_with(b"parse")) {
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut open = None;
+        for (k, b) in masked.iter().enumerate().skip(j) {
+            match *b {
+                b'{' if depth == 0 => {
+                    open = Some(k);
+                    break;
+                }
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth = depth.saturating_sub(1),
+                b';' if depth == 0 => break, // trait method without a body
+                _ => {}
+            }
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 0usize;
+        for (k, b) in masked.iter().enumerate().skip(open) {
+            if *b == b'{' {
+                depth += 1;
+            } else if *b == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    out.push((open, k));
+                    from = from.max(at + 3);
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn check_checked_narrowing(
+    rel: &str,
+    masked: &Masked,
+    regions: &[(usize, usize)],
+    out: &mut Vec<Violation>,
+) {
+    let text = &masked.text;
+    for (start, end) in reader_fn_bodies(text) {
+        let mut from = start;
+        while let Some(rel_pos) = find(&text[from..end], b"as ") {
+            let at = from + rel_pos;
+            from = at + 3;
+            if at > 0 && is_ident(text[at - 1]) {
+                continue; // `alias `, `has ` ...
+            }
+            let mut j = at + 3;
+            while j < end && text[j] == b' ' {
+                j += 1;
+            }
+            let ty_start = j;
+            while j < end && is_ident(text[j]) {
+                j += 1;
+            }
+            let ty = std::str::from_utf8(&text[ty_start..j]).unwrap_or("");
+            if !NARROW_TARGETS.contains(&ty) {
+                continue;
+            }
+            let line = line_of(text, at);
+            if in_regions(regions, line) || masked.allowed("checked-narrowing", line) {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: "checked-narrowing",
+                msg: format!(
+                    "`as {ty}` inside a container read path can wrap on corrupt \
+                     input — use `try_into()`/`{ty}::from()` with a ranged error"
+                ),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------ rule 3: error tags
+
+fn check_error_tag_sync(rel: &str, raw: &str, out: &mut Vec<Violation>) {
+    let mut tags: Vec<(String, usize)> = Vec::new();
+    let mut classifiers: Vec<(String, usize)> = Vec::new();
+    for (ln, line) in raw.lines().enumerate() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            if let Some(name_end) = rest.find("_TAG:") {
+                tags.push((rest[..name_end].to_lowercase(), ln + 1));
+            }
+        }
+        if t.contains("pub fn is_") && t.contains("&anyhow::Error") {
+            if let Some(pos) = t.find("pub fn is_") {
+                let rest = &t[pos + "pub fn is_".len()..];
+                if let Some(p) = rest.find('(') {
+                    classifiers.push((rest[..p].to_string(), ln + 1));
+                }
+            }
+        }
+    }
+    for (tag, ln) in &tags {
+        if !classifiers.iter().any(|(c, _)| c == tag) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: *ln,
+                rule: "error-tag-sync",
+                msg: format!(
+                    "tag const `{}_TAG` has no `is_{tag}` classifier — callers \
+                     cannot route this error",
+                    tag.to_uppercase()
+                ),
+            });
+        }
+        let ident = format!("{}_TAG", tag.to_uppercase());
+        if raw.matches(&ident).count() < 3 {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: *ln,
+                rule: "error-tag-sync",
+                msg: format!(
+                    "tag const `{ident}` is not referenced outside its declaration \
+                     and classifier — the Display impl must emit it"
+                ),
+            });
+        }
+    }
+    for (c, ln) in &classifiers {
+        if !tags.iter().any(|(t, _)| t == c) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: *ln,
+                rule: "error-tag-sync",
+                msg: format!("classifier `is_{c}` matches no `*_TAG` const — dead matcher"),
+            });
+        }
+    }
+}
+
+// -------------------------------------------------------- rule 4: cli help
+
+/// Quoted string contents inside `raw[span]` (no escape handling: registry
+/// flag names are plain `[a-z0-9-]`).
+fn quoted_strings(span: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = span;
+    while let Some(open) = rest.find('"') {
+        let tail = &rest[open + 1..];
+        let Some(close) = tail.find('"') else { break };
+        out.push(tail[..close].to_string());
+        rest = &tail[close + 1..];
+    }
+    out
+}
+
+fn check_cli_help_sync(rel: &str, raw: &str, masked: &Masked, out: &mut Vec<Violation>) {
+    let text = &masked.text;
+    // Registry span: `const COMMANDS ... = &[` to the matching `]`.
+    let Some(cmd_at) = find(text, b"const COMMANDS") else {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: 1,
+            rule: "cli-help-sync",
+            msg: "no `const COMMANDS` registry found".into(),
+        });
+        return;
+    };
+    let Some(open_rel) = find(&text[cmd_at..], b"= &[") else {
+        return;
+    };
+    let open = cmd_at + open_rel + 3;
+    let mut depth = 0usize;
+    let mut close = text.len();
+    for (k, b) in text.iter().enumerate().skip(open) {
+        if *b == b'[' {
+            depth += 1;
+        } else if *b == b']' {
+            depth -= 1;
+            if depth == 0 {
+                close = k;
+                break;
+            }
+        }
+    }
+    let mut registry: BTreeSet<String> = BTreeSet::new();
+    let span = &raw[open..close];
+    let span_masked = &text[open..close];
+    for list_kw in [&b"flags:"[..], &b"switches:"[..]] {
+        let mut from = 0usize;
+        while let Some(rel_pos) = find(&span_masked[from..], list_kw) {
+            let at = from + rel_pos;
+            from = at + list_kw.len();
+            let Some(lo) = span_masked[at..].iter().position(|b| *b == b'[') else {
+                continue;
+            };
+            let Some(hi) = span_masked[at + lo..].iter().position(|b| *b == b']') else {
+                continue;
+            };
+            for s in quoted_strings(&span[at + lo..at + lo + hi]) {
+                registry.insert(s);
+            }
+        }
+    }
+    // HELP span: the string literal after `const HELP`.
+    let Some(help_at) = find(text, b"const HELP") else {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: 1,
+            rule: "cli-help-sync",
+            msg: "no `const HELP` text found".into(),
+        });
+        return;
+    };
+    let bytes = raw.as_bytes();
+    let Some(q_rel) = bytes[help_at..].iter().position(|b| *b == b'"') else {
+        return;
+    };
+    let mut j = help_at + q_rel + 1;
+    let help_start = j;
+    while j < bytes.len() && bytes[j] != b'"' {
+        if bytes[j] == b'\\' {
+            j += 2;
+        } else {
+            j += 1;
+        }
+    }
+    let help = &raw[help_start..j.min(bytes.len())];
+    let help_line = line_of(text, help_at);
+    let mut documented: BTreeSet<String> = BTreeSet::new();
+    let hb = help.as_bytes();
+    let mut k = 0usize;
+    while k + 2 < hb.len() {
+        if hb[k] == b'-' && hb[k + 1] == b'-' && hb[k + 2].is_ascii_alphanumeric() {
+            let start = k + 2;
+            let mut e = start;
+            while e < hb.len() && (hb[e].is_ascii_alphanumeric() || hb[e] == b'-') {
+                e += 1;
+            }
+            documented.insert(help[start..e].trim_end_matches('-').to_string());
+            k = e;
+        } else {
+            k += 1;
+        }
+    }
+    for f in registry.difference(&documented) {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: line_of(text, cmd_at),
+            rule: "cli-help-sync",
+            msg: format!("registered flag `--{f}` is not documented in HELP"),
+        });
+    }
+    for f in documented.difference(&registry) {
+        out.push(Violation {
+            file: rel.to_string(),
+            line: help_line,
+            rule: "cli-help-sync",
+            msg: format!("HELP documents `--{f}` but no command registers it"),
+        });
+    }
+}
+
+// ----------------------------------------------- rule 5: lock across forward
+
+/// True when the identifier starting at `at` names a forward-like call.
+fn forward_call_at(text: &[u8], at: usize) -> Option<(usize, String)> {
+    let mut j = at;
+    while j < text.len() && is_ident(text[j]) {
+        j += 1;
+    }
+    if j >= text.len() || text[j] != b'(' {
+        return None;
+    }
+    let name = std::str::from_utf8(&text[at..j]).ok()?;
+    let hit = name.starts_with("fwd_")
+        || name.starts_with("prefill")
+        || name.starts_with("verify_step")
+        || name == "project";
+    hit.then(|| (j, name.to_string()))
+}
+
+fn check_lock_across_forward(
+    rel: &str,
+    masked: &Masked,
+    regions: &[(usize, usize)],
+    out: &mut Vec<Violation>,
+) {
+    let text = &masked.text;
+    let mut from = 0usize;
+    while let Some(rel_pos) = find(&text[from..], b".lock(") {
+        let at = from + rel_pos;
+        from = at + 6;
+        let guard_line = line_of(text, at);
+        if in_regions(regions, guard_line) {
+            continue;
+        }
+        // Only `let`-bound guards outlive their statement.
+        let line_start = text[..at].iter().rposition(|b| *b == b'\n').map_or(0, |p| p + 1);
+        let lead = std::str::from_utf8(&text[line_start..at]).unwrap_or("");
+        if !lead.trim_start().starts_with("let ") {
+            continue;
+        }
+        // Guard is live until the enclosing block closes.
+        let mut depth = 0isize;
+        let mut k = at;
+        while k < text.len() {
+            match text[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        break;
+                    }
+                }
+                b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                    if !is_ident(text[k.saturating_sub(1)]) && text[k.saturating_sub(1)] != b'.' {
+                        if let Some((end, name)) = forward_call_at(text, k) {
+                            let line = line_of(text, k);
+                            if !in_regions(regions, line)
+                                && !masked.allowed("lock-across-forward", line)
+                            {
+                                out.push(Violation {
+                                    file: rel.to_string(),
+                                    line,
+                                    rule: "lock-across-forward",
+                                    msg: format!(
+                                        "`{name}(...)` runs while the lock guard taken on \
+                                         line {guard_line} is still live — drop the guard \
+                                         before any forward"
+                                    ),
+                                });
+                            }
+                            k = end;
+                            continue;
+                        }
+                    }
+                    while k < text.len() && is_ident(text[k]) {
+                        k += 1;
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------------ driver
+
+fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in fs::read_dir(&dir)? {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn check_file(rel: &str, raw: &str, out: &mut Vec<Violation>) {
+    let masked = mask(raw);
+    let regions = test_regions(&masked.text);
+    if hot_path_scope(rel) {
+        check_hot_path_panic(rel, &masked, &regions, out);
+        check_lock_across_forward(rel, &masked, &regions, out);
+    }
+    if narrowing_scope(rel) {
+        check_checked_narrowing(rel, &masked, &regions, out);
+    }
+    if rel == "runtime/kvpool.rs" {
+        check_error_tag_sync(rel, raw, out);
+    }
+    if rel == "cli.rs" {
+        check_cli_help_sync(rel, raw, &masked, out);
+    }
+    for a in &masked.allows {
+        if !a.justified {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "lint-allow",
+                msg: "lint:allow without a justification — say why the \
+                      invariant holds"
+                    .into(),
+            });
+        } else if !a.used.get() {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "lint-allow",
+                msg: format!("lint:allow({}) matches no violation — remove it", a.rule),
+            });
+        }
+    }
+}
+
+fn run(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut out = Vec::new();
+    for path in rs_files(root)? {
+        let rel: String = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let raw = fs::read_to_string(&path)?;
+        check_file(&rel, &raw, &mut out);
+    }
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(root) = args.first() else {
+        eprintln!("usage: odlri-lint <src-root>   (e.g. `cargo run -p odlri-lint -- rust/src`)");
+        return ExitCode::from(2);
+    };
+    match run(Path::new(root)) {
+        Ok(violations) if violations.is_empty() => {
+            println!("odlri-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{}", v.render());
+            }
+            eprintln!("odlri-lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("odlri-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Violation> {
+        let mut out = Vec::new();
+        check_file(rel, src, &mut out);
+        out
+    }
+
+    fn rules(vs: &[Violation]) -> Vec<&str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // ---- masking ----
+
+    #[test]
+    fn masks_strings_comments_and_chars() {
+        let src = "let x = \"panic!\"; // panic! here\nlet c = '\\n'; /* .unwrap() */\n";
+        let m = mask(src);
+        let text = String::from_utf8(m.text).unwrap();
+        assert!(!text.contains("panic!"), "masked: {text}");
+        assert!(!text.contains(".unwrap()"), "masked: {text}");
+        assert_eq!(text.len(), src.len());
+        assert_eq!(text.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn masks_raw_strings_and_keeps_lifetimes() {
+        let src = "let s = r#\"json \"panic!\" body\"#;\nfn f<'a>(x: &'a str) {}\n";
+        let m = mask(src);
+        let text = String::from_utf8(m.text).unwrap();
+        assert!(!text.contains("panic!"));
+        assert!(text.contains("<'a>"), "lifetime survived: {text}");
+    }
+
+    // ---- rule 1: hot-path-panic ----
+
+    #[test]
+    fn flags_panics_on_the_hot_path() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        let vs = lint("serve/mod.rs", src);
+        assert_eq!(rules(&vs), ["hot-path-panic"], "{vs:?}");
+        assert_eq!(vs[0].line, 2);
+        // Same code outside the scope dirs is fine.
+        assert!(lint("quant/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_expect_todo_and_macros() {
+        let src = "fn f() {\n    g().expect(\"x\");\n    todo!();\n    panic!(\"y\");\n}\n";
+        let vs = lint("engine/mod.rs", src);
+        assert_eq!(vs.len(), 3, "{vs:?}");
+    }
+
+    #[test]
+    fn ignores_test_code_and_unwrap_or() {
+        let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap_or(0)\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn g(x: Option<u8>) -> u8 { x.unwrap() }\n}\n";
+        assert!(lint("runtime/native.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_with_justification_passes_without_fails() {
+        let ok = "fn f(x: Option<u8>) -> u8 {\n\
+                  // lint:allow(hot-path-panic) x is Some by construction\n    x.unwrap()\n}\n";
+        assert!(lint("serve/mod.rs", ok).is_empty());
+        let bare = "fn f(x: Option<u8>) -> u8 {\n    // lint:allow(hot-path-panic)\n    x.unwrap()\n}\n";
+        let vs = lint("serve/mod.rs", bare);
+        assert!(rules(&vs).contains(&"lint-allow"), "{vs:?}");
+        let unused = "// lint:allow(hot-path-panic) nothing here\nfn f() {}\n";
+        let vs = lint("serve/mod.rs", unused);
+        assert_eq!(rules(&vs), ["lint-allow"], "{vs:?}");
+    }
+
+    // ---- rule 2: checked-narrowing ----
+
+    #[test]
+    fn flags_narrowing_casts_in_readers_only() {
+        let src = "fn read_from(n: u64) -> u32 {\n    n as u32\n}\n\
+                   fn write_to(n: u64) -> u32 {\n    n as u32\n}\n";
+        let vs = lint("quant/packed.rs", src);
+        assert_eq!(rules(&vs), ["checked-narrowing"], "{vs:?}");
+        assert_eq!(vs[0].line, 2);
+    }
+
+    #[test]
+    fn widening_and_usize_casts_are_fine() {
+        let src = "fn parse(n: u32, m: u8) -> usize {\n    n as usize + m as u64 as usize\n}\n";
+        assert!(lint("runtime/manifest.rs", src).is_empty());
+        // Out-of-scope file: same cast passes.
+        let narrow = "fn read_from(n: u64) -> u32 {\n    n as u32\n}\n";
+        assert!(lint("runtime/mod.rs", narrow).is_empty());
+    }
+
+    // ---- rule 3: error-tag-sync ----
+
+    const TAGGED: &str = "impl KvError {\n\
+        pub const POOL_EXHAUSTED_TAG: &'static str = \"kv pool exhausted\";\n\
+        pub fn is_pool_exhausted(e: &anyhow::Error) -> bool { chain_has(e, Self::POOL_EXHAUSTED_TAG) }\n\
+        }\nimpl Display for KvError { fn fmt(&self) { write(Self::POOL_EXHAUSTED_TAG) } }\n";
+
+    #[test]
+    fn tag_and_classifier_in_sync_is_clean() {
+        assert!(lint("runtime/kvpool.rs", TAGGED).is_empty());
+    }
+
+    #[test]
+    fn tag_without_classifier_fails() {
+        let src = TAGGED.replace("is_pool_exhausted", "is_something_else");
+        let vs = lint("runtime/kvpool.rs", &src);
+        assert_eq!(vs.len(), 2, "{vs:?}"); // missing classifier + dead matcher
+        assert!(vs.iter().all(|v| v.rule == "error-tag-sync"));
+    }
+
+    #[test]
+    fn tag_missing_from_display_fails() {
+        let src = TAGGED.replace("write(Self::POOL_EXHAUSTED_TAG)", "write(\"hardcoded\")");
+        let vs = lint("runtime/kvpool.rs", &src);
+        assert_eq!(rules(&vs), ["error-tag-sync"], "{vs:?}");
+    }
+
+    // ---- rule 4: cli-help-sync ----
+
+    fn cli_src(flags: &str, help: &str) -> String {
+        format!(
+            "pub const COMMANDS: &[CommandSpec] = &[\n\
+             CommandSpec {{ name: \"train\", flags: &[{flags}], switches: &[\"json\"] }},\n\
+             ];\npub const HELP: &str = \"{help}\";\n"
+        )
+    }
+
+    #[test]
+    fn help_and_registry_in_sync_is_clean() {
+        let src = cli_src("\"steps\", \"seed\"", "--steps N --seed S --json");
+        assert!(lint("cli.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn undocumented_flag_fails() {
+        let src = cli_src("\"steps\", \"seed\"", "--steps N --json");
+        let vs = lint("cli.rs", &src);
+        assert_eq!(rules(&vs), ["cli-help-sync"], "{vs:?}");
+        assert!(vs[0].msg.contains("--seed"), "{vs:?}");
+    }
+
+    #[test]
+    fn phantom_help_flag_fails() {
+        let src = cli_src("\"steps\"", "--steps N --bogus X --json");
+        let vs = lint("cli.rs", &src);
+        assert_eq!(rules(&vs), ["cli-help-sync"], "{vs:?}");
+        assert!(vs[0].msg.contains("--bogus"), "{vs:?}");
+    }
+
+    // ---- rule 5: lock-across-forward ----
+
+    #[test]
+    fn guard_live_across_forward_fails() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let inner = self.pool.lock();\n\
+                   let y = fwd_decode(&inner);\n    Ok(())\n}\n";
+        let vs = lint("serve/mod.rs", src);
+        assert_eq!(rules(&vs), ["lock-across-forward"], "{vs:?}");
+        assert_eq!(vs[0].line, 3);
+    }
+
+    #[test]
+    fn guard_dropped_before_forward_is_clean() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   {\n        let inner = self.pool.lock();\n        inner.touch();\n    }\n\
+                   let y = fwd_decode(1);\n    Ok(())\n}\n";
+        assert!(lint("serve/mod.rs", src).is_empty());
+        // Non-`let` temporary guards drop at end of statement.
+        let tmp = "fn f(&self) {\n    self.pool.lock().touch();\n    prefill(1);\n}\n";
+        assert!(lint("serve/mod.rs", tmp).is_empty());
+    }
+
+    #[test]
+    fn allowed_guard_passes() {
+        let src = "fn f(&self) -> Result<()> {\n\
+                   let inner = self.pool.lock();\n\
+                   // lint:allow(lock-across-forward) forward never re-enters this pool\n\
+                   let y = verify_step(&inner);\n    Ok(())\n}\n";
+        assert!(lint("serve/mod.rs", src).is_empty());
+    }
+
+    // ---- the live tree ----
+
+    #[test]
+    fn live_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+        if !root.exists() {
+            return; // sparse checkout: nothing to scan
+        }
+        let vs = run(&root).expect("scanning rust/src");
+        let report: Vec<String> = vs.iter().map(|v| v.render()).collect();
+        assert!(vs.is_empty(), "live tree has violations:\n{}", report.join("\n"));
+    }
+}
