@@ -69,7 +69,7 @@ pub const COMMANDS: &[CommandSpec] = &[
             "family", "weights", "requests", "clients", "deadline-ms", "seed",
             "max-new-tokens", "prompt-len", "kv-budget", "prefill-chunk",
             "batch-clients", "long-prompt-len", "replicas", "draft", "speculate",
-            "artifacts",
+            "chaos", "deadline-ticks", "queue-cap", "artifacts",
         ],
         switches: &["fused", "pack-dense", "shared-prompt", "json"],
     },
@@ -336,6 +336,14 @@ COMMANDS
                  --draft PATH --speculate K (speculative decoding for
                  greedy streams: reports acceptance rate and drafted /
                  accepted / rejected token counters)
+                 --chaos SPEC (seeded fault injection, e.g.
+                 \"pool=0.2,replica=0.1,draft=0.3,abort=0.1,slow=0.2\";
+                 same --seed replays the same fault sequence; the report
+                 gains shed / timed-out / failover / breaker counters)
+                 --deadline-ticks N (per-request deadline in scheduler
+                 ticks; expired requests answer TimedOut; 0 = none)
+                 --queue-cap N (bounded admission queue: arrivals past the
+                 cap are shed, Batch before Interactive; 0 = unbounded)
                  --json (append a one-line machine-readable report)
   artifacts    List available artifact entry points
   help         This message
@@ -419,6 +427,16 @@ mod tests {
         assert_eq!(a.usize("prefill-chunk", 0).unwrap(), 16);
         assert_eq!(a.usize("batch-clients", 0).unwrap(), 1);
         assert_eq!(a.usize("long-prompt-len", 0).unwrap(), 192);
+        // Robustness knobs: --chaos takes a spec string, the other two
+        // integers — all flags, never switches.
+        let b = parse_reg(
+            "serve-bench --chaos pool=0.2,draft=0.3 --deadline-ticks 64 --queue-cap 8 --json",
+        )
+        .unwrap();
+        assert_eq!(b.str("chaos", ""), "pool=0.2,draft=0.3");
+        assert_eq!(b.usize("deadline-ticks", 0).unwrap(), 64);
+        assert_eq!(b.usize("queue-cap", 0).unwrap(), 8);
+        assert!(parse_reg("serve-bench --chaos").is_err());
     }
 
     #[test]

@@ -259,6 +259,31 @@ pub trait Engine: Send + Sync {
     fn pool_stats(&self) -> Option<PoolStats> {
         None
     }
+
+    /// Take one live shard out of service (failover drill / fault
+    /// injection), returning its index. Multi-shard engines pick a victim
+    /// from `selector` and refuse to quarantine their last surviving
+    /// shard; single-shard backends (the default) have nothing to
+    /// quarantine and answer `None`.
+    fn quarantine_one_shard(&self, _selector: u64) -> Option<usize> {
+        None
+    }
+
+    /// Whether `cache` draws from a quarantined shard's pool. Orphaned
+    /// sessions must not decode again until the scheduler migrates them
+    /// (re-prefills their token history on a surviving shard); a decode
+    /// attempt surfaces a typed
+    /// [`KvError::ReplicaFailed`](crate::runtime::kvpool::KvError).
+    fn cache_orphaned(&self, _cache: &KvCache) -> bool {
+        false
+    }
+
+    /// Pools of quarantined shards (empty for single-pool engines). The
+    /// scheduler's debug auditor asserts each drains to zero referenced
+    /// pages once its sessions have migrated.
+    fn quarantined_pools(&self) -> Vec<KvPool> {
+        Vec::new()
+    }
 }
 
 // ------------------------------------------------------------ requests
@@ -321,6 +346,11 @@ pub enum Request {
         max_new_tokens: usize,
         sampling: Sampling,
         priority: Priority,
+        /// Scheduler-tick deadline: a request still unfinished this many
+        /// ticks after it was enqueued is answered with
+        /// [`Response::TimedOut`] and its pages are released. `0` = no
+        /// deadline (the historical behavior).
+        deadline_ticks: usize,
     },
 }
 
@@ -344,6 +374,17 @@ pub enum Response {
     /// message leads with its stable tag so `KvError::is_*` classification
     /// works on it.
     Rejected { error: String },
+    /// The request's `deadline_ticks` elapsed before it finished. Its
+    /// session state (queue slot, partial prefill, KV pages) has been
+    /// released; partial output is discarded.
+    TimedOut,
+    /// The bounded admission queue was full and this request was shed to
+    /// protect latency — always the youngest `Batch`-class work first;
+    /// `Interactive` work is only shed when no `Batch` victim exists.
+    Shed,
+    /// The client went away (responder dropped, or an injected abort) and
+    /// the stream was retired mid-flight; its pages are released.
+    Aborted,
 }
 
 // ------------------------------------------------------------- sampling
@@ -948,6 +989,7 @@ mod tests {
             max_new_tokens: 4,
             sampling: Sampling::Greedy,
             priority: Priority::default(),
+            deadline_ticks: 0,
         };
         match process(&engine, &req).unwrap() {
             Response::Generated {

@@ -31,13 +31,24 @@
 //!   ([`ensure_decode_capacity`]) — a typed pool error surfaces with no
 //!   session mutated, exactly like the single-engine step.
 //! * **Aggregation**: [`Engine::pool_stats`] sums occupancy and sharing
-//!   counters across shards (geometry from shard 0), so the serve-bench
-//!   pool line reports fleet totals.
+//!   counters across live shards (geometry from the first live one), so
+//!   the serve-bench pool line reports fleet totals.
+//! * **Failover**: a shard can be **quarantined**
+//!   ([`Engine::quarantine_one_shard`]) — it stops taking new sessions
+//!   and new compute, and any decode touching a session whose cache draws
+//!   from its pool surfaces a typed
+//!   [`KvError::ReplicaFailed`] *before* any capacity is reserved or any
+//!   session mutated. The scheduler answers by migrating orphans through
+//!   the ordinary preempt/resume path (re-prefill from token history on a
+//!   surviving shard — bit-exact, because weights are identical
+//!   everywhere). The last live shard can never be quarantined.
+
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::fused::FusedModel;
-use crate::runtime::kvpool::PoolStats;
+use crate::runtime::kvpool::{KvError, KvPool, PoolStats};
 use crate::runtime::native::{ensure_decode_capacity, KvCache};
 use crate::tensor::Matrix;
 
@@ -46,6 +57,11 @@ use super::{Engine, EngineSpec, Session};
 /// N packed replicas behind one [`Engine`].
 pub struct Replicas {
     shards: Vec<FusedModel>,
+    /// Quarantine flags, index = shard id. Relaxed ordering is enough:
+    /// flags only ever flip false → true, and every consumer treats a
+    /// stale read as "still live", which at worst delays the typed
+    /// failover by one consult.
+    down: Vec<AtomicBool>,
 }
 
 impl Replicas {
@@ -59,7 +75,36 @@ impl Replicas {
             shards.push(base.fork_replica());
         }
         shards.insert(0, base);
-        Replicas { shards }
+        let down = (0..shards.len()).map(|_| AtomicBool::new(false)).collect();
+        Replicas { shards, down }
+    }
+
+    fn is_down(&self, shard: usize) -> bool {
+        self.down[shard].load(Ordering::Relaxed)
+    }
+
+    /// Indices of live (non-quarantined) shards, in order. Never empty:
+    /// `quarantine_one_shard` refuses to take down the last survivor.
+    fn live(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| !self.is_down(i))
+            .collect()
+    }
+
+    /// First live shard (for continuation compute that only needs the
+    /// shared weights); falls back to shard 0 if somehow none is live.
+    fn first_live(&self) -> &FusedModel {
+        (0..self.shards.len())
+            .find(|&i| !self.is_down(i))
+            .map(|i| &self.shards[i])
+            .unwrap_or(&self.shards[0])
+    }
+
+    /// Which shard's pool backs `cache`, if any (flat caches and foreign
+    /// pools answer `None`).
+    fn shard_of(&self, cache: &KvCache) -> Option<usize> {
+        let (pool, _) = cache.pool_and_table()?;
+        self.shards.iter().position(|s| s.pool().ptr_eq(pool))
     }
 
     pub fn n_shards(&self) -> usize {
@@ -75,18 +120,19 @@ impl Replicas {
             .collect()
     }
 
-    /// Least-loaded routing: the shard with the fewest resident pages
-    /// (ties to the lowest index).
+    /// Least-loaded routing among **live** shards: the one with the
+    /// fewest resident pages (ties to the lowest index).
     fn route(&self) -> &FusedModel {
-        self.shards
-            .iter()
+        self.live()
+            .into_iter()
+            .map(|i| &self.shards[i])
             .min_by_key(|s| {
                 s.pool_stats()
                     .map(|p| p.resident_pages)
                     .unwrap_or(usize::MAX)
             })
-            // lint:allow(hot-path-panic) new() inserts the base model, so shards is never empty
-            .expect("at least one shard")
+            // lint:allow(hot-path-panic) quarantine_one_shard never takes down the last live shard, so live() is never empty
+            .expect("at least one live shard")
     }
 }
 
@@ -126,11 +172,11 @@ impl Engine for Replicas {
     ) -> Result<Matrix> {
         // The first chunk picks the session's shard (its cache draws from
         // that shard's pool); continuation chunks only need weights, which
-        // are bit-identical everywhere, so any shard serves them.
+        // are bit-identical everywhere, so any live shard serves them.
         let shard = if state.is_none() {
             self.route()
         } else {
-            &self.shards[0]
+            self.first_live()
         };
         shard.prefill_chunk(prompt, state, upto)
     }
@@ -145,6 +191,16 @@ impl Engine for Replicas {
         }
         let vocab = self.shards[0].spec().vocab;
         let sub = self.shards[0].spec().max_batch.max(1);
+        // Sessions hosted by a quarantined shard surface the typed
+        // failover error before anything is reserved or mutated — the
+        // scheduler migrates them and retries on a survivor.
+        for s in sessions.iter() {
+            if let Some(shard) = self.shard_of(&s.cache) {
+                if self.is_down(shard) {
+                    return Err(KvError::ReplicaFailed { shard }.into());
+                }
+            }
+        }
         // All-or-nothing capacity across the whole batch before any shard
         // runs: a typed pool/context error here mutates nothing.
         {
@@ -152,6 +208,7 @@ impl Engine for Replicas {
                 sessions.iter_mut().map(|s| &mut s.cache).collect();
             ensure_decode_capacity(&mut caches)?;
         }
+        let live = self.live();
         let groups: Vec<(&mut [&mut Session], &[i32])> = sessions
             .chunks_mut(sub)
             .zip(tokens.chunks(sub))
@@ -161,7 +218,7 @@ impl Engine for Replicas {
                 .into_iter()
                 .enumerate()
                 .map(|(gi, (group, toks))| {
-                    let shard = &self.shards[gi % self.shards.len()];
+                    let shard = &self.shards[live[gi % live.len()]];
                     scope.spawn(move || shard.decode_step(group, toks))
                 })
                 .collect();
@@ -187,11 +244,19 @@ impl Engine for Replicas {
     }
 
     fn pool_stats(&self) -> Option<PoolStats> {
+        // Quarantined shards no longer contribute capacity: admission
+        // sizing (max_pages) must reflect what survivors can actually
+        // hold, or a failed-over prompt could be admitted unservably.
         let mut agg = PoolStats::default();
+        let mut first = true;
         for (i, s) in self.shard_stats().into_iter().enumerate() {
-            if i == 0 {
+            if self.is_down(i) {
+                continue;
+            }
+            if first {
                 agg.page_tokens = s.page_tokens;
                 agg.page_bytes = s.page_bytes;
+                first = false;
             }
             agg.budget_bytes += s.budget_bytes;
             agg.max_pages += s.max_pages;
@@ -203,6 +268,27 @@ impl Engine for Replicas {
             agg.reclaimed_pages += s.reclaimed_pages;
         }
         Some(agg)
+    }
+
+    fn quarantine_one_shard(&self, selector: u64) -> Option<usize> {
+        let live = self.live();
+        if live.len() <= 1 {
+            return None; // never quarantine the last surviving shard
+        }
+        let victim = live[(selector % live.len() as u64) as usize];
+        self.down[victim].store(true, Ordering::Relaxed);
+        Some(victim)
+    }
+
+    fn cache_orphaned(&self, cache: &KvCache) -> bool {
+        self.shard_of(cache).is_some_and(|s| self.is_down(s))
+    }
+
+    fn quarantined_pools(&self) -> Vec<KvPool> {
+        (0..self.shards.len())
+            .filter(|&i| self.is_down(i))
+            .map(|i| self.shards[i].pool().clone())
+            .collect()
     }
 }
 
@@ -300,6 +386,64 @@ mod tests {
             per.iter().map(|s| s.resident_pages).sum::<usize>()
         );
         assert_eq!(agg.max_pages, per.iter().map(|s| s.max_pages).sum::<usize>());
+    }
+
+    #[test]
+    fn quarantine_never_takes_the_last_shard() {
+        let solo = Replicas::new(micro_fused(70), 1);
+        assert_eq!(solo.quarantine_one_shard(0), None, "solo shard died");
+        let reps = Replicas::new(micro_fused(70), 3);
+        let first = reps.quarantine_one_shard(5).unwrap();
+        let second = reps.quarantine_one_shard(5).unwrap();
+        assert_ne!(first, second, "quarantined the same shard twice");
+        assert_eq!(reps.quarantine_one_shard(5), None, "last survivor died");
+        assert_eq!(reps.quarantined_pools().len(), 2);
+        // Fleet capacity shrank to the one surviving shard.
+        let one = micro_fused(70).spec().kv_budget;
+        assert_eq!(reps.pool_stats().unwrap().budget_bytes, one);
+    }
+
+    #[test]
+    fn orphaned_decode_is_typed_and_migration_is_bit_exact() {
+        // Two shards, one session on each (least-loaded routing
+        // alternates). Quarantining a session's shard makes its decode a
+        // typed ReplicaFailed with nothing mutated; re-prefilling the
+        // same history lands on the survivor and continues bit-exactly.
+        let reps = Replicas::new(micro_fused(71), 2);
+        let pa = micro_tokens(11, 6, 80);
+        let pb = micro_tokens(11, 6, 81);
+        let (mut sa, _) = reps.prefill(&pa).unwrap();
+        let (mut sb, _) = reps.prefill(&pb).unwrap();
+        let shard_a = reps.shard_of(&sa.cache).unwrap();
+        let shard_b = reps.shard_of(&sb.cache).unwrap();
+        assert_ne!(shard_a, shard_b, "routing parked both sessions together");
+        // Selector chosen so shard_a is the victim.
+        let victim = reps.quarantine_one_shard(shard_a as u64).unwrap();
+        assert_eq!(victim, shard_a);
+        let before = sa.tokens.clone();
+        let err = reps.decode_step(&mut [&mut sa], &[3]).unwrap_err();
+        assert!(KvError::is_replica_failed(&err), "got: {err:#}");
+        assert_eq!(sa.tokens, before, "failed decode mutated the session");
+        assert!(reps.cache_orphaned(&sa.cache));
+        assert!(!reps.cache_orphaned(&sb.cache));
+        // Migration: drop the orphaned cache, re-prefill history on the
+        // fleet (routes to the survivor), continue. Must match the solo
+        // engine bit-for-bit.
+        drop(sa);
+        let (mut moved, _) = reps.prefill(&before).unwrap();
+        assert_eq!(reps.shard_of(&moved.cache), Some(shard_b));
+        let got = reps.decode_step(&mut [&mut moved], &[3]).unwrap();
+        let solo = micro_fused(71);
+        let (mut want_s, _) = solo.prefill(&before).unwrap();
+        let want = solo.decode_step(&mut [&mut want_s], &[3]).unwrap();
+        assert_eq!(got.row(0), want.row(0), "failover decode diverged");
+        // The quarantined pool holds no referenced pages once its
+        // sessions are gone.
+        for pool in reps.quarantined_pools() {
+            pool.audit_tables(&[]).unwrap();
+        }
+        // The survivor still serves the untouched session.
+        reps.decode_step(&mut [&mut sb], &[4]).unwrap();
     }
 
     #[test]

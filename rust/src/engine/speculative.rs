@@ -52,6 +52,16 @@ use anyhow::{bail, Result};
 use crate::engine::{argmax, Engine, EngineSpec, GenOutput, Session};
 use crate::tensor::Matrix;
 
+/// Consecutive draft-round failures that open the speculation circuit
+/// breaker (drafting disabled, rounds degrade to plain decode steps).
+pub const BREAKER_THRESHOLD: usize = 3;
+
+/// How long the breaker stays open once tripped — rounds here in the
+/// engine combinator, scheduler ticks in [`crate::serve`]. The first
+/// drafting attempt after cooldown is the probe: success closes the
+/// breaker, failure re-trips it.
+pub const BREAKER_COOLDOWN_ROUNDS: usize = 8;
+
 /// Acceptance accounting for a speculative run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct SpecCounters {
@@ -67,6 +77,14 @@ pub struct SpecCounters {
     pub draft_steps: usize,
     /// Batched target verify calls.
     pub verify_steps: usize,
+    /// Draft rounds that failed (draft engine errored mid-round); the
+    /// round degraded to a plain decode step, nothing was emitted wrong.
+    pub draft_failures: usize,
+    /// Times [`BREAKER_THRESHOLD`] consecutive failures opened the
+    /// circuit breaker.
+    pub breaker_trips: usize,
+    /// Rounds that skipped drafting while the breaker was open.
+    pub breaker_skipped: usize,
 }
 
 impl SpecCounters {
@@ -183,35 +201,73 @@ impl SpeculativeEngine {
         if budget > 0 {
             let mut next = argmax(logits.row(logits.rows() - 1)) as i32;
             tokens.push(next);
+            // The draft is strictly advisory: a draft-side error degrades
+            // the round to a plain decode step (m = 0 through the verify
+            // path) instead of failing generation. BREAKER_THRESHOLD
+            // consecutive failures open the circuit breaker for
+            // BREAKER_COOLDOWN_ROUNDS rounds; the first drafting attempt
+            // afterwards is the probe.
+            let mut consec_failures = 0usize;
+            let mut open_until = 0usize; // round index the breaker re-arms at
             while tokens.len() < budget {
                 let ts = Instant::now();
                 let remaining = budget - tokens.len();
+                let round = c.rounds;
+                let breaker_open = round < open_until;
                 // A round emits at most m + 1 tokens; clamp so the last
                 // round never drafts past the budget (k larger than the
                 // remaining budget degenerates gracefully, m = 0 being a
                 // plain decode step through the verify path).
-                let m = self.k.min(remaining - 1);
+                let m = if breaker_open {
+                    c.breaker_skipped += 1;
+                    0
+                } else {
+                    self.k.min(remaining - 1)
+                };
                 let mut drafts: Vec<i32> = Vec::with_capacity(m);
+                let mut draft_failed = false;
                 if m > 0 {
-                    // Catch the draft up to the target's accepted history
-                    // (it trails by one token after a full accept).
-                    while dsession.tokens.len() < tsession.tokens.len() {
-                        let t = tsession.tokens[dsession.tokens.len()];
-                        self.draft.decode_step(&mut [&mut dsession], &[t])?;
-                        c.draft_steps += 1;
-                    }
-                    let mut cur = next;
-                    for _ in 0..m {
-                        let lg = self.draft.decode_step(&mut [&mut dsession], &[cur])?;
-                        cur = argmax(lg.row(0)) as i32;
-                        drafts.push(cur);
-                        c.draft_steps += 1;
+                    'draft: {
+                        // Catch the draft up to the target's accepted
+                        // history (it trails by one after a full accept).
+                        while dsession.tokens.len() < tsession.tokens.len() {
+                            let t = tsession.tokens[dsession.tokens.len()];
+                            if self.draft.decode_step(&mut [&mut dsession], &[t]).is_err() {
+                                draft_failed = true;
+                                break 'draft;
+                            }
+                            c.draft_steps += 1;
+                        }
+                        let mut cur = next;
+                        for _ in 0..m {
+                            let lg = match self.draft.decode_step(&mut [&mut dsession], &[cur]) {
+                                Ok(lg) => lg,
+                                Err(_) => {
+                                    draft_failed = true;
+                                    break 'draft;
+                                }
+                            };
+                            cur = argmax(lg.row(0)) as i32;
+                            drafts.push(cur);
+                            c.draft_steps += 1;
+                        }
                     }
                 }
-                c.drafted += m;
+                if draft_failed {
+                    c.draft_failures += 1;
+                    consec_failures += 1;
+                    if consec_failures >= BREAKER_THRESHOLD {
+                        c.breaker_trips += 1;
+                        open_until = round + 1 + BREAKER_COOLDOWN_ROUNDS;
+                        consec_failures = 0;
+                    }
+                } else if m > 0 {
+                    consec_failures = 0;
+                }
+                c.drafted += drafts.len();
                 // One batched target step over pending + proposals.
                 let start = tsession.tokens.len();
-                let mut chunk = Vec::with_capacity(m + 1);
+                let mut chunk = Vec::with_capacity(drafts.len() + 1);
                 chunk.push(next);
                 chunk.extend_from_slice(&drafts);
                 let vl = self.target.verify_step(&mut tsession, &chunk)?;
@@ -219,7 +275,7 @@ impl SpeculativeEngine {
                 c.rounds += 1;
                 let (acc, bonus) = verify_accept(&drafts, &vl);
                 c.accepted += acc;
-                c.rejected += m - acc;
+                c.rejected += drafts.len() - acc;
                 // Roll both sessions back to the accepted extent (a no-op
                 // on the draft after a full accept — it trails instead).
                 tsession.truncate(start + 1 + acc);
@@ -441,6 +497,54 @@ mod tests {
             assert_eq!(out.gen.tokens, want.tokens, "k={k}");
             assert_eq!(out.counters.drafted, out.counters.accepted + out.counters.rejected);
         }
+    }
+
+    /// A draft whose decode always errors — prefill works (the session
+    /// opens), every drafting round fails.
+    struct FailingDraft(NativeEngine);
+
+    impl Engine for FailingDraft {
+        fn spec(&self) -> EngineSpec {
+            self.0.spec()
+        }
+
+        fn forward_batch(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<Matrix> {
+            self.0.forward_batch(tokens, batch, seq)
+        }
+
+        fn prefill(&self, tokens: &[i32]) -> Result<(Session, Matrix)> {
+            self.0.prefill(tokens)
+        }
+
+        fn decode_step(&self, _sessions: &mut [&mut Session], _tokens: &[i32]) -> Result<Matrix> {
+            bail!("injected draft failure")
+        }
+    }
+
+    #[test]
+    fn failing_draft_trips_the_breaker_and_stream_stays_exact() {
+        // Every drafting round fails → rounds degrade to plain decode
+        // steps, the breaker opens after BREAKER_THRESHOLD consecutive
+        // failures, and the emitted stream is still bit-identical to
+        // plain greedy on the target. One token per round (no accepted
+        // drafts), so the counters are fully deterministic.
+        let prompt = micro_tokens(11, 4, 31);
+        let want = generate(&micro_engine(16), &prompt, 12, Sampling::Greedy).unwrap();
+        let spec = SpeculativeEngine::new(
+            Box::new(FailingDraft(micro_engine(17))),
+            Box::new(micro_engine(16)),
+            4,
+        )
+        .unwrap();
+        let out = spec.generate(&prompt, 12).unwrap();
+        assert_eq!(out.gen.tokens, want.tokens, "degraded stream diverged");
+        let c = out.counters;
+        assert_eq!(c.rounds, 11, "one token per round after the prefill token");
+        assert_eq!(c.draft_failures, BREAKER_THRESHOLD);
+        assert_eq!(c.breaker_trips, 1);
+        assert_eq!(c.breaker_skipped, c.rounds - BREAKER_THRESHOLD);
+        assert_eq!(c.drafted, 0, "failed rounds must offer no proposals");
+        assert_eq!(c.accepted, 0);
     }
 
     #[test]

@@ -654,6 +654,14 @@ impl FusedModel {
         Ok(self)
     }
 
+    /// The paged KV pool this model's sessions draw from. Replica fleets
+    /// use pool identity ([`KvPool::ptr_eq`]) to map a session's cache
+    /// back to the shard hosting it (failover needs to know which
+    /// sessions a quarantined shard orphans).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
     /// A replica of this model for shard-parallel serving: identical
     /// packed weights and shape, but a **fresh, private** KV pool of the
     /// same geometry and budget. Replication is nearly free in the

@@ -559,6 +559,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         prefill_chunk: args.usize("prefill-chunk", 0)?,
         batch_clients: args.usize("batch-clients", 0)?,
         long_prompt_len: args.usize("long-prompt-len", 0)?,
+        queue_cap: args.usize("queue-cap", 0)?,
+        deadline_ticks: args.usize("deadline-ticks", 0)?,
+        chaos: odlri::serve::faults::FaultPlan::parse(&args.str("chaos", ""))?,
     };
     let engine = build_engine(&rt, args, &family)?;
     let speculation = build_draft(&rt, args, &family)?;
@@ -663,6 +666,29 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             );
         }
     }
+    // Degradation-ladder outcomes: printed whenever any robustness knob
+    // produced a typed non-completion (or chaos was configured at all),
+    // so fault-free runs keep the historical report shape.
+    if !cfg.chaos.is_empty()
+        || report.timed_out + report.shed + report.aborted + report.pool_retries > 0
+    {
+        println!(
+            "degradation: {} timed out, {} shed, {} aborted, {} slow clients; \
+             {} pool retries ({} injected), {} shard failures, {} failovers",
+            report.timed_out,
+            report.shed,
+            report.aborted,
+            report.slow_clients,
+            report.pool_retries,
+            report.injected_pool_faults,
+            report.shard_failures,
+            report.failovers,
+        );
+        println!(
+            "speculation breaker: {} draft failures, {} trips, {} rounds suppressed",
+            report.draft_failures, report.breaker_trips, report.breaker_skipped,
+        );
+    }
     if let Some(ps) = engine.pool_stats() {
         println!(
             "kv pool: {}/{} pages, {} shared, {} cow, {} reclaimed \
@@ -707,6 +733,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
              \"preemptions\":{},\"resumes\":{},\"rejected\":{},\
              \"drafted_tokens\":{},\"accepted_tokens\":{},\"rejected_tokens\":{},\
              \"draft_steps\":{},\"verify_steps\":{},\"acceptance_rate\":{:.4},\
+             \"timed_out\":{},\"shed\":{},\"aborted\":{},\"slow_clients\":{},\
+             \"pool_retries\":{},\"injected_pool_faults\":{},\
+             \"shard_failures\":{},\"failovers\":{},\
+             \"draft_failures\":{},\"breaker_trips\":{},\"breaker_skipped\":{},\
              \"spec_ms_per_tok\":{:.3},\"plain_ms_per_tok\":{:.3},\"wall_secs\":{:.4},\
              \"p50_ms\":{:.3},\"p95_ms\":{:.3},\"classes\":[{}]}}",
             report.completed.len(),
@@ -724,6 +754,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             report.draft_steps,
             report.verify_steps,
             j(report.acceptance_rate()),
+            report.timed_out,
+            report.shed,
+            report.aborted,
+            report.slow_clients,
+            report.pool_retries,
+            report.injected_pool_faults,
+            report.shard_failures,
+            report.failovers,
+            report.draft_failures,
+            report.breaker_trips,
+            report.breaker_skipped,
             j(s_ms),
             j(p_ms),
             j(report.wall_secs),

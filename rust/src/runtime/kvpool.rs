@@ -89,12 +89,24 @@ pub enum KvError {
     /// A prompt needs more pages than the whole pool holds — no amount of
     /// preemption can ever admit it.
     PromptTooLarge { prompt_pages: usize, max_pages: usize },
+    /// The replica shard backing this session's pool has been quarantined
+    /// (failover drill or a real fault). The session must be migrated —
+    /// re-prefilled from its token history on a surviving shard — before
+    /// it can decode again.
+    ReplicaFailed { shard: usize },
+    /// The pool mutex was poisoned by a panicking holder. The guard was
+    /// recovered (no panic propagates), but the pool's contents can no
+    /// longer be trusted, so every subsequent reservation refuses with
+    /// this error instead.
+    LockPoisoned,
 }
 
 impl KvError {
     pub const CONTEXT_OVERFLOW_TAG: &'static str = "kv context overflow";
     pub const POOL_EXHAUSTED_TAG: &'static str = "kv pool exhausted";
     pub const PROMPT_TOO_LARGE_TAG: &'static str = "kv prompt too large";
+    pub const REPLICA_FAILED_TAG: &'static str = "kv replica failed";
+    pub const LOCK_POISONED_TAG: &'static str = "kv pool lock poisoned";
 
     fn chain_has(e: &anyhow::Error, tag: &str) -> bool {
         format!("{e:#}").contains(tag)
@@ -110,6 +122,14 @@ impl KvError {
 
     pub fn is_prompt_too_large(e: &anyhow::Error) -> bool {
         Self::chain_has(e, Self::PROMPT_TOO_LARGE_TAG)
+    }
+
+    pub fn is_replica_failed(e: &anyhow::Error) -> bool {
+        Self::chain_has(e, Self::REPLICA_FAILED_TAG)
+    }
+
+    pub fn is_lock_poisoned(e: &anyhow::Error) -> bool {
+        Self::chain_has(e, Self::LOCK_POISONED_TAG)
     }
 }
 
@@ -133,6 +153,16 @@ impl fmt::Display for KvError {
                 f,
                 "{}: prompt needs {prompt_pages} pages but the pool budget holds only {max_pages}",
                 Self::PROMPT_TOO_LARGE_TAG
+            ),
+            KvError::ReplicaFailed { shard } => write!(
+                f,
+                "{}: shard {shard} is quarantined; migrate the session to a surviving shard",
+                Self::REPLICA_FAILED_TAG
+            ),
+            KvError::LockPoisoned => write!(
+                f,
+                "{}: a holder panicked; the guard was recovered but reservations are refused",
+                Self::LOCK_POISONED_TAG
             ),
         }
     }
@@ -215,6 +245,10 @@ struct PoolInner {
     cow_copies: u64,
     reclaimed: u64,
     peak_resident: usize,
+    /// Set when a lock holder panicked and the guard was recovered; the
+    /// pool then refuses new reservations with a typed
+    /// [`KvError::LockPoisoned`] instead of panicking on the next lock.
+    poisoned: bool,
 }
 
 /// Process-wide paged KV allocator; cheap to clone (shared state behind a
@@ -338,8 +372,26 @@ impl KvPool {
         }
     }
 
+    /// Lock the pool state, recovering from mutex poisoning instead of
+    /// propagating the holder's panic: the guard is taken over and the
+    /// pool is flagged so fallible entry points ([`KvPool::ensure`])
+    /// surface a typed [`KvError::LockPoisoned`] — infallible readers and
+    /// releases keep working so in-flight sessions can wind down.
     fn lock(&self) -> MutexGuard<'_, PoolInner> {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+        match self.inner.lock() {
+            Ok(guard) => guard,
+            Err(recovered) => {
+                let mut guard = recovered.into_inner();
+                guard.poisoned = true;
+                guard
+            }
+        }
+    }
+
+    /// Whether a lock holder ever panicked (the pool refuses reservations
+    /// from then on).
+    pub fn is_poisoned(&self) -> bool {
+        self.lock().poisoned
     }
 
     /// Allocate one page: free list → grow → LRU-reclaim a cached page.
@@ -448,10 +500,13 @@ impl KvPool {
         let p = self.page_tokens;
         let first_write = len.max(table.shared_len);
         let last = len + extra;
+        let mut inner = self.lock();
+        if inner.poisoned {
+            return Err(KvError::LockPoisoned);
+        }
         if first_write >= last {
             return Ok(()); // nothing will be stored (fully shared extent)
         }
-        let mut inner = self.lock();
         for j in first_write / p..=(last - 1) / p {
             if j < table.pages.len() {
                 let pid = table.pages[j];
@@ -904,6 +959,37 @@ mod tests {
             .context("decode step");
         assert!(KvError::is_pool_exhausted(&e));
         assert!(!KvError::is_context_overflow(&e));
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_to_a_typed_error() {
+        // A thread panicking while holding the pool mutex must not turn
+        // the next lock into a panic: the guard is recovered, the pool is
+        // flagged, and reservations refuse with a typed KvError.
+        let p = pool(3);
+        let mut t = BlockTable::default();
+        p.ensure(&mut t, 0, 4).unwrap();
+        let clone = p.clone();
+        let holder = std::thread::spawn(move || {
+            let _guard = clone.inner.lock().unwrap();
+            panic!("poison the pool mutex");
+        });
+        assert!(holder.join().is_err(), "holder thread must panic");
+        assert!(p.is_poisoned());
+        let err = p.ensure(&mut t, 4, 1).unwrap_err();
+        assert!(matches!(err, KvError::LockPoisoned));
+        assert!(err.to_string().contains(KvError::LOCK_POISONED_TAG));
+        let e = anyhow::Error::from(err).context("decode step");
+        assert!(KvError::is_lock_poisoned(&e));
+        assert!(!KvError::is_pool_exhausted(&e));
+        // Infallible paths still work so sessions can wind down.
+        let _ = p.stats();
+        p.release(&mut t);
+        assert_eq!(p.stats().resident_pages, 0);
+        // Replica-failure errors classify through the chain the same way.
+        let rf = anyhow::Error::from(KvError::ReplicaFailed { shard: 1 }).context("decode step");
+        assert!(KvError::is_replica_failed(&rf));
+        assert!(!KvError::is_lock_poisoned(&rf));
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! Seeded, deterministic fault injection for the serving scheduler.
+//!
+//! A [`FaultPlan`] names the sites and per-site probabilities (parsed
+//! from the CLI's `--chaos SPEC` string); a [`FaultInjector`] turns the
+//! plan plus a seed into concrete fault decisions the scheduler consults
+//! at each site. Every decision is a **stateless keyed hash draw**
+//! ([`crate::util::rng::splitmix64`] over `seed ^ site ^ key`), not a
+//! shared RNG stream — so whether a given request faults does not depend
+//! on the order sites happen to be consulted in, and the same seed
+//! replays the same fault sequence in CI regardless of thread timing.
+//!
+//! ## Sites and keys
+//!
+//! | site      | key                  | effect in the scheduler            |
+//! |-----------|----------------------|------------------------------------|
+//! | `pool`    | request id           | one transient pool-exhaustion      |
+//! |           |                      | refusal (retry-with-backoff path)  |
+//! | `replica` | scheduler tick       | quarantine one live shard          |
+//! | `draft`   | request id × round   | a speculative draft round fails    |
+//! |           |                      | (feeds the circuit-breaker)        |
+//! | `abort`   | request id           | client goes away after N tokens    |
+//! | `slow`    | client id × ordinal  | client stalls before draining      |
+//!
+//! Request-keyed sites are **topology-independent**: the set of requests
+//! that fault is the same under `--replicas 1` and `--replicas 2`, which
+//! is what the cross-topology determinism property test pins. Tick-keyed
+//! sites (`replica`) are deterministic per run configuration but
+//! naturally vary with topology (tick counts differ).
+//!
+//! The `pool` site is the one stateful site: it fires **at most once per
+//! request** (a consumed set), so an injected transient can never be
+//! mistaken for real, persistent exhaustion — the scheduler's fatal
+//! pool-exhaustion path stays reachable only by genuine pressure.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+use crate::util::rng::splitmix64;
+
+// Per-site salts: arbitrary odd constants so the same key draws
+// independently at every site.
+const SITE_POOL: u64 = 0x9e37_79b9_7f4a_7c15;
+const SITE_REPLICA: u64 = 0xbf58_476d_1ce4_e5b9;
+const SITE_DRAFT: u64 = 0x94d0_49bb_1331_11eb;
+const SITE_ABORT: u64 = 0xd6e8_feb8_6659_fd93;
+const SITE_SLOW: u64 = 0xa076_1d64_78bd_642f;
+const SITE_ABORT_AT: u64 = 0xe703_7ed1_a0b4_28db;
+
+/// Per-site fault probabilities, all in `[0, 1]`; `0` disables a site.
+/// Parsed from a `--chaos` spec like `"pool=0.2,replica=0.1,draft=0.3"`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Transient pool-exhaustion refusal, once per drawn request.
+    pub pool: f64,
+    /// Per-tick chance of one live replica shard failing.
+    pub replica: f64,
+    /// Per-round chance a speculative draft round fails.
+    pub draft: f64,
+    /// Per-request chance the client aborts mid-stream.
+    pub abort: f64,
+    /// Per-request chance the client is slow to drain its response.
+    pub slow: f64,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `site=probability` list. Unknown sites and
+    /// probabilities outside `[0, 1]` are errors; an empty spec is the
+    /// empty (fault-free) plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((site, prob)) = part.split_once('=') else {
+                bail!("chaos spec entry {part:?} is not site=probability");
+            };
+            let p: f64 = prob
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("chaos probability {prob:?} is not a number"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("chaos probability {p} for site {site:?} is outside [0, 1]");
+            }
+            match site.trim() {
+                "pool" => plan.pool = p,
+                "replica" => plan.replica = p,
+                "draft" => plan.draft = p,
+                "abort" => plan.abort = p,
+                "slow" => plan.slow = p,
+                other => bail!(
+                    "unknown chaos site {other:?} (expected pool, replica, draft, abort, slow)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when every site is disabled (no injector needed).
+    pub fn is_empty(&self) -> bool {
+        self.pool == 0.0
+            && self.replica == 0.0
+            && self.draft == 0.0
+            && self.abort == 0.0
+            && self.slow == 0.0
+    }
+}
+
+/// A seeded fault oracle over a [`FaultPlan`]. All draws are pure keyed
+/// hashes except the once-per-request `pool` site (a consumed set).
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    seed: u64,
+    pool_consumed: BTreeSet<u64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan, seed: u64) -> FaultInjector {
+        FaultInjector {
+            plan,
+            seed,
+            pool_consumed: BTreeSet::new(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Uniform draw in `[0, 1)` keyed by `(seed, site, key)`.
+    fn unit(&self, site: u64, key: u64) -> f64 {
+        let mut state = self.seed ^ site ^ key.wrapping_mul(0xd1b5_4a32_d192_ed03);
+        let bits = splitmix64(&mut state);
+        (bits >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Raw 64-bit draw keyed by `(seed, site, key)` (for selectors).
+    fn bits(&self, site: u64, key: u64) -> u64 {
+        let mut state = self.seed ^ site ^ key.wrapping_mul(0xd1b5_4a32_d192_ed03);
+        splitmix64(&mut state)
+    }
+
+    /// One transient pool-exhaustion refusal for `req_id`, at most once
+    /// per request across all consult sites (admission and decode).
+    pub fn pool_fault(&mut self, req_id: u64) -> bool {
+        if self.plan.pool <= 0.0 || self.pool_consumed.contains(&req_id) {
+            return false;
+        }
+        if self.unit(SITE_POOL, req_id) < self.plan.pool {
+            self.pool_consumed.insert(req_id);
+            return true;
+        }
+        false
+    }
+
+    /// Shard-failure draw for this tick: `Some(selector)` means one live
+    /// shard should be quarantined (the engine picks the victim from the
+    /// selector, skipping already-dead shards and the last survivor).
+    pub fn replica_fault(&self, tick: u64) -> Option<u64> {
+        if self.plan.replica <= 0.0 || self.unit(SITE_REPLICA, tick) >= self.plan.replica {
+            return None;
+        }
+        Some(self.bits(SITE_REPLICA, tick.wrapping_add(1)))
+    }
+
+    /// Whether speculative draft round `round` of request `req_id` fails.
+    pub fn draft_fault(&self, req_id: u64, round: u64) -> bool {
+        self.plan.draft > 0.0
+            && self.unit(SITE_DRAFT, req_id ^ round.wrapping_mul(0x9e37_79b9)) < self.plan.draft
+    }
+
+    /// Injected client abort for `req_id`: `Some(n)` means the client
+    /// goes away after `n` produced tokens (`1 ≤ n < max_new_tokens`, so
+    /// the abort always lands mid-stream). `None` when the request does
+    /// not abort or is too short to abort mid-stream.
+    pub fn abort_after(&self, req_id: u64, max_new_tokens: usize) -> Option<usize> {
+        if self.plan.abort <= 0.0
+            || max_new_tokens < 2
+            || self.unit(SITE_ABORT, req_id) >= self.plan.abort
+        {
+            return None;
+        }
+        let span = (max_new_tokens - 1) as u64;
+        Some(1 + (self.bits(SITE_ABORT_AT, req_id) % span) as usize)
+    }
+
+    /// Whether the client should stall before draining this response
+    /// (keyed by client id and per-client request ordinal — the client
+    /// side knows those before the scheduler assigns a request id).
+    pub fn slow_client(&self, client: u64, ordinal: u64) -> bool {
+        self.plan.slow > 0.0
+            && self.unit(SITE_SLOW, client ^ ordinal.wrapping_mul(0x85eb_ca6b)) < self.plan.slow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_full_and_partial_specs() {
+        let p = FaultPlan::parse("pool=0.2,replica=0.1,draft=0.3").unwrap();
+        assert_eq!(p.pool, 0.2);
+        assert_eq!(p.replica, 0.1);
+        assert_eq!(p.draft, 0.3);
+        assert_eq!(p.abort, 0.0);
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert_eq!(
+            FaultPlan::parse(" abort=1 , slow=0.5 ").unwrap(),
+            FaultPlan {
+                abort: 1.0,
+                slow: 0.5,
+                ..FaultPlan::default()
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("pool").is_err());
+        assert!(FaultPlan::parse("pool=x").is_err());
+        assert!(FaultPlan::parse("pool=1.5").is_err());
+        assert!(FaultPlan::parse("pool=-0.1").is_err());
+        assert!(FaultPlan::parse("gamma=0.5").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan::parse("pool=0.5,replica=0.5,draft=0.5,abort=0.5,slow=0.5").unwrap();
+        let a = FaultInjector::new(plan.clone(), 7);
+        let b = FaultInjector::new(plan.clone(), 7);
+        let c = FaultInjector::new(plan, 8);
+        let per_seed = |f: &FaultInjector| -> Vec<bool> {
+            (0..64)
+                .map(|i| f.draft_fault(i, 0) || f.abort_after(i, 16).is_some())
+                .collect()
+        };
+        assert_eq!(per_seed(&a), per_seed(&b), "same seed must replay");
+        assert_ne!(per_seed(&a), per_seed(&c), "different seed must differ");
+        assert_eq!(a.replica_fault(3), b.replica_fault(3));
+    }
+
+    #[test]
+    fn pool_fault_fires_at_most_once_per_request() {
+        let plan = FaultPlan::parse("pool=1").unwrap();
+        let mut f = FaultInjector::new(plan, 9);
+        for id in 0..8u64 {
+            assert!(f.pool_fault(id), "p=1 must fire for request {id}");
+            assert!(!f.pool_fault(id), "second draw for {id} must be consumed");
+        }
+    }
+
+    #[test]
+    fn probability_extremes_are_certain() {
+        let all = FaultPlan::parse("replica=1,draft=1,abort=1,slow=1").unwrap();
+        let none = FaultPlan::default();
+        let on = FaultInjector::new(all, 3);
+        let off = FaultInjector::new(none, 3);
+        for k in 0..32u64 {
+            assert!(on.replica_fault(k).is_some());
+            assert!(on.draft_fault(k, k));
+            assert!(on.slow_client(k, k));
+            let n = on.abort_after(k, 12).unwrap();
+            assert!((1..12).contains(&n), "abort point {n} out of range");
+            assert!(off.replica_fault(k).is_none());
+            assert!(!off.draft_fault(k, k));
+            assert!(off.abort_after(k, 12).is_none());
+            assert!(!off.slow_client(k, k));
+        }
+        // Too short to abort mid-stream.
+        assert_eq!(on.abort_after(0, 1), None);
+    }
+}

@@ -101,6 +101,52 @@
 //! behind one system prompt hold far fewer resident pages than N × the
 //! prompt's page count.
 //!
+//! ## Degradation ladder
+//!
+//! Overload and faults degrade through typed outcomes, never panics, and
+//! never a wedged scheduler:
+//!
+//! * **Deadlines.** [`Request::Generate`] carries `deadline_ticks`; a
+//!   request that has not completed within that many scheduler ticks of
+//!   its arrival is answered with [`Response::TimedOut`] and every page
+//!   it held is released. The deadline is *absolute*: requeues and
+//!   preemptions never extend the budget.
+//! * **Load shedding.** With [`ServeConfig::queue_cap`] set, arrivals
+//!   past the cap are shed with [`Response::Shed`] — `Batch` work first.
+//!   An `Interactive` arrival evicts the youngest queued `Batch` request
+//!   to make room and is only shed itself when the backlog is
+//!   all-`Interactive`; `Interactive` is never shed while `Batch` work
+//!   is queued.
+//! * **Transient pool exhaustion.** A refused decode step backs off and
+//!   retries the same batch for up to [`POOL_RETRY_LIMIT`] consecutive
+//!   ticks (pages may free as other work retires) before the preemption
+//!   ladder engages. Injected transients (the `pool` chaos site) ride
+//!   the same path and fire at most once per request, so they can never
+//!   be mistaken for persistent exhaustion.
+//! * **Replica failover.** A quarantined shard's decode sessions migrate
+//!   by re-prefilling their token history on a surviving shard — the
+//!   standard resume path, so the streams stay bit-exact; mid-prefill
+//!   sessions return to their queue slot. The tick auditor additionally
+//!   asserts that no quarantined shard still holds referenced pages
+//!   after migration.
+//! * **Speculation circuit breaker.**
+//!   [`BREAKER_THRESHOLD`](crate::engine::speculative::BREAKER_THRESHOLD)
+//!   consecutive draft failures (real or injected) disable drafting for
+//!   [`BREAKER_COOLDOWN_ROUNDS`](crate::engine::speculative::BREAKER_COOLDOWN_ROUNDS)
+//!   ticks, then the first round after the cooldown probes the draft
+//!   again. Rounds meanwhile degrade to plain verify-path decode — the
+//!   draft is advisory, so streams stay bit-exact throughout.
+//! * **Client aborts.** A session whose client went away — its liveness
+//!   token dropped, or the chaos plan's abort point was reached — is
+//!   retired with [`Response::Aborted`] and its pages are released,
+//!   instead of burning decode slots on a stream nobody reads.
+//!
+//! Fault injection itself lives in [`faults`]: seeded keyed-hash draws
+//! at named sites (the CLI's `--chaos`), so the same seed replays the
+//! same fault sequence and the chaos property tests can pin exact
+//! report counters. Under any plan, every submitted request terminates
+//! with exactly one typed [`Response`].
+//!
 //! ## Telemetry
 //!
 //! [`ServeReport`] aggregates fleet-wide counters plus a per-priority
@@ -124,17 +170,27 @@
 //! and checks every touched pool for page leaks once the scheduler drains.
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::corpus;
+use crate::engine::speculative::{BREAKER_COOLDOWN_ROUNDS, BREAKER_THRESHOLD};
 use crate::engine::{Engine, Priority, Request, Response, Sampler, Sampling, Session};
 use crate::runtime::kvpool::KvError;
 use crate::runtime::native::KvCache;
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
+
+pub mod faults;
+
+use self::faults::{FaultInjector, FaultPlan};
+
+/// Decode ticks a pool-refused batch backs off and retries (pages may
+/// free as other work retires) before the preemption ladder engages.
+pub const POOL_RETRY_LIMIT: usize = 3;
 
 /// What the closed-loop bench clients submit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -175,6 +231,16 @@ pub struct ServeConfig {
     /// prompt of this length — the long-prompt-vs-decode interference
     /// probe that chunked prefill exists to fix.
     pub long_prompt_len: usize,
+    /// Bounded admission queue: an arrival that would push the queued
+    /// total past this cap is shed (`Batch` before `Interactive`);
+    /// 0 = unbounded.
+    pub queue_cap: usize,
+    /// Per-request deadline, in scheduler ticks, stamped on every
+    /// generate request (0 = no deadline).
+    pub deadline_ticks: usize,
+    /// Seeded fault-injection plan (empty = no chaos). Seeded from
+    /// [`ServeConfig::seed`].
+    pub chaos: FaultPlan,
 }
 
 impl Default for ServeConfig {
@@ -190,6 +256,9 @@ impl Default for ServeConfig {
             prefill_chunk: 0,
             batch_clients: 0,
             long_prompt_len: 0,
+            queue_cap: 0,
+            deadline_ticks: 0,
+            chaos: FaultPlan::default(),
         }
     }
 }
@@ -254,6 +323,39 @@ pub struct ServeReport {
     /// Batched target verify forwards (one per session per decode tick
     /// when speculating).
     pub verify_steps: usize,
+    /// Requests answered [`Response::TimedOut`]: their deadline passed
+    /// before completion (pages released, stream discarded).
+    pub timed_out: usize,
+    /// Requests answered [`Response::Shed`] by the bounded admission
+    /// queue (`Batch` work first, never `Interactive` before `Batch`).
+    pub shed: usize,
+    /// Sessions retired with [`Response::Aborted`]: the client went away
+    /// mid-stream (dead liveness token or injected abort point).
+    pub aborted: usize,
+    /// Responses whose client stalled before draining them (the `slow`
+    /// chaos site) — the scheduler kept serving regardless.
+    pub slow_clients: usize,
+    /// Decode ticks spent backing off on a transient pool refusal before
+    /// the preemption ladder engaged.
+    pub pool_retries: usize,
+    /// Transient pool faults the chaos plan injected (at most one per
+    /// request, so they never masquerade as persistent exhaustion).
+    pub injected_pool_faults: usize,
+    /// Replica shards quarantined by the chaos plan mid-run.
+    pub shard_failures: usize,
+    /// Sessions migrated off a quarantined shard (re-prefilled onto a
+    /// survivor bit-exactly, or returned to their queue slot mid-prefill).
+    pub failovers: usize,
+    /// Speculative draft rounds that failed (real draft errors plus
+    /// injected `draft` chaos faults).
+    pub draft_failures: usize,
+    /// Times the speculation circuit breaker tripped open
+    /// ([`crate::engine::speculative::BREAKER_THRESHOLD`] consecutive
+    /// draft failures).
+    pub breaker_trips: usize,
+    /// Draft rounds suppressed while the breaker was open (the sessions
+    /// took plain verify-path decode instead).
+    pub breaker_skipped: usize,
     /// Per-priority breakdown, indexed by [`Priority::index`].
     pub classes: Vec<ClassReport>,
     pub wall_secs: f64,
@@ -368,6 +470,17 @@ struct Stats {
     rejected_tokens: usize,
     draft_steps: usize,
     verify_steps: usize,
+    timed_out: usize,
+    shed: usize,
+    aborted: usize,
+    slow_clients: usize,
+    pool_retries: usize,
+    injected_pool_faults: usize,
+    shard_failures: usize,
+    failovers: usize,
+    draft_failures: usize,
+    breaker_trips: usize,
+    breaker_skipped: usize,
     classes: [ClassAccum; Priority::COUNT],
 }
 
@@ -409,6 +522,17 @@ impl Stats {
             rejected_tokens: self.rejected_tokens,
             draft_steps: self.draft_steps,
             verify_steps: self.verify_steps,
+            timed_out: self.timed_out,
+            shed: self.shed,
+            aborted: self.aborted,
+            slow_clients: self.slow_clients,
+            pool_retries: self.pool_retries,
+            injected_pool_faults: self.injected_pool_faults,
+            shard_failures: self.shard_failures,
+            failovers: self.failovers,
+            draft_failures: self.draft_failures,
+            breaker_trips: self.breaker_trips,
+            breaker_skipped: self.breaker_skipped,
             classes,
             wall_secs,
             sorted_latencies_s,
@@ -421,11 +545,41 @@ struct Incoming {
     req: Request,
     done: mpsc::Sender<Response>,
     submitted: Instant,
+    /// Client liveness token: upgradable while the client still holds
+    /// its end of the stream. `None` = liveness not tracked (the
+    /// pre-queued one-shot paths).
+    alive: Option<Weak<()>>,
+}
+
+/// The robustness envelope riding alongside a request through every
+/// holding area (queue, prefilling, active, preempted): its absolute
+/// deadline, the client liveness token, and the chaos plan's injected
+/// abort point. Fixed at arrival — requeues and preemptions carry it
+/// unchanged, so nothing a request does extends its deadline.
+#[derive(Clone)]
+struct Envelope {
+    /// Absolute scheduler tick past which the request times out
+    /// (`u64::MAX` = no deadline).
+    deadline_tick: u64,
+    alive: Option<Weak<()>>,
+    /// Chaos: the client goes away once this many tokens were produced.
+    abort_after: Option<usize>,
+}
+
+impl Envelope {
+    fn expired(&self, tick: u64) -> bool {
+        tick > self.deadline_tick
+    }
+
+    fn client_gone(&self) -> bool {
+        self.alive.as_ref().is_some_and(|w| w.upgrade().is_none())
+    }
 }
 
 struct Arrived {
     id: u64,
     inc: Incoming,
+    env: Envelope,
 }
 
 /// The scheduling class of a request. `Score` carries no priority field
@@ -463,6 +617,10 @@ struct ActiveGen {
     /// Submit → first sampled token (survives preemption: the token was
     /// already delivered to the stream state).
     ttft_s: f64,
+    /// Speculative rounds this session has started (the `draft` chaos
+    /// site's round key; resets with the session on resume).
+    spec_rounds: u64,
+    env: Envelope,
     done: mpsc::Sender<Response>,
     submitted: Instant,
 }
@@ -480,6 +638,7 @@ struct PrefillingGen {
     budget: usize,
     max_new_tokens: usize,
     sampling: Sampling,
+    env: Envelope,
     done: mpsc::Sender<Response>,
     submitted: Instant,
 }
@@ -503,8 +662,26 @@ struct Preempted {
     budget: usize,
     prompt_len: usize,
     ttft_s: f64,
+    env: Envelope,
     done: mpsc::Sender<Response>,
     submitted: Instant,
+}
+
+/// How one speculative round went, for the circuit breaker's books.
+/// Exactly one of these comes back from every [`Scheduler::spec_advance_one`]
+/// call, so the breaker counts rounds — not tokens or errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DraftRound {
+    /// The round never wanted to draft (sampled stream, budget clamp,
+    /// draft context too small) — neutral for the breaker.
+    Idle,
+    /// The round wanted to draft but the open breaker suppressed it.
+    Skipped,
+    /// A drafting round that completed; resets the failure streak.
+    Clean,
+    /// The draft engine failed (or a `draft` chaos fault fired) and the
+    /// round degraded to plain decode; counts toward tripping the breaker.
+    Failed,
 }
 
 /// Continuous-batching scheduler state (single leader thread).
@@ -527,6 +704,21 @@ struct Scheduler<'a> {
     preempted: Vec<Preempted>,
     stats: Stats,
     next_id: u64,
+    /// Scheduler iterations so far — the deadline clock and the key of
+    /// the tick-keyed chaos sites.
+    tick: u64,
+    /// Bounded admission queue cap (0 = unbounded).
+    queue_cap: usize,
+    /// Seeded fault oracle (None = no chaos configured).
+    faults: Option<FaultInjector>,
+    /// Consecutive decode ticks spent backing off on a transient pool
+    /// refusal; resets on any successful decode step.
+    pool_retry_streak: usize,
+    /// Consecutive failed draft rounds (the breaker's trip counter).
+    consec_draft_failures: usize,
+    /// Speculation circuit breaker: drafting is suppressed until this
+    /// tick (the first round at/after it is the probe).
+    breaker_open_until: u64,
 }
 
 impl<'a> Scheduler<'a> {
@@ -543,6 +735,12 @@ impl<'a> Scheduler<'a> {
             preempted: Vec::new(),
             stats: Stats::default(),
             next_id: 0,
+            tick: 0,
+            queue_cap: 0,
+            faults: None,
+            pool_retry_streak: 0,
+            consec_draft_failures: 0,
+            breaker_open_until: 0,
         }
     }
 
@@ -554,11 +752,66 @@ impl<'a> Scheduler<'a> {
         self
     }
 
+    /// Bound the admission queue at `cap` requests (0 = unbounded).
+    fn with_queue_cap(mut self, cap: usize) -> Scheduler<'a> {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// Attach a seeded fault oracle (chaos runs).
+    fn with_faults(mut self, faults: FaultInjector) -> Scheduler<'a> {
+        self.faults = Some(faults);
+        self
+    }
+
     fn enqueue(&mut self, inc: Incoming) {
         let id = self.next_id;
         self.next_id += 1;
         let class = req_class(&inc.req);
-        self.queues[class.index()].push_back(Arrived { id, inc });
+        let (deadline_ticks, max_new) = match &inc.req {
+            Request::Generate {
+                deadline_ticks,
+                max_new_tokens,
+                ..
+            } => (*deadline_ticks, *max_new_tokens),
+            Request::Score { .. } => (0, 0),
+        };
+        let env = Envelope {
+            deadline_tick: if deadline_ticks == 0 {
+                u64::MAX
+            } else {
+                self.tick.saturating_add(deadline_ticks as u64)
+            },
+            alive: inc.alive.clone(),
+            abort_after: match self.faults.as_ref() {
+                Some(f) if max_new > 0 => f.abort_after(id, max_new),
+                _ => None,
+            },
+        };
+        let arrived = Arrived { id, inc, env };
+        if self.queue_cap > 0 && self.queues.iter().map(|q| q.len()).sum::<usize>() >= self.queue_cap
+        {
+            // Bounded admission queue: shed Batch work first. Interactive
+            // is never shed while Batch work is queued — an Interactive
+            // arrival evicts the youngest queued Batch request instead.
+            if class == Priority::Batch {
+                self.shed(arrived);
+                return;
+            }
+            if let Some(victim) = self.queues[Priority::Batch.index()].pop_back() {
+                self.shed(victim);
+            } else {
+                self.shed(arrived);
+                return;
+            }
+        }
+        self.queues[class.index()].push_back(arrived);
+    }
+
+    /// Answer one request with the typed overload refusal.
+    fn shed(&mut self, a: Arrived) {
+        self.stats.shed += 1;
+        self.finish(a.id, a.inc.submitted, &a.inc.done, Response::Shed);
     }
 
     fn has_work(&self) -> bool {
@@ -573,12 +826,17 @@ impl<'a> Scheduler<'a> {
         self.active.len() + self.prefilling.len()
     }
 
-    /// One scheduler iteration: resume preempted sessions, priority-class
-    /// FIFO admission, one scoring pass, one decode step, then up to
-    /// `prefill_chunk` tokens of chunked prefill. Decode runs *before*
-    /// prefill so a long prompt can never stall running streams. Always
-    /// makes progress when `has_work()`.
+    /// One scheduler iteration: advance the tick clock, sweep expired and
+    /// abandoned requests, inject tick-keyed chaos faults, resume
+    /// preempted sessions, priority-class FIFO admission, one scoring
+    /// pass, one decode step, then up to `prefill_chunk` tokens of
+    /// chunked prefill. Decode runs *before* prefill so a long prompt can
+    /// never stall running streams. Always makes progress when
+    /// `has_work()`.
     fn step(&mut self) -> Result<()> {
+        self.tick += 1;
+        self.sweep_expired();
+        self.inject_tick_faults()?;
         // Preempted sessions were admitted before anything still queued:
         // they get first claim on freed pool capacity.
         self.try_resume()?;
@@ -622,6 +880,150 @@ impl<'a> Scheduler<'a> {
         }
         self.prefill_tick()?;
         Ok(())
+    }
+
+    /// Degradation sweep, first thing every tick: time out requests whose
+    /// deadline passed and retire sessions whose client went away (dead
+    /// liveness token, or the chaos plan's abort point reached). Every
+    /// removal sends exactly one terminal [`Response`] and drops the
+    /// session's caches, so its pages return to the pool immediately.
+    fn sweep_expired(&mut self) {
+        let tick = self.tick;
+        // Queued arrivals (nothing produced yet): deadline + liveness.
+        for ci in 0..Priority::COUNT {
+            let mut i = 0;
+            while i < self.queues[ci].len() {
+                let timed = self.queues[ci][i].env.expired(tick);
+                if !timed && !self.queues[ci][i].env.client_gone() {
+                    i += 1;
+                    continue;
+                }
+                let Some(a) = self.queues[ci].remove(i) else {
+                    break; // index checked above; defensive for the linter
+                };
+                if timed {
+                    self.stats.timed_out += 1;
+                    self.finish(a.id, a.inc.submitted, &a.inc.done, Response::TimedOut);
+                } else {
+                    self.stats.aborted += 1;
+                    self.finish(a.id, a.inc.submitted, &a.inc.done, Response::Aborted);
+                }
+            }
+        }
+        // Decode sessions: deadline, dead client, injected abort point.
+        let mut i = 0;
+        while i < self.active.len() {
+            let timed = self.active[i].env.expired(tick);
+            let gone = self.active[i].env.client_gone()
+                || self.active[i]
+                    .env
+                    .abort_after
+                    .is_some_and(|n| self.active[i].produced.len() >= n);
+            if !timed && !gone {
+                i += 1;
+                continue;
+            }
+            // Cache (and draft mirror) drop here: pages released.
+            let ag = self.active.swap_remove(i);
+            if timed {
+                self.stats.timed_out += 1;
+                self.finish(ag.id, ag.submitted, &ag.done, Response::TimedOut);
+            } else {
+                self.stats.aborted += 1;
+                self.finish(ag.id, ag.submitted, &ag.done, Response::Aborted);
+            }
+        }
+        // Mid-prefill sessions: deadline + liveness (chunk cache drops).
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            let timed = self.prefilling[i].env.expired(tick);
+            if !timed && !self.prefilling[i].env.client_gone() {
+                i += 1;
+                continue;
+            }
+            let p = self.prefilling.swap_remove(i);
+            if timed {
+                self.stats.timed_out += 1;
+                self.finish(p.id, p.submitted, &p.done, Response::TimedOut);
+            } else {
+                self.stats.aborted += 1;
+                self.finish(p.id, p.submitted, &p.done, Response::Aborted);
+            }
+        }
+        // Parked sessions hold no pages, but their clients still deserve
+        // a terminal answer — and an expired one must never resume.
+        let mut i = 0;
+        while i < self.preempted.len() {
+            let timed = self.preempted[i].env.expired(tick);
+            let gone = self.preempted[i].env.client_gone()
+                || self.preempted[i]
+                    .env
+                    .abort_after
+                    .is_some_and(|n| self.preempted[i].produced.len() >= n);
+            if !timed && !gone {
+                i += 1;
+                continue;
+            }
+            let p = self.preempted.swap_remove(i);
+            if timed {
+                self.stats.timed_out += 1;
+                self.finish(p.id, p.submitted, &p.done, Response::TimedOut);
+            } else {
+                self.stats.aborted += 1;
+                self.finish(p.id, p.submitted, &p.done, Response::Aborted);
+            }
+        }
+    }
+
+    /// Tick-keyed chaos faults: a drawn replica failure quarantines one
+    /// live shard through [`Engine::quarantine_one_shard`] and migrates
+    /// every session stranded on it. Only drawn while sessions are in
+    /// flight, so a quarantine always exercises migration (and the CI
+    /// failover grep is deterministic instead of racing admission).
+    fn inject_tick_faults(&mut self) -> Result<()> {
+        let Some(f) = self.faults.as_ref() else {
+            return Ok(());
+        };
+        if self.active.is_empty() && self.prefilling.is_empty() {
+            return Ok(());
+        }
+        if let Some(selector) = f.replica_fault(self.tick) {
+            if self.engine.quarantine_one_shard(selector).is_some() {
+                self.stats.shard_failures += 1;
+                self.migrate_orphans();
+            }
+        }
+        Ok(())
+    }
+
+    /// Move every session whose KV lives on a quarantined shard off it:
+    /// decode sessions park as preempted (their token history re-prefills
+    /// onto a live shard bit-exactly — the standard resume path), and
+    /// mid-prefill sessions return to their queue slot. Each migration
+    /// counts one failover.
+    fn migrate_orphans(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.engine.cache_orphaned(&self.active[i].session.cache) {
+                self.park_active_at(i);
+                self.stats.failovers += 1;
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            let orphaned = self.prefilling[i]
+                .state
+                .as_ref()
+                .is_some_and(|c| self.engine.cache_orphaned(c));
+            if orphaned {
+                self.requeue_prefilling_at(i);
+                self.stats.failovers += 1;
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Debug-mode tick auditor: collect every live paged cache (active
@@ -671,6 +1073,14 @@ impl<'a> Scheduler<'a> {
                     .map_err(|e| anyhow!("kv pool audit failed at idle tick: {e}"))?;
             }
         }
+        // Degradation ladder: after migration, a quarantined shard must
+        // not hold a single referenced page — every stranded session was
+        // parked (cache dropped) or requeued, so its pool audits clean
+        // against the empty table set.
+        for pool in self.engine.quarantined_pools() {
+            pool.audit_tables(&[])
+                .map_err(|e| anyhow!("quarantined shard still holds pages: {e}"))?;
+        }
         Ok(())
     }
 
@@ -712,6 +1122,8 @@ impl<'a> Scheduler<'a> {
                         budget: p.budget,
                         prompt_len: p.prompt_len,
                         ttft_s: p.ttft_s,
+                        spec_rounds: 0,
+                        env: p.env,
                         done: p.done,
                         submitted: p.submitted,
                     });
@@ -776,6 +1188,18 @@ impl<'a> Scheduler<'a> {
             self.reject(arrived, error);
             return Ok(true);
         }
+        if let Some(f) = self.faults.as_mut() {
+            if f.pool_fault(arrived.id) {
+                // Injected transient exhaustion (at most once per
+                // request): the head keeps its turn at the queue front
+                // and admission stops this tick, exactly like the real
+                // momentary-pressure path below — never the fatal one.
+                self.stats.injected_pool_faults += 1;
+                let class = req_class(&arrived.inc.req);
+                self.queues[class.index()].push_front(arrived);
+                return Ok(false);
+            }
+        }
         let prefilled = {
             let Request::Generate { prompt, .. } = &arrived.inc.req else {
                 unreachable!("admit_generate on a non-generate request");
@@ -804,12 +1228,13 @@ impl<'a> Scheduler<'a> {
             Err(e) => return Err(e),
             Ok(ok) => ok,
         };
-        let Arrived { id, inc } = arrived;
+        let Arrived { id, inc, env } = arrived;
         let Request::Generate {
             prompt,
             max_new_tokens,
             sampling,
             priority,
+            deadline_ticks: _, // the envelope carries the absolute tick
         } = inc.req
         else {
             unreachable!("admit_generate on a non-generate request");
@@ -846,6 +1271,8 @@ impl<'a> Scheduler<'a> {
             budget,
             prompt_len,
             ttft_s: inc.submitted.elapsed().as_secs_f64(),
+            spec_rounds: 0,
+            env,
             done: inc.done,
             submitted: inc.submitted,
         };
@@ -867,12 +1294,13 @@ impl<'a> Scheduler<'a> {
             self.reject(arrived, error);
             return Ok(());
         }
-        let Arrived { id, inc } = arrived;
+        let Arrived { id, inc, env } = arrived;
         let Request::Generate {
             prompt,
             max_new_tokens,
             sampling,
             priority,
+            deadline_ticks: _, // the envelope carries the absolute tick
         } = inc.req
         else {
             unreachable!("admit_generate_chunked on a non-generate request");
@@ -901,6 +1329,7 @@ impl<'a> Scheduler<'a> {
             budget,
             max_new_tokens,
             sampling,
+            env,
             done: inc.done,
             submitted: inc.submitted,
         });
@@ -1043,6 +1472,8 @@ impl<'a> Scheduler<'a> {
             budget: p.budget,
             prompt_len,
             ttft_s: p.submitted.elapsed().as_secs_f64(),
+            spec_rounds: 0,
+            env: p.env,
             done: p.done,
             submitted: p.submitted,
         };
@@ -1069,13 +1500,27 @@ impl<'a> Scheduler<'a> {
         else {
             return false;
         };
+        self.requeue_prefilling_at(vi);
+        true
+    }
+
+    /// Return the mid-prefill session at `vi` to its queue slot (its
+    /// chunk cache frees here). The rebuilt request keeps its id and its
+    /// envelope — the absolute deadline is NOT extended by the round
+    /// trip — and insertion keeps the queue id-ordered (within-class
+    /// FIFO).
+    fn requeue_prefilling_at(&mut self, vi: usize) {
         let v = self.prefilling.remove(vi);
         let req = Request::Generate {
             prompt: v.prompt,
             max_new_tokens: v.max_new_tokens,
             sampling: v.sampling,
             priority: v.class,
+            // The envelope's absolute tick stays authoritative; the
+            // relative field is never re-read on this path.
+            deadline_ticks: 0,
         };
+        let alive = v.env.alive.clone();
         let q = &mut self.queues[v.class.index()];
         let pos = q.iter().position(|a| a.id > v.id).unwrap_or(q.len());
         q.insert(
@@ -1086,10 +1531,33 @@ impl<'a> Scheduler<'a> {
                     req,
                     done: v.done,
                     submitted: v.submitted,
+                    alive,
                 },
+                env: v.env,
             },
         );
-        true
+    }
+
+    /// Consult the chaos plan's `pool` site for every in-flight session
+    /// and, when any draw fires, burn this decode tick as one backoff
+    /// retry. Each request's fault is consumed exactly once, so the
+    /// injected transient clears by itself — it can never escalate into
+    /// the preemption ladder or the fatal lone-session path.
+    fn inject_pool_backoff(&mut self) -> bool {
+        let Some(f) = self.faults.as_mut() else {
+            return false;
+        };
+        let mut hit = false;
+        for a in &self.active {
+            if f.pool_fault(a.id) {
+                self.stats.injected_pool_faults += 1;
+                hit = true;
+            }
+        }
+        if hit {
+            self.stats.pool_retries += 1;
+        }
+        hit
     }
 
     /// Advance every in-flight session by one token in a single engine
@@ -1100,6 +1568,12 @@ impl<'a> Scheduler<'a> {
     /// session left the exhaustion is fatal — a lone session cannot free
     /// its own pages (a mid-prefill session is requeued first if present).
     fn decode_once(&mut self) -> Result<()> {
+        // Chaos: a drawn transient pool refusal (at most once per
+        // request) backs this tick off through the retry path, before
+        // any engine work — shared by the plain and speculative paths.
+        if self.inject_pool_backoff() {
+            return Ok(());
+        }
         if let (Some(draft), true) = (self.draft, self.speculate > 0) {
             return self.speculative_tick(draft);
         }
@@ -1114,6 +1588,29 @@ impl<'a> Scheduler<'a> {
             };
             let logits = match step {
                 Ok(l) => l,
+                Err(e) if KvError::is_replica_failed(&e) => {
+                    // An orphaned session reached the engine (the typed
+                    // refusal ran before any compute, so nothing moved):
+                    // migrate it and retry the survivors. No progress
+                    // means the failure is not migration-shaped — fatal.
+                    let before = self.stats.failovers;
+                    self.migrate_orphans();
+                    if self.stats.failovers == before {
+                        return Err(e);
+                    }
+                    continue;
+                }
+                Err(e)
+                    if KvError::is_pool_exhausted(&e)
+                        && self.pool_retry_streak < POOL_RETRY_LIMIT =>
+                {
+                    // Transient exhaustion: back off and retry the same
+                    // batch next tick — pages may free as scores answer
+                    // and other work retires — before preempting anyone.
+                    self.pool_retry_streak += 1;
+                    self.stats.pool_retries += 1;
+                    return Ok(());
+                }
                 Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
                     self.preempt_one();
                     continue;
@@ -1126,6 +1623,7 @@ impl<'a> Scheduler<'a> {
                 }
                 Err(e) => return Err(e),
             };
+            self.pool_retry_streak = 0;
             let step_s = t0.elapsed().as_secs_f64();
             self.stats.decode_steps += 1;
             if !self.prefilling.is_empty() {
@@ -1164,14 +1662,36 @@ impl<'a> Scheduler<'a> {
     fn speculative_tick(&mut self, draft: &'a dyn Engine) -> Result<()> {
         let t0 = Instant::now();
         let mut emitted_total = 0usize;
+        // Circuit breaker: while open, every round this tick degrades to
+        // plain verify-path decode; the first tick at/after
+        // `breaker_open_until` probes the draft again.
+        let allow_draft = self.tick >= self.breaker_open_until;
         let ids: Vec<u64> = self.active.iter().map(|a| a.id).collect();
         for id in ids {
             loop {
                 let Some(i) = self.active.iter().position(|a| a.id == id) else {
                     break; // preempted by an earlier retry this tick
                 };
-                match self.spec_advance_one(draft, i) {
-                    Ok(emitted) => {
+                match self.spec_advance_one(draft, i, allow_draft) {
+                    Ok((emitted, round)) => {
+                        self.pool_retry_streak = 0;
+                        match round {
+                            DraftRound::Failed => {
+                                self.stats.draft_failures += 1;
+                                self.consec_draft_failures += 1;
+                                if self.consec_draft_failures >= BREAKER_THRESHOLD {
+                                    // Trip: suppress drafting for the
+                                    // cooldown window starting next tick.
+                                    self.stats.breaker_trips += 1;
+                                    self.consec_draft_failures = 0;
+                                    self.breaker_open_until =
+                                        self.tick + 1 + BREAKER_COOLDOWN_ROUNDS as u64;
+                                }
+                            }
+                            DraftRound::Clean => self.consec_draft_failures = 0,
+                            DraftRound::Skipped => self.stats.breaker_skipped += 1,
+                            DraftRound::Idle => {}
+                        }
                         emitted_total += emitted;
                         // Retire at-budget sessions NOW, not at tick end:
                         // a later session's pool-exhaustion retry must
@@ -1181,6 +1701,25 @@ impl<'a> Scheduler<'a> {
                             let ag = self.active.remove(i);
                             self.retire(ag);
                         }
+                        break;
+                    }
+                    Err(e) if KvError::is_replica_failed(&e) => {
+                        // Orphaned by a quarantine this tick: migrate and
+                        // re-run the position lookup (the session parked).
+                        let before = self.stats.failovers;
+                        self.migrate_orphans();
+                        if self.stats.failovers == before {
+                            return Err(e);
+                        }
+                    }
+                    Err(e)
+                        if KvError::is_pool_exhausted(&e)
+                            && self.pool_retry_streak < POOL_RETRY_LIMIT =>
+                    {
+                        // Transient: this session's round retries next
+                        // tick, before the preemption ladder engages.
+                        self.pool_retry_streak += 1;
+                        self.stats.pool_retries += 1;
                         break;
                     }
                     Err(e) if KvError::is_pool_exhausted(&e) && self.active.len() > 1 => {
@@ -1213,14 +1752,23 @@ impl<'a> Scheduler<'a> {
     /// draft count is clamped to `remaining - 1`).
     ///
     /// The draft is advisory: any draft-side failure (its pool
-    /// exhausted, a smaller draft context, an engine refusal) silently
-    /// degrades this round toward plain single-token decode and drops
-    /// the draft mirror for a later rebuild. Only *target* errors
-    /// escape, so the caller's retry loop reasons about exactly one KV
-    /// pool; [`Engine::verify_step`] is atomic, leaving the session
-    /// untouched for the post-preemption retry.
-    fn spec_advance_one(&mut self, draft: &'a dyn Engine, i: usize) -> Result<usize> {
+    /// exhausted, a smaller draft context, an engine refusal, an
+    /// injected `draft` chaos fault) degrades this round toward plain
+    /// single-token decode, drops the draft mirror for a later rebuild,
+    /// and reports [`DraftRound::Failed`] so the caller's circuit
+    /// breaker can count it. Only *target* errors escape, so the
+    /// caller's retry loop reasons about exactly one KV pool;
+    /// [`Engine::verify_step`] is atomic, leaving the session untouched
+    /// for the post-preemption retry.
+    fn spec_advance_one(
+        &mut self,
+        draft: &'a dyn Engine,
+        i: usize,
+        allow_draft: bool,
+    ) -> Result<(usize, DraftRound)> {
         let t0 = Instant::now();
+        let round_no = self.active[i].spec_rounds;
+        self.active[i].spec_rounds += 1;
         let (greedy, remaining, history_len) = {
             let a = &self.active[i];
             (a.greedy, a.budget - a.produced.len(), a.session.tokens.len())
@@ -1237,13 +1785,36 @@ impl<'a> Scheduler<'a> {
         if m > 0 && history_len + 1 + m > draft.spec().max_context {
             m = 0;
         }
+        // Whether this round *would* draft, before the breaker and the
+        // chaos plan have their say — the breaker-skip accounting key.
+        let wanted = m > 0;
+        if !allow_draft {
+            m = 0;
+        }
+        let mut draft_failed = false;
+        if m > 0 {
+            if let Some(f) = self.faults.as_ref() {
+                if f.draft_fault(self.active[i].id, round_no) {
+                    // Injected draft failure: the mirror is presumed lost
+                    // and this round degrades to plain decode.
+                    draft_failed = true;
+                    self.active[i].draft_session = None;
+                    m = 0;
+                }
+            }
+        }
         if m > 0 && self.active[i].draft_session.is_none() {
             // Fresh session or post-preemption resume: rebuild the draft
             // KV from the token history (bit-exact by the prefill
             // contract — KV rows are pure functions of the prefix).
             match draft.prefill(&self.active[i].session.tokens) {
                 Ok((ds, _logits)) => self.active[i].draft_session = Some(ds),
-                Err(_) => m = 0, // no draft pages → no speculation this round
+                Err(_) => {
+                    // No draft pages → no speculation this round; the
+                    // breaker counts the starvation as a draft failure.
+                    draft_failed = true;
+                    m = 0;
+                }
             }
         }
         let mut drafts: Vec<i32> = Vec::with_capacity(m);
@@ -1279,6 +1850,7 @@ impl<'a> Scheduler<'a> {
                     // free); tokens drafted before the failure are still
                     // verifiable.
                     a.draft_session = None;
+                    draft_failed = true;
                 }
             }
         }
@@ -1309,7 +1881,16 @@ impl<'a> Scheduler<'a> {
         self.stats.drafted_tokens += drafts.len();
         self.stats.accepted_tokens += acc;
         self.stats.rejected_tokens += drafts.len() - acc;
-        Ok(acc + 1)
+        let round = if draft_failed {
+            DraftRound::Failed
+        } else if wanted && !allow_draft {
+            DraftRound::Skipped
+        } else if wanted {
+            DraftRound::Clean
+        } else {
+            DraftRound::Idle
+        };
+        Ok((acc + 1, round))
     }
 
     /// Park the youngest session of the lowest priority class (`Batch`
@@ -1325,9 +1906,19 @@ impl<'a> Scheduler<'a> {
             .map(|(i, _)| i)
             // lint:allow(hot-path-panic) callers check active.len() > 1; a silent no-op would spin the exhaustion retry loop forever
             .expect("preempt with no active session");
-        let ag = self.active.remove(idx);
+        let class = self.active[idx].class;
         self.stats.preemptions += 1;
-        self.stats.classes[ag.class.index()].preemptions += 1;
+        self.stats.classes[class.index()].preemptions += 1;
+        self.park_active_at(idx);
+    }
+
+    /// Move `active[idx]` to the preempted list, dropping its caches
+    /// (every page back to its pool) while keeping token history, sampler
+    /// state, and the pending token for a bit-exact resume. Shared by the
+    /// pressure preemption ladder (which books it as a preemption) and
+    /// replica failover (which books it as a failover).
+    fn park_active_at(&mut self, idx: usize) {
+        let ag = self.active.remove(idx);
         // `ag.draft_session` drops here too: the draft-pool pages a parked
         // session held go back with the target pages.
         self.preempted.push(Preempted {
@@ -1342,6 +1933,7 @@ impl<'a> Scheduler<'a> {
             budget: ag.budget,
             prompt_len: ag.prompt_len,
             ttft_s: ag.ttft_s,
+            env: ag.env,
             done: ag.done,
             submitted: ag.submitted,
         });
@@ -1405,7 +1997,7 @@ impl<'a> Scheduler<'a> {
     /// Answer one request with a typed per-request refusal and keep
     /// serving (counted separately from completions in the report).
     fn reject(&mut self, arrived: Arrived, error: String) {
-        let Arrived { id, inc } = arrived;
+        let Arrived { id, inc, env: _ } = arrived;
         self.stats.rejected += 1;
         self.finish(id, inc.submitted, &inc.done, Response::Rejected { error });
     }
@@ -1437,7 +2029,15 @@ pub fn serve_oneshot_chunked(
     reqs: Vec<Request>,
     prefill_chunk: usize,
 ) -> Result<(Vec<Response>, ServeReport)> {
-    serve_oneshot_inner(engine, None, reqs, prefill_chunk)
+    serve_oneshot_inner(
+        engine,
+        None,
+        reqs,
+        &ServeOptions {
+            prefill_chunk,
+            ..ServeOptions::default()
+        },
+    )
 }
 
 /// [`serve_oneshot`] with speculative decoding: greedy generate streams
@@ -1453,7 +2053,50 @@ pub fn serve_oneshot_speculative(
     reqs: Vec<Request>,
     prefill_chunk: usize,
 ) -> Result<(Vec<Response>, ServeReport)> {
-    serve_oneshot_inner(engine, Some((draft, k)), reqs, prefill_chunk)
+    serve_oneshot_inner(
+        engine,
+        Some((draft, k)),
+        reqs,
+        &ServeOptions {
+            prefill_chunk,
+            ..ServeOptions::default()
+        },
+    )
+}
+
+/// Scheduler knobs for the pre-queued one-shot entry points (the chaos
+/// property tests drive these; the plain wrappers use the defaults).
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Per-tick chunked-prefill token budget (0 = monolithic).
+    pub prefill_chunk: usize,
+    /// Bounded admission queue cap (0 = unbounded).
+    pub queue_cap: usize,
+    /// Fault-injection plan (empty = no chaos).
+    pub chaos: FaultPlan,
+    /// Seed for the fault oracle (only read when `chaos` is non-empty).
+    pub chaos_seed: u64,
+}
+
+/// [`serve_oneshot`] with the full scheduler option set — bounded queue,
+/// seeded chaos plan — for robustness tests and the chaos smoke bench.
+pub fn serve_oneshot_with(
+    engine: &dyn Engine,
+    reqs: Vec<Request>,
+    opts: &ServeOptions,
+) -> Result<(Vec<Response>, ServeReport)> {
+    serve_oneshot_inner(engine, None, reqs, opts)
+}
+
+/// [`serve_oneshot_speculative`] with the full scheduler option set.
+pub fn serve_oneshot_speculative_with(
+    engine: &dyn Engine,
+    draft: &dyn Engine,
+    k: usize,
+    reqs: Vec<Request>,
+    opts: &ServeOptions,
+) -> Result<(Vec<Response>, ServeReport)> {
+    serve_oneshot_inner(engine, Some((draft, k)), reqs, opts)
 }
 
 /// Shared up-front validation for the speculative entry points.
@@ -1471,13 +2114,16 @@ fn serve_oneshot_inner(
     engine: &dyn Engine,
     speculation: Option<(&dyn Engine, usize)>,
     reqs: Vec<Request>,
-    prefill_chunk: usize,
+    opts: &ServeOptions,
 ) -> Result<(Vec<Response>, ServeReport)> {
     validate_speculation(engine, speculation)?;
     let t0 = Instant::now();
-    let mut sched = Scheduler::new(engine, prefill_chunk);
+    let mut sched = Scheduler::new(engine, opts.prefill_chunk).with_queue_cap(opts.queue_cap);
     if let Some((draft, k)) = speculation {
         sched = sched.with_speculation(draft, k);
+    }
+    if !opts.chaos.is_empty() {
+        sched = sched.with_faults(FaultInjector::new(opts.chaos.clone(), opts.chaos_seed));
     }
     let mut rxs = Vec::with_capacity(reqs.len());
     for req in reqs {
@@ -1486,6 +2132,7 @@ fn serve_oneshot_inner(
             req,
             done: dtx,
             submitted: Instant::now(),
+            alive: None,
         });
         rxs.push(drx);
     }
@@ -1587,10 +2234,17 @@ fn run_server_inner(
     }
     let (tx, rx) = mpsc::channel::<Incoming>();
     let t_start = Instant::now();
-    let mut sched = Scheduler::new(engine, cfg.prefill_chunk);
+    let mut sched = Scheduler::new(engine, cfg.prefill_chunk).with_queue_cap(cfg.queue_cap);
     if let Some((draft, k)) = speculation {
         sched = sched.with_speculation(draft, k);
     }
+    if !cfg.chaos.is_empty() {
+        sched = sched.with_faults(FaultInjector::new(cfg.chaos.clone(), cfg.seed));
+    }
+    // Client-side chaos (the `slow` site) runs in the client threads; the
+    // shared counter folds into the report after the scope joins.
+    let client_faults = FaultInjector::new(cfg.chaos.clone(), cfg.seed);
+    let slow_count = AtomicU64::new(0);
 
     std::thread::scope(|s| -> Result<()> {
         // Client threads: each submits a burst of requests with jitter.
@@ -1602,6 +2256,9 @@ fn run_server_inner(
             let seed = cfg.seed;
             let workload = cfg.workload;
             let shared = cfg.shared_prompt;
+            let deadline_ticks = cfg.deadline_ticks;
+            let faults = &client_faults;
+            let slow_count = &slow_count;
             let n = per_client + usize::from(c < remainder);
             // The last `batch_clients` threads submit throughput traffic.
             let class = if clients - c <= cfg.batch_clients.min(clients) {
@@ -1639,18 +2296,29 @@ fn run_server_inner(
                             max_new_tokens,
                             sampling: Sampling::Greedy,
                             priority: class,
+                            deadline_ticks,
                         },
                     };
                     let (dtx, drx) = mpsc::channel();
+                    // Liveness token: alive while this client still waits
+                    // on the stream (it drops with `token` at loop exit).
+                    let token = Arc::new(());
                     if tx
                         .send(Incoming {
                             req,
                             done: dtx,
                             submitted: Instant::now(),
+                            alive: Some(Arc::downgrade(&token)),
                         })
                         .is_err()
                     {
                         return;
+                    }
+                    // Chaos `slow` site: stall before draining, so the
+                    // scheduler proves it serves everyone else meanwhile.
+                    if faults.slow_client(c as u64, i as u64) {
+                        slow_count.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_millis(2));
                     }
                     // Closed loop: wait for the response before the next send.
                     let _resp = drx.recv().ok();
@@ -1716,7 +2384,8 @@ fn run_server_inner(
         result
     })?;
 
-    let stats = std::mem::take(&mut sched.stats);
+    let mut stats = std::mem::take(&mut sched.stats);
+    stats.slow_clients = slow_count.load(Ordering::Relaxed) as usize;
     Ok(stats.into_report(t_start.elapsed().as_secs_f64()))
 }
 
@@ -1787,6 +2456,7 @@ mod tests {
             max_new_tokens,
             sampling: Sampling::Greedy,
             priority: Priority::default(),
+            deadline_ticks: 0,
         }
     }
 
@@ -1796,6 +2466,7 @@ mod tests {
             max_new_tokens,
             sampling: Sampling::Greedy,
             priority,
+            deadline_ticks: 0,
         }
     }
 
@@ -2740,6 +3411,7 @@ mod tests {
                     max_new_tokens: 7,
                     sampling: sampled.clone(),
                     priority: Priority::Interactive,
+                    deadline_ticks: 0,
                 },
                 gen_req(vec![5, 6, 7], 7),
             ]
@@ -2808,5 +3480,185 @@ mod tests {
         assert_eq!(report.rejected_tokens, 0);
         assert!((report.acceptance_rate() - 1.0).abs() < 1e-12);
         assert_eq!(report.decoded_tokens, report.generated_tokens - 6);
+    }
+
+    #[test]
+    fn client_abort_mid_stream_releases_the_session_without_wedging() {
+        // Three clients decode concurrently; one drops its responder AND
+        // its liveness token mid-stream. The scheduler must retire that
+        // session with a typed Aborted (page release audited below) and
+        // the two survivors must finish byte-identical to solo runs.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 47);
+        let engine = NativeEngine::new(&params, 4, 8).unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(3, 8);
+        let mut sched = Scheduler::new(&engine, 0);
+        let mut rxs = Vec::new();
+        let mut tokens = Vec::new();
+        for p in &prompts {
+            let (dtx, drx) = mpsc::channel();
+            let token = Arc::new(());
+            sched.enqueue(Incoming {
+                req: gen_req(p.clone(), 8),
+                done: dtx,
+                submitted: Instant::now(),
+                alive: Some(Arc::downgrade(&token)),
+            });
+            rxs.push(drx);
+            tokens.push(token);
+        }
+        for _ in 0..3 {
+            sched.step().unwrap();
+        }
+        assert_eq!(sched.active.len(), 3, "all three should be mid-decode");
+        // Client 1 goes away mid-stream.
+        drop(rxs.remove(1));
+        drop(tokens.remove(1));
+        #[cfg(debug_assertions)]
+        let mut seen: Vec<crate::runtime::kvpool::KvPool> = Vec::new();
+        while sched.has_work() {
+            sched.step().unwrap();
+            #[cfg(debug_assertions)]
+            sched.audit_tick(&mut seen).unwrap();
+        }
+        assert_eq!(sched.stats.aborted, 1, "the dead client was not detected");
+        assert_eq!(sched.stats.timed_out, 0);
+        for (p, rx) in [(&prompts[0], &rxs[0]), (&prompts[2], &rxs[1])] {
+            let solo = crate::engine::generate(&reference, p, 8, Sampling::Greedy).unwrap();
+            match rx.try_recv().unwrap() {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, solo.tokens, "survivor diverged after neighbor abort");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+        // Every page the aborted session held went back to the pool.
+        #[cfg(debug_assertions)]
+        for pool in &seen {
+            pool.audit_tables(&[]).unwrap();
+        }
+    }
+
+    #[test]
+    fn expired_deadlines_answer_timed_out_and_release_the_slot() {
+        let engine = ToyEngine::new(64, 4, 16);
+        let reqs = vec![
+            // Can never finish 50 tokens in 3 ticks: must time out, typed.
+            Request::Generate {
+                prompt: vec![1, 2, 3, 4],
+                max_new_tokens: 50,
+                sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
+                deadline_ticks: 3,
+            },
+            // Finishes well inside its own (unset) deadline.
+            gen_req(vec![5, 6, 7], 3),
+        ];
+        let (resps, report) = serve_oneshot(&engine, reqs).unwrap();
+        assert!(matches!(resps[0], Response::TimedOut), "got {:?}", resps[0]);
+        match &resps[1] {
+            Response::Generated { tokens, .. } => assert_eq!(tokens.len(), 3),
+            other => panic!("wrong response {other:?}"),
+        }
+        assert_eq!(report.timed_out, 1);
+        assert_eq!(report.completed.len(), 2, "every request got exactly one answer");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_batch_before_interactive() {
+        // cap = 1 and three arrivals before any tick: the second Batch
+        // arrival sheds immediately, then the Interactive arrival evicts
+        // the queued Batch request instead of being shed itself.
+        let engine = ToyEngine::new(64, 4, 16);
+        let reqs = vec![
+            gen_req_class(vec![1, 2, 3], 4, Priority::Batch),
+            gen_req_class(vec![4, 5, 6], 4, Priority::Batch),
+            gen_req_class(vec![7, 8, 9], 4, Priority::Interactive),
+        ];
+        let opts = ServeOptions {
+            queue_cap: 1,
+            ..ServeOptions::default()
+        };
+        let (resps, report) = serve_oneshot_with(&engine, reqs, &opts).unwrap();
+        assert!(matches!(resps[0], Response::Shed), "got {:?}", resps[0]);
+        assert!(matches!(resps[1], Response::Shed), "got {:?}", resps[1]);
+        match &resps[2] {
+            Response::Generated { tokens, .. } => assert_eq!(tokens.len(), 4),
+            other => panic!("Interactive was shed while Batch was queued: {other:?}"),
+        }
+        assert_eq!(report.shed, 2);
+    }
+
+    #[test]
+    fn injected_pool_faults_retry_and_stay_bit_exact() {
+        // chaos pool=1: every request draws exactly one transient pool
+        // refusal (consumed at admission or decode). The retry-with-
+        // backoff path must absorb all of them — no rejections, no stream
+        // divergence from a fault-free solo run.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 53);
+        let engine = NativeEngine::new(&params, 4, 8).unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(3, 8);
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 8)).collect();
+        let opts = ServeOptions {
+            chaos: FaultPlan::parse("pool=1").unwrap(),
+            chaos_seed: 5,
+            ..ServeOptions::default()
+        };
+        let (resps, report) = serve_oneshot_with(&engine, reqs, &opts).unwrap();
+        assert_eq!(report.injected_pool_faults, 3, "one fault per request");
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.timed_out, 0);
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 8, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "injected fault changed a stream");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn breaker_trips_under_injected_draft_faults_and_streams_stay_exact() {
+        // chaos draft=1: every wanted round fails before drafting. The
+        // breaker must trip after BREAKER_THRESHOLD consecutive failures,
+        // suppress drafting through its cooldown (counted), and the
+        // streams — speculation being strictly advisory — must still be
+        // byte-identical to a fault-free solo run.
+        let fam = FamilySpec::build("micro", 11, 8, 1, 2, 1, 12, "swiglu");
+        let params = ModelParams::init(&fam, 59);
+        let target = NativeEngine::new(&params, 4, 8).unwrap();
+        let draft = NativeEngine::new(&ModelParams::init(&fam, 60), 4, 8).unwrap();
+        let reference = NativeEngine::new(&params, 4, 8).unwrap();
+        let prompts = distinct_prompts(3, 8);
+        let reqs: Vec<Request> = prompts.iter().map(|p| gen_req(p.clone(), 8)).collect();
+        let opts = ServeOptions {
+            chaos: FaultPlan::parse("draft=1").unwrap(),
+            chaos_seed: 11,
+            ..ServeOptions::default()
+        };
+        let (resps, report) =
+            serve_oneshot_speculative_with(&target, &draft, 2, reqs, &opts).unwrap();
+        assert!(
+            report.draft_failures >= BREAKER_THRESHOLD,
+            "only {} draft failures",
+            report.draft_failures
+        );
+        assert!(report.breaker_trips >= 1, "breaker never tripped");
+        assert!(report.breaker_skipped > 0, "cooldown suppressed no rounds");
+        assert_eq!(report.drafted_tokens, 0, "a faulted round still drafted");
+        for (p, r) in prompts.iter().zip(&resps) {
+            let solo = crate::engine::generate(&reference, p, 8, Sampling::Greedy).unwrap();
+            match r {
+                Response::Generated { tokens, .. } => {
+                    assert_eq!(tokens, &solo.tokens, "draft chaos changed a stream");
+                }
+                other => panic!("wrong response {other:?}"),
+            }
+        }
     }
 }

@@ -143,6 +143,7 @@ fn chunked_serving_streams_match_one_shot_serving() {
                 } else {
                     Priority::Batch
                 },
+                deadline_ticks: 0,
             })
             .collect()
     };

@@ -43,6 +43,7 @@ fn serving_survives_eviction_and_stays_bit_exact() {
             max_new_tokens: 16,
             sampling: Sampling::Greedy,
             priority: Priority::default(),
+            deadline_ticks: 0,
         })
         .collect();
     let (resps, report) = serve_oneshot(&engine, reqs).expect("serve");
@@ -93,6 +94,7 @@ fn shared_system_prompt_shares_kv_pages_across_sessions() {
         prefill_chunk: 0,
         batch_clients: 0,
         long_prompt_len: 0,
+        ..ServeConfig::default()
     };
     let report = run_server(&fm, &cfg).expect("serve");
     assert_eq!(report.completed.len(), 6, "dropped requests");

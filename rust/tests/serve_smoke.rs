@@ -25,6 +25,7 @@ fn smoke_config(requests: usize, workload: Workload) -> ServeConfig {
         prefill_chunk: 0,
         batch_clients: 0,
         long_prompt_len: 0,
+        ..ServeConfig::default()
     }
 }
 

@@ -37,6 +37,16 @@
 //!   heuristic). Holding the KV pool mutex across a forward serializes every
 //!   other session's decode behind one matmul — and deadlocks if the forward
 //!   re-enters the pool.
+//! * **typed-response-terminal** — in `serve/`, any element removal
+//!   (`remove` / `swap_remove` / `pop_front` / `pop_back` / `drain`) from a
+//!   scheduler holding area (`active`, `prefilling`, `preempted`, `queues`)
+//!   must be followed, in the same function body, by a typed terminal
+//!   (`finish*` / `retire` / `reject` / `shed`) or a re-park (a push back
+//!   into a holding area / queue insert). A removal with neither silently
+//!   drops a request — its client blocks forever and the "every submitted
+//!   request terminates with exactly one typed Response" invariant breaks.
+//!   Wholesale `.clear()` on the fatal teardown path is out of scope: there
+//!   the responders are dropped en masse, which *is* the wake-up.
 //!
 //! ## Escapes
 //!
@@ -354,10 +364,10 @@ fn narrowing_scope(rel: &str) -> bool {
     rel == "quant/packed.rs" || rel == "fused/mod.rs" || rel == "runtime/manifest.rs"
 }
 
-/// Body spans (byte ranges) of functions named `read_from` / `parse*`
-/// (exactly the container deserializers — bit-twiddling helpers like
-/// `read_code` cast as part of field extraction, not untrusted counts).
-fn reader_fn_bodies(masked: &[u8]) -> Vec<(usize, usize)> {
+/// Body spans (byte ranges) of every `fn` whose name passes `keep`.
+/// Closures are not matched, so a site inside a closure resolves to its
+/// enclosing named function.
+fn fn_body_spans(masked: &[u8], keep: fn(&[u8]) -> bool) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
     let mut from = 0usize;
     while let Some(rel) = find(&masked[from..], b"fn ") {
@@ -374,8 +384,7 @@ fn reader_fn_bodies(masked: &[u8]) -> Vec<(usize, usize)> {
         while j < masked.len() && is_ident(masked[j]) {
             j += 1;
         }
-        let name = &masked[name_start..j];
-        if !(name == b"read_from" || name.starts_with(b"parse")) {
+        if !keep(&masked[name_start..j]) {
             continue;
         }
         let mut depth = 0usize;
@@ -417,7 +426,12 @@ fn check_checked_narrowing(
     out: &mut Vec<Violation>,
 ) {
     let text = &masked.text;
-    for (start, end) in reader_fn_bodies(text) {
+    // Exactly the container deserializers — bit-twiddling helpers like
+    // `read_code` cast as part of field extraction, not untrusted counts.
+    let readers = fn_body_spans(text, |name| {
+        name == b"read_from" || name.starts_with(b"parse")
+    });
+    for (start, end) in readers {
         let mut from = start;
         while let Some(rel_pos) = find(&text[from..end], b"as ") {
             let at = from + rel_pos;
@@ -722,6 +736,99 @@ fn check_lock_across_forward(
     }
 }
 
+// ------------------------------------- rule 6: typed-response terminals
+
+/// The scheduler's request holding areas. A request lives in exactly one
+/// of these between submission and its typed terminal response.
+const HOLDING_AREAS: [&str; 4] = ["active", "prefilling", "preempted", "queues"];
+
+/// Calls that end (or legitimately re-park) a removed request: the typed
+/// terminals (`finish` / `finish_prefill` / `retire` / `reject` / `shed`)
+/// and the re-insertion paths (resume into `active`, park into
+/// `preempted`, requeue / admission hand-off).
+const TERMINAL_CONTINUATIONS: [&[u8]; 9] = [
+    b"self.finish",
+    b"self.retire(",
+    b"self.reject(",
+    b"self.shed(",
+    b"self.active.push(",
+    b"self.preempted.push(",
+    b"score_batch.push(",
+    b"self.admit_generate",
+    b"q.insert(",
+];
+
+fn check_typed_response_terminal(
+    rel: &str,
+    masked: &Masked,
+    regions: &[(usize, usize)],
+    out: &mut Vec<Violation>,
+) {
+    let text = &masked.text;
+    let bodies = fn_body_spans(text, |_| true);
+    let removals: [&[u8]; 5] = [
+        b".swap_remove(",
+        b".remove(",
+        b".pop_front(",
+        b".pop_back(",
+        b".drain(",
+    ];
+    for needle in removals {
+        let mut from = 0usize;
+        while let Some(rel_pos) = find(&text[from..], needle) {
+            let at = from + rel_pos;
+            from = at + needle.len();
+            // The dotted receiver path ending at the removal must name a
+            // holding area; removals from unrelated containers are fine.
+            let line_start = text[..at]
+                .iter()
+                .rposition(|b| *b == b'\n')
+                .map_or(0, |p| p + 1);
+            let mut r = at;
+            while r > line_start
+                && (is_ident(text[r - 1]) || b".[]():".contains(&text[r - 1]))
+            {
+                r -= 1;
+            }
+            let recv = std::str::from_utf8(&text[r..at]).unwrap_or("");
+            if !HOLDING_AREAS.iter().any(|h| recv.contains(h)) {
+                continue;
+            }
+            let line = line_of(text, at);
+            if in_regions(regions, line) || masked.allowed("typed-response-terminal", line) {
+                continue;
+            }
+            // Innermost enclosing function body; a removal in a const
+            // initializer or macro arm has no body to scan and is skipped.
+            let Some(&(_, end)) = bodies
+                .iter()
+                .filter(|(s, e)| *s <= at && at <= *e)
+                .max_by_key(|(s, _)| *s)
+            else {
+                continue;
+            };
+            if TERMINAL_CONTINUATIONS
+                .iter()
+                .any(|c| find(&text[at..end], c).is_some())
+            {
+                continue;
+            }
+            out.push(Violation {
+                file: rel.to_string(),
+                line,
+                rule: "typed-response-terminal",
+                msg: format!(
+                    "removal from `{}` reaches no typed terminal (finish/retire/\
+                     reject/shed) or re-park in this function — the request's \
+                     client would block forever; answer it or add \
+                     `// lint:allow(typed-response-terminal) <why>`",
+                    recv.trim_start_matches("self.")
+                ),
+            });
+        }
+    }
+}
+
 // ------------------------------------------------------------------ driver
 
 fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
@@ -747,6 +854,9 @@ fn check_file(rel: &str, raw: &str, out: &mut Vec<Violation>) {
     if hot_path_scope(rel) {
         check_hot_path_panic(rel, &masked, &regions, out);
         check_lock_across_forward(rel, &masked, &regions, out);
+    }
+    if rel.starts_with("serve/") {
+        check_typed_response_terminal(rel, &masked, &regions, out);
     }
     if narrowing_scope(rel) {
         check_checked_narrowing(rel, &masked, &regions, out);
@@ -1003,6 +1113,64 @@ mod tests {
                    // lint:allow(lock-across-forward) forward never re-enters this pool\n\
                    let y = verify_step(&inner);\n    Ok(())\n}\n";
         assert!(lint("serve/mod.rs", src).is_empty());
+    }
+
+    // ---- rule 6: typed-response-terminal ----
+
+    #[test]
+    fn silent_drop_from_a_holding_area_fails() {
+        let src = "fn f(&mut self) {\n\
+                   let ag = self.active.swap_remove(0);\n    drop(ag);\n}\n";
+        let vs = lint("serve/mod.rs", src);
+        assert_eq!(rules(&vs), ["typed-response-terminal"], "{vs:?}");
+        assert_eq!(vs[0].line, 2);
+        // Outside serve/ the rule does not apply (other subsystems have no
+        // response contract).
+        assert!(lint("engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn removal_with_a_typed_terminal_or_repark_is_clean() {
+        let finished = "fn f(&mut self) {\n\
+                        let ag = self.active.swap_remove(0);\n\
+                        self.finish(ag.id, ag.submitted, &ag.done, Response::TimedOut);\n}\n";
+        assert!(lint("serve/mod.rs", finished).is_empty());
+        let parked = "fn park(&mut self, idx: usize) {\n\
+                      let ag = self.active.remove(idx);\n\
+                      self.preempted.push(make_parked(ag));\n}\n";
+        assert!(lint("serve/mod.rs", parked).is_empty());
+        let requeued = "fn requeue(&mut self, vi: usize) {\n\
+                        let v = self.prefilling.remove(vi);\n\
+                        let q = &mut self.queues[v.class.index()];\n\
+                        q.insert(0, rearm(v));\n}\n";
+        assert!(lint("serve/mod.rs", requeued).is_empty());
+        let drained = "fn tick(&mut self) {\n\
+                       let done: Vec<ActiveGen> = self.active.drain(..).collect();\n\
+                       for ag in done {\n        self.retire(ag);\n    }\n}\n";
+        assert!(lint("serve/mod.rs", drained).is_empty());
+    }
+
+    #[test]
+    fn unrelated_containers_and_allows_are_exempt() {
+        // Removing from a container that is not a holding area is fine.
+        let other = "fn f(&mut self) {\n    let x = self.latencies.remove(0);\n    drop(x);\n}\n";
+        assert!(lint("serve/mod.rs", other).is_empty());
+        // A justified allow passes (and an unused one would fail lint-allow).
+        let allowed = "fn f(&mut self) {\n\
+                       // lint:allow(typed-response-terminal) teardown: dropping the responder wakes the client\n\
+                       let ag = self.active.swap_remove(0);\n    drop(ag);\n}\n";
+        assert!(lint("serve/mod.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn terminal_in_a_different_function_does_not_count() {
+        // The finish lives in `g`, not in `f` where the removal happens —
+        // the same-function requirement must flag `f`.
+        let src = "fn f(&mut self) {\n\
+                   let ag = self.active.swap_remove(0);\n    drop(ag);\n}\n\
+                   fn g(&mut self) {\n    self.finish(0, t, &d, Response::Aborted);\n}\n";
+        let vs = lint("serve/mod.rs", src);
+        assert_eq!(rules(&vs), ["typed-response-terminal"], "{vs:?}");
     }
 
     // ---- the live tree ----
